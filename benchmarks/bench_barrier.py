@@ -1,0 +1,31 @@
+"""Paper Fig. 1b: barrier latency microbenchmark.
+
+The paper times ``bar.waiting()`` over TEST_ITERS iterations.  We report
+wall-µs per barrier crossing for P ∈ {2, 4, 8} simulated participants and
+the modeled network cost (one SST push_broadcast = one P-row all-gather,
+plus the global entry fence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Barrier, make_manager
+
+from .common import Csv, model_round_us, timed
+
+
+def run(csv: Csv, iters: int = 20):
+    for P in (2, 4, 8):
+        mgr = make_manager(P)
+        bar = Barrier(None, f"bar{P}", mgr)
+        st = bar.init_state()
+
+        @jax.jit
+        def cross(st):
+            return mgr.runtime.run(bar.wait, st)
+
+        us, st = timed(cross, st, iters=iters)
+        # modeled: 1 all-gather of P uint32 rows (+1 pull round worst case)
+        modeled = model_round_us(4.0 * P)
+        csv.add(f"barrier_p{P}", us,
+                f"modeled_us={modeled:.2f};count={int(jnp.max(st.count))}")

@@ -1,0 +1,89 @@
+"""Paper Fig. 5: key-value store throughput.
+
+Sweeps operation mixes (read-only / 50-50 / write-only) × key distributions
+(uniform / zipfian θ=0.99) × participant counts, plus the paper's "large
+window" mode: window=1 issues one op per participant per round; window=32
+issues 32 batched lock-free GETs in a single collective round
+(KVStore.get_batch) — reproducing the paper's observation that read
+throughput scales with outstanding one-sided reads.
+
+Keyspace prefilled to 80% capacity (the paper's setup, scaled down)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GET, INSERT, NOP, UPDATE, KVStore, make_manager
+
+from .common import Csv, model_round_us, timed, uniform_keys, zipf_keys
+
+WINDOW = 32
+
+
+def _build(P, keyspace):
+    mgr = make_manager(P)
+    kv = KVStore(None, f"kv_bench_p{P}_{keyspace}", mgr,
+                 slots_per_node=keyspace // P + 4, value_width=2,
+                 num_locks=64, index_capacity=4 * keyspace)
+    st = kv.init_state()
+
+    step = jax.jit(lambda st, op, key, val: mgr.runtime.run(
+        kv.op_round, st, op, key, val))
+    batch_get = jax.jit(lambda st, keys: mgr.runtime.run(
+        lambda s, k: kv.get_batch(s, k), st, keys))
+
+    # prefill to 80%
+    n_fill = int(keyspace * 0.8)
+    keys = np.arange(1, n_fill + 1, dtype=np.uint32)
+    for i in range(0, n_fill, P):
+        chunk = keys[i:i + P]
+        op = np.full(P, NOP, np.int32)
+        kk = np.ones(P, np.uint32)
+        vv = np.zeros((P, 2), np.int32)
+        op[:len(chunk)] = INSERT
+        kk[:len(chunk)] = chunk
+        vv[:len(chunk), 0] = chunk.astype(np.int32) * 3
+        st, _res = step(st, jnp.asarray(op), jnp.asarray(kk),
+                        jnp.asarray(vv))
+    return mgr, kv, st, step, batch_get, n_fill
+
+
+def run(csv: Csv, rounds: int = 8):
+    P, keyspace = 8, 512
+    mgr, kv, st0, step, batch_get, n_fill = _build(P, keyspace)
+    rng = np.random.default_rng(0)
+
+    for dist_name, keyfn in (("uniform", uniform_keys),
+                             ("zipf", zipf_keys)):
+        for mix_name, write_frac in (("read", 0.0), ("mixed", 0.5),
+                                     ("write", 1.0)):
+            st = st0
+            ops_done, us_total = 0, 0.0
+            for r in range(rounds):
+                keys = keyfn(rng, P, n_fill)
+                writes = rng.random(P) < write_frac
+                op = np.where(writes, UPDATE, GET).astype(np.int32)
+                val = np.stack([keys.astype(np.int32) * 5 + r,
+                                np.full(P, r)], axis=1).astype(np.int32)
+                us, out = timed(step, st, jnp.asarray(op),
+                                jnp.asarray(keys), jnp.asarray(val),
+                                iters=1, warmup=1 if r == 0 else 0)
+                st, _res = out
+                us_total += us
+                ops_done += P
+            # modeled: GETs 2 rounds (req+serve), writes ≈ 4 rounds
+            rounds_per_op = 2 * (1 - write_frac) + 4 * write_frac
+            modeled = P * 1e6 / (rounds_per_op * model_round_us(64))
+            csv.add(f"kv_{mix_name}_{dist_name}_p{P}",
+                    us_total / rounds,
+                    f"ops_per_round={P};modeled_ops_per_s={modeled:.0f}")
+
+    # ---- large-window read mode (batched one-sided reads)
+    st = st0
+    keys = uniform_keys(rng, P * WINDOW, n_fill).reshape(P, WINDOW)
+    us, (vals, found) = timed(batch_get, st, jnp.asarray(keys), iters=3)
+    assert bool(jnp.all(found)), "prefilled keys must be found"
+    modeled = P * WINDOW * 1e6 / (2 * model_round_us(64 * WINDOW))
+    csv.add(f"kv_read_uniform_p{P}_window{WINDOW}", us,
+            f"ops_per_round={P * WINDOW};modeled_ops_per_s={modeled:.0f}")

@@ -1,0 +1,37 @@
+"""§Roofline summary: reads reports/dryrun/*.json into the per-cell table
+(one row per arch × shape; us_per_call = bound term in µs)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Csv
+
+
+def run(csv: Csv, report_dir: str = "reports/dryrun"):
+    if os.path.isdir("reports/final") and glob.glob("reports/final/*.json"):
+        report_dir = "reports/final"   # optimized-framework re-measurement
+    files = sorted(glob.glob(os.path.join(report_dir, "*__single*.json")))
+    if not files:
+        csv.add("roofline_missing", 0.0,
+                "run repro.launch.dryrun first")
+        return
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        if d.get("skipped"):
+            csv.add(f"roofline_{d['arch']}_{d['shape']}", 0.0,
+                    f"skipped={d['skipped'][:40]}")
+            continue
+        if "compute_s" not in d:
+            continue
+        bound = max(d["compute_s"], d["memory_s"], d["collective_s"])
+        csv.add(
+            f"roofline_{d['arch']}_{d['shape']}",
+            bound * 1e6,
+            f"dominant={d['dominant']};frac={d['roofline_fraction']:.3f};"
+            f"compute_ms={d['compute_s'] * 1e3:.1f};"
+            f"memory_ms={d['memory_s'] * 1e3:.1f};"
+            f"collective_ms={d['collective_s'] * 1e3:.1f};"
+            f"fits16g={d.get('fits_16g_hbm')}")

@@ -1,0 +1,64 @@
+"""Benchmark utilities.
+
+Each benchmark mirrors one paper table/figure and reports BOTH:
+  * wall-time of the functional simulation (CPU vmap binding — not a
+    network measurement, included for regression tracking), and
+  * the **modeled cost**: collective rounds × per-round wire payload,
+    priced with the DESIGN.md link model (the quantity comparable across
+    designs, analogous to the paper's throughput axes).
+
+CSV row contract (benchmarks/run.py): name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+# modeled interconnect (same constants as the roofline)
+LINK_LAT_US = 2.0          # per collective round (ICI hop + NIC)
+LINK_BW_GBS = 50.0
+
+
+def timed(fn: Callable, *args, iters: int = 5, warmup: int = 2):
+    """Wall-clock a jitted callable; returns (mean_us, last_result)."""
+    result = None
+    for _ in range(warmup):
+        result = fn(*args)
+        jax.block_until_ready(result)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = fn(*args)
+        jax.block_until_ready(result)
+    dt = (time.perf_counter() - t0) / iters
+    return dt * 1e6, result
+
+
+def zipf_keys(rng, n_ops, keyspace, theta=0.99):
+    """YCSB-style zipfian keys over [1, keyspace]."""
+    ranks = np.arange(1, keyspace + 1, dtype=np.float64)
+    probs = 1.0 / ranks ** theta
+    probs /= probs.sum()
+    return rng.choice(np.arange(1, keyspace + 1), size=n_ops, p=probs) \
+        .astype(np.uint32)
+
+
+def uniform_keys(rng, n_ops, keyspace):
+    return rng.integers(1, keyspace + 1, size=n_ops).astype(np.uint32)
+
+
+def model_round_us(payload_bytes: float) -> float:
+    """Modeled time for one collective round."""
+    return LINK_LAT_US + payload_bytes / (LINK_BW_GBS * 1e3)
+
+
+class Csv:
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        row = f"{name},{us_per_call:.2f},{derived}"
+        self.rows.append(row)
+        print(row, flush=True)

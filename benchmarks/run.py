@@ -1,0 +1,51 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+  Fig. 1b  bench_barrier   barrier crossing latency
+  Fig. 4   bench_lock      single-lock + transactional locking vs MPI-style
+  Fig. 5   bench_kvstore   kv throughput × mix × distribution × window
+  Fig. 7   bench_power     DC/DC control-loop stability vs period
+  §Roofline bench_roofline dry-run-derived roofline table (reads reports/)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+Usage: PYTHONPATH=src python -m benchmarks.run [--only barrier,lock,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: barrier,lock,kvstore,power,roofline")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    from .common import Csv
+    csv = Csv()
+    print("name,us_per_call,derived")
+
+    def enabled(name):
+        return want is None or name in want
+
+    if enabled("barrier"):
+        from . import bench_barrier
+        bench_barrier.run(csv)
+    if enabled("lock"):
+        from . import bench_lock
+        bench_lock.run(csv)
+    if enabled("kvstore"):
+        from . import bench_kvstore
+        bench_kvstore.run(csv)
+    if enabled("power"):
+        from . import bench_power
+        bench_power.run(csv)
+    if enabled("roofline"):
+        from . import bench_roofline
+        bench_roofline.run(csv)
+    print(f"# {len(csv.rows)} rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

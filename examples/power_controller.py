@@ -1,0 +1,28 @@
+"""Appendix B demo: the distributed DC/DC converter control loop on
+channel memory, with an ASCII stability plot per controller period.
+
+Run:  PYTHONPATH=src python examples/power_controller.py
+"""
+import sys
+
+sys.path.insert(0, ".")  # for benchmarks.*
+import numpy as np
+
+from benchmarks.bench_power import V_REF, simulate
+
+
+def main():
+    print(f"target output: {V_REF} V (4 converters, τ=100µs plant)\n")
+    for period in (10, 20, 40, 80, 160):
+        ripple, err = simulate(4, max(1, period // 10))
+        n = min(40, int(ripple * 2) + 1)
+        bar = "#" * n
+        verdict = "STABLE" if ripple < 1.0 and err < 2.0 else "UNSTABLE"
+        print(f"period {period:4d}µs  ripple {ripple:7.2f}V "
+              f"err {err:6.2f}V  {verdict:9s} |{bar}")
+    print("\nThe loop holds regulation for periods ≤ 40µs — the paper's "
+          "latency budget for\nnetwork-memory control (Fig. 7).")
+
+
+if __name__ == "__main__":
+    main()

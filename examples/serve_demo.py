@@ -1,0 +1,16 @@
+"""Serving demo: continuous batching with the channel-based page table
+(SharedQueue admission + KVStore paged-KV bookkeeping).
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+from repro.launch import serve as serve_launcher
+
+
+def main():
+    serve_launcher.main([
+        "--arch", "qwen3-8b", "--smoke", "--requests", "8",
+        "--prompt-len", "24", "--gen-len", "8", "--max-batch", "4"])
+
+
+if __name__ == "__main__":
+    main()

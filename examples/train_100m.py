@@ -1,0 +1,41 @@
+"""End-to-end training driver: a ~100M-param llama-style model trained for
+a few hundred steps on synthetic data with the full production stack
+(channel-synced DP, ZeRO optimizer sharding, async checkpoints, resumable
+pipeline).
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+(~100M params is CPU-trainable; pass --steps 20 for a quick look.)
+"""
+import argparse
+
+from repro.configs.base import ArchConfig
+from repro.launch import train as train_launcher
+
+CONFIG_100M = ArchConfig(
+    name="llama-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=6, d_ff=2048, vocab=32000, rope_theta=10000.0,
+    tie_embeddings=True, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/loco_jax_100m")
+    args = ap.parse_args()
+    n = CONFIG_100M.param_count()
+    print(f"training {CONFIG_100M.name}: {n / 1e6:.1f}M params")
+
+    # register the config under a temporary id and reuse the launcher
+    import repro.configs as C
+    C._MODULES["llama-100m"] = type(
+        "M", (), {"CONFIG": CONFIG_100M, "smoke": staticmethod(
+            lambda: CONFIG_100M)})
+    train_launcher.main([
+        "--arch", "llama-100m", "--steps", str(args.steps),
+        "--batch", "8", "--seq", "256", "--lr", "3e-4",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        "--log-every", "10"])
+
+
+if __name__ == "__main__":
+    main()

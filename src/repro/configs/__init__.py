@@ -1,0 +1,30 @@
+"""Assigned-architecture registry: --arch <id> resolves here."""
+from . import (deepseek_v3_671b, gemma_2b, internlm2_20b, llama32_3b,
+               llama32_vision_11b, llama4_maverick_400b_a17b, qwen3_8b,
+               recurrentgemma_2b, rwkv6_7b, whisper_large_v3)
+from .base import (ArchConfig, CrossAttnConfig, HybridConfig, LM_SHAPES,
+                   MLAConfig, MoEConfig, ShapeConfig, TrainConfig,
+                   shape_applicable)
+
+_MODULES = {
+    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "llama-3.2-vision-11b": llama32_vision_11b,
+    "internlm2-20b": internlm2_20b,
+    "llama3.2-3b": llama32_3b,
+    "qwen3-8b": qwen3_8b,
+    "gemma-2b": gemma_2b,
+    "whisper-large-v3": whisper_large_v3,
+    "recurrentgemma-2b": recurrentgemma_2b,
+    "rwkv6-7b": rwkv6_7b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    return _MODULES[arch_id].CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    return _MODULES[arch_id].smoke()

@@ -1,0 +1,36 @@
+"""LOCO-JAX core: the paper's channel-object model on the TPU ICI fabric.
+
+Public surface:
+
+* runtime/binding: :class:`Runtime`, :class:`Manager`, :func:`make_manager`
+* consistency:     :class:`AckKey`, :class:`FenceScope`, :func:`join`
+* channels:        :class:`SharedRegion`, :class:`OwnedVar`, :class:`AtomicVar`,
+                   :class:`SST`, :class:`Barrier`, :class:`TicketLock`,
+                   :class:`TicketLockArray`, :class:`Ringbuffer`,
+                   :class:`SharedQueue`, :class:`KVStore`
+"""
+from .ack import ALL_PEERS, AckKey, FenceScope, OpDesc, join, make_ack
+from .atomic import AtomicVar, AtomicVarState
+from .barrier import Barrier, BarrierState
+from .channel import Channel
+from .kvstore import (DELETE, GET, INSERT, NOP, UPDATE, KVResult, KVStore,
+                      KVStoreState)
+from .lock import (NO_TICKET, TicketLock, TicketLockArray,
+                   TicketLockArrayState, TicketLockState)
+from .ownedvar import OwnedVar, OwnedVarState, checksum
+from .queue import SharedQueue, SharedQueueState
+from .region import SharedRegion, SharedRegionState
+from .ringbuffer import Ringbuffer, RingbufferState
+from .runtime import Manager, Runtime, make_manager
+from .sst import SST, SSTState
+
+__all__ = [
+    "ALL_PEERS", "AckKey", "FenceScope", "OpDesc", "join", "make_ack",
+    "AtomicVar", "AtomicVarState", "Barrier", "BarrierState", "Channel",
+    "NOP", "GET", "INSERT", "UPDATE", "DELETE", "KVResult", "KVStore",
+    "KVStoreState", "NO_TICKET", "TicketLock", "TicketLockArray",
+    "TicketLockArrayState", "TicketLockState", "OwnedVar", "OwnedVarState",
+    "checksum", "SharedQueue", "SharedQueueState", "SharedRegion",
+    "SharedRegionState", "Ringbuffer", "RingbufferState", "Manager",
+    "Runtime", "make_manager", "SST", "SSTState",
+]

@@ -1,0 +1,108 @@
+"""atomic_var — multi-writer multi-reader word-size register (LOCO §5.1.1).
+
+One "official" copy hosted at one participant, cached copies everywhere.
+Exposes the remote atomics RDMA provides (fetch-and-add, compare-and-swap)
+plus plain load/store.
+
+SPMD adaptation of contention: RDMA atomics on one host NIC are serialized
+in arrival order; here, concurrent requests within a lockstep round are
+serialized in **participant-index order** — a deterministic, fair stand-in
+for arrival order (documented in DESIGN.md §2).  The resolution costs one
+P-word all-gather plus one word all-reduce, mirroring the NIC round-trip.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import colls
+from .ack import ALL_PEERS, make_ack
+from .channel import Channel
+from .runtime import Manager
+
+
+class AtomicVarState(NamedTuple):
+    official: jax.Array  # () authoritative value (meaningful at host)
+    cached: jax.Array    # () local cached copy
+
+
+class AtomicVar(Channel):
+    """Word-size atomic register hosted at participant ``host``."""
+
+    def __init__(self, parent, name: str, mgr: Manager, *, host: int = 0,
+                 dtype=jnp.int32):
+        super().__init__(parent, name, mgr)
+        self.host = int(host)
+        self.dtype = dtype
+        self.declare_region("word", (), dtype)
+
+    def init_state(self, value=0) -> AtomicVarState:
+        v = jnp.asarray(value, self.dtype)
+        st = AtomicVarState(official=v, cached=v)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (self.P,) + x.shape),
+                            st)
+
+    # -- atomics -----------------------------------------------------------------
+    def fetch_add(self, state: AtomicVarState, amount, pred=True):
+        """Atomic fetch-and-add.  Every participant may request in the same
+        round; requests are serialized in participant order.  Returns
+        (new_state, my_old_value, ack); ``my_old_value`` is undefined where
+        ``pred`` is False (by convention: the pre-round official value)."""
+        amt = jnp.where(pred, jnp.asarray(amount, self.dtype),
+                        jnp.zeros((), self.dtype))
+        old = colls.bcast_from(state.official, self.host, self.axis)
+        excl, total, _ = colls.prefix_sums(amt, self.axis)
+        my_old = old + excl.astype(self.dtype)
+        new_val = old + total.astype(self.dtype)
+        new = AtomicVarState(official=new_val, cached=new_val)
+        ack = make_ack(new_val, "atomic", self.full_name, (self.host,),
+                       jnp.dtype(self.dtype).itemsize)
+        return new, jnp.where(pred, my_old, old), self.mgr.track(ack)
+
+    def compare_swap(self, state: AtomicVarState, expected, desired, pred=True):
+        """Atomic CAS; among same-round contenders the lowest participant id
+        whose ``expected`` matches wins.  Returns (state, old, success, ack)."""
+        old = colls.bcast_from(state.official, self.host, self.axis)
+        want = jnp.asarray(pred) & (jnp.asarray(expected, self.dtype) == old)
+        _, _, wants = colls.prefix_sums(want.astype(jnp.int32), self.axis)
+        first = jnp.argmax(wants)  # lowest index with want (0 if none)
+        any_want = jnp.sum(wants) > 0
+        me = colls.my_id(self.axis)
+        winner_val = colls.bcast_from(
+            jnp.asarray(desired, self.dtype), first, self.axis)
+        new_val = jnp.where(any_want, winner_val, old)
+        success = want & (me == first)
+        new = AtomicVarState(official=new_val, cached=new_val)
+        ack = make_ack(new_val, "atomic", self.full_name, (self.host,),
+                       jnp.dtype(self.dtype).itemsize)
+        return new, old, success, self.mgr.track(ack)
+
+    # -- plain access ---------------------------------------------------------------
+    def store(self, state: AtomicVarState, value, pred=True):
+        """Relaxed store; same-round stores resolve lowest-id-wins."""
+        old = colls.bcast_from(state.official, self.host, self.axis)
+        want = jnp.asarray(pred)
+        _, _, wants = colls.prefix_sums(want.astype(jnp.int32), self.axis)
+        first = jnp.argmax(wants)
+        any_want = jnp.sum(wants) > 0
+        winner_val = colls.bcast_from(
+            jnp.asarray(value, self.dtype), first, self.axis)
+        new_val = jnp.where(any_want, winner_val, old)
+        new = AtomicVarState(official=new_val, cached=new_val)
+        ack = make_ack(new_val, "write", self.full_name, (self.host,),
+                       jnp.dtype(self.dtype).itemsize)
+        return new, self.mgr.track(ack)
+
+    def load_cached(self, state: AtomicVarState):
+        """Relaxed local read of the cached copy (no network)."""
+        return state.cached
+
+    def pull(self, state: AtomicVarState):
+        """Refresh cached copy from the official copy (one-sided read)."""
+        val = colls.bcast_from(state.official, self.host, self.axis)
+        new = AtomicVarState(official=state.official, cached=val)
+        ack = make_ack(val, "read", self.full_name, (self.host,),
+                       jnp.dtype(self.dtype).itemsize)
+        return new, self.mgr.track(ack)

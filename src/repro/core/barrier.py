@@ -1,0 +1,66 @@
+"""Barrier channel — paper Fig. 1a, after Gupta et al. [27].
+
+Each participant increments a private count, broadcasts it through its SST
+register, then waits until every row of the SST is >= its own count.  The
+paper issues a **global fence** before entering (§5.4) so all prior remote
+operations are visible to peers that observe the barrier.
+
+SPMD adaptation: the "wait locally" loop is a lockstep `while_loop` whose
+condition is a psum of per-participant waiting flags — every participant
+iterates (re-pulling the SST) until all have observed all counts.  With a
+fresh push the loop exits after one pull; fault-injection tests exercise the
+multi-iteration path with artificially stale rows.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .ack import FenceScope
+from .channel import Channel
+from .runtime import Manager
+from .sst import SST, SSTState
+
+
+class BarrierState(NamedTuple):
+    count: jax.Array  # () uint32 private counter
+    sst: SSTState
+
+
+class Barrier(Channel):
+    def __init__(self, parent, name: str, mgr: Manager,
+                 expect_num: int | None = None):
+        super().__init__(parent, name, mgr, expect_num=expect_num)
+        self.sst = SST(self, "sst", mgr, shape=(), dtype=jnp.uint32)
+
+    def init_state(self) -> BarrierState:
+        return BarrierState(
+            count=jnp.zeros((self.P,), jnp.uint32),
+            sst=self.sst.init_state())
+
+    def wait(self, state: BarrierState,
+             fence_scope: FenceScope = FenceScope.GLOBAL) -> BarrierState:
+        """Enter the barrier; returns once all participants have entered."""
+        # complete all outstanding RDMA operations (paper: mgr()::fence()).
+        sst_state = self.mgr.fence(state.sst, scope=fence_scope)
+        count = state.count + jnp.uint32(1)            # increment our counter
+        sst_state = self.sst.store_mine(sst_state, count)
+        sst_state, _ack = self.sst.push_broadcast(sst_state)  # and push
+
+        def not_done(carry):
+            sst_c, _ = carry
+            rows = self.sst.rows(sst_c)
+            waiting = jnp.any(rows < count)
+            return jax.lax.psum(waiting.astype(jnp.int32), self.axis) > 0
+
+        def re_pull(carry):
+            sst_c, it = carry
+            with self.mgr.no_tracking():
+                sst_c, _ = self.sst.pull_all(sst_c)
+            return sst_c, it + 1
+
+        sst_state, _iters = jax.lax.while_loop(
+            not_done, re_pull, (sst_state, jnp.int32(0)))
+        return BarrierState(count=count, sst=sst_state)

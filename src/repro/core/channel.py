@@ -1,0 +1,77 @@
+"""Channel base class — LOCO §4.1/§4.2.
+
+Channels are **named** (endpoints with matching names connect) and
+**composable** (sub-channels are namespaced under their parent with '/';
+component memory regions with '.').  In the SPMD adaptation every
+participant constructs the same channel tree at trace time, so the
+join/connect handshake reduces to registration-time checking — but the
+naming, namespacing, region declaration and membership count are kept
+because higher layers (memory ledger, benchmarks, the kvstore tracker)
+depend on them.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from .runtime import Manager
+
+
+class Channel:
+    """Base class for channel objects.
+
+    Concrete channels hold *static* configuration only; all dynamic state
+    lives in an explicit state pytree returned by ``init_state()`` and
+    threaded through the channel's methods (pure functions).  This is what
+    lets one channel definition run under vmap (tests), shard_map
+    (production) and inside scans/grads without hidden state.
+    """
+
+    def __init__(self, parent: Optional["Channel"], name: str, mgr: Manager,
+                 expect_num: Optional[int] = None):
+        if "/" in name or "." in name:
+            raise ValueError(f"channel name {name!r} may not contain '/' or '.'")
+        self.name = name
+        self.parent = parent
+        self.mgr = mgr
+        # LOCO's expect_num: how many peers must join before ready.  In SPMD
+        # all P participants join by construction; mismatches are config bugs
+        # we can catch immediately rather than hang on.
+        self.expect_num = mgr.P if expect_num is None else int(expect_num)
+        if self.expect_num != mgr.P:
+            raise ValueError(
+                f"channel {name!r} expects {self.expect_num} participants "
+                f"but the runtime has {mgr.P} (join would never complete)")
+        self._subchannels: Dict[str, "Channel"] = {}
+        if parent is not None:
+            parent._subchannels[name] = self
+        mgr.register_channel(self.full_name, self)
+
+    # -- naming --------------------------------------------------------------
+    @property
+    def full_name(self) -> str:
+        if self.parent is None:
+            return self.name
+        return f"{self.parent.full_name}/{self.name}"
+
+    def subchannel(self, name: str) -> "Channel":
+        return self._subchannels[name]
+
+    # -- regions (Appendix A.2 ledger) ----------------------------------------
+    def declare_region(self, name: str, shape, dtype):
+        """Declare a named component memory region ('<channel>.<region>')."""
+        return self.mgr.register_region(f"{self.full_name}.{name}", shape, dtype)
+
+    # -- conveniences ----------------------------------------------------------
+    @property
+    def P(self) -> int:
+        return self.mgr.P
+
+    @property
+    def axis(self) -> str:
+        return self.mgr.axis
+
+    def my_id(self):
+        return self.mgr.runtime.my_id()
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.full_name!r} P={self.P}>"

@@ -1,0 +1,177 @@
+"""Collective building blocks for channel implementations.
+
+These are the TPU-native realizations of LOCO's one-sided verbs (DESIGN.md
+§2).  Each helper documents its collective cost so the roofline ledger and
+the AckKey descriptors stay honest.
+
+Conventions: all functions run inside a per-participant trace (under vmap or
+shard_map) with collectives over ``axis``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def axis_size(axis: str) -> int:
+    return jax.lax.axis_size(axis)
+
+
+def my_id(axis: str):
+    return jax.lax.axis_index(axis)
+
+
+def bcast_from(value, owner, axis: str):
+    """Broadcast ``value`` from participant ``owner`` to all participants.
+
+    RDMA analogue: the owner's one-sided *push* of an owned_var (§5.1.1).
+    Realized as a masked all-reduce: cost 2·|value| bytes on a ring,
+    independent of P (cheaper than the P·|value| of an all-gather).
+    ``owner`` may be traced.
+    """
+    me = my_id(axis)
+    masked = jax.tree.map(
+        lambda v: jnp.where(me == owner, v, jnp.zeros_like(v)), value)
+    return jax.tree.map(lambda v: jax.lax.psum(v, axis), masked)
+
+
+def gather_rows(value, axis: str):
+    """All-gather each participant's ``value`` into a leading-P table.
+
+    RDMA analogue: every owner pushes its register to every peer (the SST
+    ``push_broadcast``).  Cost (P-1)/P·P·|value| ≈ P·|value| bytes per link.
+    """
+    return jax.lax.all_gather(value, axis, axis=0, tiled=False)
+
+
+def prefix_sums(x, axis: str) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(exclusive_prefix_at_me, total, gathered) for scalar ``x`` per node.
+
+    Used to resolve contended fetch-and-add deterministically: participant
+    order is the arrival order (fair, like FIFO NIC service).  Implemented
+    via a small all-gather — P words — then a local scan.
+    """
+    g = jax.lax.all_gather(x, axis, axis=0, tiled=False)  # (P,)
+    me = my_id(axis)
+    idx = jnp.arange(g.shape[0])
+    excl = jnp.sum(jnp.where(idx < me, g, jnp.zeros_like(g)))
+    total = jnp.sum(g)
+    return excl, total, g
+
+
+def remote_read(local_buf, target, index, axis: str):
+    """One-sided READ: each participant reads row ``index`` of participant
+    ``target``'s ``local_buf``  →  (P_requests are served collectively).
+
+    local_buf: (slots, *item)   per-participant storage
+    target:    () int32         participant to read from (traced)
+    index:     () int32         row within target's buffer (traced)
+    returns:   (*item,) value as stored at the target.
+
+    Implementation ("NIC-served read"): requests are tiny (2 words) and are
+    all-gathered; every participant serves the requests that address it; the
+    served values return via a masked all-reduce.  Cost ≈ 2·P·|item| bytes
+    (the reduce) + negligible request bytes — the collective analogue of P
+    concurrent RDMA reads.
+    """
+    me = my_id(axis)
+    req = jnp.stack([jnp.asarray(target, jnp.int32), jnp.asarray(index, jnp.int32)])
+    reqs = jax.lax.all_gather(req, axis, axis=0, tiled=False)      # (P, 2)
+    tgt, idx = reqs[:, 0], reqs[:, 1]
+    # serve every request addressed to me: (P, *item)
+    served = local_buf[jnp.clip(idx, 0, local_buf.shape[0] - 1)]
+    mine = tgt == me
+    served = jnp.where(
+        mine.reshape((-1,) + (1,) * (served.ndim - 1)), served,
+        jnp.zeros_like(served))
+    # return values: each requester picks its own row of the summed table.
+    table = jax.lax.psum(served, axis)                              # (P, *item)
+    return table[me]
+
+
+def remote_read_batch(local_buf, targets, indices, axis: str):
+    """Vector form of :func:`remote_read`: R requests per participant.
+
+    targets, indices: (R,) int32.  Returns (R, *item).
+    Served via all-gather(requests) + local gather + psum_scatter of the
+    (P, R, *item) served tensor — each participant receives exactly its R
+    answers, so the wire cost is ≈ 2·P·R·|item| on a ring (reduce-scatter),
+    not P²·R·|item|.
+    """
+    me = my_id(axis)
+    R = targets.shape[0]
+    req = jnp.stack([targets.astype(jnp.int32), indices.astype(jnp.int32)], axis=-1)
+    reqs = jax.lax.all_gather(req, axis, axis=0, tiled=False)       # (P, R, 2)
+    P = reqs.shape[0]
+    tgt = reqs[..., 0]
+    idx = jnp.clip(reqs[..., 1], 0, local_buf.shape[0] - 1)
+    served = local_buf[idx.reshape(-1)]                             # (P*R, *item)
+    served = served.reshape((P, R) + local_buf.shape[1:])
+    mask = (tgt == me).reshape((P, R) + (1,) * (local_buf.ndim - 1))
+    served = jnp.where(mask, served, jnp.zeros_like(served))
+    # psum_scatter over the requester axis: requester q receives sum_p served[p, q]
+    out = jax.lax.psum_scatter(served, axis, scatter_dimension=0, tiled=False)
+    return out  # (R, *item)
+
+
+def remote_write(local_buf, target, index, value, axis: str,
+                 pred=True):
+    """One-sided WRITE: each participant writes ``value`` into row ``index``
+    of participant ``target``'s buffer.  Racy writes to the same row are
+    resolved in participant order (lowest id last → highest id wins is
+    avoided; we apply in increasing id so the *highest* id's write lands
+    last, a fixed total order standing in for RDMA's unspecified outcome).
+
+    Cost: all-gather of (P, *item) write payloads ≈ P·|item| bytes.
+    Returns the updated local buffer.
+    """
+    me = my_id(axis)
+    pred = jnp.asarray(pred)
+    rec = (jnp.asarray(target, jnp.int32), jnp.asarray(index, jnp.int32),
+           value, pred)
+    tgts = jax.lax.all_gather(rec[0], axis, axis=0, tiled=False)    # (P,)
+    idxs = jax.lax.all_gather(rec[1], axis, axis=0, tiled=False)    # (P,)
+    vals = jax.lax.all_gather(rec[2], axis, axis=0, tiled=False)    # (P, *item)
+    ens = jax.lax.all_gather(rec[3], axis, axis=0, tiled=False)     # (P,)
+
+    def apply_one(buf, w):
+        t, i, v, en = w
+        do = (t == me) & en
+        i = jnp.clip(i, 0, buf.shape[0] - 1)
+        cur = buf[i]
+        return buf.at[i].set(jnp.where(do, v, cur))
+
+    P = tgts.shape[0]
+    buf = local_buf
+    # unrolled over P writers: deterministic order; P is a static mesh size.
+    for w in range(P):
+        buf = apply_one(buf, (tgts[w], idxs[w], vals[w], ens[w]))
+    return buf
+
+
+def remote_write_batch(local_buf, targets, indices, values, axis: str,
+                       preds=None):
+    """Vector form of :func:`remote_write`: R writes per participant,
+    applied in (participant, request) lexicographic order."""
+    R = targets.shape[0]
+    if preds is None:
+        preds = jnp.ones((R,), jnp.bool_)
+    me = my_id(axis)
+    tgts = jax.lax.all_gather(targets.astype(jnp.int32), axis, axis=0)  # (P,R)
+    idxs = jax.lax.all_gather(indices.astype(jnp.int32), axis, axis=0)
+    vals = jax.lax.all_gather(values, axis, axis=0)                     # (P,R,*)
+    ens = jax.lax.all_gather(preds, axis, axis=0)
+    P = tgts.shape[0]
+    flat_t = tgts.reshape(P * R)
+    flat_i = jnp.clip(idxs.reshape(P * R), 0, local_buf.shape[0] - 1)
+    flat_v = vals.reshape((P * R,) + local_buf.shape[1:])
+    flat_e = (flat_t == me) & ens.reshape(P * R)
+
+    def body(k, buf):
+        i = flat_i[k]
+        cur = buf[i]
+        return buf.at[i].set(jnp.where(flat_e[k], flat_v[k], cur))
+
+    return jax.lax.fori_loop(0, P * R, body, local_buf)

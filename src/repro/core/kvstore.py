@@ -1,0 +1,370 @@
+"""KVStore channel — the paper's linearizable key-value store (§6, App. C).
+
+Composition (all LOCO primitives):
+
+* values + consistency metadata live in a :class:`SharedRegion` striped
+  across participants — each row is ``[payload | counter | valid | checksum]``
+  (the paper's per-slot metadata verbatim);
+* every participant maintains a *local index* mapping key → (node, slot,
+  counter) — here a flat associative array in device memory (the paper's
+  host-side unordered_map; see DESIGN.md §7);
+* insertion/deletion/update are protected by an array of ticket locks,
+  ``lock = key % NUM_LOCKS`` (:class:`TicketLockArray`);
+* index updates propagate through the *tracker* — per-participant broadcast
+  records applied by every node, acknowledged through an SST (the paper's
+  tracker ringbuffers; in lockstep rounds each participant has at most one
+  record in flight per round, so the P rings fuse into one P-record
+  all-gather — same protocol, one collective);
+* **lookups take no locks**: local index probe + one-sided remote read,
+  validated by checksum (tearing), counter (stale index) and valid bit
+  (in-flight insert/delete) — returning the value, EMPTY, or retrying,
+  exactly per Fig. 3 / Appendix C.
+
+Linearization points follow Appendix C: writes at row placement, deletes at
+valid-bit unset, inserts at valid-bit set, reads per the case analysis.  The
+linearizability test replays the induced total order against a sequential
+oracle (tests/test_kvstore.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import colls
+from .ack import AckKey, join
+from .channel import Channel
+from .lock import NO_TICKET, TicketLockArray, TicketLockArrayState
+from .ownedvar import checksum
+from .region import SharedRegion, SharedRegionState
+from .runtime import Manager
+from .sst import SST, SSTState
+
+# op codes
+NOP, GET, INSERT, UPDATE, DELETE = 0, 1, 2, 3, 4
+
+_EMPTY, _USED = jnp.int8(0), jnp.int8(1)
+MAX_GET_RETRIES = 3
+
+
+class KVResult(NamedTuple):
+    value: jax.Array    # (W,) int32 payload (zeros when not found)
+    found: jax.Array    # () bool — GET: key present; mods: op succeeded
+    retries: jax.Array  # () int32 — GET checksum retries (0 in clean runs)
+
+
+class KVStoreState(NamedTuple):
+    locks: TicketLockArrayState
+    rows: SharedRegionState   # (S, W+3) int32: payload | ctr | valid | csum
+    slot_ctr: jax.Array       # (S,) uint32 — per-slot reuse counters (host)
+    free_stack: jax.Array     # (S,) int32 — host-local free slots
+    free_top: jax.Array       # () int32
+    idx_state: jax.Array      # (C,) int8
+    idx_key: jax.Array        # (C,) uint32
+    idx_node: jax.Array       # (C,) int32
+    idx_slot: jax.Array       # (C,) int32
+    idx_ctr: jax.Array        # (C,) uint32
+    idx_overflow: jax.Array   # () bool — local index ran out of space
+    acks: SSTState            # tracker ack counters
+
+
+def _u2i(x):
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.uint32), jnp.int32)
+
+
+def _i2u(x):
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.int32), jnp.uint32)
+
+
+class KVStore(Channel):
+    def __init__(self, parent, name: str, mgr: Manager, *,
+                 slots_per_node: int, value_width: int = 2,
+                 num_locks: int = 8, index_capacity: int | None = None):
+        super().__init__(parent, name, mgr)
+        self.S = int(slots_per_node)
+        self.W = int(value_width)
+        self.L = int(num_locks)
+        self.C = int(index_capacity or (self.S * self.P * 2))
+        self.locks = TicketLockArray(self, "locks", mgr, num_locks=self.L)
+        self.rows_region = SharedRegion(self, "data", mgr, slots=self.S,
+                                        item_shape=(self.W + 3,),
+                                        dtype=jnp.int32)
+        self.acks = SST(self, "tracker_acks", mgr, shape=(), dtype=jnp.uint32)
+        # the local index is private memory, not a network region, but we
+        # account for it in the ledger like the paper's process heap.
+        self.declare_region("index", (self.C, 4), jnp.int32)
+
+    # -- row encoding ------------------------------------------------------------
+    def encode_row(self, payload, ctr, valid):
+        body = jnp.concatenate([
+            jnp.asarray(payload, jnp.int32).reshape(self.W),
+            _u2i(ctr).reshape(1),
+            jnp.asarray(valid, jnp.int32).reshape(1)])
+        return jnp.concatenate([body, _u2i(checksum(body)).reshape(1)])
+
+    def decode_row(self, row):
+        payload = row[:self.W]
+        ctr = _i2u(row[self.W])
+        valid = row[self.W + 1] != 0
+        csum_ok = checksum(row[:self.W + 2]) == _i2u(row[self.W + 2])
+        return payload, ctr, valid, csum_ok
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self) -> KVStoreState:
+        P = self.P
+        return KVStoreState(
+            locks=self.locks.init_state(),
+            rows=self.rows_region.init_state(),
+            slot_ctr=jnp.zeros((P, self.S), jnp.uint32),
+            free_stack=jnp.broadcast_to(jnp.arange(self.S, dtype=jnp.int32),
+                                        (P, self.S)),
+            free_top=jnp.full((P,), self.S, jnp.int32),
+            idx_state=jnp.zeros((P, self.C), jnp.int8),
+            idx_key=jnp.zeros((P, self.C), jnp.uint32),
+            idx_node=jnp.zeros((P, self.C), jnp.int32),
+            idx_slot=jnp.zeros((P, self.C), jnp.int32),
+            idx_ctr=jnp.zeros((P, self.C), jnp.uint32),
+            idx_overflow=jnp.zeros((P,), jnp.bool_),
+            acks=self.acks.init_state())
+
+    # -- local index -------------------------------------------------------------
+    def _index_lookup(self, st: KVStoreState, key):
+        match = (st.idx_state == _USED) & (st.idx_key == key)
+        found = jnp.any(match)
+        pos = jnp.argmax(match)
+        return (found, pos, st.idx_node[pos], st.idx_slot[pos],
+                st.idx_ctr[pos])
+
+    # -- lock-free GET (paper Fig. 3 read path) -------------------------------------
+    def _get(self, st: KVStoreState, key, pred):
+        found_idx, _pos, node, slot, ctr = self._index_lookup(st, key)
+
+        def read_once(_):
+            row = colls.remote_read(st.rows.buf, node, slot, self.axis)
+            payload, row_ctr, valid, csum_ok = self.decode_row(row)
+            return payload, row_ctr, valid, csum_ok
+
+        def cond(c):
+            tries, _p, _rc, _v, csum_ok = c
+            retrying = pred & found_idx & ~csum_ok & (tries < MAX_GET_RETRIES)
+            return jax.lax.psum(retrying.astype(jnp.int32), self.axis) > 0
+
+        def body(c):
+            tries, *_ = c
+            p, rc, v, ok = read_once(None)
+            return tries + 1, p, rc, v, ok
+
+        with self.mgr.no_tracking():
+            p0, rc0, v0, ok0 = read_once(None)
+            tries, payload, row_ctr, valid, csum_ok = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), p0, rc0, v0, ok0))
+
+        # Appendix C case analysis
+        ctr_match = row_ctr == ctr
+        found = found_idx & csum_ok & ctr_match & valid
+        value = jnp.where(found, payload, jnp.zeros((self.W,), jnp.int32))
+        return value, found, tries
+
+    # -- tracker application ----------------------------------------------------------
+    def _apply_tracker(self, st: KVStoreState, recs):
+        """Apply gathered tracker records (P, 5) in participant order:
+        rec = [kind(0/1=ins/2=del), key_bits, node, slot, ctr_bits]."""
+        me = colls.my_id(self.axis)
+
+        def apply_one(p, carry):
+            st_c = carry
+            kind, key_b, node, slot, ctr_b = (recs[p, 0], recs[p, 1],
+                                              recs[p, 2], recs[p, 3],
+                                              recs[p, 4])
+            key = _i2u(key_b)
+            ctr = _i2u(ctr_b)
+            # INSERT: place at first empty index position
+            free = st_c.idx_state == _EMPTY
+            has_free = jnp.any(free)
+            ins_pos = jnp.argmax(free)
+            do_ins = (kind == 1) & has_free
+            overflow = st_c.idx_overflow | ((kind == 1) & ~has_free)
+            # DELETE: clear matching entry; host frees the slot
+            match = (st_c.idx_state == _USED) & (st_c.idx_key == key)
+            del_pos = jnp.argmax(match)
+            do_del = (kind == 2) & jnp.any(match)
+            pos = jnp.where(do_ins, ins_pos, del_pos)
+            new_state_v = jnp.where(
+                do_ins, _USED, jnp.where(do_del, _EMPTY,
+                                         st_c.idx_state[pos]))
+            st_c = st_c._replace(
+                idx_state=st_c.idx_state.at[pos].set(new_state_v),
+                idx_key=st_c.idx_key.at[pos].set(
+                    jnp.where(do_ins, key, jnp.where(do_del, jnp.uint32(0),
+                                                     st_c.idx_key[pos]))),
+                idx_node=st_c.idx_node.at[pos].set(
+                    jnp.where(do_ins, node, st_c.idx_node[pos])),
+                idx_slot=st_c.idx_slot.at[pos].set(
+                    jnp.where(do_ins, slot, st_c.idx_slot[pos])),
+                idx_ctr=st_c.idx_ctr.at[pos].set(
+                    jnp.where(do_ins, ctr, st_c.idx_ctr[pos])),
+                idx_overflow=overflow)
+            # slot GC at the hosting node (paper: counter-based GC)
+            host_frees = do_del & (node == me)
+            top = st_c.free_top
+            st_c = st_c._replace(
+                free_stack=st_c.free_stack.at[jnp.clip(top, 0, self.S - 1)]
+                .set(jnp.where(host_frees, slot,
+                               st_c.free_stack[jnp.clip(top, 0, self.S - 1)])),
+                free_top=jnp.where(host_frees, top + 1, top))
+            return st_c
+
+        return jax.lax.fori_loop(0, recs.shape[0], apply_one, st)
+
+    # -- one service round for lock holders ------------------------------------------
+    def _service_round(self, st: KVStoreState, op, key, value, lock_id,
+                       ticket, pending):
+        me = colls.my_id(self.axis)
+        holding = pending & self.locks.holds(st.locks, lock_id, ticket)
+        found, _pos, node, slot, ctr = self._index_lookup(st, key)
+        do_ins = holding & (op == INSERT) & ~found
+        do_upd = holding & (op == UPDATE) & found
+        do_del = holding & (op == DELETE) & found
+
+        # ---- INSERT phase 1: allocate local slot, write row with valid=0
+        can_alloc = st.free_top > 0
+        do_ins = do_ins & can_alloc
+        my_slot = st.free_stack[jnp.maximum(st.free_top - 1, 0)]
+        free_top = jnp.where(do_ins, st.free_top - 1, st.free_top)
+        new_ctr = st.slot_ctr[my_slot] + jnp.uint32(1)
+        row_invalid = self.encode_row(value, new_ctr, False)
+        buf = st.rows.buf
+        buf = buf.at[my_slot].set(jnp.where(do_ins, row_invalid, buf[my_slot]))
+        slot_ctr = st.slot_ctr.at[my_slot].set(
+            jnp.where(do_ins, new_ctr, st.slot_ctr[my_slot]))
+        st = st._replace(rows=st.rows._replace(buf=buf), slot_ctr=slot_ctr,
+                         free_top=free_top)
+
+        # ---- tracker broadcast (insert/delete records), applied by all
+        kind = jnp.where(do_ins, jnp.int32(1),
+                         jnp.where(do_del, jnp.int32(2), jnp.int32(0)))
+        rec = jnp.stack([kind, _u2i(key), jnp.where(do_ins, me, node),
+                         jnp.where(do_ins, my_slot, slot),
+                         _u2i(jnp.where(do_ins, new_ctr, ctr))])
+        recs = jax.lax.all_gather(rec, self.axis, axis=0)        # (P, 5)
+        n_recs = jnp.sum(recs[:, 0] != 0).astype(jnp.uint32)
+        st = self._apply_tracker(st, recs)
+        # acknowledge through the SST; inserter requires all peers caught up.
+        my_acked = self.acks.rows(st.acks)[me] + n_recs
+        acks = self.acks.store_mine(st.acks, my_acked)
+        acks, _a = self.acks.push_broadcast(acks)
+        all_acked = jnp.all(self.acks.rows(acks) >= my_acked)
+        st = st._replace(acks=acks)
+
+        # ---- UPDATE: one-sided write of the full row (value, same ctr, valid)
+        row_upd = self.encode_row(value, ctr, True)
+        rows2, _ = self.rows_region.write(st.rows, node, slot, row_upd,
+                                          pred=do_upd)
+        # ---- DELETE: unset valid bit (payload cleared, ctr preserved)
+        row_del = self.encode_row(jnp.zeros((self.W,), jnp.int32), ctr, False)
+        rows2, _ = self.rows_region.write(rows2, node, slot, row_del,
+                                          pred=do_del)
+        st = st._replace(rows=rows2)
+
+        # ---- INSERT phase 2: mark valid **after** every peer acknowledged
+        row_valid = self.encode_row(value, new_ctr, True)
+        # paper: inserter waits for all acks, then sets valid — order the
+        # valid-bit write after the ack observation.
+        gate = join(AckKey(jax.tree.leaves(acks)), do_ins & all_acked)
+        buf2 = st.rows.buf
+        buf2 = buf2.at[my_slot].set(jnp.where(gate, row_valid, buf2[my_slot]))
+        st = st._replace(rows=st.rows._replace(buf=buf2))
+
+        # ---- release: critical-section effects joined before serving bump
+        holding_rel = join(AckKey([st.rows.buf]), holding)
+        lstate = self.locks.release(st.locks, lock_id, holding_rel)
+        st = st._replace(locks=lstate)
+
+        success = do_ins | do_upd | do_del
+        return st, pending & ~holding, holding, success
+
+    # -- public batched round API ---------------------------------------------------
+    def op_round(self, st: KVStoreState, op, key, value):
+        """Every participant submits one operation; runs service rounds until
+        all complete.  Returns (state, KVResult).
+
+        op: () int32 in {NOP, GET, INSERT, UPDATE, DELETE}
+        key: () uint32 (nonzero); value: (W,) int32.
+        """
+        op = jnp.asarray(op, jnp.int32)
+        key = jnp.asarray(key, jnp.uint32)
+        value = jnp.asarray(value, jnp.int32).reshape(self.W)
+        lock_id = (key % jnp.uint32(self.L)).astype(jnp.int32)
+        want_lock = (op == INSERT) | (op == UPDATE) | (op == DELETE)
+        lstate, ticket = self.locks.acquire(st.locks, lock_id, want_lock)
+        st = st._replace(locks=lstate)
+
+        # lock-free GET against pre-round state
+        get_val, get_found, retries = self._get(st, key, op == GET)
+
+        def cond(c):
+            _st, pending, _succ = c
+            return jax.lax.psum(pending.astype(jnp.int32), self.axis) > 0
+
+        def body(c):
+            st_c, pending, succ = c
+            with self.mgr.no_tracking():
+                st_c, pending, _held, s_now = self._service_round(
+                    st_c, op, key, value, lock_id, ticket, pending)
+            return st_c, pending, succ | s_now
+
+        st, _pending, succ = jax.lax.while_loop(
+            cond, body, (st, want_lock, jnp.asarray(False)))
+
+        is_get = op == GET
+        return st, KVResult(
+            value=jnp.where(is_get, get_val, jnp.zeros((self.W,), jnp.int32)),
+            found=jnp.where(is_get, get_found, succ),
+            retries=retries)
+
+    # -- batched lock-free GETs (the paper's §7 "large window" mode) ---------
+    def get_batch(self, st: KVStoreState, keys):
+        """R lock-free GETs per participant in ONE collective round.
+
+        keys: (R,) uint32.  Returns (values (R, W), found (R,)).  This is
+        the window-size analogue from the paper's evaluation: R outstanding
+        one-sided reads amortize the request/serve round-trip — realized
+        here as a single batched remote read (colls.remote_read_batch).
+        Retry-on-checksum is per-batch (one extra round if any element
+        tore); Appendix C case analysis applied elementwise.
+        """
+        keys = jnp.asarray(keys, jnp.uint32)
+        R = keys.shape[0]
+
+        def lookup(key):
+            return self._index_lookup(st, key)
+
+        found_idx, _pos, node, slot, ctr = jax.vmap(lookup)(keys)
+
+        def read_all(_):
+            rows = colls.remote_read_batch(
+                st.rows.buf, node.astype(jnp.int32),
+                slot.astype(jnp.int32), self.axis)       # (R, W+3)
+            payload, row_ctr, valid, csum_ok = jax.vmap(self.decode_row)(rows)
+            return payload, row_ctr, valid, csum_ok
+
+        def cond(c):
+            tries, _p, _rc, _v, csum_ok = c
+            bad = jnp.any(found_idx & ~csum_ok) & (tries < MAX_GET_RETRIES)
+            return jax.lax.psum(bad.astype(jnp.int32), self.axis) > 0
+
+        def body(c):
+            tries, *_ = c
+            p, rc, v, ok = read_all(None)
+            return tries + 1, p, rc, v, ok
+
+        with self.mgr.no_tracking():
+            p0, rc0, v0, ok0 = read_all(None)
+            _tries, payload, row_ctr, valid, csum_ok = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), p0, rc0, v0, ok0))
+
+        found = found_idx & csum_ok & (row_ctr == ctr) & valid
+        values = jnp.where(found[:, None], payload,
+                           jnp.zeros((R, self.W), jnp.int32))
+        return values, found

@@ -1,0 +1,141 @@
+"""Ticket lock over network memory — LOCO §5.4, after Mellor-Crummey &
+Scott [41].
+
+``next_ticket`` and ``now_serving`` are atomic_vars.  Acquire = remote
+fetch-and-add on next_ticket; the holder is the participant whose ticket
+equals now_serving; release increments now_serving (fenced, per the paper:
+"LOCO fences used on release and specified by caller").
+
+Round-based usage in SPMD (DESIGN.md §2): a participant requests the lock
+with ``acquire`` (getting a ticket), performs its critical section in the
+round(s) where ``holds`` is True, and calls ``release``.  Contended
+requests serialize across rounds in FIFO ticket order — the same fairness
+the ticket lock provides on RDMA.  The paper's intra-node thread handover
+has no SPMD analogue (one trace per participant) and is documented as such.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .ack import FenceScope
+from .atomic import AtomicVar, AtomicVarState
+from .channel import Channel
+from .runtime import Manager
+
+# Sentinel ticket for "not holding / not requesting".
+NO_TICKET = jnp.uint32(0xFFFFFFFF)
+
+
+class TicketLockState(NamedTuple):
+    next_ticket: AtomicVarState
+    now_serving: AtomicVarState
+
+
+class TicketLock(Channel):
+    def __init__(self, parent, name: str, mgr: Manager, *, host: int = 0):
+        super().__init__(parent, name, mgr)
+        self.next_ticket = AtomicVar(self, "next", mgr, host=host,
+                                     dtype=jnp.uint32)
+        self.now_serving = AtomicVar(self, "serving", mgr, host=host,
+                                     dtype=jnp.uint32)
+
+    def init_state(self) -> TicketLockState:
+        return TicketLockState(next_ticket=self.next_ticket.init_state(0),
+                               now_serving=self.now_serving.init_state(0))
+
+    # -- acquire ----------------------------------------------------------------
+    def acquire(self, state: TicketLockState, want=True):
+        """Fetch a ticket (remote FAA).  Returns (state, ticket) where
+        ticket == NO_TICKET for non-requesting participants."""
+        nt, my_ticket, _ack = self.next_ticket.fetch_add(
+            state.next_ticket, jnp.uint32(1), pred=want)
+        ticket = jnp.where(want, my_ticket, NO_TICKET)
+        return state._replace(next_ticket=nt), ticket
+
+    # -- test -------------------------------------------------------------------
+    def holds(self, state: TicketLockState, ticket):
+        """Do I hold the lock this round?  (local read of cached serving.)"""
+        serving = self.now_serving.load_cached(state.now_serving)
+        return ticket == serving
+
+    def refresh(self, state: TicketLockState):
+        """Re-pull now_serving from its host (the 'spin' read)."""
+        ns, _ack = self.now_serving.pull(state.now_serving)
+        return state._replace(now_serving=ns)
+
+    # -- release ----------------------------------------------------------------
+    def release(self, state: TicketLockState, holding,
+                fence_scope: FenceScope = FenceScope.GLOBAL):
+        """Release by the holder: fence prior ops (caller-specified scope,
+        §5.4), then increment now_serving.  At most one participant may pass
+        ``holding=True`` per round (mutual exclusion invariant)."""
+        ns_state = self.mgr.fence(state.now_serving, scope=fence_scope)
+        ns, _old, _ack = self.now_serving.fetch_add(
+            ns_state, jnp.uint32(1), pred=holding)
+        return state._replace(now_serving=ns)
+
+
+class TicketLockArrayState(NamedTuple):
+    next_ticket: jax.Array   # (L,) uint32, replicated-consistent
+    now_serving: jax.Array   # (L,) uint32, replicated-consistent
+
+
+class TicketLockArray(Channel):
+    """An array of L ticket locks (the kvstore's lock stripe, LOCO §6).
+
+    Conceptually lock l's atomics are hosted at participant l mod P with
+    cached copies everywhere (exactly L interleaved TicketLocks); because
+    every update flows through the same deterministic collective resolution,
+    each participant can maintain a bit-identical replica of all L
+    (next, serving) pairs — the collective *is* the NIC serialization point.
+    This fuses L independent FAA resolutions into one P-record all-gather.
+    """
+
+    def __init__(self, parent, name: str, mgr: Manager, *, num_locks: int):
+        super().__init__(parent, name, mgr)
+        self.L = int(num_locks)
+        self.declare_region("next", (self.L,), jnp.uint32)
+        self.declare_region("serving", (self.L,), jnp.uint32)
+
+    def init_state(self) -> TicketLockArrayState:
+        z = jnp.zeros((self.P, self.L), jnp.uint32)
+        return TicketLockArrayState(next_ticket=z, now_serving=z)
+
+    def _totals(self, lock_id, flag):
+        """(P-record all-gather) → per-lock counts of flagged requests and
+        my rank among same-lock lower-id requesters."""
+        import jax
+        from . import colls
+        lids = jax.lax.all_gather(lock_id.astype(jnp.int32), self.axis)  # (P,)
+        flags = jax.lax.all_gather(flag, self.axis)                       # (P,)
+        me = colls.my_id(self.axis)
+        qs = jnp.arange(lids.shape[0])
+        same_lower = (lids == lock_id.astype(jnp.int32)) & flags & (qs < me)
+        rank = jnp.sum(same_lower.astype(jnp.uint32))
+        onehot = (lids[:, None] == jnp.arange(self.L)[None, :]) & flags[:, None]
+        totals = jnp.sum(onehot.astype(jnp.uint32), axis=0)              # (L,)
+        return rank, totals
+
+    def acquire(self, state: TicketLockArrayState, lock_id, want):
+        """FAA on next_ticket[lock_id] for every wanting participant.
+        Returns (state, ticket) with ticket==NO_TICKET where not wanting."""
+        want = jnp.asarray(want)
+        rank, totals = self._totals(lock_id, want)
+        ticket = state.next_ticket[lock_id] + rank
+        new = state._replace(next_ticket=state.next_ticket + totals)
+        return new, jnp.where(want, ticket, NO_TICKET)
+
+    def holds(self, state: TicketLockArrayState, lock_id, ticket):
+        return ticket == state.now_serving[lock_id]
+
+    def release(self, state: TicketLockArrayState, lock_id, holding):
+        """Holder increments now_serving[lock_id].  The caller is responsible
+        for ordering its critical-section writes before this via an explicit
+        join (ack.join) — matching the paper's caller-specified release fence.
+        At most one holder per lock per round (mutual-exclusion invariant)."""
+        holding = jnp.asarray(holding)
+        _rank, totals = self._totals(lock_id, holding)
+        return state._replace(now_serving=state.now_serving + totals)

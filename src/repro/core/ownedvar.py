@@ -1,0 +1,121 @@
+"""owned_var — single-writer multi-reader register (LOCO §5.1.1).
+
+Each owned_var has one authoritative copy at its *owner* and cached copies at
+every other participant, updated by owner pushes or reader pulls.  Atomicity
+follows the paper:
+
+* values of at most the atomic word size are inherently atomic (aligned
+  loads/stores cannot tear);
+* larger values carry a checksum, and readers retry (here: report a mismatch
+  flag; the lockstep execution cannot actually tear, but the machinery is
+  kept, exercised by fault-injection tests, and — importantly — carried into
+  the kvstore whose correctness argument depends on it).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import colls
+from .ack import ALL_PEERS, AckKey, make_ack
+from .channel import Channel
+from .runtime import Manager
+
+_ATOMIC_WORD_BYTES = 4  # jnp default int/float width (no x64 in this stack)
+
+
+def value_nbytes(shape, dtype) -> int:
+    return int(np.prod(shape, dtype=np.int64) or 1) * jnp.dtype(dtype).itemsize
+
+
+def checksum(value: jax.Array) -> jax.Array:
+    """Deterministic 32-bit checksum of a value's bit pattern.
+
+    A multiply–xor fold (murmur-style finalizer) over 32-bit lanes — cheap on
+    the VPU, collision-resistant enough to detect torn multi-word updates.
+    """
+    v = value
+    if jnp.issubdtype(v.dtype, jnp.floating):
+        lanes = jax.lax.bitcast_convert_type(v.astype(jnp.float32), jnp.uint32)
+    elif v.dtype == jnp.bool_:
+        lanes = v.astype(jnp.uint32)
+    else:
+        lanes = jax.lax.bitcast_convert_type(v.astype(jnp.int32), jnp.uint32)
+    lanes = lanes.reshape(-1)
+    idx = jnp.arange(lanes.shape[0], dtype=jnp.uint32)
+    h = lanes * jnp.uint32(0x9E3779B1) + (idx + jnp.uint32(1)) * jnp.uint32(0x85EBCA6B)
+    h ^= h >> 15
+    acc = jnp.sum(h, dtype=jnp.uint32)
+    acc ^= acc >> 13
+    acc *= jnp.uint32(0xC2B2AE35)
+    acc ^= acc >> 16
+    return acc
+
+
+class OwnedVarState(NamedTuple):
+    cached: jax.Array  # (*shape) local cached copy (authoritative at owner)
+    csum: jax.Array    # () uint32 checksum of cached
+
+
+class OwnedVar(Channel):
+    """Single-writer multi-reader register owned by participant ``owner``."""
+
+    def __init__(self, parent, name: str, mgr: Manager, *, owner: int,
+                 shape: Tuple[int, ...] = (), dtype=jnp.float32):
+        super().__init__(parent, name, mgr)
+        self.owner = int(owner)
+        self.shape = tuple(shape)
+        self.dtype = dtype
+        self.nbytes = value_nbytes(self.shape, dtype)
+        self.needs_checksum = self.nbytes > _ATOMIC_WORD_BYTES
+        self.declare_region("val", self.shape, dtype)
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self, value=None) -> OwnedVarState:
+        v = jnp.zeros(self.shape, self.dtype) if value is None else \
+            jnp.asarray(value, self.dtype)
+        st = OwnedVarState(cached=v, csum=checksum(v))
+        # stacked over P participants
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (self.P,) + x.shape),
+                            st)
+
+    # -- owner-side ------------------------------------------------------------
+    def store_mine(self, state: OwnedVarState, value, pred=True) -> OwnedVarState:
+        """Local store into my copy (meaningful at the owner; paper Fig 1a)."""
+        value = jnp.asarray(value, self.dtype).reshape(self.shape)
+        new_c = jnp.where(pred, value, state.cached)
+        return OwnedVarState(cached=new_c, csum=checksum(new_c))
+
+    def push(self, state: OwnedVarState):
+        """Owner pushes its copy to all cached copies (one-sided write)."""
+        cached = colls.bcast_from(state.cached, self.owner, self.axis)
+        csum = colls.bcast_from(state.csum, self.owner, self.axis)
+        new = OwnedVarState(cached=cached, csum=csum)
+        ack = make_ack((cached, csum), "write", self.full_name, ALL_PEERS,
+                       self.nbytes)
+        return new, self.mgr.track(ack)
+
+    # -- reader-side -------------------------------------------------------------
+    def pull(self, state: OwnedVarState):
+        """Readers refresh their cached copies from the owner (one-sided read)."""
+        cached = colls.bcast_from(state.cached, self.owner, self.axis)
+        csum = colls.bcast_from(state.csum, self.owner, self.axis)
+        new = OwnedVarState(cached=cached, csum=csum)
+        ack = make_ack((cached, csum), "read", self.full_name,
+                       (self.owner,), self.nbytes)
+        return new, self.mgr.track(ack)
+
+    def load(self, state: OwnedVarState):
+        """Local load of the cached copy → (value, checksum_ok).
+
+        For word-size values checksum_ok is constant True (inherent
+        atomicity); for larger values the stored checksum is verified, and a
+        mismatch means the read raced a torn update and must retry (§5.1.1).
+        """
+        if not self.needs_checksum:
+            return state.cached, jnp.asarray(True)
+        ok = checksum(state.cached) == state.csum
+        return state.cached, ok

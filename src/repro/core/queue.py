@@ -1,0 +1,124 @@
+"""Shared FIFO queue — LOCO §5.4, adapting the cyclic ring queue [43].
+
+All participants can push and pop; each pop corresponds to exactly one push.
+``head``/``tail`` are atomic_vars; entries are striped across participants'
+shared regions (global slot s lives at participant s mod P, local row
+s div P).  Each slot stores (seq, payload) so consumers can verify the slot
+they claimed was produced by the matching enqueue ticket.
+
+Flow control is resolved *before* ticket issue: requesters are ranked by the
+same participant-order prefix scan used for FAA, and only ranks that fit
+(space for enqueues, available items for dequeues) receive tickets — the
+SPMD analogue of CRQ's closed/empty checks, made deterministic (DESIGN §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import colls
+from .atomic import AtomicVar, AtomicVarState
+from .channel import Channel
+from .region import SharedRegion, SharedRegionState
+from .runtime import Manager
+
+EMPTY_SEQ = jnp.uint32(0xFFFFFFFF)
+
+
+class SharedQueueState(NamedTuple):
+    head: AtomicVarState
+    tail: AtomicVarState
+    slots: SharedRegionState   # rows: [seq_word, payload...] striped
+
+
+class SharedQueue(Channel):
+    def __init__(self, parent, name: str, mgr: Manager, *,
+                 slots_per_node: int, width: int = 1, dtype=jnp.int32):
+        super().__init__(parent, name, mgr)
+        self.slots_per_node = int(slots_per_node)
+        self.width = int(width)
+        self.dtype = dtype
+        self.capacity = self.slots_per_node * self.P
+        self.head = AtomicVar(self, "head", mgr, host=0, dtype=jnp.uint32)
+        self.tail = AtomicVar(self, "tail", mgr, host=0, dtype=jnp.uint32)
+        # row layout: [seq (stored via bitcast in dtype lane), payload...]
+        self.region = SharedRegion(self, "entries", mgr,
+                                   slots=self.slots_per_node,
+                                   item_shape=(1 + self.width,), dtype=dtype)
+
+    def _to_lane(self, seq_u32):
+        """Bit-preserving encode of a uint32 seq into a payload-dtype lane."""
+        if self.dtype == jnp.uint32:
+            return seq_u32
+        return jax.lax.bitcast_convert_type(seq_u32, self.dtype)
+
+    def _from_lane(self, lane):
+        if self.dtype == jnp.uint32:
+            return lane
+        return jax.lax.bitcast_convert_type(lane, jnp.uint32)
+
+    def init_state(self) -> SharedQueueState:
+        slots = self.region.init_state()
+        # mark all slots empty (seq lane = EMPTY sentinel)
+        buf = slots.buf.at[..., 0].set(self._to_lane(EMPTY_SEQ))
+        return SharedQueueState(
+            head=self.head.init_state(0),
+            tail=self.tail.init_state(0),
+            slots=slots._replace(buf=buf))
+
+    # -- helpers ---------------------------------------------------------------
+    def _slot_of(self, ticket):
+        # cyclic: global slot = ticket mod capacity (flow control guarantees
+        # the slot was consumed before reuse; seq check guards ABA).
+        t = (ticket % jnp.uint32(self.capacity)).astype(jnp.int32)
+        return t % jnp.int32(self.P), t // jnp.int32(self.P)
+
+    # -- enqueue -----------------------------------------------------------------
+    def enqueue(self, state: SharedQueueState, value, want=True):
+        """Push ``value`` ((width,) dtype).  Returns (state, ok)."""
+        want = jnp.asarray(want)
+        # flow control: rank requesters, grant ranks that fit.
+        head_now = colls.bcast_from(state.head.official, 0, self.axis)
+        tail_now = colls.bcast_from(state.tail.official, 0, self.axis)
+        rank, _, _ = colls.prefix_sums(want.astype(jnp.int32), self.axis)
+        space = jnp.int32(self.capacity) - (tail_now - head_now).astype(jnp.int32)
+        grant = want & (rank < space)
+        tail_st, ticket, _ack = self.tail.fetch_add(
+            state.tail, jnp.uint32(1), pred=grant)
+        # write (seq, payload) into the striped slot (one-sided write).
+        node, row = self._slot_of(ticket)
+        entry = jnp.concatenate([
+            self._to_lane(ticket).reshape(1),
+            jnp.asarray(value, self.dtype).reshape(self.width)])
+        slots, _ack2 = self.region.write(state.slots, node, row, entry,
+                                         pred=grant)
+        new = state._replace(tail=tail_st, slots=slots)
+        return new, grant
+
+    # -- dequeue -----------------------------------------------------------------
+    def dequeue(self, state: SharedQueueState, want=True):
+        """Pop one value.  Returns (state, value, ok); FIFO in ticket order."""
+        want = jnp.asarray(want)
+        head_now = colls.bcast_from(state.head.official, 0, self.axis)
+        tail_now = colls.bcast_from(state.tail.official, 0, self.axis)
+        rank, _, _ = colls.prefix_sums(want.astype(jnp.int32), self.axis)
+        avail = (tail_now - head_now).astype(jnp.int32)
+        grant = want & (rank < avail)
+        head_st, ticket, _ack = self.head.fetch_add(
+            state.head, jnp.uint32(1), pred=grant)
+        node, row = self._slot_of(ticket)
+        entry, _ack2 = self.region.read(state.slots, node, row)
+        seq = self._from_lane(entry[0])
+        matches = seq == ticket
+        ok = grant & matches
+        value = entry[1:]
+        # clear the consumed slot (mark empty for ABA safety on wrap).
+        empty = jnp.concatenate([
+            self._to_lane(EMPTY_SEQ).reshape(1),
+            jnp.zeros((self.width,), self.dtype)])
+        slots, _ack3 = self.region.write(state.slots, node, row, empty,
+                                         pred=ok)
+        new = state._replace(head=head_st, slots=slots)
+        return new, value, ok

@@ -1,0 +1,87 @@
+"""shared_region — the basic building block of most LOCO channels (§5.1.1).
+
+A symmetric region of memory on each participant; every participant can read
+and write all other participants' regions at row granularity.  As in the
+paper, the region itself guarantees nothing about consistency — higher
+channels layer locks / usage constraints / checksums on top.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import colls
+from .ack import ALL_PEERS, AckKey, make_ack
+from .channel import Channel
+from .runtime import Manager
+
+
+class SharedRegionState(NamedTuple):
+    buf: jax.Array  # (slots, *item) per participant; stacked: (P, slots, *item)
+
+
+class SharedRegion(Channel):
+    """Symmetric per-participant buffer of ``slots`` rows of ``item_shape``."""
+
+    def __init__(self, parent, name: str, mgr: Manager, *, slots: int,
+                 item_shape: Tuple[int, ...] = (), dtype=jnp.float32):
+        super().__init__(parent, name, mgr)
+        self.slots = int(slots)
+        self.item_shape = tuple(item_shape)
+        self.dtype = dtype
+        self.declare_region("buf", (self.slots, *self.item_shape), dtype)
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self) -> SharedRegionState:
+        """Stacked initial state (leading P axis) for Runtime.run."""
+        return SharedRegionState(
+            buf=jnp.zeros((self.P, self.slots, *self.item_shape), self.dtype))
+
+    @property
+    def item_nbytes(self) -> int:
+        import numpy as np
+        return int(np.prod(self.item_shape, dtype=np.int64) or 1) * \
+            jnp.dtype(self.dtype).itemsize
+
+    # -- local access ----------------------------------------------------------
+    def local_read(self, state: SharedRegionState, index):
+        return state.buf[index]
+
+    def local_write(self, state: SharedRegionState, index, value,
+                    pred=True) -> SharedRegionState:
+        cur = state.buf[index]
+        return state._replace(buf=state.buf.at[index].set(
+            jnp.where(pred, value, cur)))
+
+    # -- one-sided access (collectively served; see colls.py) -------------------
+    def read(self, state: SharedRegionState, target, index):
+        """One-sided read of row ``index`` at participant ``target``."""
+        val = colls.remote_read(state.buf, target, index, self.axis)
+        ack = make_ack(val, "read", self.full_name, ALL_PEERS, self.item_nbytes)
+        return val, self.mgr.track(ack)
+
+    def read_batch(self, state: SharedRegionState, targets, indices):
+        vals = colls.remote_read_batch(state.buf, targets, indices, self.axis)
+        ack = make_ack(vals, "read", self.full_name, ALL_PEERS,
+                       self.item_nbytes * int(targets.shape[0]))
+        return vals, self.mgr.track(ack)
+
+    def write(self, state: SharedRegionState, target, index, value,
+              pred=True):
+        """One-sided write of ``value`` to row ``index`` at ``target``."""
+        buf = colls.remote_write(state.buf, target, index, value, self.axis,
+                                 pred=pred)
+        new = state._replace(buf=buf)
+        ack = make_ack(buf, "write", self.full_name, ALL_PEERS, self.item_nbytes)
+        return new, self.mgr.track(ack)
+
+    def write_batch(self, state: SharedRegionState, targets, indices, values,
+                    preds=None):
+        buf = colls.remote_write_batch(state.buf, targets, indices, values,
+                                       self.axis, preds=preds)
+        new = state._replace(buf=buf)
+        ack = make_ack(buf, "write", self.full_name, ALL_PEERS,
+                       self.item_nbytes * int(targets.shape[0]))
+        return new, self.mgr.track(ack)

@@ -1,0 +1,122 @@
+"""Ringbuffer channel — one-to-many broadcast (LOCO §5.4, after FaRM [22]).
+
+An array of slots owned by a single *producer*, cached at every consumer,
+with a custom atomicity mechanism for mixed-size messages: each slot carries
+(seq, len, checksum) alongside the payload, so consumers can detect torn or
+stale slots.  Consumers acknowledge consumption through an SST of read
+cursors, which the producer consults for buffer reuse (slots are reusable
+once every consumer's cursor has passed them).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import colls
+from .ack import ALL_PEERS, make_ack
+from .channel import Channel
+from .ownedvar import checksum
+from .runtime import Manager
+from .sst import SST, SSTState
+
+
+class RingbufferState(NamedTuple):
+    payload: jax.Array  # (capacity, width) message words (cached everywhere)
+    seq: jax.Array      # (capacity,) uint32 slot sequence numbers
+    length: jax.Array   # (capacity,) int32 message lengths (words)
+    csum: jax.Array     # (capacity,) uint32 payload checksums
+    head: jax.Array     # () uint32 producer cursor (cached everywhere)
+    acks: SSTState      # per-consumer read cursors
+
+
+class Ringbuffer(Channel):
+    """One-to-many broadcast ring owned by participant ``owner``."""
+
+    def __init__(self, parent, name: str, mgr: Manager, *, owner: int,
+                 capacity: int, width: int, dtype=jnp.int32):
+        super().__init__(parent, name, mgr)
+        self.owner = int(owner)
+        self.capacity = int(capacity)
+        self.width = int(width)
+        self.dtype = dtype
+        self.acks = SST(self, "acks", mgr, shape=(), dtype=jnp.uint32)
+        self.declare_region("slots", (capacity, width), dtype)
+        self.slot_nbytes = (width * jnp.dtype(dtype).itemsize) + 12
+
+    def init_state(self) -> RingbufferState:
+        P = self.P
+        return RingbufferState(
+            payload=jnp.zeros((P, self.capacity, self.width), self.dtype),
+            seq=jnp.full((P, self.capacity), 0xFFFFFFFF, jnp.uint32),
+            length=jnp.zeros((P, self.capacity), jnp.int32),
+            csum=jnp.zeros((P, self.capacity), jnp.uint32),
+            head=jnp.zeros((P,), jnp.uint32),
+            acks=self.acks.init_state())
+
+    # -- producer ------------------------------------------------------------
+    def can_send(self, state: RingbufferState):
+        """Space check: head may lead the slowest consumer by < capacity."""
+        min_ack = jnp.min(self.acks.rows(state.acks))
+        return (state.head - min_ack) < jnp.uint32(self.capacity)
+
+    def send(self, state: RingbufferState, msg, msg_len, pred=True):
+        """Producer broadcasts ``msg`` ((width,) padded, ``msg_len`` valid
+        words).  Returns (state, sent, ack).  ``sent`` is False when the
+        caller is not the owner, pred is False, or the ring is full."""
+        me = colls.my_id(self.axis)
+        is_owner = me == self.owner
+        do = jnp.asarray(pred) & is_owner & self.can_send(state)
+        msg = jnp.asarray(msg, self.dtype).reshape(self.width)
+        slot = (state.head % jnp.uint32(self.capacity)).astype(jnp.int32)
+
+        # owner writes its authoritative copy, then pushes slot + head.
+        payload_row = jnp.where(do, msg, state.payload[slot])
+        seq_v = jnp.where(do, state.head, state.seq[slot])
+        len_v = jnp.where(do, jnp.asarray(msg_len, jnp.int32),
+                          state.length[slot])
+        csum_v = jnp.where(do, checksum(msg), state.csum[slot])
+        head_v = jnp.where(do, state.head + jnp.uint32(1), state.head)
+
+        # one-sided push from owner to all consumers (masked all-reduce).
+        sent_any = jax.lax.psum(do.astype(jnp.int32), self.axis) > 0
+        payload_row = colls.bcast_from(payload_row, self.owner, self.axis)
+        seq_v = colls.bcast_from(seq_v, self.owner, self.axis)
+        len_v = colls.bcast_from(len_v, self.owner, self.axis)
+        csum_v = colls.bcast_from(csum_v, self.owner, self.axis)
+        head_b = colls.bcast_from(head_v, self.owner, self.axis)
+        slot_b = colls.bcast_from(slot, self.owner, self.axis)
+
+        new = state._replace(
+            payload=state.payload.at[slot_b].set(payload_row),
+            seq=state.seq.at[slot_b].set(seq_v),
+            length=state.length.at[slot_b].set(len_v),
+            csum=state.csum.at[slot_b].set(csum_v),
+            head=head_b)
+        ack = make_ack((payload_row, head_b), "bcast", self.full_name,
+                       ALL_PEERS, self.slot_nbytes)
+        return new, do & sent_any, self.mgr.track(ack)
+
+    # -- consumer -------------------------------------------------------------
+    def recv_one(self, state: RingbufferState):
+        """Consume the next unread message if available.
+
+        Returns (state, msg, msg_len, got).  Validates seq (staleness) and
+        checksum (tearing); a failed validation returns got=False without
+        advancing the cursor (the retry is the next call).  The advanced
+        cursor is acknowledged through the SST (push) so the producer can
+        reuse slots.
+        """
+        me = colls.my_id(self.axis)
+        my_ack = self.acks.rows(state.acks)[me]
+        have = my_ack < state.head
+        slot = (my_ack % jnp.uint32(self.capacity)).astype(jnp.int32)
+        msg = state.payload[slot]
+        ok = (state.seq[slot] == my_ack) & (checksum(msg) == state.csum[slot])
+        got = have & ok
+        new_ack = jnp.where(got, my_ack + jnp.uint32(1), my_ack)
+        acks = self.acks.store_mine(state.acks, new_ack)
+        acks, _a = self.acks.push_broadcast(acks)
+        new = state._replace(acks=acks)
+        return new, msg, state.length[slot], got

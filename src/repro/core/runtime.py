@@ -1,0 +1,217 @@
+"""Participant runtime and manager — LOCO's connection/resource manager.
+
+The paper's ``loco::manager`` (§4.2) establishes connections, mediates
+access to per-node resources (queue pairs, completion queue, registered
+network memory) and hosts the join/connect protocol.  In the SPMD/XLA
+adaptation:
+
+* cluster membership is the **participant axis** of a JAX mesh (production)
+  or a vmapped leading axis (single-process testing).  Both bindings run the
+  *same* channel code, written against ``jax.lax`` collectives over an axis
+  name — the channel endpoint is the per-participant trace.
+* the join/connect wire protocol collapses to constructor-time registration:
+  channel names are checked for uniqueness, sub-channels are namespaced under
+  their parents with '/', and declared memory regions are recorded for the
+  memory ledger (the analogue of libibverbs region registration + the 1 GB
+  hugepage pool of Appendix A.2).
+* the completion queue + polling thread are replaced by XLA data
+  dependencies; the manager tracks outstanding :class:`AckKey`s per trace so
+  ``fence`` can join the minimal token set for the requested scope.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ack import ALL_PEERS, AckKey, FenceScope, join
+
+
+class Runtime:
+    """Binds per-participant channel programs to an execution substrate.
+
+    ``mesh=None``  → ``jax.vmap(axis_name=axis)`` over a stacked leading axis
+                     (single-device functional simulation; used by tests).
+    ``mesh=Mesh``  → ``jax.shard_map`` over ``axis`` of the mesh (production);
+                     per-leaf local blocks of size 1 on the participant axis
+                     are squeezed so channel code sees identical shapes under
+                     both bindings.
+    """
+
+    def __init__(self, num_participants: int, axis: str = "nodes",
+                 mesh: Optional[jax.sharding.Mesh] = None):
+        self.P = int(num_participants)
+        self.axis = axis
+        self.mesh = mesh
+        if mesh is not None:
+            if mesh.shape[axis] != self.P:
+                raise ValueError(
+                    f"mesh axis {axis!r} has {mesh.shape[axis]} devices, "
+                    f"but runtime expects {self.P} participants")
+
+    # -- binding ------------------------------------------------------------
+    def run(self, fn: Callable, *args):
+        """Execute ``fn`` once per participant over stacked ``args``.
+
+        Every leaf of ``args`` must have a leading axis of size P; ``fn``
+        receives per-participant views without that axis and returns
+        per-participant outputs, which come back stacked.
+        """
+        if self.mesh is None:
+            return jax.vmap(fn, axis_name=self.axis)(*args)
+
+        from jax.sharding import PartitionSpec as P  # local import: cheap
+
+        spec = P(self.axis)
+
+        def local_fn(*local_args):
+            squeezed = jax.tree.map(lambda x: jnp.squeeze(x, 0), local_args)
+            out = fn(*squeezed)
+            return jax.tree.map(lambda x: jnp.expand_dims(jnp.asarray(x), 0), out)
+
+        shmapped = jax.shard_map(
+            local_fn, mesh=self.mesh,
+            in_specs=jax.tree.map(lambda _: spec, args),
+            out_specs=spec, check_vma=False)
+        return shmapped(*args)
+
+    # -- helpers used by channel code (inside the per-participant trace) ----
+    def my_id(self):
+        return jax.lax.axis_index(self.axis)
+
+    def stack(self, per_participant_values: List[Any]):
+        """Stack host-side per-participant values into runtime input layout."""
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_participant_values)
+
+
+@dataclass
+class RegionInfo:
+    """Ledger entry for a declared network-memory region (Appendix A.2)."""
+
+    name: str
+    shape: tuple
+    dtype: Any
+    nbytes: int
+
+
+class _TraceCtx(threading.local):
+    def __init__(self):
+        self.outstanding: List[AckKey] = []
+        self.active = False
+
+
+class Manager:
+    """LOCO manager: channel registry, memory ledger, fence provider."""
+
+    def __init__(self, runtime: Runtime):
+        self.runtime = runtime
+        self.channels: Dict[str, Any] = {}
+        self.regions: Dict[str, RegionInfo] = {}
+        self._trace = _TraceCtx()
+        # fence statistics (static, per-trace) — reported by benchmarks
+        self.fence_counts = {s: 0 for s in FenceScope}
+
+    # -- registry (join/connect analogue) -----------------------------------
+    @property
+    def P(self) -> int:
+        return self.runtime.P
+
+    @property
+    def axis(self) -> str:
+        return self.runtime.axis
+
+    def register_channel(self, full_name: str, channel: Any):
+        if full_name in self.channels:
+            raise ValueError(f"channel name collision: {full_name!r} "
+                             "(join would fail: duplicate endpoint)")
+        self.channels[full_name] = channel
+
+    def register_region(self, full_name: str, shape, dtype):
+        if full_name in self.regions:
+            raise ValueError(f"memory region collision: {full_name!r}")
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        self.regions[full_name] = RegionInfo(full_name, tuple(shape), dtype, nbytes)
+        return self.regions[full_name]
+
+    def memory_ledger_bytes(self) -> int:
+        """Total registered network memory per participant (hugepage pool)."""
+        return sum(r.nbytes for r in self.regions.values())
+
+    # -- outstanding-op tracking --------------------------------------------
+    @contextlib.contextmanager
+    def tracking(self):
+        """Scope within which issued AckKeys are tracked for THREAD/GLOBAL
+        fences.  Channel ops call :meth:`track`; ``fence`` drains."""
+        prev, self._trace.outstanding = self._trace.outstanding, []
+        self._trace.active = True
+        try:
+            yield self
+        finally:
+            self._trace.outstanding = prev
+            self._trace.active = prev is not None and bool(prev)
+
+    @contextlib.contextmanager
+    def no_tracking(self):
+        """Suspend outstanding-op tracking.
+
+        Required inside ``lax.while_loop``/``scan`` bodies: tokens created
+        there are loop-local tracers and must not escape into the trace-level
+        outstanding list (ordering inside the loop is already carried by the
+        loop state's data dependencies)."""
+        prev = getattr(self._trace, "paused", False)
+        self._trace.paused = True
+        try:
+            yield
+        finally:
+            self._trace.paused = prev
+
+    def track(self, ack: AckKey) -> AckKey:
+        if getattr(self._trace, "paused", False):
+            return ack
+        self._trace.outstanding.append(ack)
+        return ack
+
+    def outstanding(self) -> AckKey:
+        acc = AckKey.empty()
+        for a in self._trace.outstanding:
+            acc = acc | a
+        return acc
+
+    # -- fences (paper §5.3) -------------------------------------------------
+    def fence(self, *args, scope: FenceScope = FenceScope.GLOBAL,
+              peer: int | None = None):
+        """Order ``args`` after outstanding ops per ``scope``.
+
+        GLOBAL: joins every outstanding op and drains the tracking list.
+        THREAD: joins every outstanding op issued in this trace (in SPMD one
+                trace == one thread; kept as a distinct scope because the
+                descriptor filter differs on a multi-controller backend).
+        PAIR:   joins only ops targeting ``peer``; other ops stay outstanding
+                so the scheduler may still overlap them (the cheap fence).
+        """
+        self.fence_counts[scope] += 1
+        out_ack = self.outstanding()
+        if scope == FenceScope.GLOBAL:
+            self._trace.outstanding = []
+            return join(out_ack, *args, scope=FenceScope.GLOBAL)
+        if scope == FenceScope.THREAD:
+            self._trace.outstanding = []
+            return join(out_ack, *args, scope=FenceScope.GLOBAL)
+        # PAIR: keep non-matching ops outstanding
+        kept_tokens, kept_descs = [], []
+        for tok, d in zip(out_ack.tokens, out_ack.descs):
+            if not (d.peers == ALL_PEERS or (peer is not None and peer in d.peers)):
+                kept_tokens.append(tok)
+                kept_descs.append(d)
+        self._trace.outstanding = [AckKey(kept_tokens, kept_descs)]
+        return join(out_ack, *args, peer=peer, scope=FenceScope.PAIR)
+
+
+def make_manager(num_participants: int, axis: str = "nodes",
+                 mesh: Optional[jax.sharding.Mesh] = None) -> Manager:
+    return Manager(Runtime(num_participants, axis=axis, mesh=mesh))

@@ -1,0 +1,97 @@
+"""SST — Shared State Table (LOCO §4.1/§5.1.2, after Derecho).
+
+An array of single-writer multiple-reader registers, one per participant:
+participant i is the writer of row i and a reader of all rows.  The SST is
+composed from P owned_var sub-channels (the paper constructs them in a
+join callback as peers arrive; membership here is static, so they are
+constructed eagerly — same naming scheme: "<sst>/ov<i>").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import colls, ownedvar
+from .ack import ALL_PEERS, AckKey, make_ack
+from .channel import Channel
+from .ownedvar import OwnedVar, OwnedVarState, checksum
+from .runtime import Manager
+
+
+class SSTState(NamedTuple):
+    # Stacked owned_var states: row i is this participant's cached copy of
+    # participant i's register.
+    cached: jax.Array  # (P, *shape)
+    csum: jax.Array    # (P,) uint32
+
+
+class SST(Channel):
+    """Shared state table of per-participant registers of ``shape``."""
+
+    def __init__(self, parent, name: str, mgr: Manager, *,
+                 shape: Tuple[int, ...] = (), dtype=jnp.int32):
+        super().__init__(parent, name, mgr)
+        self.shape = tuple(shape)
+        self.dtype = dtype
+        # compose from owned_var sub-channels (paper: one per participant)
+        self.vars = [OwnedVar(self, f"ov{i}", mgr, owner=i, shape=shape,
+                              dtype=dtype) for i in range(self.P)]
+        self.row_nbytes = self.vars[0].nbytes
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self, value=None) -> SSTState:
+        v = jnp.zeros(self.shape, self.dtype) if value is None else \
+            jnp.asarray(value, self.dtype)
+        rows = jnp.broadcast_to(v, (self.P,) + v.shape)
+        st = SSTState(cached=rows, csum=jax.vmap(checksum)(rows))
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (self.P,) + x.shape),
+                            st)
+
+    # -- my register ------------------------------------------------------------
+    def store_mine(self, state: SSTState, value, pred=True) -> SSTState:
+        """Local store to my own register (row ``axis_index``)."""
+        me = self.my_id()
+        value = jnp.asarray(value, self.dtype).reshape(self.shape)
+        row = jnp.where(pred, value, state.cached[me])
+        return SSTState(cached=state.cached.at[me].set(row),
+                        csum=state.csum.at[me].set(checksum(row)))
+
+    def push_broadcast(self, state: SSTState):
+        """Push my register to all peers (all owners at once → all-gather).
+
+        The composite AckKey is the union of the component owned_var pushes,
+        exactly the paper's §5.2 example.
+        """
+        me = self.my_id()
+        mine = state.cached[me]
+        rows = colls.gather_rows(mine, self.axis)        # (P, *shape)
+        csums = colls.gather_rows(state.csum[me], self.axis)
+        new = SSTState(cached=rows, csum=csums)
+        ack = AckKey.empty()
+        for i, v in enumerate(self.vars):
+            ack = ack | make_ack((rows[i], csums[i]), "write", v.full_name,
+                                 ALL_PEERS, self.row_nbytes)
+        return new, self.mgr.track(ack)
+
+    # -- reading ------------------------------------------------------------------
+    def load_row(self, state: SSTState, i):
+        """Local read of cached row i → (value, checksum_ok)."""
+        val = state.cached[i]
+        ok = checksum(val) == state.csum[i]
+        return val, ok
+
+    def rows(self, state: SSTState):
+        """All cached rows (local read; the barrier's iteration)."""
+        return state.cached
+
+    def pull_all(self, state: SSTState):
+        """Refresh all cached rows from their owners (readers' pull)."""
+        me = self.my_id()
+        rows = colls.gather_rows(state.cached[me], self.axis)
+        csums = colls.gather_rows(state.csum[me], self.axis)
+        new = SSTState(cached=rows, csum=csums)
+        ack = make_ack((rows, csums), "read", self.full_name, ALL_PEERS,
+                       self.row_nbytes * self.P)
+        return new, self.mgr.track(ack)

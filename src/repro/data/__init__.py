@@ -1,0 +1,1 @@
+from .pipeline import FileTokens, SyntheticTokens, make_pipeline, place_batch

@@ -1,0 +1,1 @@
+"""Distribution layer: sharding rules, channel collectives, EP MoE, faults."""

@@ -1,0 +1,103 @@
+"""Fault tolerance & elasticity.
+
+The single-controller analogue of the production story (DESIGN.md §3):
+
+* **Failure model**: a data-parallel slice (pod row / host) drops out.  On
+  a multi-controller TPU deployment this surfaces as a collective timeout;
+  here it is injected as :class:`DeviceFailure`.
+* **Elastic re-mesh**: channel membership is a constructor argument (the
+  paper's ``expect_num``) — recovery = rebuild the mesh without the failed
+  slice, re-lower the step, restore the last checkpoint with the new
+  shardings (checkpoint/restore handles cross-mesh resharding), replay the
+  data pipeline from the restored step (pipeline is a pure function of
+  step — nothing to rewind).
+* **Straggler mitigation**: (a) PAIR-scope fences keep non-straggler
+  traffic schedulable (§Perf measures this); (b) bounded-staleness grad
+  push — a straggling data shard's contribution may be dropped for
+  ``max_stale`` steps (its SST row simply isn't refreshed), trading exact
+  synchrony for liveness.  Off by default.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+class DeviceFailure(RuntimeError):
+    """Injected/observed loss of a mesh slice."""
+
+    def __init__(self, failed_slice: int, msg: str = ""):
+        super().__init__(msg or f"lost data slice {failed_slice}")
+        self.failed_slice = failed_slice
+
+
+@dataclasses.dataclass
+class ElasticMeshSpec:
+    """Allowed degraded configurations, largest first.
+
+    e.g. shapes=[(4, 2), (2, 2), (1, 2)] with axis_names=('data', 'model'):
+    lose half the data slices twice before giving up.
+    """
+    shapes: Sequence[tuple]
+    axis_names: tuple
+
+    def mesh_for(self, level: int):
+        shape = self.shapes[level]
+        n = int(np.prod(shape))
+        devices = np.asarray(jax.devices()[:n]).reshape(shape)
+        return jax.sharding.Mesh(devices, self.axis_names)
+
+    @property
+    def levels(self) -> int:
+        return len(self.shapes)
+
+
+def run_elastic(spec: ElasticMeshSpec, build: Callable, ckpt,
+                total_steps: int, get_batch: Callable,
+                inject_failure_at: Optional[dict] = None,
+                log: Callable = print):
+    """Train with elastic recovery.
+
+    build(mesh) → (state, step_fn, shardings_fn) where step_fn(state, batch)
+    → (state, metrics).  ``inject_failure_at``: {step: True} test hook.
+    Returns (state, history of (step, level)).
+    """
+    level = 0
+    history: List[tuple] = []
+    mesh = spec.mesh_for(level)
+    state, step_fn, shard_fn = build(mesh)
+    start = 0
+    latest = ckpt.latest_step()
+    if latest is not None:
+        state = ckpt.restore(latest, state, shard_fn(mesh))
+        start = latest + 1
+        log(f"[elastic] restored step {latest}")
+
+    step = start
+    while step < total_steps:
+        try:
+            if inject_failure_at and inject_failure_at.pop(step, False):
+                raise DeviceFailure(0, f"injected at step {step}")
+            state, metrics = step_fn(state, get_batch(step))
+            history.append((step, level))
+            step += 1
+        except DeviceFailure as e:
+            if level + 1 >= spec.levels:
+                raise RuntimeError("no smaller mesh left") from e
+            level += 1
+            log(f"[elastic] {e}; re-meshing to level {level} "
+                f"{spec.shapes[level]}")
+            mesh = spec.mesh_for(level)
+            state_shape = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            state, step_fn, shard_fn = build(mesh)
+            latest = ckpt.latest_step()
+            if latest is not None:
+                state = ckpt.restore(latest, state_shape, shard_fn(mesh))
+                step = latest + 1
+            else:
+                step = 0
+    return state, history

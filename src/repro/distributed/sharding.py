@@ -1,0 +1,216 @@
+"""Sharding rules: param-tree paths → PartitionSpecs.
+
+Parallelism map (DESIGN.md §6):
+  TP  — 'model' axis: attention heads / FFN columns (Megatron),
+        vocab-sharded embeddings, EP for MoE experts, channel-sharded
+        recurrent widths;
+  DP  — ('pod', 'data'): batch;
+  SP  — optional: activations seq-sharded over 'model' between blocks;
+  ZeRO— optimizer state additionally sharded over the DP axes (stage ≥ 2).
+
+Rules are (regex over '/'-joined tree path) → dims template, where each
+template entry names the mesh axis for that dimension (None = replicated);
+'?:axis' shards the dim only if divisible (falls back to None), which keeps
+one rule table valid across all ten archs and the smoke configs.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+DP = ("pod", "data")      # flattened data-parallel axes (pod absent → data)
+TP = "model"
+
+# (path regex, dims template).  First match wins.  Templates align to the
+# TRAILING dims of each leaf (leading layer-stack dims are replicated).
+PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # embeddings / unembedding
+    (r"embed/table$", (TP, None)),
+    (r"embed/head$", (None, TP)),
+    (r"(enc_pos|dec_pos)$", (None, None)),
+    (r"embed$", (TP, None)),                       # whisper raw table
+    # MoE
+    (r"ffn/router$", (None, None)),
+    (r"ffn/experts/wi_(gate|up)$", (TP, None, None)),   # EP over experts
+    (r"ffn/experts/wo$", (TP, None, None)),
+    (r"ffn/shared/(wi_gate|wi_up)$", (None, TP)),
+    (r"ffn/shared/wo$", (TP, None)),
+    # attention (GQA + whisper enc/dec + cross)
+    (r"attn/w(q|k|v)$", (None, "?:" + TP)),
+    (r"attn/wo$", (TP, None)),
+    # MLA
+    (r"attn/wq_a$", (None, None)),
+    (r"attn/wq_b$", (None, TP)),
+    (r"attn/wkv_a$", (None, None)),
+    (r"attn/wkv_b$", (None, TP)),
+    # RG-LRU recurrent branch (channel-sharded)
+    (r"temporal/wx_(rec|gate)$", (None, TP)),
+    (r"temporal/conv_w$", (None, TP)),
+    (r"temporal/(conv_b|w_a|b_a|w_i|b_i|lam)$", ("?:" + TP,)),
+    (r"temporal/wo$", (TP, None)),
+    # RWKV6
+    (r"time/w(r|k|v|g)$", (None, TP)),
+    (r"time/wo$", (TP, None)),
+    (r"time/w0$", ("?:" + TP,)),
+    (r"time/w_lora_a$", (None, None)),
+    (r"time/w_lora_b$", (None, TP)),
+    (r"time/u$", ("?:" + TP, None)),
+    (r"time/ln_x/(scale|bias)$", ("?:" + TP,)),
+    (r"time/mu$", (None, None)),
+    (r"chan/wk$", (None, TP)),
+    (r"chan/wv$", (TP, None)),
+    (r"chan/wr$", (None, TP)),
+    (r"chan/mu$", (None, None)),
+    # dense FFN
+    (r"ffn/(wi_gate|wi_up|wi)$", (None, TP)),
+    (r"ffn/wo$", (TP, None)),
+    # MTP fusion projection
+    (r"mtp/proj$", (None, None)),
+    # everything normish / scalar gates
+    (r".*", None),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _resolve_template(template, shape, mesh) -> P:
+    """Align template to trailing dims; honor '?:axis' divisibility."""
+    if template is None:
+        return P()
+    ndim = len(shape)
+    dims: list = [None] * ndim
+    t = list(template)[-ndim:] if len(template) > ndim else list(template)
+    offset = ndim - len(t)
+    for i, ax in enumerate(t):
+        if ax is None:
+            continue
+        optional = isinstance(ax, str) and ax.startswith("?:")
+        axis = ax[2:] if optional else ax
+        if axis not in mesh.shape:
+            continue
+        if shape[offset + i] % mesh.shape[axis] == 0:
+            dims[offset + i] = axis
+        elif not optional:
+            # fall back rather than crash: replicate this dim
+            dims[offset + i] = None
+    return P(*dims)
+
+
+def param_pspecs(params, mesh, fsdp: bool = False) -> Any:
+    """PartitionSpec tree for a param tree.
+
+    fsdp=True (ZeRO-3 / giant archs): large leaves additionally shard their
+    first free divisible dim over the data axes — weights are all-gathered
+    per layer inside the scan (one layer resident at a time), which is what
+    lets 400B/671B params fit 16 GB chips at TP=16.
+    """
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        spec = P()
+        for pat, template in PARAM_RULES:
+            if re.search(pat, ps):
+                spec = _resolve_template(template, np.shape(leaf), mesh)
+                break
+        if fsdp and dp and int(np.prod(np.shape(leaf))) >= (1 << 20):
+            dims = list(spec) + [None] * (len(np.shape(leaf)) - len(spec))
+            for i, d in enumerate(dims):
+                if d is None and np.shape(leaf)[i] % dp_total == 0:
+                    dims[i] = dp
+                    return P(*dims)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def param_shardings(params, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params, mesh))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in DP if a in mesh.shape)
+
+
+def batch_pspecs(batch_tree, mesh, seq_shard: bool = False):
+    """tokens (B, S[+1]) over DP; context (B, n, d) over DP (+SP)."""
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        shape = np.shape(leaf)
+        b_ok = shape[0] % int(np.prod([mesh.shape[a] for a in dp])) == 0
+        first = dp if (dp and b_ok) else None
+        if len(shape) == 3 and seq_shard and shape[1] % mesh.shape[TP] == 0:
+            return P(first, TP, None)
+        return P(*([first] + [None] * (len(shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_pspecs(cache_tree, mesh):
+    """Decode caches: batch over DP when divisible; the long axis (KV seq /
+    heads / channels) over 'model' when divisible.
+
+    Leaf layouts seen here (possibly with a leading layer-stack dim, and for
+    scanned superblocks TWO leading stack dims):
+      KV k/v:      (B, Hkv, S, hd)   → shard S over model
+      MLA ckv:     (B, S, R)         → shard S over model
+      rwkv wkv:    (B, H, D, D)      → shard H over model
+      rec h/conv:  (B, W) / (B, c, W)→ shard W over model
+    """
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    tp = mesh.shape[TP]
+
+    def spec(path, leaf):
+        shape = np.shape(leaf)
+        ndim = len(shape)
+        dims: list = [None] * ndim
+        # find the batch dim: first dim whose size is divisible by dp_total
+        # after skipping leading stack dims — heuristic: stack dims come
+        # first and caches are created with known layouts, so scan from the
+        # left for the first divisible dim and call it batch.
+        ps = _path_str(path)
+        # locate trailing layout by known field names
+        if re.search(r"(\bk$|\bv$|self_kv|cross_kv)", ps) and ndim >= 4:
+            b, s = ndim - 4, ndim - 2
+        elif "ckv" in ps or "krope" in ps:
+            b, s = ndim - 3, ndim - 2
+        elif "wkv" in ps and ndim >= 4:
+            b, s = ndim - 4, ndim - 3          # shard heads
+        elif ps.endswith("conv") and ndim >= 3:
+            b, s = ndim - 3, ndim - 1
+        elif ndim >= 2:
+            b, s = ndim - 2, ndim - 1
+        else:
+            return P(*dims)
+        if dp and shape[b] % dp_total == 0 and shape[b] > 0:
+            dims[b] = dp
+        if shape[s] % tp == 0:
+            dims[s] = TP
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def logical_constraint(x, mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Kernels (each with BlockSpec VMEM tiling; see ops.py for jit'd wrappers and
+ref.py for the pure-jnp oracles):
+  flash_attention   training/prefill attention (causal, GQA, windows)
+  decode_attention  flash-decode vs KV cache with ragged lengths
+  rglru_scan        RG-LRU linear recurrence (recurrentgemma)
+  wkv6              RWKV-6 data-dependent-decay token mixing
+  moe_gmm           grouped per-expert matmul via scalar prefetch
+"""
+from . import ops, ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .moe_gmm import gmm
+from .rglru_scan import rglru_scan
+from .wkv6 import wkv6

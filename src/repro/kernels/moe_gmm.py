@@ -1,0 +1,61 @@
+"""Grouped matmul (MoE expert compute) Pallas TPU kernel.
+
+Tokens arrive pre-sorted by expert and padded so every ``block_t``-row block
+belongs to exactly one expert; ``block_expert`` maps block → expert and is
+consumed via *scalar prefetch* inside the weight BlockSpec index_map, so the
+NIC—err, the DMA engine—streams exactly the one expert tile each block
+needs (no gather materialization in HBM).  Reduction over Din is the
+minor-most grid dimension with a float32 VMEM accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(bexp_ref, x_ref, w_ref, o_ref, acc_ref):
+    kk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gmm(x, w, block_expert, *, block_t=128, block_n=None, block_k=None,
+        interpret=False):
+    """x: (T, Din) sorted+padded by expert; w: (E, Din, Dout);
+    block_expert: (T // block_t,) int32.  Returns (T, Dout)."""
+    T, Din = x.shape
+    E, _, Dout = w.shape
+    assert T % block_t == 0, (T, block_t)
+    bn = block_n or min(Dout, 512)
+    bk = block_k or min(Din, 512)
+    assert Dout % bn == 0 and Din % bk == 0, (Dout, bn, Din, bk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T // block_t, Dout // bn, Din // bk),
+        in_specs=[
+            pl.BlockSpec((block_t, bk), lambda i, n, k, bexp: (i, k)),
+            pl.BlockSpec((1, bk, bn), lambda i, n, k, bexp: (bexp[i], k, n)),
+        ],
+        out_specs=pl.BlockSpec((block_t, bn), lambda i, n, k, bexp: (i, n)),
+        scratch_shapes=[pltpu.VMEM((block_t, bn), jnp.float32)])
+    return pl.pallas_call(
+        _gmm_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, Dout), x.dtype),
+        interpret=interpret,
+    )(block_expert.astype(jnp.int32), x, w)

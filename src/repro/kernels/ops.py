@@ -1,0 +1,120 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each wrapper: pads inputs to kernel tile multiples, picks sane block sizes,
+dispatches to the Pallas kernel on TPU and to interpret mode on CPU (the
+validation substrate — the kernel body runs in Python with identical
+semantics), and unpads the result.  ``force_ref=True`` routes to the pure
+jnp oracle (used by A/B tests and as an escape hatch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _da
+from . import flash_attention as _fa
+from . import moe_gmm as _gmm
+from . import ref
+from . import rglru_scan as _rg
+from . import wkv6 as _wkv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "sm_scale", "block_q", "block_k", "force_ref"))
+def flash_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
+                    block_q=128, block_k=128, force_ref=False):
+    """Attention with GQA, causal/window masks.  q: (B, Hq, Sq, D);
+    k, v: (B, Hkv, Skv, D)."""
+    if force_ref:
+        return ref.mha(q, k, v, causal=causal, window=window,
+                       sm_scale=sm_scale)
+    Sq, Sk = q.shape[2], k.shape[2]
+    bq, bk = min(block_q, max(Sq, 8)), min(block_k, max(Sk, 8))
+    qp, sq0 = _pad_to(q, 2, bq)
+    kp, sk0 = _pad_to(k, 2, bk)
+    vp, _ = _pad_to(v, 2, bk)
+    kv_valid = sk0 if kp.shape[2] != sk0 else None
+    out = _fa.flash_attention(
+        qp, kp, vp, causal=causal, window=window, sm_scale=sm_scale,
+        kv_valid=kv_valid, block_q=bq, block_k=bk, interpret=_interpret())
+    return out[:, :, :sq0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "sm_scale", "block_k", "force_ref"))
+def decode_attention(q, k_cache, v_cache, lengths, *, sm_scale=None,
+                     block_k=256, force_ref=False):
+    """One-token decode vs KV cache.  q: (B, Hq, D); caches (B, Hkv, S, D);
+    lengths: (B,) valid cache positions."""
+    if force_ref:
+        return ref.decode_attention(q, k_cache, v_cache, lengths,
+                                    sm_scale=sm_scale)
+    S = k_cache.shape[2]
+    bk = min(block_k, max(S, 8))
+    kp, _ = _pad_to(k_cache, 2, bk)
+    vp, _ = _pad_to(v_cache, 2, bk)
+    return _da.decode_attention(q, kp, vp, lengths, sm_scale=sm_scale,
+                                block_k=bk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_s", "block_d", "force_ref"))
+def rglru(x, log_a, *, block_s=256, block_d=256, force_ref=False):
+    """RG-LRU scan.  x, log_a: (B, S, D) → (y, h_final)."""
+    if force_ref:
+        return ref.rglru(x, log_a)
+    S, D = x.shape[1], x.shape[2]
+    bs, bd = min(block_s, S), min(block_d, D)
+    xp, s0 = _pad_to(x, 1, bs)
+    lap, _ = _pad_to(log_a, 1, bs)
+    # pad log_a with 0 → a=1, gate=0: final-state carry stays exact
+    y, h = _rg.rglru_scan(xp, lap, block_s=bs, block_d=bd,
+                          interpret=_interpret())
+    return y[:, :s0], h
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "force_ref"))
+def wkv6(r, k, v, w, u, *, block_s=128, force_ref=False):
+    """RWKV-6 WKV.  r/k/v/w: (B, H, S, D), u: (H, D) → (y, s_final)."""
+    if force_ref:
+        return ref.wkv6(r, k, v, w, u)
+    S = r.shape[2]
+    bs = min(block_s, S)
+    rp, s0 = _pad_to(r, 2, bs)
+    kp, _ = _pad_to(k, 2, bs)
+    vp, _ = _pad_to(v, 2, bs)
+    # pad decay with 1 → state unchanged past the valid region; k-pad of 0
+    # contributes nothing.
+    pad = rp.shape[2] - s0
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    y, s_fin = _wkv.wkv6(rp, kp, vp, wp, u, block_s=bs,
+                         interpret=_interpret())
+    return y[:, :, :s0], s_fin
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_t", "block_n", "block_k", "force_ref"))
+def gmm(x, w, block_expert, *, block_t=128, block_n=None, block_k=None,
+        force_ref=False):
+    """Grouped (per-expert) matmul.  x: (T, Din) sorted+padded so each
+    block_t rows share an expert; block_expert: (T/block_t,)."""
+    if force_ref:
+        return ref.gmm(x, w, block_expert, block_t)
+    return _gmm.gmm(x, w, block_expert, block_t=block_t, block_n=block_n,
+                    block_k=block_k, interpret=_interpret())

@@ -1,0 +1,74 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel (RecurrentGemma).
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ x_t  with  a_t = exp(log_a_t).
+
+TPU adaptation: the recurrence is sequential in time but embarrassingly
+parallel over channels, so the kernel tiles channels into (block_d)-lane
+VMEM blocks (grid dims B × D/block_d) and makes *time* the minor-most grid
+dimension (sequential), carrying h in VMEM scratch between time blocks.
+Inside a block the step loop is a VPU elementwise stream over (1, block_d)
+rows — no MXU involvement, memory-bound by design (see roofline notes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(x_ref, la_ref, o_ref, hout_ref, h_ref, *, block_s):
+    it = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(i, h):
+        la = la_ref[0, i].astype(jnp.float32)             # (BD,)
+        a = jnp.exp(la)
+        gate = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * la), 0.0))
+        h = a * h + gate * x_ref[0, i].astype(jnp.float32)
+        o_ref[0, i, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_ref[0])
+    h_ref[0, :] = h
+
+    @pl.when(it == nt - 1)
+    def _finish():
+        hout_ref[0, :] = h.astype(hout_ref.dtype)
+
+
+def rglru_scan(x, log_a, *, block_s=256, block_d=256, interpret=False):
+    """x, log_a: (B, S, D).  S % block_s == 0, D % block_d == 0.
+    Returns (y, h_final) with y: (B, S, D), h_final: (B, D) float32."""
+    B, S, D = x.shape
+    assert S % block_s == 0 and D % block_d == 0, (S, D, block_s, block_d)
+    grid = (B, D // block_d, S // block_s)
+    kernel = functools.partial(_rglru_kernel, block_s=block_s)
+    y, h_fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d),
+                         lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, block_s, block_d),
+                         lambda b, d, t: (b, t, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, block_d),
+                         lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, block_d), lambda b, d, t: (b, d)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((B, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(x, log_a)
+    return y, h_fin

@@ -1,0 +1,77 @@
+"""RWKV-6 (Finch) WKV Pallas TPU kernel — data-dependent decay attention-free
+token mixing.
+
+Per head, with state S ∈ R^{D×D}:
+    y_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+        = r_t^T S_{t-1} + (Σ_d r_d u_d k_d) · v_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+TPU adaptation: grid (B, H, S/block_s) with time minor-most (sequential);
+the D×D state lives in VMEM scratch across time blocks — the analogue of
+LOCO keeping hot mutex state in NIC device memory (DESIGN.md §2).  Each
+step is a (1×D)·(D×D) matvec on the MXU plus rank-1 VPU updates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, sout_ref, s_ref,
+                 *, block_s):
+    it = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(it == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0].astype(jnp.float32)                        # (D,)
+
+    def step(i, s):
+        r_t = r_ref[0, 0, i].astype(jnp.float32)            # (D,)
+        k_t = k_ref[0, 0, i].astype(jnp.float32)
+        v_t = v_ref[0, 0, i].astype(jnp.float32)
+        w_t = w_ref[0, 0, i].astype(jnp.float32)
+        rs = jax.lax.dot_general(r_t[None, :], s, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)[0]
+        bonus = jnp.sum(r_t * u * k_t)
+        o_ref[0, 0, i, :] = (rs + bonus * v_t).astype(o_ref.dtype)
+        s = w_t[:, None] * s + k_t[:, None] * v_t[None, :]
+        return s
+
+    s = jax.lax.fori_loop(0, block_s, step, s_ref[...])
+    s_ref[...] = s
+
+    @pl.when(it == nt - 1)
+    def _finish():
+        sout_ref[0, 0, ...] = s.astype(sout_ref.dtype)
+
+
+def wkv6(r, k, v, w, u, *, block_s=128, interpret=False):
+    """r, k, v, w: (B, H, S, D); u: (H, D).  S % block_s == 0.
+    Returns (y, s_final) with y: (B, H, S, D), s_final: (B, H, D, D) f32."""
+    B, H, S, D = r.shape
+    assert S % block_s == 0, (S, block_s)
+    grid = (B, H, S // block_s)
+    kernel = functools.partial(_wkv6_kernel, block_s=block_s)
+    seq_spec = pl.BlockSpec((1, 1, block_s, D), lambda b, h, t: (b, h, t, 0))
+    y, s_fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, D), lambda b, h, t: (h, 0))],
+        out_specs=[seq_spec,
+                   pl.BlockSpec((1, 1, D, D), lambda b, h, t: (b, h, 0, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct(r.shape, r.dtype),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, s_fin

@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count at first
+#   backend init).  512 fake host devices back the production meshes.
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  lower the step (train_step / prefill_step / decode_step) with production
+  in_shardings → compile → print memory_analysis()/cost_analysis() →
+  derive the three roofline terms (§Roofline) → write a JSON report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+      --shape train_4k --mesh single --out reports/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+Perf-iteration knobs (§Perf): --fence, --optimizer, --remat, --zero-stage,
+  --moe-impl, --microbatch, --seq-shard, --xent-chunk, --tag.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, LM_SHAPES, get_config,
+                           shape_applicable)
+from repro.configs.base import TrainConfig
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as RA
+
+GIANT_PARAMS = 100e9
+
+
+def cfg_with_n_super(cfg, n: int):
+    """Rebuild the arch config with ``n`` scanned superblocks (prefix and
+    suffix of the layer plan preserved) — the reduced builds of the cost-
+    extrapolation pass."""
+    if cfg.family == "audio":
+        return cfg.replace(n_layers=n, n_enc_layers=n)
+    if cfg.family == "ssm":
+        return cfg.replace(n_layers=n)
+    from repro.models.transformer import layer_plan
+    prefix, block, _n0, suffix = layer_plan(cfg)
+    return cfg.replace(n_layers=len(prefix) + n * len(block) + len(suffix))
+
+
+def n_super_of(cfg) -> int:
+    if cfg.family in ("audio", "ssm"):
+        return cfg.n_layers
+    from repro.models.transformer import layer_plan
+    _p, _b, n, _s = layer_plan(cfg)
+    return n
+
+
+def default_tcfg(cfg, args) -> TrainConfig:
+    """Per-arch training config: giants get factored moments (the ZeRO
+    budget analysis is in EXPERIMENTS.md §Dry-run)."""
+    opt = args.optimizer
+    if opt == "auto":
+        opt = "adafactor" if cfg.param_count() > GIANT_PARAMS else "adamw"
+    zero = args.zero_stage
+    if zero == 2 and cfg.param_count() > GIANT_PARAMS:
+        zero = 3  # giants: FSDP param sharding or they cannot fit
+    return TrainConfig(
+        optimizer=opt, remat=args.remat, zero_stage=zero,
+        microbatch=args.microbatch, fence_scope=args.fence,
+        xent_chunks=args.xent_chunks, act_shard=args.act_shard,
+        grad_clip=args.grad_clip,
+        adam_dtype="bfloat16" if cfg.param_count() > GIANT_PARAMS
+        else "float32")
+
+
+def lower_cell(arch: str, shape, mesh, tcfg, args, cfg_override=None):
+    """Returns (lowered, cfg)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    if args.moe_impl != "default" and cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, router_impl=args.moe_impl))
+    key = jax.random.PRNGKey(0)
+
+    from repro.models import flash_xla
+    flash_xla.UNROLL_KV = args.unroll
+    if shape.kind == "train":
+        from repro.train.train_step import make_train_step
+        model, opt, _step, jit_factory = make_train_step(
+            cfg, tcfg, mesh, impl="chunked", unroll=args.unroll)
+        params_s = jax.eval_shape(model.init, key)
+        opt_s = jax.eval_shape(opt.init, params_s)
+        batch_s = model.input_specs(shape)["batch"]
+        jitted = jit_factory(params_s, opt_s, batch_s)
+        lowered = jitted.lower(params_s, opt_s, batch_s)
+    elif shape.kind == "prefill":
+        from repro.distributed import sharding as SH
+        from repro.train.serve_step import make_serve_steps
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        model, prefill_step, _d, _jd = make_serve_steps(
+            cfg, mesh, unroll=args.unroll)
+        params_s = jax.eval_shape(model.init, key)
+        batch_s = model.input_specs(shape)["batch"]
+        ns = lambda t: jax.tree.map(  # noqa: E731
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        fsdp = cfg.param_count() > GIANT_PARAMS
+        jitted = jax.jit(
+            prefill_step, static_argnums=(2,),
+            in_shardings=(ns(SH.param_pspecs(params_s, mesh, fsdp=fsdp)),
+                          ns(SH.batch_pspecs(batch_s, mesh))))
+        lowered = jitted.lower(params_s, batch_s, shape.seq_len)
+    else:  # decode
+        from repro.train.serve_step import make_serve_steps
+        model, _p, _d, jit_decode = make_serve_steps(
+            cfg, mesh, unroll=args.unroll)
+        params_s = jax.eval_shape(model.init, key)
+        specs = model.input_specs(shape)
+        jitted = jit_decode(params_s, specs["cache"], specs["token"])
+        lowered = jitted.lower(params_s, specs["token"], specs["cache"],
+                               specs["pos"])
+    return lowered, cfg
+
+
+def run_cell(arch: str, shape, mesh_name: str, args, outdir: str):
+    """Two-pass dry-run per cell:
+
+    A. ROLLED build (production artifact: layer stacks as lax.scan) —
+       lower+compile, print memory_analysis (proves it fits / records the
+       gap), validates the sharding end-to-end.  Run for single AND multi.
+    B. UNROLLED build (straight-line HLO) — cost_analysis/collective parse
+       are exact (XLA counts while-bodies once, §Roofline note).  Single-pod
+       only (the roofline table is single-pod by spec).
+    """
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    tag = f"{arch}__{shape.name}__{mesh_name}" + (
+        f"__{args.tag}" if args.tag else "")
+    if not ok:
+        print(f"[SKIP] {tag}: {why}", flush=True)
+        with open(os.path.join(outdir, tag + ".json"), "w") as f:
+            json.dump({"arch": arch, "shape": shape.name, "mesh": mesh_name,
+                       "skipped": why}, f)
+        return
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"),
+                                dp=args.dp, tp=args.tp)
+    tcfg = default_tcfg(cfg, args)
+    report = {"arch": arch, "shape": shape.name, "mesh": mesh_name,
+              "variant": args.tag or "baseline",
+              "tcfg": dataclasses.asdict(tcfg)}
+
+    # ---- pass A: rolled — memory + sharding validation
+    t0 = time.time()
+    args.unroll = False
+    lowered, cfg_eff = lower_cell(arch, shape, mesh, tcfg, args)
+    compiled = lowered.compile()
+    t1 = time.time()
+    ma = compiled.memory_analysis()
+    print(f"[A/rolled] {tag}: {t1 - t0:.1f}s", flush=True)
+    print(f"     memory_analysis: {ma}", flush=True)
+    report["mem_stats"] = {
+        "argument_size": ma.argument_size_in_bytes,
+        "output_size": ma.output_size_in_bytes,
+        "temp_size": ma.temp_size_in_bytes,
+        "alias_size": ma.alias_size_in_bytes,
+    }
+    report["rolled_compile_s"] = t1 - t0
+    hbm = 16e9
+    peak = ma.temp_size_in_bytes + ma.argument_size_in_bytes         - ma.alias_size_in_bytes
+    report["fits_16g_hbm"] = bool(peak < hbm)
+    report["peak_bytes_per_device"] = int(peak)
+
+    # ---- pass B: cost terms via reduced-depth unrolled builds + affine
+    #      extrapolation (single-pod roofline; see RA.extrapolate_costs)
+    if mesh_name == "single" and not args.skip_cost:
+        t2 = time.time()
+        args.unroll = True
+        n_full = n_super_of(cfg_eff)
+        n1, n2 = (1, 2) if n_full >= 2 else (n_full, n_full)
+        costs = []
+        for n in (n1, n2):
+            cfg_n = cfg_with_n_super(cfg_eff, n)
+            lowered_u, _ = lower_cell(arch, shape, mesh, tcfg, args,
+                                      cfg_override=cfg_n)
+            compiled_u = lowered_u.compile()
+            costs.append(RA.cell_costs(compiled_u, mesh.size))
+        cost_full = RA.extrapolate_costs(costs[0], costs[-1], n1, n2,
+                                         n_full) if n2 > n1 else costs[0]
+        t3 = time.time()
+        print(f"[B/cost×{n1},{n2}→{n_full}] {tag}: {t3 - t2:.1f}s "
+              f"flops={cost_full['flops']:.3e} "
+              f"bytes={cost_full['bytes']:.3e}", flush=True)
+        roof = RA.analyze_values(cost_full, arch=arch, shape=shape,
+                                 mesh_name=mesh_name, n_devices=mesh.size,
+                                 cfg=cfg_eff, peak_mem=peak)
+        n_inloop = cost_full["coll"].get("in_loop_collective_ops", 0)
+        if n_inloop:
+            print(f"     WARNING: {n_inloop} collectives inside while "
+                  f"bodies — collective term is a lower bound", flush=True)
+        print(f"     roofline: compute={roof.compute_s * 1e3:.2f}ms "
+              f"memory={roof.memory_s * 1e3:.2f}ms "
+              f"(xla-raw {roof.memory_s_xla * 1e3:.2f}ms) "
+              f"collective={roof.collective_s * 1e3:.2f}ms "
+              f"dominant={roof.dominant} "
+              f"frac={roof.roofline_fraction:.3f}", flush=True)
+        report.update(roof.to_dict())
+        report["cost_compile_s"] = t3 - t2
+    with open(os.path.join(outdir, tag + ".json"), "w") as f:
+        json.dump(report, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="train_4k|prefill_32k|decode_32k|long_500k|all")
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="reports/dryrun")
+    # perf-iteration knobs
+    ap.add_argument("--optimizer", default="auto",
+                    choices=("auto", "adamw", "adafactor"))
+    ap.add_argument("--remat", default="block",
+                    choices=("none", "block", "full"))
+    ap.add_argument("--zero-stage", type=int, default=2)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--fence", default="global",
+                    choices=("global", "pair", "grads", "sublayer"))
+    ap.add_argument("--moe-impl", default="default",
+                    choices=("default", "a2a", "dense"))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--xent-chunks", type=int, default=1)
+    ap.add_argument("--act-shard", default="none",
+                    choices=("none", "replicated", "seq"))
+    ap.add_argument("--grad-clip", type=float, default=1.0)
+    ap.add_argument("--dp", type=int, default=16)
+    ap.add_argument("--tp", type=int, default=16)
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="skip the unrolled cost-analysis pass")
+    ap.add_argument("--cost-only", action="store_true",
+                    help="skip pass A; reuse memory stats from baseline")
+    ap.add_argument("--reuse-mem-from", default="",
+                    help="dir to read pass-A stats from in --cost-only")
+    args = ap.parse_args()
+    args.unroll = False
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = LM_SHAPES if args.shape == "all" else \
+        [s for s in LM_SHAPES if s.name == args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                try:
+                    run_cell(arch, shape, mesh_name, args, args.out)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape.name, mesh_name, str(e)))
+                    print(f"[FAIL] {arch} {shape.name} {mesh_name}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nDRY-RUN: all requested cells passed.")
+
+
+if __name__ == "__main__":
+    main()

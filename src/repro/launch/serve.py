@@ -1,0 +1,60 @@
+"""Serving launcher: continuous batching on the channel substrate.
+
+The serving loop IS the paper's programming model in action:
+  * a SharedQueue channel admits requests (enqueue from any node; the
+    batcher dequeues up to max_batch per round);
+  * the KVStore channel (the paper's §6 object!) is the page table of the
+    paged KV cache: key = (request_id, page_no) → (node, slot) of the page,
+    lock-free lookups on the decode path, inserts under ticket locks on
+    admission, deletes on eviction;
+  * prefill + decode steps run the model with the caches those pages back.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+      --requests 16 --prompt-len 32 --gen-len 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_debug_mesh
+from repro.serving.engine import ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--dtype", default="float32")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(dtype=args.dtype)
+    engine = ServingEngine(cfg, max_batch=args.max_batch,
+                           max_seq=args.prompt_len + args.gen_len)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    prompts = [rng.integers(1, cfg.vocab, size=(args.prompt_len,))
+               .astype(np.int32) for _ in range(args.requests)]
+    outs = engine.generate(prompts, gen_len=args.gen_len)
+    dt = time.time() - t0
+    n_tokens = args.requests * args.gen_len
+    print(f"[serve] {args.requests} requests × {args.gen_len} tokens "
+          f"in {dt:.2f}s → {n_tokens / dt:.1f} tok/s")
+    print(f"[serve] sample output: {outs[0][:8]}")
+    stats = engine.stats()
+    print(f"[serve] page-table (kvstore) stats: {stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: composable pure-JAX definitions for the ten assigned archs."""
+from .model import Model, build_model

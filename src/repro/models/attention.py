@@ -1,0 +1,322 @@
+"""Attention blocks: GQA/MQA (+qk-norm, windows, cross-attn) and DeepSeek
+MLA, with three interchangeable inner implementations:
+
+* ``pallas``  — the flash kernel (TPU; interpret-mode on CPU tests);
+* ``chunked`` — pure-XLA online-softmax scan over KV blocks: identical math
+                and O(S·block) memory, used for the 512-device dry-run where
+                Mosaic is unavailable (this is what the roofline sees);
+* ``naive``   — materialized logits; oracle for small shapes.
+
+Decode uses the flash-decode kernel (or its jnp twin) against a
+(B, Hkv, S, D) cache with ragged lengths, and for MLA the *matrix-absorbed*
+form against the compressed (c_kv ‖ k_rope) cache — the actual memory win
+MLA exists for.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from .layers import apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- chunked XLA
+def chunked_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
+                      kv_valid=None, block_k=512):
+    """Online-softmax attention as a lax.scan over KV chunks (flash math in
+    plain XLA).  q: (B,Hq,Sq,Dk); k: (B,Hkv,Sk,Dk); v: (B,Hkv,Sk,Dv)."""
+    B, Hq, Sq, Dk = q.shape
+    _, Hkv, Sk, Dv = v.shape[0], v.shape[1], v.shape[2], v.shape[3]
+    G = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / Dk ** 0.5
+    offset = Sk - Sq
+    bk = min(block_k, Sk)
+    if Sk % bk:
+        pad = (-Sk) % bk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_valid = Sk if kv_valid is None else kv_valid
+        Sk = k.shape[2]
+    nk = Sk // bk
+    qf = q.astype(jnp.float32) * scale
+    qf = qf.reshape(B, Hkv, G, Sq, Dk)
+    kc = k.astype(jnp.float32).reshape(B, Hkv, nk, bk, Dk).transpose(
+        2, 0, 1, 3, 4)
+    vc = v.astype(jnp.float32).reshape(B, Hkv, nk, bk, Dv).transpose(
+        2, 0, 1, 3, 4)
+    qpos = jnp.arange(Sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ik, kb, vb = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb)      # (B,Hkv,G,Sq,bk)
+        kpos = ik * bk + jnp.arange(bk)
+        mask = jnp.ones((Sq, bk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None] + offset
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] + offset - window
+        if kv_valid is not None:
+            mask &= kpos[None, :] < kv_valid
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, Sq), jnp.float32),
+            jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, (jnp.arange(nk), kc, vc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).reshape(B, Hq, Sq, Dv)
+    return out.astype(q.dtype)
+
+
+def naive_attention(q, k, v, **kw):
+    return kref.mha(q, k, v, **kw)
+
+
+def _mha_dispatch(q, k, v, *, impl, **kw):
+    if impl == "pallas":
+        return kops.flash_attention(q, k, v, **kw)
+    if impl == "chunked":
+        from .flash_xla import flash_attention_xla
+        return flash_attention_xla(q, k, v, kw.get("causal", True),
+                                   kw.get("window"), kw.get("sm_scale"),
+                                   kw.get("kv_valid"), kw.get("block_k", 512))
+    return naive_attention(q, k, v, **kw)
+
+
+def decode_mha_dispatch(q, k_cache, v_cache, lengths, *, impl,
+                        sm_scale=None):
+    """q: (B,Hq,Dk); caches (B,Hkv,S,D*). Ragged by ``lengths``."""
+    if impl == "pallas":
+        return kops.decode_attention(q, k_cache, v_cache, lengths,
+                                     sm_scale=sm_scale)
+    return kref.decode_attention(q, k_cache, v_cache, lengths,
+                                 sm_scale=sm_scale)
+
+
+# ------------------------------------------------------------------ GQA block
+def init_attention(key, cfg: ArchConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim_
+    dt = cfg.dtype_
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, cfg.n_heads * hd, dt),
+         "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+         "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+         "wo": dense_init(ks[3], cfg.n_heads * hd, d, dt)}
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, Hkv, S, Dk)
+    v: jax.Array       # (B, Hkv, S, Dv)
+
+
+def _project_qkv(params, cfg, x, kv_x):
+    B = x.shape[0]
+    hd = cfg.head_dim_
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(
+        B, x.shape[1], cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", kv_x, params["wk"]).reshape(
+        B, kv_x.shape[1], cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", kv_x, params["wv"]).reshape(
+        B, kv_x.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def attention(params, cfg: ArchConfig, x, *, positions=None, causal=True,
+              window=None, kv_x=None, use_rope=True, impl="chunked"):
+    """Full-sequence (train/prefill/encoder) attention.
+
+    x: (B, S, d).  kv_x: cross-attention context (B, Sctx, d) or None.
+    Returns (out (B, S, d), KVCache of this call's k/v in (B,H,S,D) layout).
+    """
+    B, S, _ = x.shape
+    kv_in = x if kv_x is None else kv_x
+    q, k, v = _project_qkv(params, cfg, x, kv_in)
+    if use_rope and kv_x is None:
+        pos = positions if positions is not None else jnp.arange(S)[None, :]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    out = _mha_dispatch(qh, kh, vh, impl=impl,
+                        causal=causal and kv_x is None, window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"]), KVCache(kh, vh)
+
+
+def attention_decode(params, cfg: ArchConfig, x, cache: KVCache, pos,
+                     *, window=None, use_rope=True, cross=False,
+                     impl="naive"):
+    """One-token decode.  x: (B, 1, d); cache holds S_max slots; ``pos``:
+    (B,) current lengths (new token index).  Returns (out, updated cache)."""
+    B = x.shape[0]
+    hd = cfg.head_dim_
+    q, k, v = _project_qkv(params, cfg, x, x)
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    q = q[:, 0]                                   # (B, Hq, Dk)
+    if cross:
+        new_cache = cache                          # fixed encoder cache
+        lengths = jnp.full((B,), cache.k.shape[2], jnp.int32)
+    else:
+        S_max = cache.k.shape[2]
+        if window is not None:
+            # ring-buffer window cache (recurrentgemma local attention)
+            slot = pos % S_max
+        else:
+            slot = pos
+        # partition-friendly in-place write: masked where over the seq
+        # axis (a vmapped scatter would force GSPMD to all-gather the
+        # seq-sharded cache — measured at GBs/step in the dry-run)
+        iota = jnp.arange(S_max, dtype=jnp.int32)
+        mask = (iota[None, None, :, None] ==
+                slot[:, None, None, None].astype(jnp.int32))
+        kn = jnp.where(mask, k[:, 0][:, :, None, :].astype(cache.k.dtype),
+                       cache.k)
+        vn = jnp.where(mask, v[:, 0][:, :, None, :].astype(cache.v.dtype),
+                       cache.v)
+        new_cache = KVCache(kn, vn)
+        lengths = jnp.minimum(pos + 1, S_max)
+    out = decode_mha_dispatch(q, new_cache.k, new_cache.v, lengths,
+                              impl=impl)
+    out = out.reshape(B, 1, -1)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"]), new_cache
+
+
+# ------------------------------------------------------------------ MLA block
+def init_mla(key, cfg: ArchConfig):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dt = cfg.dtype_
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank, dt),
+        "q_a_norm": init_rmsnorm(m.q_lora_rank),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, H * qk, dt),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                            dt),
+        "kv_a_norm": init_rmsnorm(m.kv_lora_rank),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                            H * (m.qk_nope_head_dim + m.v_head_dim), dt),
+        "wo": dense_init(ks[4], H * m.v_head_dim, d, dt),
+    }
+
+
+class MLACache(NamedTuple):
+    ckv: jax.Array     # (B, S, kv_lora_rank)  compressed latents
+    krope: jax.Array   # (B, S, qk_rope_head_dim)
+
+
+def _mla_qkv(params, cfg, x, positions):
+    """Expanded (non-absorbed) q, k, v for train/prefill."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk_nope, qk_rope = m.qk_nope_head_dim, m.qk_rope_head_dim
+    q_a = rmsnorm(params["q_a_norm"],
+                  jnp.einsum("bsd,dr->bsr", x, params["wq_a"]), cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", q_a, params["wq_b"]).reshape(
+        B, S, H, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    kv_a = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    ckv, k_rope = kv_a[..., :m.kv_lora_rank], kv_a[..., m.kv_lora_rank:]
+    ckv = rmsnorm(params["kv_a_norm"], ckv, cfg.norm_eps)
+    kv = jnp.einsum("bsr,rh->bsh", ckv, params["wkv_b"]).reshape(
+        B, S, H, qk_nope + m.v_head_dim)
+    k_nope, v = kv[..., :qk_nope], kv[..., qk_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)     # (B,S,1,rope)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, qk_rope))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return q, k, v, ckv, k_rope[:, :, 0, :]
+
+
+def mla_attention(params, cfg: ArchConfig, x, *, positions=None,
+                  impl="chunked"):
+    """Train/prefill MLA (expanded form).  Returns (out, MLACache)."""
+    B, S, _ = x.shape
+    m = cfg.mla
+    pos = positions if positions is not None else jnp.arange(S)[None, :]
+    q, k, v, ckv, krope = _mla_qkv(params, cfg, x, pos)
+    scale = 1.0 / (m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5
+    out = _mha_dispatch(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), impl=impl, causal=True,
+                        sm_scale=scale)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return (jnp.einsum("bsh,hd->bsd", out, params["wo"]),
+            MLACache(ckv, krope))
+
+
+def mla_decode(params, cfg: ArchConfig, x, cache: MLACache, pos,
+               *, impl="naive"):
+    """Matrix-absorbed MLA decode against the compressed cache.
+
+    Per head h:  score_t = q_nope_h^T W_UK_h c_t  +  q_rope_h^T k_rope_t
+    so the cache stays (c_kv ‖ k_rope) — (B, S, 512+64) — and the per-head
+    query is absorbed into a (kv_lora + rope)-dim effective query.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    qk_nope, qk_rope = m.qk_nope_head_dim, m.qk_rope_head_dim
+    R = m.kv_lora_rank
+    # --- new token's compressed kv, appended to cache
+    kv_a = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    ckv_new = rmsnorm(params["kv_a_norm"], kv_a[..., :R], cfg.norm_eps)
+    krope_new = apply_rope(kv_a[:, :, None, R:], pos[:, None],
+                           cfg.rope_theta)[:, :, 0]
+    # masked-where update (partition-friendly; see attention_decode note)
+    S_cache = cache.ckv.shape[1]
+    iota = jnp.arange(S_cache, dtype=jnp.int32)
+    mask = iota[None, :, None] == pos[:, None, None].astype(jnp.int32)
+    ckv = jnp.where(mask, ckv_new.astype(cache.ckv.dtype), cache.ckv)
+    krope = jnp.where(mask, krope_new.astype(cache.krope.dtype),
+                      cache.krope)
+    new_cache = MLACache(ckv, krope)
+    # --- absorbed query
+    q_a = rmsnorm(params["q_a_norm"],
+                  jnp.einsum("bsd,dr->bsr", x, params["wq_a"]), cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", q_a, params["wq_b"]).reshape(
+        B, 1, H, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)[:, 0]
+    w_kv_b = params["wkv_b"].reshape(R, H, qk_nope + m.v_head_dim)
+    w_uk = w_kv_b[..., :qk_nope]                        # (R, H, nope)
+    w_uv = w_kv_b[..., qk_nope:]                        # (R, H, v_dim)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)  # (B, H, R)
+    # --- attention over compressed cache: keys = (ckv ‖ krope)
+    q_full = jnp.concatenate([q_abs, q_rope], axis=-1)  # (B, H, R+rope)
+    keys = jnp.concatenate([ckv, krope], axis=-1)[:, None]  # (B,1,S,R+rope)
+    vals = jnp.pad(ckv, ((0, 0), (0, 0), (0, qk_rope)))[:, None]
+    scale = 1.0 / (qk_nope + qk_rope) ** 0.5
+    lengths = pos + 1
+    ctx = decode_mha_dispatch(q_full, keys, vals, lengths, impl=impl,
+                              sm_scale=scale)           # (B, H, R+rope)
+    ctx = ctx[..., :R]
+    out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv).reshape(B, 1, -1)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"]), new_cache

@@ -1,0 +1,151 @@
+"""Flash attention in plain XLA with a flash-style custom VJP.
+
+This is the dry-run/compile substrate for the Pallas flash kernel: the
+forward is an online-softmax lax.scan over KV blocks (O(S·block) live
+memory), and the backward recomputes each block's probabilities from the
+saved (q, k, v, out, lse) instead of storing the S×S matrix — the
+FlashAttention-2 backward, expressed as XLA scans so GSPMD can partition
+it.  Numerics match kernels/ref.mha to float tolerance (tested).
+
+Shapes: q (B, Hq, Sq, Dk); k (B, Hkv, Sk, Dk); v (B, Hkv, Sk, Dv) with
+GQA folding Hq = Hkv·G.  Masking: causal with decode offset, sliding
+window, static kv_valid — identical semantics to the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_for(ik, bk, Sq, offset, causal, window, kv_valid):
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = ik * bk + jnp.arange(bk)[None, :]
+    m = jnp.ones((Sq, bk), bool)
+    if causal:
+        m &= kpos <= qpos + offset
+    if window is not None:
+        m &= kpos > qpos + offset - window
+    if kv_valid is not None:
+        m &= kpos < kv_valid
+    return m
+
+
+UNROLL_KV = False  # set True by the dry-run for exact cost_analysis
+
+
+def _fwd_scan(qf, kc, vc, offset, causal, window, kv_valid, bk):
+    B, Hkv, G, Sq, Dk = qf.shape
+    Dv = vc.shape[-1]
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ik, kb, vb = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb)
+        mask = _mask_for(ik, bk, Sq, offset, causal, window, kv_valid)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
+        return (m_new, l_new, acc), None
+
+    nk = kc.shape[0]
+    init = (jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, Sq), jnp.float32),
+            jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, (jnp.arange(nk), kc, vc),
+                                  unroll=nk if UNROLL_KV else 1)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_xla(q, k, v, causal=True, window=None, sm_scale=None,
+                        kv_valid=None, block_k=512):
+    out, _lse = _flash_fwd(q, k, v, causal, window, sm_scale, kv_valid,
+                           block_k)[0], None
+    return out
+
+
+def _prep(q, k, v, sm_scale, block_k):
+    B, Hq, Sq, Dk = q.shape
+    _, Hkv, Sk, Dv = v.shape
+    G = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / Dk ** 0.5
+    bk = min(block_k, Sk)
+    pad = (-Sk) % bk
+    kv_pad = None
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_pad = Sk
+        Sk = k.shape[2]
+    nk = Sk // bk
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, Sq, Dk)
+    kc = k.astype(jnp.float32).reshape(B, Hkv, nk, bk, Dk).transpose(
+        2, 0, 1, 3, 4)
+    vc = v.astype(jnp.float32).reshape(B, Hkv, nk, bk, Dv).transpose(
+        2, 0, 1, 3, 4)
+    return qf, kc, vc, G, scale, bk, kv_pad
+
+
+def _flash_fwd(q, k, v, causal, window, sm_scale, kv_valid, block_k):
+    B, Hq, Sq, Dk = q.shape
+    Sk0 = k.shape[2]
+    qf, kc, vc, G, scale, bk, kv_pad = _prep(q, k, v, sm_scale, block_k)
+    kv_valid_eff = kv_valid if kv_valid is not None else kv_pad
+    offset = Sk0 - Sq
+    out, lse = _fwd_scan(qf, kc, vc, offset, causal, window, kv_valid_eff,
+                         bk)
+    out_q = out.reshape(B, Hq, Sq, -1).astype(q.dtype)
+    return out_q, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, sm_scale, kv_valid, block_k, res, dout):
+    q, k, v, out_f32, lse = res
+    B, Hq, Sq, Dk = q.shape
+    _, Hkv, Sk0, Dv = v.shape
+    qf, kc, vc, G, scale, bk, kv_pad = _prep(q, k, v, sm_scale, block_k)
+    kv_valid_eff = kv_valid if kv_valid is not None else kv_pad
+    offset = Sk0 - Sq
+    do = dout.astype(jnp.float32).reshape(B, Hkv, G, Sq, Dv)
+    # D_i = rowsum(dout ⊙ out)
+    Dsum = jnp.sum(do * out_f32, axis=-1)                     # (B,Hkv,G,Sq)
+
+    def step(dq, inp):
+        ik, kb, vb = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb)
+        mask = _mask_for(ik, bk, Sq, offset, causal, window, kv_valid_eff)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])
+        p = jnp.where(mask, p, 0.0)
+        dv_blk = jnp.einsum("bhgqk,bhgqd->bhkd", p, do)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", do, vb)
+        ds = p * (dp - Dsum[..., None])                       # (B,Hkv,G,Sq,bk)
+        dq = dq + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kb)
+        dk_blk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qf)
+        return dq, (dk_blk, dv_blk)
+
+    nk = kc.shape[0]
+    dq0 = jnp.zeros_like(qf)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(
+        step, dq0, (jnp.arange(nk), kc, vc),
+        unroll=nk if UNROLL_KV else 1)
+    dq = (dq * scale).reshape(B, Hq, Sq, Dk).astype(q.dtype)
+    # dk = dsᵀ·(scale·q) = dsᵀ·qf — the scale is already inside qf
+    dk = dk_blocks.transpose(1, 2, 0, 3, 4).reshape(
+        B, Hkv, nk * bk, Dk)[:, :, :Sk0].astype(k.dtype)
+    dv = dv_blocks.transpose(1, 2, 0, 3, 4).reshape(
+        B, Hkv, nk * bk, Dv)[:, :, :Sk0].astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention_xla.defvjp(_flash_fwd, _flash_bwd)

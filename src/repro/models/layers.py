@@ -1,0 +1,118 @@
+"""Shared neural-net building blocks (pure JAX, no flax).
+
+Parameters are nested dicts of jnp arrays; every block is an
+``init_*(key, ...) -> params`` / ``apply(params, x, ...)`` pair.  Naming of
+param tree paths is load-bearing: distributed/sharding.py maps path regexes
+to PartitionSpecs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def init_rmsnorm(d):
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # gemma-style (1 + w)
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"])).astype(x.dtype)
+
+
+def init_layernorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., S, H, D) or (..., H, D) single-pos; positions broadcastable
+    to the S axis.  Rotates pairs (x[2i], x[2i+1])."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)   # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    # insert the head axis before pairing
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- gated MLPs
+def init_mlp(key, d, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi_gate": dense_init(k1, d, d_ff, dtype),
+            "wi_up": dense_init(k2, d, d_ff, dtype),
+            "wo": dense_init(k3, d_ff, d, dtype)}
+
+
+def mlp(params, x, act="silu"):
+    gate = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["wi_up"])
+    g = jax.nn.silu(gate) if act == "silu" else \
+        jax.nn.gelu(gate, approximate=True)
+    return jnp.einsum("...f,fd->...d", g * up, params["wo"])
+
+
+def init_ffn_nogate(key, d, d_ff, dtype):
+    """Whisper-style two-matrix FFN."""
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, d, d_ff, dtype),
+            "wo": dense_init(k2, d_ff, d, dtype)}
+
+
+def ffn_nogate(params, x):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["wi"]),
+                    approximate=True)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# --------------------------------------------------------------- embeddings
+def init_embedding(key, vocab, d, dtype, tie):
+    k1, k2 = jax.random.split(key)
+    p = {"table": embed_init(k1, vocab, d, dtype)}
+    if not tie:
+        p["head"] = dense_init(k2, d, vocab, dtype)
+    return p
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x, tie):
+    if tie:
+        return jnp.einsum("...d,vd->...v", x, params["table"])
+    return jnp.einsum("...d,dv->...v", x, params["head"])

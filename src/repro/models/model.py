@@ -1,0 +1,326 @@
+"""Model factory: one uniform interface over all ten architectures.
+
+``build_model(cfg)`` returns a :class:`Model` of pure functions:
+
+  init(key)                                  → params
+  train_loss(params, batch)                  → (loss, metrics)
+  logits(params, batch)                      → (B, S, vocab)
+  prefill(params, batch, s_max)              → (last_logits, cache, pos)
+  decode_step(params, token, cache, pos[, batch]) → (logits, cache)
+  init_cache(batch_size, s_max)              → cache pytree
+  input_specs(shape)                         → dict of ShapeDtypeStruct
+
+``batch`` is a dict: {"tokens": (B, S) int32} plus, for [vlm]/[audio],
+{"context": (B, n_ctx, d)} — the stubbed modality frontend output.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import encdec
+from . import rwkv6 as W
+from . import transformer as T
+from .layers import embed, init_embedding, init_rmsnorm, rmsnorm, unembed
+
+MOE_AUX_WEIGHT = 0.01
+MTP_WEIGHT = 0.3
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Callable
+    train_loss: Callable
+    logits: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+    input_specs: Callable
+
+
+def _xent(logits, labels):
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(gold)
+
+
+def _xent_chunked(embed_params, h, labels, tie, n_chunks):
+    """Cross-entropy with logits (re)computed per sequence chunk under
+    jax.checkpoint: the (B, S, vocab) logits tensor — the dominant live
+    buffer of several train cells — never materializes at once; backward
+    recomputes each chunk's unembed.  Exact same value as _xent."""
+    B, S, _ = h.shape
+    n_chunks = min(n_chunks, S)
+    while S % n_chunks:
+        n_chunks -= 1
+    hc = h.reshape(B, n_chunks, S // n_chunks, -1).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(hi, li):
+        lg = unembed(embed_params, hi, tie)
+        lp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(lp, li[..., None], axis=-1)[..., 0]
+        return -jnp.sum(gold)
+
+    def body(acc, inp):
+        hi, li = inp
+        return acc + chunk_loss(hi, li), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (B * S)
+
+
+def build_model(cfg: ArchConfig, *, impl: str = "chunked",
+                decode_impl: str = "naive", rec_impl: str = "xla",
+                remat: str = "block", moe_fn=None,
+                unroll: bool = False, xent_chunks: int = 1,
+                act_fn=None, sublayer_fence: bool = False) -> Model:
+    """impl: full-seq attention inner ('pallas'|'chunked'|'naive');
+    decode_impl: decode attention ('pallas'|'naive');
+    rec_impl: recurrence ('pallas'|'xla');
+    moe_fn: optional distributed MoE apply (ctx hook for shard_map EP);
+    unroll: unroll layer stacks in HLO (dry-run cost-analysis accuracy)."""
+    if cfg.family == "audio":
+        return _build_encdec(cfg, impl=impl, decode_impl=decode_impl,
+                             remat=remat, unroll=unroll)
+    if cfg.family == "ssm":
+        return _build_rwkv(cfg, rec_impl=rec_impl, remat=remat,
+                           unroll=unroll, act_fn=act_fn)
+    return _build_lm(cfg, impl=impl, decode_impl=decode_impl,
+                     rec_impl=rec_impl, remat=remat, moe_fn=moe_fn,
+                     unroll=unroll, xent_chunks=xent_chunks, act_fn=act_fn,
+                     sublayer_fence=sublayer_fence)
+
+
+# ---------------------------------------------------------------- LM family
+def _build_lm(cfg: ArchConfig, *, impl, decode_impl, rec_impl, remat,
+              moe_fn, unroll=False, xent_chunks=1, act_fn=None,
+              sublayer_fence=False) -> Model:
+    ctx_base = {"impl": impl, "decode_impl": decode_impl,
+                "rec_impl": rec_impl, "moe_fn": moe_fn, "unroll": unroll,
+                "act_fn": act_fn, "sublayer_fence": sublayer_fence}
+
+    def init(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"embed": init_embedding(k1, cfg.vocab, cfg.d_model, cfg.dtype_,
+                                     cfg.tie_embeddings),
+             "stack": T.init_stack(k2, cfg),
+             "final_norm": init_rmsnorm(cfg.d_model)}
+        if cfg.mtp_depth:
+            from .layers import dense_init
+            p["mtp"] = {
+                "proj": dense_init(k3, 2 * cfg.d_model, cfg.d_model,
+                                   cfg.dtype_),
+                "norm_h": init_rmsnorm(cfg.d_model),
+                "norm_e": init_rmsnorm(cfg.d_model),
+                "block": T.init_block(k4, cfg, "mla_dense"
+                                      if cfg.mla else "attn")}
+        return p
+
+    def _embed_in(params, tokens):
+        x = embed(params["embed"], tokens)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype_)
+        return x
+
+    def _hidden(params, batch):
+        tokens = batch["tokens"]
+        ctx = dict(ctx_base)
+        ctx["context"] = batch.get("context")
+        ctx["positions"] = jnp.arange(tokens.shape[1])[None, :]
+        x = _embed_in(params, tokens)
+        x, aux = T.apply_stack_train(params["stack"], cfg, x, ctx,
+                                     remat=remat)
+        return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+    def logits(params, batch):
+        h, _aux = _hidden(params, batch)
+        return unembed(params["embed"], h, cfg.tie_embeddings)
+
+    def train_loss(params, batch):
+        """batch['tokens']: (B, S+1); loss = next-token xent (+aux, +MTP)."""
+        tokens = batch["tokens"]
+        inputs = dict(batch, tokens=tokens[:, :-1])
+        labels = tokens[:, 1:]
+        h, aux = _hidden(params, inputs)
+        if xent_chunks > 1:
+            loss = _xent_chunked(params["embed"], h, labels,
+                                 cfg.tie_embeddings, xent_chunks)
+        else:
+            lg = unembed(params["embed"], h, cfg.tie_embeddings)
+            loss = _xent(lg, labels)
+        metrics = {"xent": loss, "moe_aux": aux}
+        if cfg.moe is not None:
+            loss = loss + MOE_AUX_WEIGHT * aux
+        if cfg.mtp_depth:
+            mtp = params["mtp"]
+            emb_next = _embed_in(params, labels)      # tokens t+1
+            fused = jnp.concatenate(
+                [rmsnorm(mtp["norm_h"], h, cfg.norm_eps),
+                 rmsnorm(mtp["norm_e"], emb_next, cfg.norm_eps)], axis=-1)
+            x2 = jnp.einsum("bsd,df->bsf", fused, mtp["proj"])
+            ctx = dict(ctx_base, positions=jnp.arange(x2.shape[1])[None, :])
+            x2, _ = T.apply_block_train(
+                mtp["block"], cfg, "mla_dense" if cfg.mla else "attn", x2,
+                ctx)
+            lg2 = unembed(params["embed"],
+                          rmsnorm(params["final_norm"], x2, cfg.norm_eps),
+                          cfg.tie_embeddings)
+            # MTP head at position i predicts token i+2
+            mtp_loss = _xent(lg2[:, :-1], tokens[:, 2:])
+            metrics["mtp"] = mtp_loss
+            loss = loss + MTP_WEIGHT * mtp_loss
+        return loss, metrics
+
+    def init_cache(batch_size, s_max):
+        n_ctx = cfg.cross.n_context_tokens if cfg.cross else 0
+        return T.init_stack_cache(cfg, batch_size, s_max, n_ctx)
+
+    def prefill(params, batch, s_max):
+        tokens = batch["tokens"]
+        ctx = dict(ctx_base)
+        ctx["context"] = batch.get("context")
+        ctx["positions"] = jnp.arange(tokens.shape[1])[None, :]
+        x = _embed_in(params, tokens)
+        x, caches = T.fill_stack_cache(params["stack"], cfg, x, ctx, s_max)
+        h = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        lg = unembed(params["embed"], h, cfg.tie_embeddings)[:, 0]
+        pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+        return lg, caches, pos
+
+    def decode_step(params, token, caches, pos, batch=None):
+        ctx = dict(ctx_base)
+        ctx["context"] = None if batch is None else batch.get("context")
+        x = _embed_in(params, token)
+        x, caches = T.apply_stack_decode(params["stack"], cfg, x, caches,
+                                         pos, ctx)
+        h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        lg = unembed(params["embed"], h, cfg.tie_embeddings)[:, 0]
+        return lg, caches
+
+    def input_specs(shape: ShapeConfig):
+        return _lm_input_specs(cfg, shape, init_cache)
+
+    return Model(cfg, init, train_loss, logits, prefill, decode_step,
+                 init_cache, input_specs)
+
+
+# ------------------------------------------------------------------- whisper
+def _build_encdec(cfg: ArchConfig, *, impl, decode_impl, remat,
+                  unroll=False) -> Model:
+    def init(key):
+        return encdec.init_encdec(key, cfg)
+
+    def logits(params, batch):
+        enc_out = encdec.encode(params, cfg, batch["context"], impl=impl,
+                                remat=remat, unroll=unroll)
+        return encdec.decode_train(params, cfg, batch["tokens"], enc_out,
+                                   impl=impl, remat=remat, unroll=unroll)
+
+    def train_loss(params, batch):
+        tokens = batch["tokens"]
+        lg = logits(params, dict(batch, tokens=tokens[:, :-1]))
+        loss = _xent(lg, tokens[:, 1:])
+        return loss, {"xent": loss}
+
+    def init_cache(batch_size, s_max):
+        return encdec.init_cache(cfg, batch_size, s_max)
+
+    def prefill(params, batch, s_max):
+        lg, cache = encdec.prefill(params, cfg, batch["tokens"],
+                                   batch["context"], impl=impl, s_max=s_max,
+                                   unroll=unroll)
+        pos = jnp.full((batch["tokens"].shape[0],),
+                       batch["tokens"].shape[1], jnp.int32)
+        return lg, cache, pos
+
+    def decode_step(params, token, cache, pos, batch=None):
+        return encdec.decode_step(params, cfg, token, cache, pos,
+                                  impl=decode_impl, unroll=unroll)
+
+    def input_specs(shape: ShapeConfig):
+        return _lm_input_specs(cfg, shape, init_cache)
+
+    return Model(cfg, init, train_loss, logits, prefill, decode_step,
+                 init_cache, input_specs)
+
+
+# --------------------------------------------------------------------- rwkv6
+def _build_rwkv(cfg: ArchConfig, *, rec_impl, remat, unroll=False,
+                act_fn=None) -> Model:
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"embed": init_embedding(k1, cfg.vocab, cfg.d_model,
+                                        cfg.dtype_, False),
+                "stack": W.init_rwkv_stack(k2, cfg),
+                "final_norm": init_rmsnorm(cfg.d_model)}
+
+    def logits(params, batch):
+        x = embed(params["embed"], batch["tokens"])
+        x = W.apply_rwkv_train(params["stack"], cfg, x, impl=rec_impl,
+                               remat=remat, unroll=unroll, act_fn=act_fn)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return unembed(params["embed"], x, False)
+
+    def train_loss(params, batch):
+        tokens = batch["tokens"]
+        lg = logits(params, dict(batch, tokens=tokens[:, :-1]))
+        loss = _xent(lg, tokens[:, 1:])
+        return loss, {"xent": loss}
+
+    def init_cache(batch_size, s_max):
+        return W.init_rwkv_caches(cfg, batch_size)
+
+    def prefill(params, batch, s_max):
+        x = embed(params["embed"], batch["tokens"])
+        x, states = W.apply_rwkv_prefill(params["stack"], cfg, x,
+                                         impl=rec_impl, unroll=unroll)
+        x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        lg = unembed(params["embed"], x, False)[:, 0]
+        pos = jnp.full((batch["tokens"].shape[0],),
+                       batch["tokens"].shape[1], jnp.int32)
+        return lg, states, pos
+
+    def decode_step(params, token, states, pos, batch=None):
+        x = embed(params["embed"], token)
+        x, states = W.apply_rwkv_decode(params["stack"], cfg, x, states,
+                                        impl=rec_impl, unroll=unroll)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        lg = unembed(params["embed"], x, False)[:, 0]
+        return lg, states
+
+    def input_specs(shape: ShapeConfig):
+        return _lm_input_specs(cfg, shape, init_cache)
+
+    return Model(cfg, init, train_loss, logits, prefill, decode_step,
+                 init_cache, input_specs)
+
+
+# ------------------------------------------------------------- input specs
+def _lm_input_specs(cfg: ArchConfig, shape: ShapeConfig, init_cache):
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    specs: Dict[str, Any] = {}
+    needs_ctx = cfg.family in ("vlm", "audio")
+    ctx_spec = sds((B, cfg.cross.n_context_tokens, cfg.d_model),
+                   cfg.dtype_) if needs_ctx else None
+    if shape.kind == "train":
+        specs["batch"] = {"tokens": sds((B, S + 1), jnp.int32)}
+        if needs_ctx:
+            specs["batch"]["context"] = ctx_spec
+    elif shape.kind == "prefill":
+        specs["batch"] = {"tokens": sds((B, S), jnp.int32)}
+        if needs_ctx:
+            specs["batch"]["context"] = ctx_spec
+    else:  # decode: one token against a seq_len cache
+        specs["token"] = sds((B, 1), jnp.int32)
+        specs["pos"] = sds((B,), jnp.int32)
+        specs["cache"] = jax.eval_shape(lambda: init_cache(B, S))
+        if needs_ctx:
+            specs["batch"] = {"context": ctx_spec}
+    return specs

@@ -1,0 +1,116 @@
+"""Griffin/RecurrentGemma recurrent block (arXiv:2402.19427).
+
+recurrent branch: linear → causal depthwise conv1d(4) → RG-LRU
+gate branch:      linear → GeLU
+merged:           gate ⊙ rec → output linear
+
+RG-LRU: r_t = σ(W_a x_t), i_t = σ(W_x x_t),
+        log a_t = -c · softplus(Λ) · r_t   (c = 8)
+        h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+Train path uses the XLA scan oracle (exact, differentiable, O(S) memory);
+runtime path dispatches to the rglru_scan Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from .layers import dense_init
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig):
+    d = cfg.d_model
+    w = cfg.hybrid.lru_width or d
+    dt = cfg.dtype_
+    ks = jax.random.split(key, 7)
+    # Λ init so a ∈ [0.9, 0.999] at r = 1 (paper appendix)
+    u = np.random.RandomState(0).uniform(0.9 ** 2, 0.999 ** 2, size=(w,))
+    lam = np.log(np.expm1(-np.log(u) / (2 * _C)))  # softplus^-1
+    return {
+        "wx_rec": dense_init(ks[0], d, w, dt),
+        "wx_gate": dense_init(ks[1], d, w, dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.hybrid.conv_width, w),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        # per-channel (diagonal) gate weights: the paper uses block-diagonal
+        # head-blocked gates; diagonal is the TPU-shardable limit of that
+        # family (channels partition cleanly over the model axis; DESIGN §7)
+        "w_a": (jax.random.normal(ks[3], (w,), jnp.float32) * 0.1).astype(dt),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": (jax.random.normal(ks[4], (w,), jnp.float32) * 0.1).astype(dt),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.asarray(lam, jnp.float32),
+        "wo": dense_init(ks[5], w, d, dt),
+    }
+
+
+class RecState(NamedTuple):
+    h: jax.Array         # (B, W) RG-LRU hidden
+    conv: jax.Array      # (B, conv_width-1, W) trailing inputs
+
+
+def init_rec_state(cfg: ArchConfig, batch: int) -> RecState:
+    w = cfg.hybrid.lru_width or cfg.d_model
+    return RecState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.hybrid.conv_width - 1, w), cfg.dtype_))
+
+
+def _causal_conv(params, x, history=None):
+    """Depthwise causal conv1d.  x: (B, S, W); history: (B, cw-1, W)."""
+    cw = params["conv_w"].shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * params["conv_w"][i]
+              for i in range(cw))
+    return out + params["conv_b"], xp[:, -(cw - 1):]
+
+
+def _gates(params, xr):
+    r = jax.nn.sigmoid(
+        (xr * params["w_a"]).astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(
+        (xr * params["w_i"]).astype(jnp.float32) + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    return log_a, i
+
+
+def rglru_block(params, x, cfg: ArchConfig, impl="xla"):
+    """Full-sequence forward.  x: (B, S, d) → (y: (B, S, d), RecState)."""
+    xg = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["wx_gate"]),
+                     approximate=True)
+    xr = jnp.einsum("bsd,dw->bsw", x, params["wx_rec"])
+    xr, conv_hist = _causal_conv(params, xr)
+    log_a, i_gate = _gates(params, xr)
+    gated_in = (i_gate * xr.astype(jnp.float32)).astype(x.dtype)
+    if impl == "pallas":
+        y, h_fin = kops.rglru(gated_in, log_a.astype(x.dtype))
+    else:
+        y, h_fin = kref.rglru(gated_in, log_a.astype(x.dtype))
+    out = jnp.einsum("bsw,wd->bsd", (y * xg), params["wo"])
+    return out, RecState(h=h_fin, conv=conv_hist)
+
+
+def rglru_block_decode(params, x, state: RecState, cfg: ArchConfig):
+    """One-token decode.  x: (B, 1, d) → (y, new state)."""
+    xg = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["wx_gate"]),
+                     approximate=True)
+    xr = jnp.einsum("bsd,dw->bsw", x, params["wx_rec"])
+    xr, conv_hist = _causal_conv(params, xr, history=state.conv)
+    log_a, i_gate = _gates(params, xr)
+    a = jnp.exp(log_a[:, 0])
+    gate = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a[:, 0]), 0.0))
+    h = a * state.h + gate * (i_gate[:, 0] * xr[:, 0].astype(jnp.float32))
+    y = (h.astype(x.dtype) * xg[:, 0])[:, None]
+    out = jnp.einsum("bsw,wd->bsd", y, params["wo"])
+    return out, RecState(h=h, conv=conv_hist)

@@ -1,0 +1,267 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892): attention-free token mixing
+with data-dependent per-channel decay + squared-ReLU channel mixing.
+
+Time mixing (per layer):
+  token shift  x'_t = lerp(x_t, x_{t-1}, μ_*)  per projection
+  r, k, v, g   linear projections (g gated through silu)
+  w_t          data-dependent decay: w = exp(-exp(w0 + tanh(x'_w A) B))
+  wkv          the WKV6 recurrence (kernels/wkv6.py or XLA chunked-remat)
+  out          groupnorm(per head) → ⊙ silu(g) → output linear
+
+Channel mixing: token shift, k = relu(x' Wk)^2, out = σ(x' Wr) ⊙ (k Wv).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from .layers import dense_init, init_layernorm, layernorm
+from .scan_util import layer_scan
+
+_DECAY_LORA = 64
+
+
+def init_time_mix(key, cfg: ArchConfig):
+    d, dt = cfg.d_model, cfg.dtype_
+    H, hd = cfg.n_heads, cfg.head_dim_
+    ks = jax.random.split(key, 9)
+    return {
+        "mu": (0.5 * jnp.ones((5, d), jnp.float32)).astype(dt),  # r,k,v,w,g
+        "wr": dense_init(ks[0], d, H * hd, dt),
+        "wk": dense_init(ks[1], d, H * hd, dt),
+        "wv": dense_init(ks[2], d, H * hd, dt),
+        "wg": dense_init(ks[3], d, H * hd, dt),
+        "w0": jnp.full((H * hd,), -4.0, jnp.float32),
+        "w_lora_a": dense_init(ks[4], d, _DECAY_LORA, dt),
+        "w_lora_b": dense_init(ks[5], _DECAY_LORA, H * hd, dt),
+        "u": (jax.random.normal(ks[6], (H, hd), jnp.float32) * 0.1),
+        "ln_x": init_layernorm(H * hd),
+        "wo": dense_init(ks[7], H * hd, d, dt),
+    }
+
+
+def init_channel_mix(key, cfg: ArchConfig):
+    d, dt = cfg.d_model, cfg.dtype_
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": (0.5 * jnp.ones((2, d), jnp.float32)).astype(dt),  # k, r
+        "wk": dense_init(ks[0], d, cfg.d_ff, dt),
+        "wv": dense_init(ks[1], cfg.d_ff, d, dt),
+        "wr": dense_init(ks[2], d, d, dt),
+    }
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array       # (B, H, D, D) float32
+    shift_t: jax.Array   # (B, d) last input of the time-mix sublayer
+    shift_c: jax.Array   # (B, d) last input of the channel-mix sublayer
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int) -> RWKVState:
+    return RWKVState(
+        wkv=jnp.zeros((batch, cfg.n_heads, cfg.head_dim_, cfg.head_dim_),
+                      jnp.float32),
+        shift_t=jnp.zeros((batch, cfg.d_model), cfg.dtype_),
+        shift_c=jnp.zeros((batch, cfg.d_model), cfg.dtype_))
+
+
+def _groupnorm_heads(params, y, H, hd, eps=64e-5):
+    """RWKV's GroupNorm with one group per head."""
+    B, S, _ = y.shape
+    y4 = y.reshape(B, S, H, hd).astype(jnp.float32)
+    mu = jnp.mean(y4, axis=-1, keepdims=True)
+    var = jnp.var(y4, axis=-1, keepdims=True)
+    yn = (y4 - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn * params["scale"].reshape(H, hd) + params["bias"].reshape(H, hd)
+    return yn.reshape(B, S, H * hd).astype(y.dtype)
+
+
+def _token_shift(x, prev):
+    """x: (B, S, d) → x shifted right by one; position 0 sees ``prev``."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _decay(params, xw):
+    """Data-dependent decay in (0, 1)."""
+    lora = jnp.einsum("...d,dr->...r", xw, params["w_lora_a"])
+    delta = jnp.einsum("...r,rh->...h", jnp.tanh(lora), params["w_lora_b"])
+    return jnp.exp(-jnp.exp(params["w0"] + delta.astype(jnp.float32)))
+
+
+def time_mix(params, x, cfg: ArchConfig, state=None, impl="xla",
+             act_fn=None, unroll=False):
+    """x: (B, S, d) → (y, new wkv state (B,H,D,D), last input (B, d))."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim_
+    prev = state.shift_t if state is not None else jnp.zeros((B, d), x.dtype)
+    # NOTE: pinning the shifted tensor was tried and REFUTED (2.7× more
+    # collective bytes — the pins forced extra resharding; see §Perf log)
+    xs = _token_shift(x, prev)
+    mu = params["mu"]
+    xr, xk, xv, xw, xg = (x + (xs - x) * mu[i] for i in range(5))
+    r = jnp.einsum("bsd,dh->bsh", xr, params["wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", xk, params["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,dh->bsh", xv, params["wv"]).reshape(B, S, H, hd)
+    g = jnp.einsum("bsd,dh->bsh", xg, params["wg"])
+    w = _decay(params, xw).reshape(B, S, H, hd)
+    rt, kt, vt, wt = (t.transpose(0, 2, 1, 3) for t in (r, k, v, w))
+    if act_fn is not None:   # pin head sharding through the recurrence
+        rt, kt, vt, wt = act_fn(rt), act_fn(kt), act_fn(vt), act_fn(wt)
+    s0 = state.wkv if state is not None else None
+    if impl == "pallas" and s0 is None:
+        y, s_fin = kops.wkv6(rt, kt, vt.astype(rt.dtype),
+                             wt.astype(rt.dtype), params["u"].astype(rt.dtype))
+    elif S > 1:
+        y, s_fin = wkv6_chunked(rt, kt, vt, wt, params["u"], s0=s0,
+                                constrain=act_fn, unroll=unroll)
+    else:
+        y, s_fin = kref.wkv6(rt, kt, vt, wt, params["u"], s0=s0)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    y = _groupnorm_heads(params["ln_x"], y, H, hd)  # per-head GroupNorm
+    y = y * jax.nn.silu(g)
+    return jnp.einsum("bsh,hd->bsd", y, params["wo"]), s_fin, x[:, -1]
+
+
+def channel_mix(params, x, cfg: ArchConfig, state=None, act_fn=None):
+    B, S, d = x.shape
+    prev = state.shift_c if state is not None else jnp.zeros((B, d), x.dtype)
+    xs = _token_shift(x, prev)
+    mu = params["mu"]
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, params["wk"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, params["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["wr"]))
+    return r * kv, x[:, -1]
+
+
+# ------------------------------------------------------------------ the stack
+def init_rwkv_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_layernorm(cfg.d_model),
+            "time": init_time_mix(k1, cfg),
+            "ln2": init_layernorm(cfg.d_model),
+            "chan": init_channel_mix(k2, cfg)}
+
+
+def init_rwkv_stack(key, cfg: ArchConfig):
+    blocks = [init_rwkv_block(k, cfg)
+              for k in jax.random.split(key, cfg.n_layers)]
+    return {"ln0": init_layernorm(cfg.d_model),
+            "blocks": jax.tree.map(lambda *x: jnp.stack(x), *blocks)}
+
+
+_IDENT = None
+
+
+def apply_rwkv_train(params, cfg: ArchConfig, x, impl="xla", remat="block",
+                     unroll=False, act_fn=None):
+    """x: (B, S, d) embedded inputs → final hidden states."""
+    if act_fn is None:
+        act_fn = lambda t: t  # noqa: E731
+    x = act_fn(layernorm(params["ln0"], x, cfg.norm_eps))
+
+    def block_fn(p, x):
+        h, _s, _sh = time_mix(p["time"], layernorm(p["ln1"], x, cfg.norm_eps),
+                              cfg, impl=impl, act_fn=act_fn if act_fn is not
+                              _IDENT else None, unroll=unroll)
+        x = act_fn(x + h)
+        h, _sh2 = channel_mix(p["chan"],
+                              layernorm(p["ln2"], x, cfg.norm_eps), cfg,
+                              act_fn=act_fn)
+        return act_fn(x + h)
+
+    def body(x, p):
+        fn = block_fn
+        if remat in ("block", "full"):
+            fn = jax.checkpoint(fn)
+        return fn(p, x), None
+
+    x, _ = layer_scan(body, x, params["blocks"], unroll=unroll)
+    return x
+
+
+def init_rwkv_caches(cfg: ArchConfig, batch: int):
+    one = init_rwkv_state(cfg, batch)
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (cfg.n_layers,) + t.shape), one)
+
+
+def apply_rwkv_prefill(params, cfg: ArchConfig, x, impl="xla", unroll=False):
+    """Forward + materialize per-layer RWKVState stacks."""
+    x = layernorm(params["ln0"], x, cfg.norm_eps)
+
+    def body(x, p):
+        h_t_in = layernorm(p["ln1"], x, cfg.norm_eps)
+        h, s_fin, sh_t = time_mix(p["time"], h_t_in, cfg, impl=impl)
+        x = x + h
+        h_c_in = layernorm(p["ln2"], x, cfg.norm_eps)
+        h, sh_c = channel_mix(p["chan"], h_c_in, cfg)
+        # shift states are the *normalized* sublayer inputs' last tokens
+        st = RWKVState(wkv=s_fin, shift_t=h_t_in[:, -1], shift_c=h_c_in[:, -1])
+        return x + h, st
+
+    x, states = layer_scan(body, x, params["blocks"], unroll=unroll)
+    return x, states
+
+
+def apply_rwkv_decode(params, cfg: ArchConfig, x, states, impl="xla",
+                      unroll=False):
+    """x: (B, 1, d) embedded token → (hidden, new states)."""
+    x = layernorm(params["ln0"], x, cfg.norm_eps)
+
+    def body(x, inp):
+        p, st = inp
+        h_t_in = layernorm(p["ln1"], x, cfg.norm_eps)
+        h, s_fin, sh_t = time_mix(p["time"], h_t_in, cfg, state=st, impl=impl)
+        x = x + h
+        h_c_in = layernorm(p["ln2"], x, cfg.norm_eps)
+        h, sh_c = channel_mix(p["chan"], h_c_in, cfg, state=st)
+        new_st = RWKVState(wkv=s_fin, shift_t=sh_t, shift_c=sh_c)
+        return x + h, new_st
+
+    x, new_states = layer_scan(body, x, (params["blocks"], states),
+                               unroll=unroll)
+    return x, new_states
+
+
+def wkv6_chunked(r, k, v, w, u, s0=None, chunk: int = 128,
+                 constrain=None, unroll=False):
+    """Chunked-remat WKV: scan over chunks with a checkpointed body so the
+    backward saves only chunk-boundary states (O(S/chunk · D²)) instead of
+    per-step residuals (O(S · D²)) — mandatory for trainable long contexts.
+    """
+    B, H, S, D = r.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                    constant_values=1.0)
+    nc = r.shape[2] // c
+
+    def to_chunks(t):
+        return t.reshape(B, H, nc, c, D).transpose(2, 0, 1, 3, 4)
+
+    pin = constrain if constrain is not None else (lambda t: t)
+
+    @jax.checkpoint
+    def body(s, xs):
+        rc, kc, vc, wc = (pin(t) for t in xs)
+        y, s2 = kref.wkv6(rc, kc, vc, wc, u, s0=pin(s))
+        return pin(s2), y
+
+    s_init = jnp.zeros((B, H, D, D), jnp.float32) if s0 is None else \
+        s0.astype(jnp.float32)
+    s_fin, ys = jax.lax.scan(
+        body, pin(s_init), (to_chunks(r), to_chunks(k), to_chunks(v),
+                            to_chunks(w)), unroll=nc if unroll else 1)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, nc * c, D)[:, :, :S]
+    return y.astype(r.dtype), s_fin

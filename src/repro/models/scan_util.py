@@ -1,0 +1,28 @@
+"""layer_scan: lax.scan with an unroll switch.
+
+The dry-run unrolls layer stacks (scan → straight-line HLO) because XLA's
+HloCostAnalysis counts a while-loop body ONCE regardless of trip count —
+unrolled HLO makes cost_analysis()/collective-byte parsing exact.  Runtime
+keeps the rolled scan (small HLO, same semantics).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def layer_scan(body, init, xs, *, unroll: bool = False):
+    """Semantics of jax.lax.scan(body, init, xs) with optional full unroll."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    length = jax.tree.leaves(xs)[0].shape[0] if xs is not None else 0
+    carry = init
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ts: jax.numpy.stack(ts), *ys)
+    else:
+        ys = None
+    return carry, ys

@@ -1,0 +1,383 @@
+"""Decoder-only transformer assembly for all LM-family archs.
+
+A stack is described by a **layer plan**: ``prefix + superblock × n + suffix``
+where each element is a block *kind*.  Homogeneous superblocks are scanned
+(jax.lax.scan over stacked params) to bound HLO size at 48–61 layers; the
+prefix/suffix are unrolled.  Plans:
+
+  dense (internlm2/llama3.2/qwen3/gemma):  ([], [attn] ×L, [])
+  deepseek-v3:    ([mla_dense]×3, [mla_moe] ×58, [])
+  llama4:         ([], [attn_dense, attn_moe] ×24, [])
+  llama3.2-vision:([], [attn×4, cross] ×8, [])
+  recurrentgemma: ([], [rec, rec, local] ×8, [rec, rec])
+
+Block kinds couple a mixer (self-attn / MLA / gated cross-attn / RG-LRU)
+with an FFN (dense MLP or MoE).  Every kind exposes init / train apply /
+decode apply / cache init with a uniform signature so the scan machinery is
+kind-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as A
+from . import moe as M
+from . import rglru as R
+from .layers import init_mlp, init_rmsnorm, mlp, rmsnorm
+from .scan_util import layer_scan
+
+
+# ----------------------------------------------------------------- layer plan
+def layer_plan(cfg: ArchConfig) -> Tuple[List[str], List[str], int, List[str]]:
+    L = cfg.n_layers
+    if cfg.family == "hybrid":
+        period = cfg.hybrid.pattern_period
+        block = ["rec"] * (period - 1) + ["local"]
+        n = L // period
+        rest = ["rec"] * (L - n * period)
+        return [], block, n, rest
+    if cfg.family == "vlm":
+        k = cfg.cross.every_k
+        block = ["attn"] * (k - 1) + ["cross"]
+        assert L % k == 0, (L, k)
+        return [], block, L // k, []
+    if cfg.moe is not None:
+        mixer = "mla" if cfg.mla is not None else "attn"
+        mo = cfg.moe
+        if mo.moe_every_k > 1:
+            assert L % mo.moe_every_k == 0
+            block = [f"{mixer}_dense"] * (mo.moe_every_k - 1) + \
+                [f"{mixer}_moe"]
+            return [], block, L // mo.moe_every_k, []
+        prefix = [f"{mixer}_dense"] * mo.first_k_dense
+        return prefix, [f"{mixer}_moe"], L - mo.first_k_dense, []
+    return [], ["attn"], L, []
+
+
+def _mixer_of(kind: str) -> str:
+    return "mla" if kind.startswith("mla") else (
+        "cross" if kind == "cross" else (
+            "rec" if kind == "rec" else "attn"))
+
+
+def _ffn_of(kind: str) -> str:
+    return "moe" if kind.endswith("_moe") else "dense"
+
+
+def _ffn_width(cfg: ArchConfig, kind: str) -> int:
+    if cfg.moe is not None and _ffn_of(kind) == "dense":
+        return cfg.moe.d_ff_dense or cfg.d_ff
+    return cfg.d_ff
+
+
+# --------------------------------------------------------------------- blocks
+def init_block(key, cfg: ArchConfig, kind: str):
+    d, dt = cfg.d_model, cfg.dtype_
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"ln1": init_rmsnorm(d), "ln2": init_rmsnorm(d)}
+    mixer = _mixer_of(kind)
+    if mixer == "mla":
+        p["attn"] = A.init_mla(k1, cfg)
+    elif mixer == "rec":
+        p["temporal"] = R.init_rglru(k1, cfg)
+    elif mixer == "cross":
+        p["attn"] = A.init_attention(k1, cfg, cross=True)
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+        p["gate_ffn"] = jnp.zeros((), jnp.float32)
+    else:
+        p["attn"] = A.init_attention(k1, cfg)
+    if _ffn_of(kind) == "moe":
+        p["ffn"] = M.init_moe(k2, cfg)
+    else:
+        p["ffn"] = init_mlp(k2, d, _ffn_width(cfg, kind), dt)
+    return p
+
+
+def _apply_ffn(params, cfg, kind, h, ctx):
+    """Returns (ffn_out, aux_loss)."""
+    if _ffn_of(kind) == "moe":
+        moe_fn = ctx.get("moe_fn")
+        if moe_fn is not None:        # distributed EP path (shard_map)
+            return moe_fn(params["ffn"], h, cfg)
+        return M.moe_block_local(params["ffn"], h, cfg)
+    return mlp(params["ffn"], h, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _sublayer_fence(ctx, t):
+    """LOCO fence at sublayer scope: pins the next norm's f32 convert BELOW
+    the TP activation all-reduce (XLA otherwise fuses the convert into the
+    reduction, promoting the wire payload to f32 — measured ~2× collective
+    bytes on dense/MoE train cells)."""
+    if ctx.get("sublayer_fence"):
+        return jax.lax.optimization_barrier(t)
+    return t
+
+
+def apply_block_train(params, cfg: ArchConfig, kind: str, x, ctx):
+    """x: (B, S, d) → (x', aux).  ctx: impl/context/positions/window."""
+    impl = ctx.get("impl", "chunked")
+    mixer = _mixer_of(kind)
+    h_in = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if mixer == "mla":
+        a_out, _ = A.mla_attention(params["attn"], cfg, h_in,
+                                   positions=ctx.get("positions"), impl=impl)
+        x = x + _sublayer_fence(ctx, a_out)
+    elif mixer == "rec":
+        t_out, _ = R.rglru_block(params["temporal"], h_in, cfg,
+                                 impl=ctx.get("rec_impl", "xla"))
+        x = x + _sublayer_fence(ctx, t_out)
+    elif mixer == "cross":
+        a_out, _ = A.attention(params["attn"], cfg, h_in,
+                               kv_x=ctx["context"], use_rope=False,
+                               impl=impl)
+        x = x + jnp.tanh(params["gate_attn"]).astype(x.dtype) * \
+            _sublayer_fence(ctx, a_out)
+    else:
+        window = cfg.hybrid.window if (cfg.hybrid is not None
+                                       and kind == "local") else None
+        a_out, _ = A.attention(params["attn"], cfg, h_in,
+                               positions=ctx.get("positions"),
+                               window=window, impl=impl)
+        x = x + _sublayer_fence(ctx, a_out)
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    f_out, aux = _apply_ffn(params, cfg, kind, h, ctx)
+    if mixer == "cross":
+        f_out = jnp.tanh(params["gate_ffn"]).astype(x.dtype) * f_out
+    return x + _sublayer_fence(ctx, f_out), aux
+
+
+# --------------------------------------------------------------------- caches
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, s_max: int,
+                     n_ctx: int = 0):
+    mixer = _mixer_of(kind)
+    hd = cfg.head_dim_
+    dt = cfg.dtype_
+    if mixer == "mla":
+        m = cfg.mla
+        return A.MLACache(
+            ckv=jnp.zeros((batch, s_max, m.kv_lora_rank), dt),
+            krope=jnp.zeros((batch, s_max, m.qk_rope_head_dim), dt))
+    if mixer == "rec":
+        return R.init_rec_state(cfg, batch)
+    if mixer == "cross":
+        return A.KVCache(
+            k=jnp.zeros((batch, cfg.n_kv_heads, n_ctx, hd), dt),
+            v=jnp.zeros((batch, cfg.n_kv_heads, n_ctx, hd), dt))
+    s = min(s_max, cfg.hybrid.window) if (cfg.hybrid is not None
+                                          and kind == "local") else s_max
+    return A.KVCache(k=jnp.zeros((batch, cfg.n_kv_heads, s, hd), dt),
+                     v=jnp.zeros((batch, cfg.n_kv_heads, s, hd), dt))
+
+
+def apply_block_decode(params, cfg: ArchConfig, kind: str, x, cache, pos,
+                       ctx):
+    """x: (B, 1, d), pos: (B,) → (x', cache')."""
+    impl = ctx.get("decode_impl", "naive")
+    mixer = _mixer_of(kind)
+    h_in = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if mixer == "mla":
+        a_out, cache = A.mla_decode(params["attn"], cfg, h_in, cache, pos,
+                                    impl=impl)
+        x = x + a_out
+    elif mixer == "rec":
+        t_out, cache = R.rglru_block_decode(params["temporal"], h_in, cache,
+                                            cfg)
+        x = x + t_out
+    elif mixer == "cross":
+        a_out, cache = A.attention_decode(params["attn"], cfg, h_in, cache,
+                                          pos, cross=True, use_rope=False,
+                                          impl=impl)
+        x = x + jnp.tanh(params["gate_attn"]).astype(x.dtype) * a_out
+    else:
+        window = cfg.hybrid.window if (cfg.hybrid is not None
+                                       and kind == "local") else None
+        a_out, cache = A.attention_decode(params["attn"], cfg, h_in, cache,
+                                          pos, window=window, impl=impl)
+        x = x + a_out
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    f_out, _aux = _apply_ffn(params, cfg, kind, h, ctx)
+    if mixer == "cross":
+        f_out = jnp.tanh(params["gate_ffn"]).astype(x.dtype) * f_out
+    return x + f_out, cache
+
+
+# ----------------------------------------------------------------- the stack
+class StackParams(NamedTuple):
+    prefix: list          # list of block param dicts
+    super: list           # list (per position) of stacked param dicts (n,…)
+    suffix: list
+
+
+def init_stack(key, cfg: ArchConfig):
+    prefix, block, n, suffix = layer_plan(cfg)
+    keys = iter(jax.random.split(key, len(prefix) + len(block) * max(n, 1)
+                                 + len(suffix) + 1))
+    pre = [init_block(next(keys), cfg, k) for k in prefix]
+    sup = []
+    for kind in block:
+        stacked = [init_block(next(keys), cfg, kind) for _ in range(n)]
+        sup.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stacked))
+    suf = [init_block(next(keys), cfg, k) for k in suffix]
+    return StackParams(pre, sup, suf)
+
+
+def apply_stack_train(params: StackParams, cfg: ArchConfig, x, ctx,
+                      remat: str = "block"):
+    prefix, block, n, suffix = layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    act_fn = ctx.get("act_fn") or (lambda x: x)
+
+    def block_fn(kind):
+        def fn(p, x):
+            x2, aux = apply_block_train(p, cfg, kind, x, ctx)
+            return act_fn(x2), aux
+        if remat in ("block", "full"):
+            fn = jax.checkpoint(fn)
+        return fn
+
+    for kind, p in zip(prefix, params.prefix):
+        x, aux = block_fn(kind)(p, x)
+        aux_total = aux_total + aux
+
+    if n > 0:
+        def scan_body(carry, layer_params):
+            x, aux_total = carry
+            for kind, p in zip(block, layer_params):
+                x, aux = block_fn(kind)(p, x)
+                aux_total = aux_total + aux
+            return (x, aux_total), None
+
+        (x, aux_total), _ = layer_scan(
+            scan_body, (x, aux_total), tuple(params.super),
+            unroll=ctx.get("unroll", False))
+
+    for kind, p in zip(suffix, params.suffix):
+        x, aux = block_fn(kind)(p, x)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+def init_stack_cache(cfg: ArchConfig, batch: int, s_max: int,
+                     n_ctx: int = 0):
+    prefix, block, n, suffix = layer_plan(cfg)
+    pre = [init_block_cache(cfg, k, batch, s_max, n_ctx) for k in prefix]
+    sup = []
+    for kind in block:
+        one = init_block_cache(cfg, kind, batch, s_max, n_ctx)
+        sup.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), one))
+    suf = [init_block_cache(cfg, k, batch, s_max, n_ctx) for k in suffix]
+    return StackParams(pre, sup, suf)  # reuse container shape
+
+
+def apply_stack_decode(params: StackParams, cfg: ArchConfig, x, caches,
+                       pos, ctx):
+    prefix, block, n, suffix = layer_plan(cfg)
+    new_pre = []
+    for kind, p, c in zip(prefix, params.prefix, caches.prefix):
+        x, c2 = apply_block_decode(p, cfg, kind, x, c, pos, ctx)
+        new_pre.append(c2)
+
+    new_sup = caches.super
+    if n > 0:
+        def scan_body(x, inp):
+            layer_params, layer_caches = inp
+            new_caches = []
+            for kind, p, c in zip(block, layer_params, layer_caches):
+                x, c2 = apply_block_decode(p, cfg, kind, x, c, pos, ctx)
+                new_caches.append(c2)
+            return x, tuple(new_caches)
+
+        x, new_sup = layer_scan(
+            scan_body, x, (tuple(params.super), tuple(caches.super)),
+            unroll=ctx.get("unroll", False))
+        new_sup = list(new_sup)
+
+    new_suf = []
+    for kind, p, c in zip(suffix, params.suffix, caches.suffix):
+        x, c2 = apply_block_decode(p, cfg, kind, x, c, pos, ctx)
+        new_suf.append(c2)
+    return x, StackParams(new_pre, new_sup, new_suf)
+
+
+def fill_stack_cache(params: StackParams, cfg: ArchConfig, x, ctx,
+                     s_max: int):
+    """Prefill: run the stack over the prompt, returning final hidden states
+    AND caches padded to s_max (ragged fill handled by per-seq lengths)."""
+    prefix, block, n, suffix = layer_plan(cfg)
+    B, S, _ = x.shape
+    n_ctx = ctx["context"].shape[1] if ctx.get("context") is not None else 0
+
+    def run_block(kind, p, x):
+        x2, _aux = apply_block_train(p, cfg, kind, x, ctx)
+        cache = _block_prefill_cache(p, cfg, kind, x, ctx, s_max, n_ctx)
+        return x2, cache
+
+    pre_caches, suf_caches, sup_caches = [], [], []
+    for kind, p in zip(prefix, params.prefix):
+        x, c = run_block(kind, p, x)
+        pre_caches.append(c)
+    if n > 0:
+        def scan_body(x, layer_params):
+            cs = []
+            for kind, p in zip(block, layer_params):
+                x, c = run_block(kind, p, x)
+                cs.append(c)
+            return x, tuple(cs)
+        x, sup_caches = layer_scan(scan_body, x, tuple(params.super),
+                                   unroll=ctx.get("unroll", False))
+        sup_caches = list(sup_caches)
+    for kind, p in zip(suffix, params.suffix):
+        x, c = run_block(kind, p, x)
+        suf_caches.append(c)
+    return x, StackParams(pre_caches, sup_caches, suf_caches)
+
+
+def _block_prefill_cache(p, cfg, kind, x, ctx, s_max, n_ctx):
+    """Materialize this block's decode cache from the prompt by running only
+    the KV projections (the attention itself already ran in the forward)."""
+    from .layers import apply_rope
+    mixer = _mixer_of(kind)
+    h_in = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    B, S, _ = x.shape
+    pos = ctx.get("positions")
+    pos = pos if pos is not None else jnp.arange(S)[None, :]
+    if mixer == "mla":
+        m = cfg.mla
+        kv_a = jnp.einsum("bsd,dr->bsr", h_in, p["attn"]["wkv_a"])
+        ckv = rmsnorm(p["attn"]["kv_a_norm"], kv_a[..., :m.kv_lora_rank],
+                      cfg.norm_eps)
+        krope = apply_rope(kv_a[:, :, None, m.kv_lora_rank:], pos,
+                           cfg.rope_theta)[:, :, 0]
+        pad = s_max - S
+        return A.MLACache(
+            ckv=jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))),
+            krope=jnp.pad(krope, ((0, 0), (0, pad), (0, 0))))
+    if mixer == "rec":
+        # the final recurrent state requires the scan; rerun (linear cost)
+        _out, st = R.rglru_block(p["temporal"], h_in, cfg,
+                                 impl=ctx.get("rec_impl", "xla"))
+        return st
+    if mixer == "cross":
+        _q, k, v = A._project_qkv(p["attn"], cfg, ctx["context"],
+                                  ctx["context"])
+        return A.KVCache(k=k.transpose(0, 2, 1, 3), v=v.transpose(0, 2, 1, 3))
+    _q, k, v = A._project_qkv(p["attn"], cfg, h_in, h_in)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    kh, vh = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    window = cfg.hybrid.window if (cfg.hybrid is not None
+                                   and kind == "local") else None
+    s_cache = min(s_max, window) if window else s_max
+    if S >= s_cache:
+        # ring-buffer layout: position p lives at slot p % s_cache
+        kh = jnp.roll(kh[:, :, -s_cache:], S % s_cache, axis=2)
+        vh = jnp.roll(vh[:, :, -s_cache:], S % s_cache, axis=2)
+        return A.KVCache(k=kh, v=vh)
+    pad = s_cache - S
+    return A.KVCache(
+        k=jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0))),
+        v=jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0))))

@@ -1,0 +1,1 @@
+from .optimizer import make_optimizer, opt_state_pspecs

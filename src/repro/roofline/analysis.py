@@ -1,0 +1,396 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step on TPU v5e:
+
+  compute    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16)
+  memory     = HLO_bytes_per_device / 819 GB/s HBM
+  collective = wire_bytes_per_device / 50 GB/s ICI link
+
+HLO_FLOPs and HLO_bytes come from ``compiled.cost_analysis()`` (the
+post-SPMD per-device program).  collective bytes are NOT in cost_analysis:
+we parse the compiled HLO text and apply a ring-cost model per collective
+op (documented in _wire_bytes).  MODEL_FLOPS = 6·N·tokens (train) or
+2·N·tokens (inference), N_active for MoE — the useful-compute yardstick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~the prompt's constant)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\((?P<rtuple>[^)]*)\)|(?P<rdtype>\w+)\[(?P<rshape>[\d,]*)\]"
+    r"[^ ]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_OPERAND_RE = re.compile(r"\(\s*(\w+)\[([\d,]*)\]")
+_TUPLE_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def _wire_bytes(op: str, result_b: int, operand_b: int, g: int) -> float:
+    """Ring-model bytes through each device's links.
+
+    all-reduce:        2·(g-1)/g · payload      (reduce-scatter+all-gather)
+    all-gather:        (g-1)/g   · result       (each shard traverses ring)
+    reduce-scatter:    (g-1)/g   · operand
+    all-to-all:        (g-1)/g   · payload
+    collective-permute: payload  (one hop)
+    """
+    if g <= 1:
+        return 0.0
+    f = (g - 1) / g
+    if op == "all-reduce":
+        return 2.0 * f * operand_b
+    if op == "all-gather":
+        return f * result_b
+    if op == "reduce-scatter":
+        return f * operand_b
+    if op == "all-to-all":
+        return f * max(result_b, operand_b)
+    return float(operand_b)      # collective-permute
+
+
+def _while_body_collectives(hlo_text: str) -> int:
+    """Count collective ops inside while-loop bodies: the cost parser sees
+    them ONCE but they execute trip-count times — a nonzero count means the
+    collective term is a lower bound (dryrun prints a warning; pass B
+    unrolls the known loops so this is normally 0)."""
+    bodies = set(re.findall(r"body=%?([\w\.\-]+)", hlo_text))
+    n = 0
+    current = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+        if m and "{" in line and "->" in line:
+            current = m.group(1)
+            continue
+        if current in bodies and re.search(
+                r"\b(all-gather|all-reduce|reduce-scatter|all-to-all"
+                r"|collective-permute)\b", line):
+            n += 1
+    return n
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> Dict:
+    """Sum per-device wire bytes over every collective in the HLO."""
+    per_op: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    total = 0.0
+    f32_reduce = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # result bytes: scalar result or sum over the tuple's components
+        rb = 0
+        if m.group("rdtype"):
+            rb = _shape_bytes(m.group("rdtype"), m.group("rshape"))
+        elif m.group("rtuple"):
+            for dt, dims in _TUPLE_SHAPE_RE.findall(m.group("rtuple")):
+                if dt in _DTYPE_BYTES:
+                    rb += _shape_bytes(dt, dims)
+        ob = 0
+        tail = line[m.end():]
+        for dt, dims in _TUPLE_SHAPE_RE.findall(tail.split(")")[0] + ")"):
+            if dt in _DTYPE_BYTES:
+                ob += _shape_bytes(dt, dims)
+        g = _group_size(line, n_devices)
+        b = _wire_bytes(op, rb, ob or rb, g)
+        per_op[op] = per_op.get(op, 0.0) + b
+        count[op] = count.get(op, 0) + 1
+        total += b
+        # XLA:CPU's AllReducePromotion pass widens bf16 reductions to f32
+        # (the CPU has no native bf16 reduce); TPU reduces bf16 natively.
+        # Track f32 reduction payloads so the TPU-native wire count can
+        # halve them (documented in EXPERIMENTS.md §Roofline).
+        if op in ("all-reduce", "reduce-scatter") and (
+                (m.group("rdtype") == "f32") or
+                (m.group("rtuple") and "f32[" in m.group("rtuple"))):
+            f32_reduce += b
+    return {"total_bytes": total, "per_op_bytes": per_op,
+            "per_op_count": count,
+            "f32_reduce_bytes": f32_reduce,
+            "total_bytes_tpu_native": total - 0.5 * f32_reduce,
+            "in_loop_collective_ops": _while_body_collectives(hlo_text)}
+
+
+def analytic_hbm_bytes(cfg, shape, n_devices: int,
+                       tp: int = 16, optimizer: str = "adamw") -> float:
+    """Analytic per-device HBM traffic (the TPU-fused estimate).
+
+    The CPU-backend ``bytes accessed`` counts every HLO op unfused (the TPU
+    compiler fuses elementwise chains into dots), overestimating real HBM
+    traffic ~10-20×.  This model counts only traffic that must cross HBM on
+    a fused TPU compile:
+
+    train:   weights 6 B/param·TP-shard (bf16 read fwd+remat+bwd)
+             + grads 8 B (f32 write+read) + update (params rw + moments)
+             + activations: 20 touches × L·B_l·S·d·2 B (residual stream,
+               norms, proj in/outs, remat re-reads — MaxText-calibrated)
+             + logits 10 B × B_l·S·V_tp
+    prefill: weights 2 B, activations 6 touches, + KV-cache write
+    decode:  weights 2 B (the per-token floor) + full KV-cache read
+             + activations negligible
+    MoE: only ACTIVE expert weights stream per token-batch; resident
+    experts held in HBM count toward capacity, not traffic.
+    """
+    dp = max(n_devices // tp, 1)
+    B, S, d = shape.global_batch, shape.seq_len, cfg.d_model
+    B_l = max(B // dp, 1)
+    L = cfg.n_layers + cfg.n_enc_layers
+    n_active = cfg.param_count(active_only=True)
+    n_tp = n_active / tp
+    if shape.kind == "train":
+        w = n_tp * (6 + 8 + 4)                    # reads + grads + update
+        w += (n_active / n_devices) * (16 if optimizer == "adamw" else 0.5)
+        act = 20.0 * L * B_l * S * d * 2
+        logits = 10.0 * B_l * S * (cfg.vocab / tp)
+        return w + act + logits
+    if shape.kind == "prefill":
+        w = n_tp * 2
+        act = 6.0 * L * B_l * S * d * 2
+        cache = _cache_bytes(cfg, shape, n_devices)
+        return w + act + cache
+    # decode: one token
+    w = n_tp * 2
+    cache = _cache_bytes(cfg, shape, n_devices)
+    act = 6.0 * L * B_l * 1 * d * 2
+    return w + cache + act
+
+
+def _cache_bytes(cfg, shape, n_devices: int) -> float:
+    """Per-device KV-cache bytes touched once (read for decode / written
+    for prefill)."""
+    B, S = shape.global_batch, shape.seq_len
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        per_seq = L * cfg.n_heads * cfg.head_dim_ ** 2 * 4
+    elif cfg.mla is not None:
+        per_seq = L * S * (cfg.mla.kv_lora_rank
+                           + cfg.mla.qk_rope_head_dim) * 2
+    elif cfg.hybrid is not None:
+        n_attn = L // cfg.hybrid.pattern_period
+        w = cfg.hybrid.lru_width or cfg.d_model
+        per_seq = (n_attn * min(S, cfg.hybrid.window) * 2
+                   * cfg.n_kv_heads * cfg.head_dim_ * 2
+                   + (L - n_attn) * w * 4)
+    else:
+        per_seq = L * S * 2 * cfg.n_kv_heads * cfg.head_dim_ * 2
+        if cfg.family == "audio":
+            per_seq += L * cfg.cross.n_context_tokens * 2                 * cfg.n_kv_heads * cfg.head_dim_ * 2
+    return B * per_seq / n_devices
+
+
+def attention_score_hbm_bytes(cfg, shape, n_devices: int) -> float:
+    """Estimated HBM traffic of attention-score intermediates in the
+    XLA-chunked fallback — traffic the Pallas flash kernel keeps VMEM-
+    resident on TPU.  Used for the kernel-adjusted memory term.
+
+    Per score element (f32): fwd writes+reads s and p ≈ 16 B; backward
+    under block-remat recomputes the forward (+16 B) and touches p/dp/ds
+    (≈ 24 B) → 56 B train, 16 B prefill, ~12 B decode (naive path).
+    Causal masking halves the live score volume.
+    """
+    if getattr(cfg, "family", "") == "ssm":
+        return 0.0  # attention-free
+    L = cfg.n_layers + cfg.n_enc_layers
+    B, S = shape.global_batch, shape.seq_len
+    hq = cfg.n_heads
+    if shape.kind == "train":
+        touches, sq, sk, causal = 56.0, S, S, 0.5
+    elif shape.kind == "prefill":
+        touches, sq, sk, causal = 16.0, S, S, 0.5
+    else:
+        touches, sq, sk, causal = 12.0, 1, S, 1.0
+    if cfg.hybrid is not None:  # only 1-in-3 layers attend, windowed
+        L = L // cfg.hybrid.pattern_period
+        sk = min(sk, cfg.hybrid.window)
+        causal = 1.0
+    elems = float(L) * B * hq * sq * sk * causal
+    return elems * touches / n_devices
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops_total: float
+    peak_mem_per_device: float
+    collectives: Dict
+    score_hbm_bytes: float = 0.0   # VMEM-resident on TPU (kernel adj.)
+    analytic_bytes_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        """Memory term from the analytic TPU-fused traffic model (the raw
+        CPU-backend cost_analysis number is kept as memory_s_xla)."""
+        return self.analytic_bytes_per_device / HBM_BW
+
+    @property
+    def memory_s_xla(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × devices) — remat/dispatch waste."""
+        hlo_total = self.flops_per_device * self.n_devices
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute-time / bound-time = fraction of peak the step
+        achieves under the three-term model (the §Perf score)."""
+        useful_s = (self.model_flops_total / self.n_devices) / PEAK_FLOPS
+        return useful_s / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 memory_s_xla=self.memory_s_xla,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 useful_flops_fraction=self.useful_flops_fraction,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (inference), N_active for MoE."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token each
+
+
+def cell_costs(compiled, n_devices: int) -> Dict:
+    """Extract (flops, bytes, collectives) from one compiled artifact."""
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text(), n_devices)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def extrapolate_costs(c1: Dict, c2: Dict, n1: int, n2: int,
+                      n_full: int) -> Dict:
+    """Layer-affine extrapolation: cost(n) = base + n·per_layer.
+
+    Compiled at two superblock counts, the per-superblock delta is exact
+    for homogeneous scanned stacks; the extrapolated full-depth cost avoids
+    compiling an L-layer unrolled module on one CPU core."""
+    span = max(n2 - n1, 1)
+
+    def lin(a, b):
+        per = (b - a) / span
+        return a + per * (n_full - n1)
+
+    per_op = {}
+    ops = set(c1["coll"]["per_op_bytes"]) | set(c2["coll"]["per_op_bytes"])
+    for op in ops:
+        per_op[op] = max(lin(c1["coll"]["per_op_bytes"].get(op, 0.0),
+                             c2["coll"]["per_op_bytes"].get(op, 0.0)), 0.0)
+    counts = {}
+    for op in ops:
+        counts[op] = int(max(lin(c1["coll"]["per_op_count"].get(op, 0),
+                                 c2["coll"]["per_op_count"].get(op, 0)), 0))
+    f32r = max(lin(c1["coll"].get("f32_reduce_bytes", 0.0),
+                   c2["coll"].get("f32_reduce_bytes", 0.0)), 0.0)
+    total = sum(per_op.values())
+    return {"flops": max(lin(c1["flops"], c2["flops"]), 0.0),
+            "bytes": max(lin(c1["bytes"], c2["bytes"]), 0.0),
+            "coll": {"total_bytes": total,
+                     "per_op_bytes": per_op, "per_op_count": counts,
+                     "f32_reduce_bytes": f32r,
+                     "total_bytes_tpu_native": total - 0.5 * f32r,
+                     "in_loop_collective_ops": max(
+                         c1["coll"].get("in_loop_collective_ops", 0),
+                         c2["coll"].get("in_loop_collective_ops", 0)),
+                     "extrapolated": f"n{n1},n{n2}->n{n_full}"}}
+
+
+def analyze_values(costs: Dict, *, arch: str, shape, mesh_name: str,
+                   n_devices: int, cfg, peak_mem: float = 0.0) -> Roofline:
+    wire = float(costs["coll"].get("total_bytes_tpu_native",
+                                   costs["coll"]["total_bytes"]))
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=costs["flops"],
+        bytes_per_device=costs["bytes"],
+        wire_bytes_per_device=wire,
+        model_flops_total=model_flops(cfg, shape),
+        peak_mem_per_device=float(peak_mem),
+        collectives=costs["coll"],
+        score_hbm_bytes=attention_score_hbm_bytes(cfg, shape, n_devices),
+        analytic_bytes_per_device=analytic_hbm_bytes(cfg, shape, n_devices))
+
+
+def analyze(compiled, *, arch: str, shape, mesh_name: str, n_devices: int,
+            cfg) -> Roofline:
+    ma = compiled.memory_analysis()
+    peak = (ma.temp_size_in_bytes + ma.argument_size_in_bytes +
+            ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    return analyze_values(cell_costs(compiled, n_devices), arch=arch,
+                          shape=shape, mesh_name=mesh_name,
+                          n_devices=n_devices, cfg=cfg, peak_mem=peak)
+
+
+def save_report(roofline: Roofline, path: str):
+    with open(path, "w") as f:
+        json.dump(roofline.to_dict(), f, indent=1)

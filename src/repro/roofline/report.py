@@ -1,0 +1,102 @@
+"""Aggregate reports/dryrun/*.json into the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(report_dir="reports/dryrun", variant="baseline",
+         overlay_dir=None, overlay_variant="opt"):
+    """Load per-cell reports; ``overlay_dir`` (e.g. reports/final) replaces
+    matching cells with the optimized-framework re-measurements."""
+    cells = {}
+    for f in glob.glob(os.path.join(report_dir, "*.json")):
+        with open(f) as fh:
+            d = json.load(fh)
+        if d.get("variant", "baseline") != variant and not d.get("skipped"):
+            continue
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    if overlay_dir:
+        for f in glob.glob(os.path.join(overlay_dir, "*.json")):
+            with open(f) as fh:
+                d = json.load(fh)
+            if d.get("skipped") or                     d.get("variant", "") != overlay_variant:
+                continue
+            base = cells.get((d["arch"], d["shape"], d["mesh"]))
+            if base and "roofline_fraction" in base:
+                d["baseline_fraction"] = base["roofline_fraction"]
+                d["baseline_bound_ms"] = 1e3 * max(
+                    base["compute_s"], base["memory_s"],
+                    base["collective_s"])
+            cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}G"
+
+
+def roofline_table(cells) -> str:
+    rows = ["| arch | shape | c (ms) | m (ms) | n (ms) | dominant | "
+            "useful/HLO | frac (baseline→) | peak mem/dev | fits 16G |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    archs = sorted({a for (a, _s, _m) in cells})
+    for a in archs:
+        for sh in SHAPE_ORDER:
+            d = cells.get((a, sh, "single"))
+            if d is None:
+                continue
+            if d.get("skipped"):
+                rows.append(f"| {a} | {sh} | — | — | — | skipped | — | — "
+                            f"| — | — |")
+                continue
+            if "compute_s" not in d:
+                continue
+            frac = f"**{d['roofline_fraction']:.3f}**"
+            if "baseline_fraction" in d:
+                frac = f"{d['baseline_fraction']:.3f} → " + frac
+            rows.append(
+                f"| {a} | {sh} | {d['compute_s'] * 1e3:.1f} "
+                f"| {d['memory_s'] * 1e3:.1f} "
+                f"| {d['collective_s'] * 1e3:.1f} | {d['dominant']} "
+                f"| {d['useful_flops_fraction']:.2f} "
+                f"| {frac} "
+                f"| {fmt_bytes(d.get('peak_bytes_per_device', 0))} "
+                f"| {'✓' if d.get('fits_16g_hbm') else '✗'} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cells) -> str:
+    rows = ["| arch | shape | mesh | compile (s) | args/dev | temp/dev | "
+            "collective mix |",
+            "|---|---|---|---|---|---|---|"]
+    for (a, sh, m) in sorted(cells):
+        d = cells[(a, sh, m)]
+        if d.get("skipped"):
+            rows.append(f"| {a} | {sh} | {m} | — | — | — | "
+                        f"skip: {d['skipped'][:45]} |")
+            continue
+        ms = d.get("mem_stats", {})
+        coll = d.get("collectives", {}).get("per_op_count", {})
+        mix = ",".join(f"{k.split('-')[-1][:6]}:{v}"
+                       for k, v in sorted(coll.items())) or "n/a"
+        rows.append(
+            f"| {a} | {sh} | {m} | {d.get('rolled_compile_s', 0):.0f} "
+            f"| {fmt_bytes(ms.get('argument_size', 0))} "
+            f"| {fmt_bytes(ms.get('temp_size', 0))} | {mix} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    overlay = sys.argv[2] if len(sys.argv) > 2 else None
+    cells = load(sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun",
+                 overlay_dir=overlay)
+    print("## Roofline (single pod)\n")
+    print(roofline_table(cells))
+    print("\n## Dry-run\n")
+    print(dryrun_table(cells))

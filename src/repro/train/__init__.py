@@ -1,0 +1,2 @@
+from .serve_step import make_serve_steps
+from .train_step import build_for_mesh, make_train_step

@@ -1,0 +1,72 @@
+"""Serving steps: prefill and decode, pjit'd with cache shardings.
+
+decode shapes (decode_32k / long_500k) lower ``decode_step`` — one new
+token against a seq_len KV cache — NOT train_step.  The cache is sharded
+per distributed/sharding.cache_pspecs: batch over DP, the long axis (KV
+sequence / heads / channels) over 'model'; the cross-shard softmax
+reduction this induces is GSPMD's partitioned-softmax — the flash-decode
+combine (kernels/decode_attention.py) is the hand-tuned TPU runtime
+equivalent.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig, TrainConfig
+from ..distributed import sharding as SH
+from ..models.model import build_model
+
+
+def make_serve_steps(cfg: ArchConfig, mesh, impl: str = "chunked",
+                     decode_impl: str = "naive", unroll: bool = False,
+                     fsdp: bool | None = None):
+    """Returns (model, prefill_step, decode_step, make_shardings).
+    fsdp: shard big params over the data axes too (default: auto for
+    >100B-param archs — they cannot fit replicated-over-data)."""
+    if fsdp is None:
+        fsdp = cfg.param_count() > 100e9
+    moe_fn = None
+    if mesh is not None and cfg.moe is not None and \
+            cfg.moe.router_impl == "a2a":
+        from ..distributed.moe_ep import make_moe_fn
+        moe_fn = make_moe_fn(cfg, mesh)
+    model = build_model(cfg, impl=impl, decode_impl=decode_impl,
+                        unroll=unroll, moe_fn=moe_fn)
+
+    def prefill_step(params, batch, s_max: int):
+        return model.prefill(params, batch, s_max)
+
+    def decode_step(params, token, cache, pos, batch=None):
+        logits, cache = model.decode_step(params, token, cache, pos, batch)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token[:, None], logits, cache, pos + 1
+
+    def shardings(params_shape, cache_shape, token_shape):
+        ns = lambda t: jax.tree.map(  # noqa: E731
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        pspecs = ns(SH.param_pspecs(params_shape, mesh, fsdp=fsdp))
+        cspecs = ns(SH.cache_pspecs(cache_shape, mesh))
+        dp = SH.dp_axes(mesh)
+        B = token_shape.shape[0]
+        import numpy as np
+        dp_tot = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        tok_spec = NamedSharding(
+            mesh, P(dp if (dp and B % dp_tot == 0) else None, None))
+        pos_spec = NamedSharding(
+            mesh, P(dp if (dp and B % dp_tot == 0) else None))
+        return pspecs, cspecs, tok_spec, pos_spec
+
+    def jit_decode(params_shape, cache_shape, token_shape):
+        ps, cs, ts, xs = shardings(params_shape, cache_shape, token_shape)
+        return jax.jit(decode_step,
+                       in_shardings=(ps, ts, cs, xs),
+                       out_shardings=(ts, None, cs, xs),
+                       donate_argnums=(2,))
+
+    return model, prefill_step, decode_step, jit_decode

@@ -1,0 +1,19 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _seed():
+    np.random.seed(0)
+
+
+@pytest.fixture
+def P8():
+    return 8
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

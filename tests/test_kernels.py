@@ -1,0 +1,168 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle, swept
+over shapes and dtypes."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+def rand(shape, dtype, rng, scale=1.0):
+    x = rng.standard_normal(shape).astype(np.float32) * scale
+    return jnp.asarray(x, dtype)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+def close(a, b, dtype):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), **tol(dtype))
+
+
+# --------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Sq,Sk,D,causal,window",
+    [
+        (1, 4, 4, 128, 128, 64, True, None),      # MHA causal
+        (2, 8, 2, 256, 256, 64, True, None),      # GQA
+        (1, 4, 1, 128, 128, 128, True, None),     # MQA
+        (1, 2, 2, 128, 384, 64, True, None),      # chunked prefill offset
+        (1, 4, 4, 100, 100, 64, True, None),      # ragged → padding path
+        (1, 2, 2, 256, 256, 64, True, 64),        # sliding window
+        (1, 2, 2, 128, 128, 64, False, None),     # bidirectional (encoder)
+        (1, 2, 1, 64, 192, 256, True, None),      # gemma head_dim 256
+    ])
+def test_flash_attention_matches_oracle(B, Hq, Hkv, Sq, Sk, D, causal,
+                                        window, dtype):
+    rng = np.random.default_rng(0)
+    q = rand((B, Hq, Sq, D), dtype, rng)
+    k = rand((B, Hkv, Sk, D), dtype, rng)
+    v = rand((B, Hkv, Sk, D), dtype, rng)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    want = ref.mha(q, k, v, causal=causal, window=window)
+    close(out, want, dtype)
+
+
+def test_flash_attention_blocksize_invariance():
+    rng = np.random.default_rng(1)
+    q = rand((1, 2, 256, 64), jnp.float32, rng)
+    k = rand((1, 2, 256, 64), jnp.float32, rng)
+    v = rand((1, 2, 256, 64), jnp.float32, rng)
+    o1 = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    o2 = ops.flash_attention(q, k, v, block_q=128, block_k=256)
+    close(o1, o2, jnp.float32)
+
+
+# --------------------------------------------------------------- decode attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,S,D",
+    [(2, 4, 4, 512, 64), (2, 8, 2, 512, 64), (1, 16, 1, 1024, 128),
+     (3, 8, 4, 300, 64)])
+def test_decode_attention_matches_oracle(B, Hq, Hkv, S, D, dtype):
+    rng = np.random.default_rng(2)
+    q = rand((B, Hq, D), dtype, rng)
+    kc = rand((B, Hkv, S, D), dtype, rng)
+    vc = rand((B, Hkv, S, D), dtype, rng)
+    lengths = jnp.asarray(rng.integers(1, S + 1, size=(B,)), jnp.int32)
+    out = ops.decode_attention(q, kc, vc, lengths, block_k=128)
+    want = ref.decode_attention(q, kc, vc, lengths)
+    close(out, want, dtype)
+
+
+def test_decode_attention_respects_lengths():
+    """Tokens past ``lengths`` must not affect the output at all."""
+    rng = np.random.default_rng(3)
+    B, H, S, D = 1, 2, 256, 64
+    q = rand((B, H, D), jnp.float32, rng)
+    kc = rand((B, H, S, D), jnp.float32, rng)
+    vc = rand((B, H, S, D), jnp.float32, rng)
+    lengths = jnp.asarray([100], jnp.int32)
+    out1 = ops.decode_attention(q, kc, vc, lengths, block_k=128)
+    kc2 = kc.at[:, :, 100:].set(999.0)
+    vc2 = vc.at[:, :, 100:].set(-999.0)
+    out2 = ops.decode_attention(q, kc2, vc2, lengths, block_k=128)
+    close(out1, out2, jnp.float32)
+
+
+# -------------------------------------------------------------------- RG-LRU
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,D", [(2, 256, 256), (1, 512, 512),
+                                   (2, 200, 256)])
+def test_rglru_matches_oracle(B, S, D, dtype):
+    rng = np.random.default_rng(4)
+    x = rand((B, S, D), dtype, rng)
+    log_a = -jnp.abs(rand((B, S, D), dtype, rng, scale=0.5)) - 0.01
+    y, h = ops.rglru(x, log_a, block_s=128, block_d=128)
+    y_ref, h_ref = ref.rglru(x, log_a)
+    close(y, y_ref, dtype)
+    close(h, h_ref, dtype)
+
+
+def test_rglru_carry_across_time_blocks():
+    """The recurrence must thread h across time-block boundaries exactly."""
+    rng = np.random.default_rng(5)
+    x = rand((1, 512, 128), jnp.float32, rng)
+    log_a = -jnp.abs(rand((1, 512, 128), jnp.float32, rng, scale=0.3)) - 0.01
+    y1, _ = ops.rglru(x, log_a, block_s=64, block_d=128)
+    y2, _ = ops.rglru(x, log_a, block_s=512, block_d=128)
+    close(y1, y2, jnp.float32)
+
+
+# --------------------------------------------------------------------- WKV6
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,D", [(1, 2, 128, 64), (2, 4, 256, 64),
+                                     (1, 2, 100, 128)])
+def test_wkv6_matches_oracle(B, H, S, D, dtype):
+    rng = np.random.default_rng(6)
+    r = rand((B, H, S, D), dtype, rng)
+    k = rand((B, H, S, D), dtype, rng, scale=0.5)
+    v = rand((B, H, S, D), dtype, rng)
+    w = jnp.asarray(
+        np.exp(-np.exp(rng.standard_normal((B, H, S, D)) * 0.5)), dtype)
+    u = rand((H, D), dtype, rng, scale=0.5)
+    y, s_fin = ops.wkv6(r, k, v, w, u, block_s=64)
+    y_ref, s_ref = ref.wkv6(r, k, v, w, u)
+    close(y, y_ref, dtype)
+    close(s_fin, s_ref, dtype)
+
+
+def test_wkv6_state_carry_across_blocks():
+    rng = np.random.default_rng(7)
+    B, H, S, D = 1, 1, 256, 64
+    r = rand((B, H, S, D), jnp.float32, rng)
+    k = rand((B, H, S, D), jnp.float32, rng, scale=0.5)
+    v = rand((B, H, S, D), jnp.float32, rng)
+    w = jnp.asarray(np.exp(-np.exp(rng.standard_normal((B, H, S, D)) * 0.5)),
+                    jnp.float32)
+    u = rand((H, D), jnp.float32, rng)
+    y1, s1 = ops.wkv6(r, k, v, w, u, block_s=32)
+    y2, s2 = ops.wkv6(r, k, v, w, u, block_s=256)
+    close(y1, y2, jnp.float32)
+    close(s1, s2, jnp.float32)
+
+
+# ---------------------------------------------------------------------- GMM
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,T,Din,Dout,BT", [(4, 512, 256, 256, 128),
+                                             (8, 1024, 512, 256, 128),
+                                             (2, 256, 128, 512, 64)])
+def test_gmm_matches_oracle(E, T, Din, Dout, BT, dtype):
+    rng = np.random.default_rng(8)
+    x = rand((T, Din), dtype, rng)
+    w = rand((E, Din, Dout), dtype, rng, scale=0.2)
+    block_expert = jnp.asarray(
+        np.sort(rng.integers(0, E, size=(T // BT,))), jnp.int32)
+    out = ops.gmm(x, w, block_expert, block_t=BT, block_n=128, block_k=128)
+    want = ref.gmm(x, w, block_expert, BT)
+    close(out, want, dtype)

@@ -1,0 +1,266 @@
+"""KVStore correctness: paper §6 semantics + Appendix C linearizability,
+checked against a sequential oracle over the induced linearization order
+(GETs at their pre-round remote read; modifications in ticket order)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DELETE, GET, INSERT, NOP, UPDATE, KVStore,
+                        make_manager)
+
+P = 4
+S = 4          # slots per node
+W = 2          # value words
+LOCKS = 2
+
+mgr = make_manager(P)
+kv = KVStore(None, "kv", mgr, slots_per_node=S, value_width=W,
+             num_locks=LOCKS, index_capacity=64)
+
+
+@jax.jit
+def step(st, op, key, val):
+    return mgr.runtime.run(kv.op_round, st, op, key, val)
+
+
+def drive(rounds):
+    """rounds: list of per-participant op lists [(op, key, value), ...]."""
+    st = kv.init_state()
+    outs = []
+    for ops in rounds:
+        op = jnp.asarray([o[0] for o in ops], jnp.int32)
+        key = jnp.asarray([o[1] for o in ops], jnp.uint32)
+        val = jnp.asarray([o[2] for o in ops], jnp.int32)
+        st, res = step(st, op, key, val)
+        outs.append(jax.tree.map(np.asarray, res))
+    return st, outs
+
+
+class Oracle:
+    """Sequential replay in the linearization order the channel induces."""
+
+    def __init__(self):
+        self.map = {}
+        self.free = [S] * P
+        self.loc = {}
+
+    def apply_round(self, ops):
+        pre = dict(self.map)
+        results = [None] * len(ops)
+        for p, (op, key, val) in enumerate(ops):
+            if op == GET:
+                results[p] = pre.get(key)
+        for p, (op, key, val) in enumerate(ops):
+            ok = False
+            if op == INSERT:
+                if key not in self.map and self.free[p] > 0:
+                    self.map[key] = tuple(val)
+                    self.loc[key] = p
+                    self.free[p] -= 1
+                    ok = True
+            elif op == UPDATE:
+                if key in self.map:
+                    self.map[key] = tuple(val)
+                    ok = True
+            elif op == DELETE:
+                if key in self.map:
+                    del self.map[key]
+                    self.free[self.loc.pop(key)] += 1
+                    ok = True
+            if op in (INSERT, UPDATE, DELETE):
+                results[p] = ok
+        return results
+
+
+def check_against_oracle(rounds):
+    _st, outs = drive(rounds)
+    oracle = Oracle()
+    for rnd, (ops, res) in enumerate(zip(rounds, outs)):
+        expect = oracle.apply_round(ops)
+        for p, (op, key, val) in enumerate(ops):
+            if op == NOP:
+                continue
+            if op == GET:
+                exp = expect[p]
+                assert bool(res.found[p]) == (exp is not None), \
+                    f"round {rnd} p{p} GET({key}) found mismatch"
+                if exp is not None:
+                    np.testing.assert_array_equal(res.value[p], exp)
+            else:
+                assert bool(res.found[p]) == expect[p], \
+                    f"round {rnd} p{p} op{op}({key}) ok mismatch"
+
+
+def v(key, salt=0):
+    return (int(key) * 10 + salt, int(key) * 100 + salt)
+
+
+NOPR = (NOP, 1, (0, 0))
+
+
+class TestKVStoreBasic:
+    def test_insert_then_get(self):
+        check_against_oracle([
+            [(INSERT, 5, v(5)), NOPR, NOPR, NOPR],
+            [NOPR, (GET, 5, v(0)), NOPR, NOPR],
+        ])
+
+    def test_get_missing_returns_empty(self):
+        check_against_oracle([[NOPR, NOPR, (GET, 9, v(0)), NOPR]])
+
+    def test_update_and_delete_lifecycle(self):
+        check_against_oracle([
+            [(INSERT, 3, v(3)), NOPR, NOPR, NOPR],
+            [NOPR, (UPDATE, 3, v(3, 7)), NOPR, (GET, 3, v(0))],
+            [(GET, 3, v(0)), NOPR, (DELETE, 3, v(0)), NOPR],
+            [NOPR, (GET, 3, v(0)), NOPR, (UPDATE, 3, v(3, 9))],
+        ])
+
+    def test_concurrent_inserts_distinct_keys(self):
+        check_against_oracle([
+            [(INSERT, k, v(k)) for k in (1, 2, 3, 4)],
+            [(GET, k, v(0)) for k in (4, 3, 2, 1)],
+        ])
+
+    def test_concurrent_insert_same_key_one_wins(self):
+        check_against_oracle([
+            [(INSERT, 7, v(7, 1)), (INSERT, 7, v(7, 2)),
+             (INSERT, 7, v(7, 3)), NOPR],
+            [(GET, 7, v(0)), NOPR, NOPR, NOPR],
+        ])
+
+    def test_same_round_insert_get_sees_pre_state(self):
+        check_against_oracle([
+            [(INSERT, 2, v(2)), (GET, 2, v(0)), NOPR, NOPR],
+            [(GET, 2, v(0)), (DELETE, 2, v(0)), NOPR, NOPR],
+        ])
+
+    def test_contended_lock_stripe_serializes(self):
+        # keys 2 and 4 share lock stripe (2 % 2 == 4 % 2)
+        check_against_oracle([
+            [(INSERT, 2, v(2)), (INSERT, 4, v(4)),
+             (UPDATE, 2, v(2, 5)), (DELETE, 4, v(0))],
+            [(GET, 2, v(0)), (GET, 4, v(0)), NOPR, NOPR],
+        ])
+
+    def test_capacity_exhaustion_fails_insert(self):
+        rounds = []
+        # participant 0 inserts S+1 keys mapping to its own slots
+        for i in range(S + 1):
+            rounds.append([(INSERT, 10 + i, v(10 + i)), NOPR, NOPR, NOPR])
+        check_against_oracle(rounds)
+
+    def test_slot_reuse_after_delete(self):
+        check_against_oracle([
+            [(INSERT, 11, v(11)), NOPR, NOPR, NOPR],
+            [(DELETE, 11, v(0)), NOPR, NOPR, NOPR],
+            [(INSERT, 13, v(13)), NOPR, NOPR, NOPR],
+            [(GET, 11, v(0)), (GET, 13, v(0)), NOPR, NOPR],
+        ])
+
+
+class TestAppendixCValidation:
+    """Direct checks of the read-path case analysis (Appendix C)."""
+
+    def _seed_state(self):
+        st = kv.init_state()
+        op = jnp.asarray([INSERT, NOP, NOP, NOP], jnp.int32)
+        key = jnp.asarray([5, 1, 1, 1], jnp.uint32)
+        val = jnp.asarray([v(5), (0, 0), (0, 0), (0, 0)], jnp.int32)
+        st, _ = step(st, op, key, val)
+        return st
+
+    def _get5(self, st):
+        op = jnp.asarray([NOP, GET, NOP, NOP], jnp.int32)
+        key = jnp.asarray([1, 5, 1, 1], jnp.uint32)
+        val = jnp.zeros((P, W), jnp.int32)
+        _st, res = step(st, op, key, val)
+        return jax.tree.map(np.asarray, res)
+
+    def test_case1_valid_read_returns_value(self):
+        res = self._get5(self._seed_state())
+        assert res.found[1]
+        np.testing.assert_array_equal(res.value[1], v(5))
+
+    def test_case2_torn_row_retries_then_empty(self):
+        st = self._seed_state()
+        # corrupt the stored row at its host (inserter was participant 0):
+        buf = np.asarray(st.rows.buf).copy()
+        slot = np.nonzero(buf[0, :, W + 1] == 1)[0][0]  # valid row at node 0
+        buf[0, slot, 0] ^= 0x5A5A  # tear the payload, checksum now stale
+        st = st._replace(rows=st.rows._replace(buf=jnp.asarray(buf)))
+        res = self._get5(st)
+        assert not res.found[1]
+        assert res.retries[1] == 3  # MAX_GET_RETRIES exhausted
+
+    def test_case3_invalid_bit_returns_empty(self):
+        st = self._seed_state()
+        buf = np.asarray(st.rows.buf).copy()
+        slot = np.nonzero(buf[0, :, W + 1] == 1)[0][0]
+        row = buf[0, slot].copy()
+        row[W + 1] = 0  # unset valid bit, re-checksum (a mid-insert snapshot)
+        from repro.core.ownedvar import checksum as cks
+        row[W + 2] = np.asarray(
+            jax.lax.bitcast_convert_type(cks(jnp.asarray(row[:W + 2])),
+                                         jnp.int32))
+        buf[0, slot] = row
+        st = st._replace(rows=st.rows._replace(buf=jnp.asarray(buf)))
+        res = self._get5(st)
+        assert not res.found[1]
+        assert res.retries[1] == 0  # clean read, EMPTY by case 3
+
+    def test_case4_counter_mismatch_returns_empty(self):
+        st = self._seed_state()
+        # stale local index at participant 1: ctr behind the slot's counter
+        idx_ctr = np.asarray(st.idx_ctr).copy()
+        pos = np.nonzero(np.asarray(st.idx_key)[1] == 5)[0][0]
+        idx_ctr[1, pos] -= 1
+        st = st._replace(idx_ctr=jnp.asarray(idx_ctr))
+        res = self._get5(st)
+        assert not res.found[1]
+        assert res.retries[1] == 0
+
+
+class TestKVStoreRandomized:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_random_batches_match_oracle(self, seed):
+        rng = np.random.default_rng(seed)
+        keys = list(range(1, 7))
+        rounds = []
+        for rnd in range(6):
+            ops = []
+            for p in range(P):
+                op = int(rng.choice([NOP, GET, INSERT, UPDATE, DELETE],
+                                    p=[.1, .3, .3, .15, .15]))
+                key = int(rng.choice(keys))
+                ops.append((op, key, v(key, rnd)))
+            rounds.append(ops)
+        check_against_oracle(rounds)
+
+
+class TestBatchedGets:
+    def test_get_batch_matches_individual_gets(self):
+        st = kv.init_state()
+        rounds = [[(INSERT, k, v(k)) for k in (1, 2, 3, 4)],
+                  [(INSERT, k, v(k)) for k in (5, 6, 1, 2)]]  # 1,2 fail
+        for ops in rounds:
+            op = jnp.asarray([o[0] for o in ops], jnp.int32)
+            key = jnp.asarray([o[1] for o in ops], jnp.uint32)
+            val = jnp.asarray([o[2] for o in ops], jnp.int32)
+            st, _ = step(st, op, key, val)
+
+        @jax.jit
+        def batch_get(st, keys):
+            return mgr.runtime.run(
+                lambda s, k: kv.get_batch(s, k), st, keys)
+
+        keys = jnp.asarray([[1, 2, 3, 9], [5, 6, 9, 1],
+                            [4, 4, 4, 4], [9, 9, 9, 9]], jnp.uint32)
+        values, found = batch_get(st, keys)
+        values, found = np.asarray(values), np.asarray(found)
+        expect_found = np.array([[1, 1, 1, 0], [1, 1, 0, 1],
+                                 [1, 1, 1, 1], [0, 0, 0, 0]], bool)
+        np.testing.assert_array_equal(found, expect_found)
+        np.testing.assert_array_equal(values[0, 0], v(1))
+        np.testing.assert_array_equal(values[2, 3], v(4))

@@ -1,0 +1,129 @@
+"""Property-based tests (hypothesis) for channel invariants.
+
+Invariants checked:
+* kvstore linearizability: random op batches match the sequential oracle
+  over the induced linearization order (Appendix C).
+* shared queue: FIFO, no loss, no duplication, pop≤push.
+* atomic_var FAA: tickets are a permutation (mutual exclusion of tickets).
+* checksum: detects any single-lane corruption; deterministic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DELETE, GET, INSERT, NOP, UPDATE, AtomicVar,
+                        SharedQueue, make_manager)
+from repro.core.ownedvar import checksum
+
+import test_kvstore as kvmod
+
+P = 4
+
+# ----------------------------------------------------------- kvstore lineariz.
+op_strategy = st.tuples(
+    st.sampled_from([NOP, GET, INSERT, UPDATE, DELETE]),
+    st.integers(min_value=1, max_value=6))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(op_strategy, min_size=P, max_size=P),
+                min_size=1, max_size=5))
+def test_kvstore_linearizable_against_oracle(batches):
+    rounds = []
+    for rnd, ops in enumerate(batches):
+        rounds.append([(op, key, kvmod.v(key, rnd)) for op, key in ops])
+    kvmod.check_against_oracle(rounds)
+
+
+# ----------------------------------------------------------------- queue FIFO
+qmgr = make_manager(P)
+q = SharedQueue(None, "pq", qmgr, slots_per_node=3, width=1)
+
+
+@jax.jit
+def q_step(st, enq_want, enq_val, deq_want):
+    def prog(st, ew, ev, dw):
+        st, eok = q.enqueue(st, ev, want=ew)
+        st, val, dok = q.dequeue(st, want=dw)
+        return st, eok, val, dok
+    return qmgr.runtime.run(prog, st, enq_want, enq_val, deq_want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(
+    st.lists(st.booleans(), min_size=P, max_size=P),
+    st.lists(st.booleans(), min_size=P, max_size=P)),
+    min_size=1, max_size=5))
+def test_queue_fifo_no_loss_no_dup(rounds):
+    state = q.init_state()
+    pushed, popped = [], []
+    counter = 0
+    for enq_wants, deq_wants in rounds:
+        vals = []
+        for w in enq_wants:
+            vals.append(counter if w else -1)
+            counter += 1
+        state, eok, dval, dok = q_step(
+            state,
+            jnp.asarray(enq_wants), jnp.asarray(vals, jnp.int32)[:, None],
+            jnp.asarray(deq_wants))
+        eok, dval, dok = (np.asarray(eok), np.asarray(dval), np.asarray(dok))
+        # enqueue grants in participant order
+        for p in range(P):
+            if eok[p]:
+                pushed.append(vals[p])
+        for p in range(P):
+            if dok[p]:
+                popped.append(int(dval[p, 0]))
+    # FIFO w.r.t. grant order: popped must be a prefix-sequence of pushed
+    assert popped == pushed[:len(popped)]
+    assert len(set(popped)) == len(popped)          # no duplication
+    assert len(popped) <= len(pushed)               # pop ≤ push
+
+
+# ------------------------------------------------------------------ FAA tickets
+amgr = make_manager(P)
+av = AtomicVar(None, "pa", amgr, host=0, dtype=jnp.int32)
+
+
+@jax.jit
+def faa_step(st, want):
+    def prog(st, w):
+        st, old, _ = av.fetch_add(st, 1, pred=w)
+        return st, old
+    return amgr.runtime.run(prog, st, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.lists(st.booleans(), min_size=P, max_size=P),
+                min_size=1, max_size=6))
+def test_faa_tickets_form_permutation(rounds):
+    state = av.init_state(0)
+    tickets = []
+    for wants in rounds:
+        state, old = faa_step(state, jnp.asarray(wants))
+        old = np.asarray(old)
+        for p in range(P):
+            if wants[p]:
+                tickets.append(int(old[p]))
+    assert sorted(tickets) == list(range(len(tickets)))
+
+
+# ------------------------------------------------------------------- checksum
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(min_value=-2**31, max_value=2**31 - 1),
+                min_size=1, max_size=16),
+       st.integers(min_value=0, max_value=15),
+       st.integers(min_value=1, max_value=2**31 - 1))
+def test_checksum_detects_single_lane_corruption(words, pos, delta):
+    x = jnp.asarray(words, jnp.int32)
+    c1 = checksum(x)
+    y = x.at[pos % len(words)].add(jnp.int32(delta))
+    c2 = checksum(y)
+    if bool(jnp.all(x == y)):  # delta wrapped to zero — no corruption
+        assert int(c1) == int(c2)
+    else:
+        assert int(c1) != int(c2)
+    # determinism
+    assert int(checksum(x)) == int(c1)

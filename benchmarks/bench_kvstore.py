@@ -2,12 +2,21 @@
 
 Sweeps operation mixes (read-only / 50-50 / write-only) × key distributions
 (uniform / zipfian θ=0.99) × participant counts, plus the paper's "large
-window" mode: window=1 issues one op per participant per round; window=32
-issues 32 batched lock-free GETs in a single collective round
-(KVStore.get_batch) — reproducing the paper's observation that read
-throughput scales with outstanding one-sided reads.
+window" mode — now for BOTH sides of Fig. 5:
 
-Keyspace prefilled to 80% capacity (the paper's setup, scaled down)."""
+* window=1 issues one op per participant per round (``KVStore.op_round``);
+* window=W reads: W batched lock-free GETs in one collective round
+  (``KVStore.get_batch``);
+* window=W writes/mixed: every participant submits a (W,) window of
+  mutations executed in one traced collective round-set
+  (``KVStore.op_window``) — reproducing the paper's observation that
+  throughput scales with outstanding one-sided operations, for writes too.
+  The ``speedup_vs_per_op`` column is the measured ratio against issuing
+  the same W·P ops through per-op rounds.
+
+Keyspace prefilled to 80% capacity (the paper's setup, scaled down);
+prefill itself runs through the window path (one dispatch per P·W inserts).
+"""
 from __future__ import annotations
 
 import jax
@@ -23,35 +32,43 @@ WINDOW = 32
 
 def _build(P, keyspace):
     mgr = make_manager(P)
+    # lock stripe sized to the outstanding window (P·WINDOW concurrent
+    # mutations), not to the P-op round: an undersized stripe turns window
+    # throughput into max-queue-depth service rounds.
     kv = KVStore(None, f"kv_bench_p{P}_{keyspace}", mgr,
                  slots_per_node=keyspace // P + 4, value_width=2,
-                 num_locks=64, index_capacity=4 * keyspace)
+                 num_locks=max(64, P * WINDOW), index_capacity=4 * keyspace)
     st = kv.init_state()
 
     step = jax.jit(lambda st, op, key, val: mgr.runtime.run(
         kv.op_round, st, op, key, val))
+    window_step = jax.jit(lambda st, op, key, val: mgr.runtime.run(
+        kv.op_window, st, op, key, val))
     batch_get = jax.jit(lambda st, keys: mgr.runtime.run(
         lambda s, k: kv.get_batch(s, k), st, keys))
 
-    # prefill to 80%
+    # prefill to 80% through the window path: P·WINDOW inserts per dispatch
     n_fill = int(keyspace * 0.8)
     keys = np.arange(1, n_fill + 1, dtype=np.uint32)
-    for i in range(0, n_fill, P):
-        chunk = keys[i:i + P]
-        op = np.full(P, NOP, np.int32)
-        kk = np.ones(P, np.uint32)
-        vv = np.zeros((P, 2), np.int32)
+    span = P * WINDOW
+    for i in range(0, n_fill, span):
+        chunk = keys[i:i + span]
+        op = np.full(span, NOP, np.int32)
+        kk = np.ones(span, np.uint32)
+        vv = np.zeros((span, 2), np.int32)
         op[:len(chunk)] = INSERT
         kk[:len(chunk)] = chunk
         vv[:len(chunk), 0] = chunk.astype(np.int32) * 3
-        st, _res = step(st, jnp.asarray(op), jnp.asarray(kk),
-                        jnp.asarray(vv))
-    return mgr, kv, st, step, batch_get, n_fill
+        st, _res = window_step(
+            st, jnp.asarray(op.reshape(P, WINDOW)),
+            jnp.asarray(kk.reshape(P, WINDOW)),
+            jnp.asarray(vv.reshape(P, WINDOW, 2)))
+    return mgr, kv, st, step, window_step, batch_get, n_fill
 
 
 def run(csv: Csv, rounds: int = 8):
     P, keyspace = 8, 512
-    mgr, kv, st0, step, batch_get, n_fill = _build(P, keyspace)
+    mgr, kv, st0, step, window_step, batch_get, n_fill = _build(P, keyspace)
     rng = np.random.default_rng(0)
 
     for dist_name, keyfn in (("uniform", uniform_keys),
@@ -87,3 +104,31 @@ def run(csv: Csv, rounds: int = 8):
     modeled = P * WINDOW * 1e6 / (2 * model_round_us(64 * WINDOW))
     csv.add(f"kv_read_uniform_p{P}_window{WINDOW}", us,
             f"ops_per_round={P * WINDOW};modeled_ops_per_s={modeled:.0f}")
+
+    # ---- large-window WRITE/MIXED modes (windowed mutation round-sets)
+    for mix_name, write_frac in (("mixed", 0.5), ("write", 1.0)):
+        keys = uniform_keys(rng, P * WINDOW, n_fill).reshape(P, WINDOW)
+        writes = rng.random((P, WINDOW)) < write_frac
+        op = np.where(writes, UPDATE, GET).astype(np.int32)
+        val = np.stack([keys.astype(np.int32) * 7,
+                        np.ones((P, WINDOW), np.int32)],
+                       axis=-1).astype(np.int32)
+        jop, jkey, jval = jnp.asarray(op), jnp.asarray(keys), jnp.asarray(val)
+
+        # baseline: the same P·WINDOW ops as WINDOW per-op rounds
+        def per_op(st, jop=jop, jkey=jkey, jval=jval):
+            for b in range(WINDOW):
+                st, _ = step(st, jop[:, b], jkey[:, b], jval[:, b])
+            return st
+
+        base_us, _ = timed(per_op, st0, iters=8)
+        win_us, (st_w, res) = timed(window_step, st0, jop, jkey, jval,
+                                    iters=8)
+        assert bool(jnp.all(res.found)), "prefilled keys: all window ops land"
+        speedup = base_us / win_us
+        modeled = P * WINDOW * 1e6 / (
+            (2 * (1 - write_frac) + 4 * write_frac)
+            * model_round_us(64 * WINDOW))
+        csv.add(f"kv_{mix_name}_uniform_p{P}_window{WINDOW}", win_us,
+                f"ops_per_round={P * WINDOW};modeled_ops_per_s={modeled:.0f};"
+                f"per_op_us={base_us:.2f};speedup_vs_per_op={speedup:.2f}")

@@ -152,26 +152,40 @@ def remote_write(local_buf, target, index, value, axis: str,
 
 
 def remote_write_batch(local_buf, targets, indices, values, axis: str,
-                       preds=None):
+                       preds=None, assume_unique=False):
     """Vector form of :func:`remote_write`: R writes per participant,
-    applied in (participant, request) lexicographic order."""
+    applied in (participant, request) lexicographic order.
+
+    Cost: one all-gather of the (P, R, *item) payloads ≈ P·R·|item| bytes.
+    Racy writes keep the fixed total order without a P·R sequential scatter
+    chain: record k lands iff it is enabled, addresses me, and no enabled
+    later record writes the same row ("last writer wins" computed as a
+    winner mask), so all surviving writes land in ONE scatter.
+
+    ``assume_unique=True`` skips the (P·R)² winner mask for callers that
+    guarantee enabled writes never collide on a row (e.g. the kvstore,
+    whose concurrent writers hold distinct locks on distinct live slots).
+    """
     R = targets.shape[0]
     if preds is None:
         preds = jnp.ones((R,), jnp.bool_)
     me = my_id(axis)
-    tgts = jax.lax.all_gather(targets.astype(jnp.int32), axis, axis=0)  # (P,R)
-    idxs = jax.lax.all_gather(indices.astype(jnp.int32), axis, axis=0)
+    # one metadata all-gather: [target | index | pred] per request
+    meta = jnp.stack([targets.astype(jnp.int32), indices.astype(jnp.int32),
+                      preds.astype(jnp.int32)], axis=-1)                # (R,3)
+    metas = jax.lax.all_gather(meta, axis, axis=0)                      # (P,R,3)
     vals = jax.lax.all_gather(values, axis, axis=0)                     # (P,R,*)
-    ens = jax.lax.all_gather(preds, axis, axis=0)
+    tgts, idxs, ens = metas[..., 0], metas[..., 1], metas[..., 2] != 0
     P = tgts.shape[0]
-    flat_t = tgts.reshape(P * R)
-    flat_i = jnp.clip(idxs.reshape(P * R), 0, local_buf.shape[0] - 1)
-    flat_v = vals.reshape((P * R,) + local_buf.shape[1:])
-    flat_e = (flat_t == me) & ens.reshape(P * R)
-
-    def body(k, buf):
-        i = flat_i[k]
-        cur = buf[i]
-        return buf.at[i].set(jnp.where(flat_e[k], flat_v[k], cur))
-
-    return jax.lax.fori_loop(0, P * R, body, local_buf)
+    n = P * R
+    flat_i = jnp.clip(idxs.reshape(n), 0, local_buf.shape[0] - 1)
+    flat_v = vals.reshape((n,) + local_buf.shape[1:])
+    win = (tgts.reshape(n) == me) & ens.reshape(n)
+    if not assume_unique:
+        order = jnp.arange(n)
+        later_same = (flat_i[None, :] == flat_i[:, None]) & win[None, :] \
+            & (order[None, :] > order[:, None])
+        win = win & ~jnp.any(later_same, axis=1)
+    # losers/disabled records get an out-of-range row and are dropped
+    row = jnp.where(win, flat_i, local_buf.shape[0])
+    return local_buf.at[row].set(flat_v, mode="drop")

@@ -92,6 +92,13 @@ class TicketLockArray(Channel):
     each participant can maintain a bit-identical replica of all L
     (next, serving) pairs — the collective *is* the NIC serialization point.
     This fuses L independent FAA resolutions into one P-record all-gather.
+
+    The windowed entry points (``acquire_window``/``release_window``) let
+    every participant request **B tickets at once** — a ``(B,)`` vector of
+    lock ids — in one P·B-record all-gather.  Per-lock FIFO order over the
+    window is (participant, window slot) lexicographic: all of participant
+    0's requests on lock l queue ahead of participant 1's, and within one
+    participant in window order.  The single-request forms are B=1 wrappers.
     """
 
     def __init__(self, parent, name: str, mgr: Manager, *, num_locks: int):
@@ -104,38 +111,70 @@ class TicketLockArray(Channel):
         z = jnp.zeros((self.P, self.L), jnp.uint32)
         return TicketLockArrayState(next_ticket=z, now_serving=z)
 
-    def _totals(self, lock_id, flag):
-        """(P-record all-gather) → per-lock counts of flagged requests and
-        my rank among same-lock lower-id requesters."""
+    def _totals_window(self, lock_ids, flags, need_rank=True):
+        """(P·B-record all-gather) → my per-request FIFO ranks and per-lock
+        totals.  ``rank[b]`` counts flagged same-lock requests that precede
+        my request b in (participant, window slot) order; ``totals[l]``
+        counts all flagged requests on lock l this round-set.  Release-style
+        callers that only bump counters pass ``need_rank=False`` to skip the
+        (P, B, B) rank reduction."""
         import jax
         from . import colls
-        lids = jax.lax.all_gather(lock_id.astype(jnp.int32), self.axis)  # (P,)
-        flags = jax.lax.all_gather(flag, self.axis)                       # (P,)
+        lock_ids = lock_ids.astype(jnp.int32)
+        # one packed all-gather: flag in bit 30, lock id in the bits below
+        packed = jax.lax.all_gather(
+            lock_ids | (jnp.asarray(flags, jnp.int32) << 30), self.axis)
+        lids = packed & ((1 << 30) - 1)                       # (P, B)
+        gflags = (packed >> 30) != 0
+        onehot = (lids[..., None] == jnp.arange(self.L)[None, None, :]) \
+            & gflags[..., None]
+        totals = jnp.sum(onehot.astype(jnp.uint32), axis=(0, 1))       # (L,)
+        if not need_rank:
+            return None, totals
         me = colls.my_id(self.axis)
-        qs = jnp.arange(lids.shape[0])
-        same_lower = (lids == lock_id.astype(jnp.int32)) & flags & (qs < me)
-        rank = jnp.sum(same_lower.astype(jnp.uint32))
-        onehot = (lids[:, None] == jnp.arange(self.L)[None, :]) & flags[:, None]
-        totals = jnp.sum(onehot.astype(jnp.uint32), axis=0)              # (L,)
+        P, B = lids.shape
+        qs = jnp.arange(P)[:, None, None]                     # their id
+        cs = jnp.arange(B)[None, :, None]                     # their slot
+        bs = jnp.arange(B)[None, None, :]                     # my slot
+        same = (lids[:, :, None] == lock_ids[None, None, :]) & gflags[:, :, None]
+        before = (qs < me) | ((qs == me) & (cs < bs))
+        rank = jnp.sum(same & before, axis=(0, 1)).astype(jnp.uint32)  # (B,)
         return rank, totals
 
-    def acquire(self, state: TicketLockArrayState, lock_id, want):
-        """FAA on next_ticket[lock_id] for every wanting participant.
-        Returns (state, ticket) with ticket==NO_TICKET where not wanting."""
+    def acquire_window(self, state: TicketLockArrayState, lock_ids, want):
+        """FAA on next_ticket[lock_ids[b]] for every wanting request.
+        lock_ids: (B,) int32; want: (B,) bool.  Returns (state, tickets)
+        with tickets==NO_TICKET where not wanting."""
         want = jnp.asarray(want)
-        rank, totals = self._totals(lock_id, want)
-        ticket = state.next_ticket[lock_id] + rank
+        rank, totals = self._totals_window(lock_ids, want)
+        ticket = state.next_ticket[lock_ids] + rank
         new = state._replace(next_ticket=state.next_ticket + totals)
         return new, jnp.where(want, ticket, NO_TICKET)
 
+    def acquire(self, state: TicketLockArrayState, lock_id, want):
+        """Single-request form: B=1 window."""
+        new, ticket = self.acquire_window(
+            state, jnp.reshape(lock_id, (1,)),
+            jnp.reshape(jnp.asarray(want), (1,)))
+        return new, ticket[0]
+
     def holds(self, state: TicketLockArrayState, lock_id, ticket):
+        """Elementwise over any matching shapes of lock_id/ticket."""
         return ticket == state.now_serving[lock_id]
 
-    def release(self, state: TicketLockArrayState, lock_id, holding):
-        """Holder increments now_serving[lock_id].  The caller is responsible
-        for ordering its critical-section writes before this via an explicit
-        join (ack.join) — matching the paper's caller-specified release fence.
-        At most one holder per lock per round (mutual-exclusion invariant)."""
+    def release_window(self, state: TicketLockArrayState, lock_ids, holding):
+        """Each holder increments now_serving[lock] for every window slot it
+        holds.  The caller is responsible for ordering its critical-section
+        writes before this via an explicit join (ack.join) — matching the
+        paper's caller-specified release fence.  At most one holder per lock
+        per round (mutual-exclusion invariant)."""
         holding = jnp.asarray(holding)
-        _rank, totals = self._totals(lock_id, holding)
+        _rank, totals = self._totals_window(lock_ids, holding,
+                                            need_rank=False)
         return state._replace(now_serving=state.now_serving + totals)
+
+    def release(self, state: TicketLockArrayState, lock_id, holding):
+        """Single-request form: B=1 window."""
+        return self.release_window(
+            state, jnp.reshape(lock_id, (1,)),
+            jnp.reshape(jnp.asarray(holding), (1,)))

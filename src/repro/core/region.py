@@ -55,6 +55,20 @@ class SharedRegion(Channel):
         return state._replace(buf=state.buf.at[index].set(
             jnp.where(pred, value, cur)))
 
+    def local_write_batch(self, state: SharedRegionState, indices, values,
+                          preds=None) -> SharedRegionState:
+        """Masked batch of local row writes (no collective, one scatter).
+
+        indices: (R,) int32; values: (R, *item); preds: (R,) bool.  Enabled
+        rows must be distinct (the caller's invariant — e.g. the kvstore's
+        freshly allocated slots); disabled lanes are dropped, not written.
+        """
+        if preds is None:
+            preds = jnp.ones(values.shape[:1], jnp.bool_)
+        row = jnp.where(preds, jnp.clip(indices, 0, self.slots - 1),
+                        self.slots)
+        return state._replace(buf=state.buf.at[row].set(values, mode="drop"))
+
     # -- one-sided access (collectively served; see colls.py) -------------------
     def read(self, state: SharedRegionState, target, index):
         """One-sided read of row ``index`` at participant ``target``."""
@@ -78,9 +92,10 @@ class SharedRegion(Channel):
         return new, self.mgr.track(ack)
 
     def write_batch(self, state: SharedRegionState, targets, indices, values,
-                    preds=None):
+                    preds=None, assume_unique=False):
         buf = colls.remote_write_batch(state.buf, targets, indices, values,
-                                       self.axis, preds=preds)
+                                       self.axis, preds=preds,
+                                       assume_unique=assume_unique)
         new = state._replace(buf=buf)
         ack = make_ack(buf, "write", self.full_name, ALL_PEERS,
                        self.item_nbytes * int(targets.shape[0]))

@@ -74,10 +74,14 @@ class Runtime:
             out = fn(*squeezed)
             return jax.tree.map(lambda x: jnp.expand_dims(jnp.asarray(x), 0), out)
 
-        shmapped = jax.shard_map(
-            local_fn, mesh=self.mesh,
-            in_specs=jax.tree.map(lambda _: spec, args),
-            out_specs=spec, check_vma=False)
+        kwargs = dict(mesh=self.mesh,
+                      in_specs=jax.tree.map(lambda _: spec, args),
+                      out_specs=spec)
+        if hasattr(jax, "shard_map"):                    # jax >= 0.5
+            shmapped = jax.shard_map(local_fn, check_vma=False, **kwargs)
+        else:                                            # jax 0.4.x
+            from jax.experimental.shard_map import shard_map
+            shmapped = shard_map(local_fn, check_rep=False, **kwargs)
         return shmapped(*args)
 
     # -- helpers used by channel code (inside the per-participant trace) ----

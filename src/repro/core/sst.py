@@ -58,6 +58,17 @@ class SST(Channel):
         return SSTState(cached=state.cached.at[me].set(row),
                         csum=state.csum.at[me].set(checksum(row)))
 
+    def push_accumulate(self, state: SSTState, delta, pred=True):
+        """Bump my register by ``delta`` and push to all peers in one round.
+
+        The multi-record acknowledgement pattern (kvstore tracker): a round
+        that applied n records bumps the ack counter by n, not by repeated
+        single-record stores.  Returns (state, ack) like push_broadcast.
+        """
+        me = self.my_id()
+        bumped = state.cached[me] + jnp.asarray(delta, self.dtype)
+        return self.push_broadcast(self.store_mine(state, bumped, pred=pred))
+
     def push_broadcast(self, state: SSTState):
         """Push my register to all peers (all owners at once → all-gather).
 

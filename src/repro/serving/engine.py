@@ -12,6 +12,11 @@ table is a :class:`repro.core.KVStore` channel —
   * completion DELETEs the pages, freeing slots for the next admission
     (counter-based GC guards stale readers — Appendix C case 4).
 
+All page-table traffic flows through ``KVStore.op_window``: admission,
+decode-round lookups and eviction each submit a whole (P, B) window of ops
+in a single traced collective round-set (the paper's "large window" mode)
+rather than one jit dispatch per P-op round.
+
 The neural cache itself is the model's dense per-slot cache; the channel
 manages placement/ownership bookkeeping exactly as LOCO manages memory it
 does not itself compute on.  Participants simulate the serving pod's nodes
@@ -33,6 +38,7 @@ from ..models import build_model
 
 PAGE = 128          # tokens per logical page
 P_NODES = 4         # simulated serving nodes (channel participants)
+MAX_WINDOW = 32     # max KV ops per participant per collective round-set
 
 
 class ServingEngine:
@@ -56,7 +62,7 @@ class ServingEngine:
         self._kv_state = self.pages.init_state()
         self._q_state = self.queue.init_state()
         self._kv_step = jax.jit(lambda st, op, key, val: self.mgr.runtime.run(
-            self.pages.op_round, st, op, key, val))
+            self.pages.op_window, st, op, key, val))
         self._q_step = jax.jit(
             lambda st, v, ew, dw: self.mgr.runtime.run(
                 lambda s, v, ew, dw: _q_round(self.queue, s, v, ew, dw),
@@ -65,21 +71,43 @@ class ServingEngine:
         self._prefill = jax.jit(self.model.prefill, static_argnums=(2,))
         self.op_counts = collections.Counter()
 
-    # -- channel helpers (batched rounds over the P simulated nodes) -------
+    # -- channel helpers (windowed round-sets over the P simulated nodes) ---
     def _kv_ops(self, ops: List[tuple]):
-        """ops: list of (op_code, key, (v0, v1)); executed P at a time."""
+        """ops: list of (op_code, key, (v0, v1)); executed as (P, B) windows.
+
+        Submission order maps op i → (participant i % P, window slot i // P),
+        so an n-op batch is ONE ``op_window`` dispatch (one traced collective
+        round-set) instead of ceil(n/P) ``op_round`` dispatches.  B is padded
+        to a power of two (≤ MAX_WINDOW) to bound jit specializations.
+
+        Ops in one call must not conflict: mutations of the same key resolve
+        in the window's participant-then-window order (not submission order),
+        and GETs read the pre-window state.  Every engine path satisfies
+        this — admission/eviction batch distinct page keys, decode batches
+        are pure GETs.
+        """
         results = []
-        for i in range(0, len(ops), P_NODES):
-            chunk = ops[i:i + P_NODES]
-            chunk = chunk + [(NOP, 1, (0, 0))] * (P_NODES - len(chunk))
-            op = jnp.asarray([c[0] for c in chunk], jnp.int32)
-            key = jnp.asarray([c[1] for c in chunk], jnp.uint32)
-            val = jnp.asarray([c[2] for c in chunk], jnp.int32)
-            self._kv_state, res = self._kv_step(self._kv_state, op, key, val)
+        for start in range(0, len(ops), P_NODES * MAX_WINDOW):
+            chunk = ops[start:start + P_NODES * MAX_WINDOW]
+            w = -(-len(chunk) // P_NODES)
+            w = 1 << (w - 1).bit_length()        # pad window to power of two
+            n = P_NODES * w
+            chunk = chunk + [(NOP, 1, (0, 0))] * (n - len(chunk))
+            # (n,) submission order → (P, B) participant-major windows
+            op = np.asarray([c[0] for c in chunk],
+                            np.int32).reshape(w, P_NODES).T
+            key = np.asarray([c[1] for c in chunk],
+                             np.uint32).reshape(w, P_NODES).T
+            val = np.asarray([c[2] for c in chunk],
+                             np.int32).reshape(w, P_NODES, 2).transpose(1, 0, 2)
+            self._kv_state, res = self._kv_step(
+                self._kv_state, jnp.asarray(op), jnp.asarray(key),
+                jnp.asarray(val))
             for c in chunk:
                 self.op_counts[c[0]] += 1
-            results.extend(list(zip(np.asarray(res.found),
-                                    np.asarray(res.value))))
+            found = np.asarray(res.found).T.reshape(n)
+            value = np.asarray(res.value).transpose(1, 0, 2).reshape(n, -1)
+            results.extend(zip(found, value))
         return results[:len(ops)]
 
     @staticmethod

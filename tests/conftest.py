@@ -13,7 +13,3 @@ def _seed():
 @pytest.fixture
 def P8():
     return 8
-
-
-def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running test")

@@ -1,6 +1,12 @@
 """KVStore correctness: paper §6 semantics + Appendix C linearizability,
 checked against a sequential oracle over the induced linearization order
-(GETs at their pre-round remote read; modifications in ticket order)."""
+(GETs at their pre-round remote read; modifications in ticket order).
+
+Windowed histories (``op_window``) replay against the same oracle in the
+window-induced total order: GETs at the window start, mutations in
+(participant, window slot) lexicographic order.  ``op_round`` — the public
+B=1 wrapper — is additionally pinned bit-for-bit against the retained
+scalar reference implementation on randomized traces."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +30,16 @@ def step(st, op, key, val):
     return mgr.runtime.run(kv.op_round, st, op, key, val)
 
 
+@jax.jit
+def ref_step(st, op, key, val):
+    return mgr.runtime.run(kv._op_round_reference, st, op, key, val)
+
+
+@jax.jit
+def window_step(st, op, key, val):
+    return mgr.runtime.run(kv.op_window, st, op, key, val)
+
+
 def drive(rounds):
     """rounds: list of per-participant op lists [(op, key, value), ...]."""
     st = kv.init_state()
@@ -37,13 +53,49 @@ def drive(rounds):
     return st, outs
 
 
+def drive_windows(windows, store_mgr=None, store=None, state=None):
+    """windows: list of rounds; each round is a per-participant list of
+    equal-length windows [(op, key, value), ...]."""
+    skv = store or kv
+    st = skv.init_state() if state is None else state
+    wstep = window_step if store is None else jax.jit(
+        lambda s, o, k, v: store_mgr.runtime.run(skv.op_window, s, o, k, v))
+    outs = []
+    for w in windows:
+        op = jnp.asarray([[o[0] for o in lane] for lane in w], jnp.int32)
+        key = jnp.asarray([[o[1] for o in lane] for lane in w], jnp.uint32)
+        val = jnp.asarray([[o[2] for o in lane] for lane in w], jnp.int32)
+        st, res = wstep(st, op, key, val)
+        outs.append(jax.tree.map(np.asarray, res))
+    return st, outs
+
+
 class Oracle:
     """Sequential replay in the linearization order the channel induces."""
 
-    def __init__(self):
+    def __init__(self, n_participants=P, slots=S):
         self.map = {}
-        self.free = [S] * P
+        self.free = [slots] * n_participants
         self.loc = {}
+
+    def _mod(self, p, op, key, val):
+        """Apply one mutation at its linearization point; returns success."""
+        if op == INSERT:
+            if key not in self.map and self.free[p] > 0:
+                self.map[key] = tuple(val)
+                self.loc[key] = p
+                self.free[p] -= 1
+                return True
+        elif op == UPDATE:
+            if key in self.map:
+                self.map[key] = tuple(val)
+                return True
+        elif op == DELETE:
+            if key in self.map:
+                del self.map[key]
+                self.free[self.loc.pop(key)] += 1
+                return True
+        return False
 
     def apply_round(self, ops):
         pre = dict(self.map)
@@ -52,25 +104,44 @@ class Oracle:
             if op == GET:
                 results[p] = pre.get(key)
         for p, (op, key, val) in enumerate(ops):
-            ok = False
-            if op == INSERT:
-                if key not in self.map and self.free[p] > 0:
-                    self.map[key] = tuple(val)
-                    self.loc[key] = p
-                    self.free[p] -= 1
-                    ok = True
-            elif op == UPDATE:
-                if key in self.map:
-                    self.map[key] = tuple(val)
-                    ok = True
-            elif op == DELETE:
-                if key in self.map:
-                    del self.map[key]
-                    self.free[self.loc.pop(key)] += 1
-                    ok = True
             if op in (INSERT, UPDATE, DELETE):
-                results[p] = ok
+                results[p] = self._mod(p, op, key, val)
         return results
+
+    def apply_window(self, window):
+        """Window-induced order: GETs at the window start; mutations in
+        (participant, window slot) lexicographic order."""
+        pre = dict(self.map)
+        results = [[None] * len(lane) for lane in window]
+        for p, lane in enumerate(window):
+            for b, (op, key, val) in enumerate(lane):
+                if op == GET:
+                    results[p][b] = pre.get(key)
+        for p, lane in enumerate(window):
+            for b, (op, key, val) in enumerate(lane):
+                if op in (INSERT, UPDATE, DELETE):
+                    results[p][b] = self._mod(p, op, key, val)
+        return results
+
+
+def check_windows_against_oracle(windows):
+    _st, outs = drive_windows(windows)
+    oracle = Oracle()
+    for rnd, (w, res) in enumerate(zip(windows, outs)):
+        expect = oracle.apply_window(w)
+        for p, lane in enumerate(w):
+            for b, (op, key, val) in enumerate(lane):
+                if op == NOP:
+                    continue
+                if op == GET:
+                    exp = expect[p][b]
+                    assert bool(res.found[p][b]) == (exp is not None), \
+                        f"window {rnd} p{p}b{b} GET({key}) found mismatch"
+                    if exp is not None:
+                        np.testing.assert_array_equal(res.value[p][b], exp)
+                else:
+                    assert bool(res.found[p][b]) == expect[p][b], \
+                        f"window {rnd} p{p}b{b} op{op}({key}) ok mismatch"
 
 
 def check_against_oracle(rounds):
@@ -237,6 +308,265 @@ class TestKVStoreRandomized:
                 ops.append((op, key, v(key, rnd)))
             rounds.append(ops)
         check_against_oracle(rounds)
+
+
+class TestWindowedOps:
+    """op_window linearizability: windowed histories vs the oracle replayed
+    in the window-induced total order."""
+
+    def test_window_insert_then_get_roundtrip(self):
+        check_windows_against_oracle([
+            [[(INSERT, 1, v(1)), (INSERT, 2, v(2))],
+             [(INSERT, 3, v(3)), (INSERT, 4, v(4))],
+             [NOPR, NOPR], [NOPR, NOPR]],
+            [[(GET, 4, v(0)), (GET, 3, v(0))],
+             [(GET, 2, v(0)), (GET, 9, v(0))],
+             [(GET, 1, v(0)), NOPR], [NOPR, (GET, 2, v(0))]],
+        ])
+
+    def test_window_gets_linearize_at_window_start(self):
+        # the UPDATE lands within the window; every GET lane (any slot,
+        # any participant) still observes the pre-window value.
+        check_windows_against_oracle([
+            [[(INSERT, 5, v(5))], [NOPR], [NOPR], [NOPR]],
+            [[(UPDATE, 5, v(5, 9)), (GET, 5, v(0))],
+             [(GET, 5, v(0)), (GET, 5, v(0))], [NOPR, NOPR], [NOPR, NOPR]],
+            [[(GET, 5, v(0))], [NOPR], [NOPR], [NOPR]],
+        ])
+
+    def test_delete_insert_same_key_one_window(self):
+        # within one participant's window: window order (delete, then
+        # re-insert) — both succeed, slot recycled through the free stack.
+        check_windows_against_oracle([
+            [[(INSERT, 7, v(7))], [NOPR], [NOPR], [NOPR]],
+            [[(DELETE, 7, v(0)), (INSERT, 7, v(7, 2))],
+             [NOPR, NOPR], [NOPR, NOPR], [NOPR, NOPR]],
+            [[(GET, 7, v(0))], [NOPR], [NOPR], [NOPR]],
+        ])
+
+    def test_cross_participant_same_key_participant_then_window_order(self):
+        # key 6 absent.  p0 INSERTs it at window slot 1; p1 DELETEs it at
+        # window slot 0.  Per-lock FIFO is (participant, slot) order, so
+        # p0's (later-slot) insert precedes p1's (earlier-slot) delete —
+        # both succeed.  A window-major order would fail both.
+        check_windows_against_oracle([
+            [[NOPR, (INSERT, 6, v(6))],
+             [(DELETE, 6, v(0)), NOPR], [NOPR, NOPR], [NOPR, NOPR]],
+            [[(GET, 6, v(0))], [NOPR], [NOPR], [NOPR]],
+        ])
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_random_windows_match_oracle(self, seed):
+        rng = np.random.default_rng(100 + seed)
+        keys = list(range(1, 7))
+        B = 3
+        windows = []
+        for rnd in range(4):
+            w = []
+            for p in range(P):
+                lane = []
+                for b in range(B):
+                    op = int(rng.choice(
+                        [NOP, GET, INSERT, UPDATE, DELETE],
+                        p=[.1, .3, .3, .15, .15]))
+                    key = int(rng.choice(keys))
+                    lane.append((op, key, v(key, rnd * B + b)))
+                w.append(lane)
+            windows.append(w)
+        check_windows_against_oracle(windows)
+
+    def test_window_equals_op_round_sequence(self):
+        """On histories whose windows have no cross-lane conflicts (each key
+        mutated by one lane; GET keys unmutated in that window) and no
+        capacity pressure (a window-mode insert allocates before a
+        concurrent delete's slot GC lands), op_window is observably
+        equivalent to running the window slots as successive op_rounds."""
+        emgr = make_manager(P)
+        ekv = KVStore(None, "kv_equiv", emgr, slots_per_node=32,
+                      value_width=W, num_locks=LOCKS, index_capacity=256)
+        estep = jax.jit(lambda s, o, k, vv: emgr.runtime.run(
+            ekv.op_round, s, o, k, vv))
+        rng = np.random.default_rng(7)
+        B = 3
+        windows = []
+        live = set()
+        for rnd in range(4):
+            pool = list(range(1, 20))
+            rng.shuffle(pool)
+            w = []
+            for p in range(P):
+                lane = []
+                for b in range(B):
+                    key = pool.pop()   # unique key per lane in this window
+                    if key in live:
+                        op = int(rng.choice([GET, UPDATE, DELETE],
+                                            p=[.4, .4, .2]))
+                        if op == DELETE:
+                            live.discard(key)
+                    else:
+                        op = int(rng.choice([GET, INSERT], p=[.3, .7]))
+                        if op == INSERT:
+                            live.add(key)
+                    lane.append((op, key, v(key, rnd * B + b)))
+                w.append(lane)
+            windows.append(w)
+
+        st_w, outs_w = drive_windows(windows, store_mgr=emgr, store=ekv)
+        # replay the same histories as B successive op_rounds per window
+        st_s = ekv.init_state()
+        outs_s = []
+        for w in windows:
+            per_lane = []
+            for b in range(B):
+                ops = [lane[b] for lane in w]
+                op = jnp.asarray([o[0] for o in ops], jnp.int32)
+                key = jnp.asarray([o[1] for o in ops], jnp.uint32)
+                val = jnp.asarray([o[2] for o in ops], jnp.int32)
+                st_s, res = estep(st_s, op, key, val)
+                per_lane.append(jax.tree.map(np.asarray, res))
+            outs_s.append(per_lane)
+        for rnd, (w, res_w, res_s) in enumerate(
+                zip(windows, outs_w, outs_s)):
+            for p, lane in enumerate(w):
+                for b, (op, key, val) in enumerate(lane):
+                    if op == NOP:
+                        continue
+                    assert bool(res_w.found[p][b]) == \
+                        bool(res_s[b].found[p]), \
+                        f"window {rnd} p{p}b{b} op{op}({key})"
+                    np.testing.assert_array_equal(res_w.value[p][b],
+                                                  res_s[b].value[p])
+        # both executions agree on the final logical contents
+        probe = jnp.broadcast_to(
+            jnp.arange(1, 21, dtype=jnp.uint32), (P, 20))
+
+        @jax.jit
+        def probe_all(st, keys):
+            return emgr.runtime.run(lambda s, k: ekv.get_batch(s, k),
+                                    st, keys)
+
+        vw, fw = probe_all(st_w, probe)
+        vs, fs = probe_all(st_s, probe)
+        np.testing.assert_array_equal(np.asarray(fw), np.asarray(fs))
+        np.testing.assert_array_equal(np.asarray(vw), np.asarray(vs))
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_op_round_bitidentical_to_reference(self, seed):
+        """Acceptance regression: op_window with B=1 (== public op_round)
+        is bit-identical to the retained scalar reference implementation —
+        full state pytree and results — on randomized mixed-op traces."""
+        rng = np.random.default_rng(40 + seed)
+        keys = list(range(1, 7))
+        st_a = st_b = kv.init_state()
+        for rnd in range(6):
+            ops = []
+            for p in range(P):
+                op = int(rng.choice([NOP, GET, INSERT, UPDATE, DELETE],
+                                    p=[.1, .3, .3, .15, .15]))
+                key = int(rng.choice(keys))
+                ops.append((op, key, v(key, rnd)))
+            op = jnp.asarray([o[0] for o in ops], jnp.int32)
+            key = jnp.asarray([o[1] for o in ops], jnp.uint32)
+            val = jnp.asarray([o[2] for o in ops], jnp.int32)
+            st_a, res_a = step(st_a, op, key, val)
+            st_b, res_b = ref_step(st_b, op, key, val)
+            for la, lb in zip(jax.tree.leaves(st_a), jax.tree.leaves(st_b)):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+            for la, lb in zip(jax.tree.leaves(res_a._asdict()),
+                              jax.tree.leaves(res_b._asdict())):
+                np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+class TestWindowEdgeCases:
+    def test_insert_window_exceeds_free_stack(self):
+        # p0 inserts S+2 distinct keys in one window: exactly S land (the
+        # earliest queue positions), the rest report found=False.
+        B = S + 2
+        w = [[(INSERT, 10 + b, v(10 + b)) for b in range(B)]] + \
+            [[NOPR] * B for _ in range(P - 1)]
+        st, outs = drive_windows([w])
+        found = outs[0].found[0]
+        assert found.sum() == S
+        assert not found[S:].any(), "capacity failures are the excess ops"
+        # the survivors are readable; the failed keys are absent
+        gets = [[(GET, 10 + b, v(0)) for b in range(B)]] + \
+            [[NOPR] * B for _ in range(P - 1)]
+        _st2, outs2 = drive_windows([w, gets])
+        np.testing.assert_array_equal(outs2[1].found[0], found)
+
+    def test_index_overflow_reports_failure_and_latches(self):
+        smgr = make_manager(P)
+        skv = KVStore(None, "kv_tinyidx", smgr, slots_per_node=S,
+                      value_width=W, num_locks=LOCKS, index_capacity=2)
+        w = [[(INSERT, k, v(k)) for k in (1, 2, 3)]] + \
+            [[NOPR] * 3 for _ in range(P - 1)]
+        st, outs = drive_windows([w], store_mgr=smgr, store=skv)
+        found = outs[0].found[0]
+        np.testing.assert_array_equal(found, [True, True, False])
+        assert bool(np.asarray(st.idx_overflow).all()), \
+            "overflow latches on every participant's index replica"
+        # the un-indexed insert returned its slot to the inserter's stack
+        np.testing.assert_array_equal(np.asarray(st.free_top),
+                                      [S - 2] + [S] * (P - 1))
+
+    def test_delete_and_reinsert_full_stack_same_window(self):
+        # fill p0 completely, then delete one key and insert a fresh one in
+        # the same window (delete's lock FIFO slot precedes the insert):
+        # the freed slot is recycled within the window.
+        fill = [[(INSERT, 10 + b, v(10 + b)) for b in range(S)]] + \
+            [[NOPR] * S for _ in range(P - 1)]
+        w2 = [[(DELETE, 10, v(0)), (INSERT, 30, v(30))]] + \
+            [[NOPR, NOPR] for _ in range(P - 1)]
+        probe = [[(GET, 10, v(0)), (GET, 30, v(0))]] + \
+            [[NOPR, NOPR] for _ in range(P - 1)]
+        _st, outs = drive_windows([fill, w2, probe])
+        np.testing.assert_array_equal(outs[1].found[0], [True, True])
+        np.testing.assert_array_equal(outs[2].found[0], [False, True])
+
+
+class TestRowEncoding:
+    """Property tests for encode_row/decode_row (deterministic mirror of the
+    hypothesis suite in test_properties.py, so they run without dev deps)."""
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_checksum_catches_any_single_word_tear(self, seed):
+        rng = np.random.default_rng(seed)
+        payload = rng.integers(-2**31, 2**31 - 1, size=W, dtype=np.int64)
+        row = np.asarray(kv.encode_row(
+            jnp.asarray(payload, jnp.int32),
+            jnp.uint32(rng.integers(0, 2**32, dtype=np.uint64)),
+            bool(rng.integers(0, 2))))
+        _p, _c, _v, ok = kv.decode_row(jnp.asarray(row))
+        assert bool(ok), "untorn row must validate"
+        for pos in range(W + 2):           # any body word
+            delta = int(rng.integers(1, 2**31 - 1))
+            torn = row.copy()
+            torn[pos] = np.int32(np.int64(torn[pos]) ^ delta)
+            if np.array_equal(torn, row):
+                continue
+            _p, _c, _v, ok = kv.decode_row(jnp.asarray(torn))
+            assert not bool(ok), f"tear at word {pos} must break checksum"
+
+    def test_decode_case_analysis_elementwise(self):
+        """Appendix C cases over a batched row set, vmapped elementwise:
+        clean+valid, clean+invalid (mid-insert/post-delete), torn."""
+        val = jnp.asarray(v(3), jnp.int32)
+        rows = jnp.stack([
+            kv.encode_row(val, jnp.uint32(5), True),    # case 1: valid
+            kv.encode_row(val, jnp.uint32(5), False),   # case 3: invalid bit
+            kv.encode_row(val, jnp.uint32(4), True),    # case 4: stale ctr
+            kv.encode_row(val, jnp.uint32(5), True).at[0].add(1),  # case 2
+        ])
+        payload, ctr, valid, ok = jax.vmap(kv.decode_row)(rows)
+        np.testing.assert_array_equal(np.asarray(valid),
+                                      [True, False, True, True])
+        np.testing.assert_array_equal(np.asarray(ok),
+                                      [True, True, True, False])
+        # index holds ctr=5: the GET-level accept mask is found only for 0
+        accept = np.asarray(ok) & np.asarray(valid) & \
+            (np.asarray(ctr) == 5)
+        np.testing.assert_array_equal(accept, [True, False, False, False])
+        np.testing.assert_array_equal(np.asarray(payload)[0], v(3))
 
 
 class TestBatchedGets:

@@ -2,11 +2,25 @@
 
 Invariants checked:
 * kvstore linearizability: random op batches match the sequential oracle
-  over the induced linearization order (Appendix C).
+  over the induced linearization order (Appendix C) — single-op rounds AND
+  windowed histories (op_window: GETs at window start, mutations in
+  participant-then-window order).
+* row encoding: the checksum catches any single-word tear; the Appendix C
+  counter/valid case analysis holds elementwise over batched rows.
 * shared queue: FIFO, no loss, no duplication, pop≤push.
 * atomic_var FAA: tickets are a permutation (mutual exclusion of tickets).
 * checksum: detects any single-lane corruption; deterministic.
+
+Requires ``hypothesis`` (requirements-dev.txt); skips cleanly without it.
 """
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt); deterministic mirrors of the kvstore/row "
+           "properties run in test_kvstore.py")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +48,78 @@ def test_kvstore_linearizable_against_oracle(batches):
     for rnd, ops in enumerate(batches):
         rounds.append([(op, key, kvmod.v(key, rnd)) for op, key in ops])
     kvmod.check_against_oracle(rounds)
+
+
+# ------------------------------------------------- windowed kvstore lineariz.
+@settings(max_examples=15, deadline=None)
+@given(st.lists(
+    st.lists(st.lists(op_strategy, min_size=2, max_size=2),
+             min_size=P, max_size=P),
+    min_size=1, max_size=3))
+def test_kvstore_windows_linearizable_against_oracle(batches):
+    """Random (P, B=2) windows replay against the oracle in the
+    window-induced total order (GETs at window start; mutations in
+    participant-then-window order)."""
+    windows = []
+    for rnd, lanes in enumerate(batches):
+        windows.append([[(op, key, kvmod.v(key, rnd * 2 + b))
+                         for b, (op, key) in enumerate(lane)]
+                        for lane in lanes])
+    kvmod.check_windows_against_oracle(windows)
+
+
+# ------------------------------------------------------------- row encoding
+word = st.integers(min_value=-2**31, max_value=2**31 - 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(word, min_size=kvmod.W, max_size=kvmod.W),
+       st.integers(min_value=0, max_value=2**32 - 1),
+       st.booleans(),
+       st.integers(min_value=0, max_value=kvmod.W + 1),
+       st.integers(min_value=1, max_value=2**31 - 1))
+def test_encode_row_checksum_catches_single_word_tear(payload, ctr, valid,
+                                                      pos, delta):
+    kv = kvmod.kv
+    row = kv.encode_row(jnp.asarray(payload, jnp.int32),
+                        jnp.uint32(ctr), valid)
+    _p, _c, _v, ok = kv.decode_row(row)
+    assert bool(ok)
+    torn = row.at[pos].set(row[pos] ^ jnp.int32(delta))
+    if bool(jnp.all(torn == row)):
+        return              # delta was a no-op on this word
+    _p, _c, _v, ok = kv.decode_row(torn)
+    assert not bool(ok), f"tear at word {pos} must break the checksum"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(
+    st.lists(word, min_size=kvmod.W, max_size=kvmod.W),
+    st.integers(min_value=1, max_value=2**32 - 1),
+    st.booleans(), st.booleans()),
+    min_size=1, max_size=6))
+def test_decode_row_case_analysis_elementwise(rows_spec):
+    """Appendix C counter/valid cases over a batched row set: a row is
+    accepted iff clean, valid and counter-current — checked elementwise
+    under vmap exactly as the batched read path applies it."""
+    kv = kvmod.kv
+    rows, expect = [], []
+    for payload, ctr, valid, stale in rows_spec:
+        rows.append(kv.encode_row(jnp.asarray(payload, jnp.int32),
+                                  jnp.uint32(ctr), valid))
+        # the index advertises ctr; a stale replica advertises ctr-1
+        expect.append(valid and not stale)
+    batch = jnp.stack(rows)
+    payloads, ctrs, valids, oks = jax.vmap(kv.decode_row)(batch)
+    idx_ctr = jnp.asarray(
+        [c - 1 if stale else c for (_p, c, _v, stale) in rows_spec],
+        jnp.uint32)
+    accept = np.asarray(oks) & np.asarray(valids) & \
+        (np.asarray(ctrs) == np.asarray(idx_ctr))
+    np.testing.assert_array_equal(accept, np.asarray(expect, bool))
+    for i, (payload, _c, _v, _s) in enumerate(rows_spec):
+        np.testing.assert_array_equal(np.asarray(payloads)[i],
+                                      np.asarray(payload, np.int32))
 
 
 # ----------------------------------------------------------------- queue FIFO

@@ -16,8 +16,11 @@ PROG = textwrap.dedent("""
                             INSERT, GET, NOP)
 
     P = 8
-    mesh = jax.make_mesh((P,), ("nodes",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    if hasattr(jax.sharding, "AxisType"):          # jax >= 0.5
+        mesh = jax.make_mesh((P,), ("nodes",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    else:
+        mesh = jax.make_mesh((P,), ("nodes",))
     mgr = make_manager(P, axis="nodes", mesh=mesh)
 
     # --- barrier under shard_map

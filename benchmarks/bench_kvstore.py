@@ -1,23 +1,44 @@
 """Paper Fig. 5: key-value store throughput.
 
 Sweeps operation mixes (read-only / 50-50 / write-only) × key distributions
-(uniform / zipfian θ=0.99) × participant counts, plus the paper's "large
-window" mode — now for BOTH sides of Fig. 5:
+(uniform / zipfian θ=0.99) × window modes, for BOTH store implementations:
 
-* window=1 issues one op per participant per round (``KVStore.op_round``);
-* window=W reads: W batched lock-free GETs in one collective round
-  (``KVStore.get_batch``);
-* window=W writes/mixed: every participant submits a (W,) window of
-  mutations executed in one traced collective round-set
-  (``KVStore.op_window``) — reproducing the paper's observation that
-  throughput scales with outstanding one-sided operations, for writes too.
-  The ``speedup_vs_per_op`` column is the measured ratio against issuing
-  the same W·P ops through per-op rounds.
+* ``hash`` — the work-proportional paths: O(PROBE) open-addressing index,
+  wave-scheduled vectorized tracker apply, conflict-free-prefix lock
+  serving (service rounds = conflict depth);
+* ``reference`` — the retained executable specification: O(C) flat-scan
+  index, sequential per-record tracker sweep, one-ticket-per-round serving.
+
+Reported speedups:
+
+* ``speedup_vs_reference`` — hash vs reference on the identical workload
+  (the work-proportionality win; insert-heavy prefill and the windowed
+  sweeps are the acceptance rows);
+* ``speedup_vs_per_op`` — the windowed round-set vs issuing the same W·P
+  ops through per-op rounds (the paper's large-window win, PR 1).
+
+Windowed mutation sweeps use **distinct keys per window** for the uniform
+distribution — the documented engine contract (``ServingEngine._kv_ops``
+batches never conflict) — so they expose lock-stripe behavior rather than
+same-key serialization; the zipfian sweeps keep duplicates, pricing the
+honest conflict-depth cost of skewed traffic.
+
+Modeled wire bytes come from the Manager traffic ledger (DESIGN.md §2.3):
+an accounting pass re-traces one dispatch with the ledger enabled.  The
+``kv_read_selfloc`` row has every participant read only keys it hosts —
+the locality tier serves those lanes from local memory and the ledger
+reports **zero** read-verb wire bytes.
 
 Keyspace prefilled to 80% capacity (the paper's setup, scaled down);
-prefill itself runs through the window path (one dispatch per P·W inserts).
+prefill itself runs through the window path (one dispatch per P·W inserts)
+and is timed as the insert-heavy acceptance workload.
+
+Rows also land in ``BENCH_kvstore.json`` via the ``jt`` BenchJson sink so
+the perf trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -25,19 +46,21 @@ import numpy as np
 
 from repro.core import GET, INSERT, NOP, UPDATE, KVStore, make_manager
 
-from .common import Csv, model_round_us, timed, uniform_keys, zipf_keys
+from .common import (BenchJson, Csv, model_round_us, timed, uniform_keys,
+                     zipf_keys)
 
 WINDOW = 32
 
 
-def _build(P, keyspace):
+def _build(P, keyspace, window, reference=False, tag=""):
     mgr = make_manager(P)
-    # lock stripe sized to the outstanding window (P·WINDOW concurrent
+    # lock stripe sized to the outstanding window (P·window concurrent
     # mutations), not to the P-op round: an undersized stripe turns window
     # throughput into max-queue-depth service rounds.
-    kv = KVStore(None, f"kv_bench_p{P}_{keyspace}", mgr,
+    kv = KVStore(None, f"kv_bench_p{P}_{keyspace}{tag}", mgr,
                  slots_per_node=keyspace // P + 4, value_width=2,
-                 num_locks=max(64, P * WINDOW), index_capacity=4 * keyspace)
+                 num_locks=max(64, P * window), index_capacity=4 * keyspace,
+                 reference_impl=reference)
     st = kv.init_state()
 
     step = jax.jit(lambda st, op, key, val: mgr.runtime.run(
@@ -47,30 +70,107 @@ def _build(P, keyspace):
     batch_get = jax.jit(lambda st, keys: mgr.runtime.run(
         lambda s, k: kv.get_batch(s, k), st, keys))
 
-    # prefill to 80% through the window path: P·WINDOW inserts per dispatch
+    # prefill to 80% through the window path: P·window inserts per dispatch.
+    # The prefill IS the insert-heavy benchmark workload; timing happens in
+    # run() interleaved across variants so machine-load drift cancels.
     n_fill = int(keyspace * 0.8)
     keys = np.arange(1, n_fill + 1, dtype=np.uint32)
-    span = P * WINDOW
-    for i in range(0, n_fill, span):
-        chunk = keys[i:i + span]
-        op = np.full(span, NOP, np.int32)
-        kk = np.ones(span, np.uint32)
-        vv = np.zeros((span, 2), np.int32)
-        op[:len(chunk)] = INSERT
-        kk[:len(chunk)] = chunk
-        vv[:len(chunk), 0] = chunk.astype(np.int32) * 3
-        st, _res = window_step(
-            st, jnp.asarray(op.reshape(P, WINDOW)),
-            jnp.asarray(kk.reshape(P, WINDOW)),
-            jnp.asarray(vv.reshape(P, WINDOW, 2)))
-    return mgr, kv, st, step, window_step, batch_get, n_fill
+    span = P * window
+
+    def prefill(st):
+        for i in range(0, n_fill, span):
+            chunk = keys[i:i + span]
+            op = np.full(span, NOP, np.int32)
+            kk = np.ones(span, np.uint32)
+            vv = np.zeros((span, 2), np.int32)
+            op[:len(chunk)] = INSERT
+            kk[:len(chunk)] = chunk
+            vv[:len(chunk), 0] = chunk.astype(np.int32) * 3
+            st, _res = window_step(
+                st, jnp.asarray(op.reshape(P, window)),
+                jnp.asarray(kk.reshape(P, window)),
+                jnp.asarray(vv.reshape(P, window, 2)))
+        return st
+
+    st_fill = prefill(st)     # compile + the canonical prefilled state
+    jax.block_until_ready(jax.tree.leaves(st_fill))
+    return (mgr, kv, st_fill, step, window_step, batch_get, n_fill,
+            (prefill, st))
 
 
-def run(csv: Csv, rounds: int = 8):
-    P, keyspace = 8, 512
-    mgr, kv, st0, step, window_step, batch_get, n_fill = _build(P, keyspace)
+def _timed_interleaved(jobs, iters):
+    """jobs: {name: (fn, args)}.  Samples every job once per sweep, in
+    round-robin order, and reports per-job medians — load spikes on a
+    shared machine hit all variants alike instead of skewing one ratio."""
+    for fn, args in jobs.values():                 # warmup / compile
+        jax.block_until_ready(fn(*args))
+    samples = {name: [] for name in jobs}
+    for _ in range(iters):
+        for name, (fn, args) in jobs.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            samples[name].append(time.perf_counter() - t0)
+    return {name: float(np.median(s)) * 1e6 for name, s in samples.items()}
+
+
+def _window_ops(rng, P, window, n_fill, write_frac, dist):
+    """(op, key, val) arrays for one (P, window) mutation window."""
+    span = P * window
+    if dist == "uniform":
+        # engine contract: distinct keys per submitted window
+        keys = rng.choice(np.arange(1, n_fill + 1, dtype=np.uint32),
+                          size=span, replace=False).reshape(P, window)
+    else:
+        keys = zipf_keys(rng, span, n_fill).reshape(P, window)
+    writes = rng.random((P, window)) < write_frac
+    op = np.where(writes, UPDATE, GET).astype(np.int32)
+    val = np.stack([keys.astype(np.int32) * 7,
+                    np.ones((P, window), np.int32)], axis=-1)
+    return jnp.asarray(op), jnp.asarray(keys), jnp.asarray(val)
+
+
+def _account_traffic(mgr, kv, st, op, key, val):
+    """Re-trace one window dispatch with the traffic ledger enabled and
+    return (total modeled wire bytes, per-verb summary)."""
+    mgr.traffic.enable().reset()
+    fresh = jax.jit(lambda s, o, k, v: mgr.runtime.run(
+        kv.op_window, s, o, k, v))
+    out = fresh(st, op, key, val)
+    jax.block_until_ready(out)
+    total, summary = mgr.traffic.total_bytes(), mgr.traffic.summary()
+    mgr.traffic.disable().reset()
+    return total, summary
+
+
+def run(csv: Csv, rounds: int = 8, jt: BenchJson | None = None,
+        smoke: bool = False):
+    jt = jt if jt is not None else BenchJson()
+    # keyspace 1024 → index_capacity 4096: large enough that the reference
+    # implementation's capacity-proportional costs (O(C) scans and argmax
+    # sweeps) separate cleanly from the work-proportional hash paths
+    P, keyspace, window = (4, 128, 8) if smoke else (8, 1024, WINDOW)
+    # `rounds` is THE sampling knob: per-op rounds AND interleaved samples
+    # for the prefill/windowed sweeps (run.py passes 2 for --smoke)
+    iters = rounds
+    builds = {}
+    for variant, ref in (("hash", False), ("reference", True)):
+        builds[variant] = _build(P, keyspace, window, reference=ref,
+                                 tag=f"_{variant}")
+    mgr, kv, st0, step, window_step, batch_get, n_fill, _pf = builds["hash"]
     rng = np.random.default_rng(0)
 
+    # ---- insert-heavy window prefill: hash vs reference, interleaved -----
+    pf = _timed_interleaved(
+        {v: (builds[v][7][0], (builds[v][7][1],)) for v in builds},
+        iters=max(3, iters // 2))
+    pf_hash, pf_ref = pf["hash"], pf["reference"]
+    csv.add(f"kv_prefill_insert_p{P}_window{window}", pf_hash,
+            f"ops={n_fill};speedup_vs_reference={pf_ref / pf_hash:.2f}")
+    jt.add("kv_prefill_insert", "hash", pf_hash, ops=n_fill,
+           speedup_vs_reference=round(pf_ref / pf_hash, 2))
+    jt.add("kv_prefill_insert", "reference", pf_ref, ops=n_fill)
+
+    # ---- per-op rounds (window=1), hash store ----------------------------
     for dist_name, keyfn in (("uniform", uniform_keys),
                              ("zipf", zipf_keys)):
         for mix_name, write_frac in (("read", 0.0), ("mixed", 0.5),
@@ -95,40 +195,85 @@ def run(csv: Csv, rounds: int = 8):
             csv.add(f"kv_{mix_name}_{dist_name}_p{P}",
                     us_total / rounds,
                     f"ops_per_round={P};modeled_ops_per_s={modeled:.0f}")
+            jt.add(f"kv_{mix_name}_{dist_name}_perop", "hash",
+                   us_total / rounds, ops=P,
+                   modeled_ops_per_s=round(modeled))
 
-    # ---- large-window read mode (batched one-sided reads)
+    # ---- large-window read mode (batched one-sided reads) ----------------
     st = st0
-    keys = uniform_keys(rng, P * WINDOW, n_fill).reshape(P, WINDOW)
+    keys = uniform_keys(rng, P * window, n_fill).reshape(P, window)
     us, (vals, found) = timed(batch_get, st, jnp.asarray(keys), iters=3)
     assert bool(jnp.all(found)), "prefilled keys must be found"
-    modeled = P * WINDOW * 1e6 / (2 * model_round_us(64 * WINDOW))
-    csv.add(f"kv_read_uniform_p{P}_window{WINDOW}", us,
-            f"ops_per_round={P * WINDOW};modeled_ops_per_s={modeled:.0f}")
+    modeled = P * window * 1e6 / (2 * model_round_us(64 * window))
+    csv.add(f"kv_read_uniform_p{P}_window{window}", us,
+            f"ops_per_round={P * window};modeled_ops_per_s={modeled:.0f}")
+    jt.add("kv_read_uniform_window", "hash", us, ops=P * window,
+           modeled_ops_per_s=round(modeled))
 
-    # ---- large-window WRITE/MIXED modes (windowed mutation round-sets)
-    for mix_name, write_frac in (("mixed", 0.5), ("write", 1.0)):
-        keys = uniform_keys(rng, P * WINDOW, n_fill).reshape(P, WINDOW)
-        writes = rng.random((P, WINDOW)) < write_frac
-        op = np.where(writes, UPDATE, GET).astype(np.int32)
-        val = np.stack([keys.astype(np.int32) * 7,
-                        np.ones((P, WINDOW), np.int32)],
-                       axis=-1).astype(np.int32)
-        jop, jkey, jval = jnp.asarray(op), jnp.asarray(keys), jnp.asarray(val)
+    # locality row: every participant reads only keys it hosts (prefill
+    # lane p inserted keys[p*window:(p+1)*window]) — the traffic ledger
+    # must report ZERO wire bytes for the read verb on self lanes.
+    self_keys = np.arange(1, P * window + 1,
+                          dtype=np.uint32).reshape(P, window)
+    mgr.traffic.enable().reset()
+    fresh_get = jax.jit(lambda s, k: mgr.runtime.run(
+        lambda ss, kk: kv.get_batch(ss, kk), s, k))
+    # timed like any row, but note the wall time includes the ledger's
+    # host-callback overhead — the row exists for the wire-byte claim
+    us, (_v, found) = timed(fresh_get, st0, jnp.asarray(self_keys),
+                            iters=max(2, iters // 2), warmup=1)
+    assert bool(jnp.all(found))
+    selfloc_bytes = mgr.traffic.total_bytes()
+    mgr.traffic.disable().reset()
+    csv.add(f"kv_read_selfloc_p{P}_window{window}", us,
+            f"ops_per_round={P * window};ledger_enabled=1;"
+            f"modeled_wire_bytes={selfloc_bytes:.0f}")
+    jt.add("kv_read_selfloc", "hash", us, ops=P * window,
+           ledger_enabled=1, modeled_wire_bytes=selfloc_bytes)
+    assert selfloc_bytes == 0.0, \
+        "self-targeted read lanes must cost zero modeled wire bytes"
 
-        # baseline: the same P·WINDOW ops as WINDOW per-op rounds
-        def per_op(st, jop=jop, jkey=jkey, jval=jval):
-            for b in range(WINDOW):
-                st, _ = step(st, jop[:, b], jkey[:, b], jval[:, b])
-            return st
+    # ---- windowed WRITE/MIXED sweeps: uniform (distinct keys) + zipf -----
+    for dist in ("uniform", "zipf"):
+        for mix_name, write_frac in (("mixed", 0.5), ("write", 1.0)):
+            jop, jkey, jval = _window_ops(rng, P, window, n_fill,
+                                          write_frac, dist)
+            for variant in ("hash", "reference"):
+                _res = builds[variant][4](builds[variant][2], jop, jkey,
+                                          jval)[1]
+                assert bool(jnp.all(_res.found)), \
+                    "prefilled keys: all window ops land"
 
-        base_us, _ = timed(per_op, st0, iters=8)
-        win_us, (st_w, res) = timed(window_step, st0, jop, jkey, jval,
-                                    iters=8)
-        assert bool(jnp.all(res.found)), "prefilled keys: all window ops land"
-        speedup = base_us / win_us
-        modeled = P * WINDOW * 1e6 / (
-            (2 * (1 - write_frac) + 4 * write_frac)
-            * model_round_us(64 * WINDOW))
-        csv.add(f"kv_{mix_name}_uniform_p{P}_window{WINDOW}", win_us,
-                f"ops_per_round={P * WINDOW};modeled_ops_per_s={modeled:.0f};"
-                f"per_op_us={base_us:.2f};speedup_vs_per_op={speedup:.2f}")
+            # per-op baseline (hash store): same ops as `window` op_rounds
+            def per_op(st, jop=jop, jkey=jkey, jval=jval):
+                for b in range(window):
+                    st, _ = step(st, jop[:, b], jkey[:, b], jval[:, b])
+                return st
+
+            variant_us = _timed_interleaved(
+                {v: (builds[v][4], (builds[v][2], jop, jkey, jval))
+                 for v in builds} | {"per_op": (per_op, (st0,))},
+                iters=iters)
+            base_us = variant_us["per_op"]
+            win_us = variant_us["hash"]
+            speed_ref = variant_us["reference"] / win_us
+            speed_perop = base_us / win_us
+            wire, by_verb = _account_traffic(mgr, kv, st0, jop, jkey, jval)
+            modeled = P * window * 1e6 / (
+                (2 * (1 - write_frac) + 4 * write_frac)
+                * model_round_us(64 * window))
+            csv.add(f"kv_{mix_name}_{dist}_p{P}_window{window}", win_us,
+                    f"ops_per_round={P * window};"
+                    f"modeled_ops_per_s={modeled:.0f};"
+                    f"per_op_us={base_us:.2f};"
+                    f"speedup_vs_per_op={speed_perop:.2f};"
+                    f"speedup_vs_reference={speed_ref:.2f};"
+                    f"modeled_wire_bytes={wire:.0f}")
+            jt.add(f"kv_{mix_name}_{dist}_window", "hash", win_us,
+                   ops=P * window,
+                   speedup_vs_per_op=round(speed_perop, 2),
+                   speedup_vs_reference=round(speed_ref, 2),
+                   modeled_wire_bytes=wire)
+            jt.add(f"kv_{mix_name}_{dist}_window", "reference",
+                   variant_us["reference"], ops=P * window)
+    return jt

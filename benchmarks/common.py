@@ -23,17 +23,23 @@ LINK_BW_GBS = 50.0
 
 
 def timed(fn: Callable, *args, iters: int = 5, warmup: int = 2):
-    """Wall-clock a jitted callable; returns (mean_us, last_result)."""
+    """Wall-clock a jitted callable; returns (median_us, last_result).
+
+    Median over per-call samples, not the mean: these benchmarks run on
+    shared machines and a single descheduling spike should not redefine a
+    row's throughput.
+    """
     result = None
     for _ in range(warmup):
         result = fn(*args)
         jax.block_until_ready(result)
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         result = fn(*args)
         jax.block_until_ready(result)
-    dt = (time.perf_counter() - t0) / iters
-    return dt * 1e6, result
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples)) * 1e6, result
 
 
 def zipf_keys(rng, n_ops, keyspace, theta=0.99):
@@ -62,3 +68,33 @@ class Csv:
         row = f"{name},{us_per_call:.2f},{derived}"
         self.rows.append(row)
         print(row, flush=True)
+
+
+class BenchJson:
+    """Machine-readable benchmark rows, persisted as BENCH_<name>.json so
+    the perf trajectory is tracked across PRs.
+
+    Row schema: {"bench", "variant", "us", "ops_per_s"?, ...extra} where
+    extra carries speedup columns (speedup_vs_reference, speedup_vs_per_op)
+    and modeled_wire_bytes from the traffic ledger.
+    """
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, bench: str, variant: str, us: float, ops: int = 0,
+            **extra):
+        row = {"bench": bench, "variant": variant, "us": round(us, 2)}
+        if ops:
+            row["ops_per_s"] = round(ops * 1e6 / us) if us > 0 else None
+        for k, v in extra.items():
+            row[k] = round(v, 2) if isinstance(v, float) else v
+        self.rows.append(row)
+        return row
+
+    def dump(self, path: str):
+        import json
+        with open(path, "w") as f:
+            json.dump({"rows": self.rows}, f, indent=1, sort_keys=False)
+            f.write("\n")
+        return path

@@ -3,15 +3,22 @@
   Fig. 1b  bench_barrier   barrier crossing latency
   Fig. 4   bench_lock      single-lock + transactional locking vs MPI-style
   Fig. 5   bench_kvstore   kv throughput × mix × distribution × window
+                           × implementation (hash vs reference)
   Fig. 7   bench_power     DC/DC control-loop stability vs period
   §Roofline bench_roofline dry-run-derived roofline table (reads reports/)
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; the kvstore benchmark
+additionally persists machine-readable rows (variant, us, ops/s, modeled
+wire bytes, speedup columns) to ``BENCH_kvstore.json`` at the repo root so
+the perf trajectory is tracked across PRs.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--only barrier,lock,...]
+                                               [--smoke] [--json-dir DIR]
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 
@@ -19,10 +26,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: barrier,lock,kvstore,power,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs for CI smoke runs")
+    ap.add_argument("--json-dir", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))),
+        help="where BENCH_*.json files land (default: repo root)")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
-    from .common import Csv
+    from .common import BenchJson, Csv
     csv = Csv()
     print("name,us_per_call,derived")
 
@@ -37,7 +49,11 @@ def main() -> None:
         bench_lock.run(csv)
     if enabled("kvstore"):
         from . import bench_kvstore
-        bench_kvstore.run(csv)
+        jt = BenchJson()
+        bench_kvstore.run(csv, rounds=2 if args.smoke else 8, jt=jt,
+                          smoke=args.smoke)
+        path = jt.dump(os.path.join(args.json_dir, "BENCH_kvstore.json"))
+        print(f"# wrote {path} ({len(jt.rows)} rows)", file=sys.stderr)
     if enabled("power"):
         from . import bench_power
         bench_power.run(csv)

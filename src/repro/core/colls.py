@@ -4,6 +4,16 @@ These are the TPU-native realizations of LOCO's one-sided verbs (DESIGN.md
 §2).  Each helper documents its collective cost so the roofline ledger and
 the AckKey descriptors stay honest.
 
+Locality tier (DESIGN.md §2.3): the batched verbs take per-lane ``preds``
+and treat ``target == me`` lanes as **local memory accesses** — served from
+``local_buf`` (reads) or applied from the local payload (writes) without
+contributing to the gathered/reduced wire tensors.  Disabled lanes
+contribute nothing either.  When a :class:`~repro.core.runtime.TrafficLedger`
+is passed, every verb records its *modeled* wire bytes — counting only
+enabled non-self lanes, so NUMA-style placement (the paper's headline
+programming model) shows up as measured-zero traffic rather than being
+silently priced like a remote access.
+
 Conventions: all functions run inside a per-participant trace (under vmap or
 shard_map) with collectives over ``axis``.
 """
@@ -21,6 +31,21 @@ def axis_size(axis: str) -> int:
 
 def my_id(axis: str):
     return jax.lax.axis_index(axis)
+
+
+def _item_nbytes(local_buf) -> int:
+    """Static per-row payload bytes of a (slots, *item) buffer."""
+    n = 1
+    for d in local_buf.shape[1:]:
+        n *= int(d)
+    return n * local_buf.dtype.itemsize
+
+
+def _record(ledger, verb, wire_bytes):
+    """Report modeled wire bytes into the traffic ledger (no-op when
+    disabled — a trace-time Python check, zero cost on the hot path)."""
+    if ledger is not None and ledger.enabled:
+        ledger.record(verb, wire_bytes)
 
 
 def bcast_from(value, owner, axis: str):
@@ -61,80 +86,123 @@ def prefix_sums(x, axis: str) -> Tuple[jax.Array, jax.Array, jax.Array]:
     return excl, total, g
 
 
-def remote_read(local_buf, target, index, axis: str):
+def remote_read(local_buf, target, index, axis: str, pred=True,
+                ledger=None, verb: str = "remote_read"):
     """One-sided READ: each participant reads row ``index`` of participant
     ``target``'s ``local_buf``  →  (P_requests are served collectively).
 
     local_buf: (slots, *item)   per-participant storage
     target:    () int32         participant to read from (traced)
     index:     () int32         row within target's buffer (traced)
+    pred:      () bool          disabled requests return zeros, cost nothing
     returns:   (*item,) value as stored at the target.
 
     Implementation ("NIC-served read"): requests are tiny (2 words) and are
     all-gathered; every participant serves the requests that address it; the
     served values return via a masked all-reduce.  Cost ≈ 2·P·|item| bytes
     (the reduce) + negligible request bytes — the collective analogue of P
-    concurrent RDMA reads.
+    concurrent RDMA reads.  A ``target == me`` request is a *local* read
+    (DESIGN.md §2.3): it is served from ``local_buf`` directly, masked out
+    of the reduced table, and modeled at zero wire bytes.
     """
     me = my_id(axis)
-    req = jnp.stack([jnp.asarray(target, jnp.int32), jnp.asarray(index, jnp.int32)])
-    reqs = jax.lax.all_gather(req, axis, axis=0, tiled=False)      # (P, 2)
-    tgt, idx = reqs[:, 0], reqs[:, 1]
-    # serve every request addressed to me: (P, *item)
+    target = jnp.asarray(target, jnp.int32)
+    index = jnp.asarray(index, jnp.int32)
+    pred = jnp.asarray(pred)
+    remote = pred & (target != me)
+    req = jnp.stack([target, index, remote.astype(jnp.int32)])
+    reqs = jax.lax.all_gather(req, axis, axis=0, tiled=False)      # (P, 3)
+    tgt, idx, en = reqs[:, 0], reqs[:, 1], reqs[:, 2] != 0
+    # serve every *remote* request addressed to me: (P, *item)
     served = local_buf[jnp.clip(idx, 0, local_buf.shape[0] - 1)]
-    mine = tgt == me
+    mine = (tgt == me) & en
     served = jnp.where(
         mine.reshape((-1,) + (1,) * (served.ndim - 1)), served,
         jnp.zeros_like(served))
     # return values: each requester picks its own row of the summed table.
     table = jax.lax.psum(served, axis)                              # (P, *item)
-    return table[me]
+    out = table[me]
+    # locality fast path: self-targeted reads come from local memory
+    local_val = local_buf[jnp.clip(index, 0, local_buf.shape[0] - 1)]
+    out = jnp.where(pred & (target == me), local_val, out)
+    out = jnp.where(pred, out, jnp.zeros_like(out))
+    _record(ledger, verb,
+            2.0 * _item_nbytes(local_buf) * remote.astype(jnp.float32))
+    return out
 
 
-def remote_read_batch(local_buf, targets, indices, axis: str):
+def remote_read_batch(local_buf, targets, indices, axis: str, preds=None,
+                      ledger=None, verb: str = "remote_read_batch"):
     """Vector form of :func:`remote_read`: R requests per participant.
 
-    targets, indices: (R,) int32.  Returns (R, *item).
-    Served via all-gather(requests) + local gather + psum_scatter of the
-    (P, R, *item) served tensor — each participant receives exactly its R
-    answers, so the wire cost is ≈ 2·P·R·|item| on a ring (reduce-scatter),
-    not P²·R·|item|.
+    targets, indices: (R,) int32; preds: (R,) bool (default all-enabled).
+    Returns (R, *item).  Served via all-gather(requests) + local gather +
+    psum_scatter of the (P, R, *item) served tensor — each participant
+    receives exactly its R answers, so the wire cost is ≈ 2·P·R·|item| on a
+    ring (reduce-scatter), not P²·R·|item|.
+
+    Locality tier (DESIGN.md §2.3): disabled lanes and ``target == me``
+    lanes are masked out of the served tensor (they contribute zeros to the
+    reduce and are modeled at zero wire bytes); self lanes are served from
+    ``local_buf`` after the scatter, disabled lanes return zeros.
     """
     me = my_id(axis)
     R = targets.shape[0]
-    req = jnp.stack([targets.astype(jnp.int32), indices.astype(jnp.int32)], axis=-1)
-    reqs = jax.lax.all_gather(req, axis, axis=0, tiled=False)       # (P, R, 2)
+    targets = targets.astype(jnp.int32)
+    indices = indices.astype(jnp.int32)
+    if preds is None:
+        preds = jnp.ones((R,), jnp.bool_)
+    preds = jnp.asarray(preds)
+    self_lane = preds & (targets == me)
+    remote_lane = preds & (targets != me)
+    req = jnp.stack([targets, indices, remote_lane.astype(jnp.int32)],
+                    axis=-1)
+    reqs = jax.lax.all_gather(req, axis, axis=0, tiled=False)       # (P, R, 3)
     P = reqs.shape[0]
     tgt = reqs[..., 0]
     idx = jnp.clip(reqs[..., 1], 0, local_buf.shape[0] - 1)
+    en = reqs[..., 2] != 0
     served = local_buf[idx.reshape(-1)]                             # (P*R, *item)
     served = served.reshape((P, R) + local_buf.shape[1:])
-    mask = (tgt == me).reshape((P, R) + (1,) * (local_buf.ndim - 1))
+    mask = ((tgt == me) & en).reshape((P, R) + (1,) * (local_buf.ndim - 1))
     served = jnp.where(mask, served, jnp.zeros_like(served))
     # psum_scatter over the requester axis: requester q receives sum_p served[p, q]
     out = jax.lax.psum_scatter(served, axis, scatter_dimension=0, tiled=False)
+    # locality fast path: self lanes served from local memory, zero wire
+    local_vals = local_buf[jnp.clip(indices, 0, local_buf.shape[0] - 1)]
+    lane = (R,) + (1,) * (local_buf.ndim - 1)
+    out = jnp.where(self_lane.reshape(lane), local_vals, out)
+    out = jnp.where(preds.reshape(lane), out, jnp.zeros_like(out))
+    _record(ledger, verb, 2.0 * _item_nbytes(local_buf)
+            * jnp.sum(remote_lane.astype(jnp.float32)))
     return out  # (R, *item)
 
 
 def remote_write(local_buf, target, index, value, axis: str,
-                 pred=True):
+                 pred=True, ledger=None, verb: str = "remote_write"):
     """One-sided WRITE: each participant writes ``value`` into row ``index``
     of participant ``target``'s buffer.  Racy writes to the same row are
     resolved in participant order (lowest id last → highest id wins is
     avoided; we apply in increasing id so the *highest* id's write lands
     last, a fixed total order standing in for RDMA's unspecified outcome).
 
-    Cost: all-gather of (P, *item) write payloads ≈ P·|item| bytes.
-    Returns the updated local buffer.
+    Cost: all-gather of (P, *item) write payloads ≈ P·|item| bytes.  A
+    ``target == me`` write is a local store (DESIGN.md §2.3): its payload is
+    zeroed on the wire and applied from local memory, modeled at zero wire
+    bytes.  Returns the updated local buffer.
     """
     me = my_id(axis)
     pred = jnp.asarray(pred)
-    rec = (jnp.asarray(target, jnp.int32), jnp.asarray(index, jnp.int32),
-           value, pred)
-    tgts = jax.lax.all_gather(rec[0], axis, axis=0, tiled=False)    # (P,)
-    idxs = jax.lax.all_gather(rec[1], axis, axis=0, tiled=False)    # (P,)
-    vals = jax.lax.all_gather(rec[2], axis, axis=0, tiled=False)    # (P, *item)
-    ens = jax.lax.all_gather(rec[3], axis, axis=0, tiled=False)     # (P,)
+    target = jnp.asarray(target, jnp.int32)
+    self_lane = pred & (target == me)
+    wire_value = jnp.where(self_lane, jnp.zeros_like(value), value)
+    tgts = jax.lax.all_gather(target, axis, axis=0, tiled=False)    # (P,)
+    idxs = jax.lax.all_gather(jnp.asarray(index, jnp.int32), axis,
+                              axis=0, tiled=False)                  # (P,)
+    vals = jax.lax.all_gather(wire_value, axis, axis=0, tiled=False)  # (P, *item)
+    ens = jax.lax.all_gather(pred, axis, axis=0, tiled=False)       # (P,)
+    # restore my own lane from local memory (it never rode the wire)
+    vals = vals.at[me].set(value)
 
     def apply_one(buf, w):
         t, i, v, en = w
@@ -148,11 +216,14 @@ def remote_write(local_buf, target, index, value, axis: str,
     # unrolled over P writers: deterministic order; P is a static mesh size.
     for w in range(P):
         buf = apply_one(buf, (tgts[w], idxs[w], vals[w], ens[w]))
+    _record(ledger, verb, float(_item_nbytes(local_buf))
+            * (pred & (target != me)).astype(jnp.float32))
     return buf
 
 
 def remote_write_batch(local_buf, targets, indices, values, axis: str,
-                       preds=None, assume_unique=False):
+                       preds=None, assume_unique=False, ledger=None,
+                       verb: str = "remote_write_batch"):
     """Vector form of :func:`remote_write`: R writes per participant,
     applied in (participant, request) lexicographic order.
 
@@ -165,16 +236,29 @@ def remote_write_batch(local_buf, targets, indices, values, axis: str,
     ``assume_unique=True`` skips the (P·R)² winner mask for callers that
     guarantee enabled writes never collide on a row (e.g. the kvstore,
     whose concurrent writers hold distinct locks on distinct live slots).
+
+    Locality tier (DESIGN.md §2.3): ``target == me`` lanes are zeroed in
+    the gathered payload tensor and applied from the local ``values`` array
+    on arrival — a local store, modeled at zero wire bytes.  Disabled lanes
+    cost nothing.
     """
     R = targets.shape[0]
+    targets = targets.astype(jnp.int32)
     if preds is None:
         preds = jnp.ones((R,), jnp.bool_)
+    preds = jnp.asarray(preds)
     me = my_id(axis)
+    self_lane = preds & (targets == me)
+    lane = (R,) + (1,) * (values.ndim - 1)
+    wire_vals = jnp.where(self_lane.reshape(lane),
+                          jnp.zeros_like(values), values)
     # one metadata all-gather: [target | index | pred] per request
-    meta = jnp.stack([targets.astype(jnp.int32), indices.astype(jnp.int32),
+    meta = jnp.stack([targets, indices.astype(jnp.int32),
                       preds.astype(jnp.int32)], axis=-1)                # (R,3)
     metas = jax.lax.all_gather(meta, axis, axis=0)                      # (P,R,3)
-    vals = jax.lax.all_gather(values, axis, axis=0)                     # (P,R,*)
+    vals = jax.lax.all_gather(wire_vals, axis, axis=0)                  # (P,R,*)
+    # restore my own lanes from local memory (they never rode the wire)
+    vals = vals.at[me].set(values)
     tgts, idxs, ens = metas[..., 0], metas[..., 1], metas[..., 2] != 0
     P = tgts.shape[0]
     n = P * R
@@ -188,4 +272,6 @@ def remote_write_batch(local_buf, targets, indices, values, axis: str,
         win = win & ~jnp.any(later_same, axis=1)
     # losers/disabled records get an out-of-range row and are dropped
     row = jnp.where(win, flat_i, local_buf.shape[0])
+    _record(ledger, verb, float(_item_nbytes(local_buf))
+            * jnp.sum((preds & (targets != me)).astype(jnp.float32)))
     return local_buf.at[row].set(flat_v, mode="drop")

@@ -6,8 +6,15 @@ Composition (all LOCO primitives):
   across participants — each row is ``[payload | counter | valid | checksum]``
   (the paper's per-slot metadata verbatim);
 * every participant maintains a *local index* mapping key → (node, slot,
-  counter) — here a flat associative array in device memory (the paper's
-  host-side unordered_map; see DESIGN.md §7);
+  counter) — an **open-addressing hash table** in device memory (the
+  paper's host-side unordered_map; see DESIGN.md §7): linear probing from
+  ``hash(key) % C`` over a bounded window of ``PROBE`` positions, with
+  tombstones so deletion never breaks probe chains.  Lookup, insert and
+  delete are O(PROBE) — work-proportional, independent of the provisioned
+  capacity C.  ``_index_lookup_reference`` keeps the O(C) flat scan as the
+  executable specification (bit-for-bit equal results), and
+  ``reference_impl=True`` builds a store on the reference scan + sequential
+  tracker apply for regression benchmarking;
 * insertion/deletion/update are protected by an array of ticket locks,
   ``lock = key % NUM_LOCKS`` (:class:`TicketLockArray`);
 * index updates propagate through the *tracker* — per-participant broadcast
@@ -51,8 +58,12 @@ Window semantics (intra-window ordering and linearization points):
   Appendix C (insert at valid-bit set, delete at valid-bit unset, update at
   row placement), at the service round in which its ticket serves.
 * Non-conflicting mutations from different window slots execute
-  concurrently in the same service round; the number of service rounds is
-  the maximum per-lock queue depth, not P·B.
+  concurrently in the same service round.  Each lock queue serves its
+  longest *conflict-free prefix* per round (same-key pairs and
+  INSERT-behind-DELETE pairs serialize; distinct-key mutations commute and
+  batch), so the number of service rounds is the maximum per-lock
+  **conflict depth** — a window of P·B distinct-key mutations completes in
+  one round regardless of how the lock stripe hashes them.
 * An INSERT that exhausts the host's ``free_stack`` or finds no free local
   index position (``idx_overflow`` latched) reports ``found=False``; the
   un-indexed slot is returned to the free stack.
@@ -72,7 +83,7 @@ import jax.numpy as jnp
 from . import colls
 from .ack import AckKey, join
 from .channel import Channel
-from .lock import NO_TICKET, TicketLockArray, TicketLockArrayState
+from .lock import TicketLockArray, TicketLockArrayState
 from .ownedvar import checksum
 from .region import SharedRegion, SharedRegionState
 from .runtime import Manager
@@ -81,8 +92,29 @@ from .sst import SST, SSTState
 # op codes
 NOP, GET, INSERT, UPDATE, DELETE = 0, 1, 2, 3, 4
 
-_EMPTY, _USED = jnp.int8(0), jnp.int8(1)
+# local-index slot states (DESIGN.md §7): tombstones keep probe chains
+# intact across deletions; inserts reclaim them.  The index is ONE (C, 5)
+# int32 row table [state | key_bits | node | slot | ctr_bits] so a probe is
+# a single row gather and a tracker wave commits in a single row scatter —
+# XLA-CPU gather/scatter cost is per-row, so fusing the five logical arrays
+# into rows is a ~5× cut on the index hot paths.
+_EMPTY, _USED, _TOMB = 0, 1, 2
+IDX_STATE, IDX_KEY, IDX_NODE, IDX_SLOT, IDX_CTR = range(5)
 MAX_GET_RETRIES = 3
+# default bounded probe length for the open-addressing index; an insert
+# whose whole window is occupied latches ``idx_overflow`` and fails.
+DEFAULT_MAX_PROBE = 32
+
+
+def _hash_u32(x):
+    """lowbias32 avalanche hash (uint32 → uint32), the index's bucket fn."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
 
 
 class KVResult(NamedTuple):
@@ -97,12 +129,8 @@ class KVStoreState(NamedTuple):
     slot_ctr: jax.Array       # (S,) uint32 — per-slot reuse counters (host)
     free_stack: jax.Array     # (S,) int32 — host-local free slots
     free_top: jax.Array       # () int32
-    idx_state: jax.Array      # (C,) int8
-    idx_key: jax.Array        # (C,) uint32
-    idx_node: jax.Array       # (C,) int32
-    idx_slot: jax.Array       # (C,) int32
-    idx_ctr: jax.Array        # (C,) uint32
-    idx_overflow: jax.Array   # () bool — local index ran out of space
+    idx: jax.Array            # (C, 5) int32: state|key_bits|node|slot|ctr_bits
+    idx_overflow: jax.Array   # () bool — a probe window ran out of space
     acks: SSTState            # tracker ack counters
 
 
@@ -117,12 +145,21 @@ def _i2u(x):
 class KVStore(Channel):
     def __init__(self, parent, name: str, mgr: Manager, *,
                  slots_per_node: int, value_width: int = 2,
-                 num_locks: int = 8, index_capacity: int | None = None):
+                 num_locks: int = 8, index_capacity: int | None = None,
+                 index_max_probe: int | None = None,
+                 reference_impl: bool = False):
         super().__init__(parent, name, mgr)
         self.S = int(slots_per_node)
         self.W = int(value_width)
         self.L = int(num_locks)
         self.C = int(index_capacity or (self.S * self.P * 2))
+        # bounded probe window of the hash index; a window no larger than C
+        # degenerates gracefully (PROBE == C probes the whole table).
+        self.PROBE = min(self.C, int(index_max_probe or DEFAULT_MAX_PROBE))
+        # reference_impl=True: O(C) flat-scan index + sequential tracker
+        # apply — the executable specification, kept hot-swappable so the
+        # benchmark suite can measure the work-proportional paths against it.
+        self.reference_impl = bool(reference_impl)
         self.locks = TicketLockArray(self, "locks", mgr, num_locks=self.L)
         self.rows_region = SharedRegion(self, "data", mgr, slots=self.S,
                                         item_shape=(self.W + 3,),
@@ -130,7 +167,7 @@ class KVStore(Channel):
         self.acks = SST(self, "tracker_acks", mgr, shape=(), dtype=jnp.uint32)
         # the local index is private memory, not a network region, but we
         # account for it in the ledger like the paper's process heap.
-        self.declare_region("index", (self.C, 4), jnp.int32)
+        self.declare_region("index", (self.C, 5), jnp.int32)
 
     # -- row encoding ------------------------------------------------------------
     def encode_row(self, payload, ctr, valid):
@@ -157,21 +194,70 @@ class KVStore(Channel):
             free_stack=jnp.broadcast_to(jnp.arange(self.S, dtype=jnp.int32),
                                         (P, self.S)),
             free_top=jnp.full((P,), self.S, jnp.int32),
-            idx_state=jnp.zeros((P, self.C), jnp.int8),
-            idx_key=jnp.zeros((P, self.C), jnp.uint32),
-            idx_node=jnp.zeros((P, self.C), jnp.int32),
-            idx_slot=jnp.zeros((P, self.C), jnp.int32),
-            idx_ctr=jnp.zeros((P, self.C), jnp.uint32),
+            idx=jnp.zeros((P, self.C, 5), jnp.int32),
             idx_overflow=jnp.zeros((P,), jnp.bool_),
             acks=self.acks.init_state())
 
-    # -- local index -------------------------------------------------------------
+    # -- local index (open-addressing hash table, DESIGN.md §7) ------------------
+    def _probe_window(self, key):
+        """Loop-invariant probe positions for ``key``: the PROBE-length
+        linear window starting at ``hash(key) % C`` (wrapping)."""
+        key = jnp.asarray(key, jnp.uint32)
+        h = (_hash_u32(key) % jnp.uint32(self.C)).astype(jnp.int32)
+        return (h + jnp.arange(self.PROBE, dtype=jnp.int32)) % self.C
+
+    def _probe(self, idx, key):
+        """One bounded linear-probe pass for ``key`` over the (C, 5) index.
+
+        Returns ``(has_match, match_pos, has_free, free_pos)`` over the
+        PROBE-position window starting at ``hash(key) % C``:
+
+        * a *match* is a USED position holding ``key`` with no EMPTY
+          position before it in the window (an EMPTY terminates the chain —
+          tombstones do not, so deletion never hides a later entry);
+        * a *free* position is EMPTY or tombstone — the insert target is
+          the first one, which reclaims tombstones and, because inserts
+          always take the first free position, preserves the no-EMPTY-
+          before-an-entry invariant the lookup termination relies on.
+
+        O(PROBE) work in ONE row gather; every caller (lookup, tracker
+        apply) shares this logic so the invariants live in one place.
+        """
+        key = jnp.asarray(key, jnp.uint32)
+        pos_w = self._probe_window(key)
+        w = idx[pos_w]                                 # (PROBE, 5) row gather
+        states = w[:, IDX_STATE]
+        emp = (states == _EMPTY).astype(jnp.int32)
+        before_empty = (jnp.cumsum(emp) - emp) == 0   # strictly before 1st EMPTY
+        match = before_empty & (states == _USED) & (w[:, IDX_KEY] == _u2i(key))
+        free = (states == _EMPTY) | (states == _TOMB)
+        return (jnp.any(match), pos_w[jnp.argmax(match)],
+                jnp.any(free), pos_w[jnp.argmax(free)])
+
     def _index_lookup(self, st: KVStoreState, key):
-        match = (st.idx_state == _USED) & (st.idx_key == key)
+        """key → (found, pos, node, slot, ctr); dispatches to the O(PROBE)
+        hash probe or, for reference-impl stores, the O(C) flat scan.  The
+        two are pinned bit-for-bit by the regression suite (not-found
+        lookups report pos 0 in both, matching argmax-of-all-False)."""
+        if self.reference_impl:
+            return self._index_lookup_reference(st, key)
+        return self._index_lookup_hash(st, key)
+
+    def _index_lookup_hash(self, st: KVStoreState, key):
+        found, mpos, _hf, _fp = self._probe(st.idx, key)
+        pos = jnp.where(found, mpos, 0)
+        row = st.idx[pos]
+        return (found, pos, row[IDX_NODE], row[IDX_SLOT], _i2u(row[IDX_CTR]))
+
+    def _index_lookup_reference(self, st: KVStoreState, key):
+        """The original flat associative scan — O(C) per key, kept verbatim
+        as the executable specification the hash probe is pinned against."""
+        match = (st.idx[:, IDX_STATE] == _USED) \
+            & (st.idx[:, IDX_KEY] == _u2i(key))
         found = jnp.any(match)
         pos = jnp.argmax(match)
-        return (found, pos, st.idx_node[pos], st.idx_slot[pos],
-                st.idx_ctr[pos])
+        row = st.idx[pos]
+        return (found, pos, row[IDX_NODE], row[IDX_SLOT], _i2u(row[IDX_CTR]))
 
     # -- lock-free GET (paper Fig. 3 read path) -------------------------------------
     def _get(self, st: KVStoreState, key, pred):
@@ -179,7 +265,13 @@ class KVStore(Channel):
         found_idx, _pos, node, slot, ctr = self._index_lookup(st, key)
 
         def read_once(_):
-            row = colls.remote_read(st.rows.buf, node, slot, self.axis)
+            # locality tier: only live GET lanes ride the wire, and a lane
+            # addressing my own node is served from local memory (zero
+            # modeled wire bytes in the traffic ledger).
+            row = colls.remote_read(st.rows.buf, node, slot, self.axis,
+                                    pred=pred & found_idx,
+                                    ledger=self.mgr.traffic,
+                                    verb=f"{self.full_name}.get")
             payload, row_ctr, valid, csum_ok = self.decode_row(row)
             return payload, row_ctr, valid, csum_ok
 
@@ -223,9 +315,14 @@ class KVStore(Channel):
             found_idx, node, slot, ctr = look
 
         def read_all(_):
+            # locality tier: dead lanes (disabled / key absent) and
+            # self-targeted lanes are masked out of the wire tensors; self
+            # lanes come from local memory at zero modeled wire bytes.
             rows = colls.remote_read_batch(
                 st.rows.buf, node.astype(jnp.int32),
-                slot.astype(jnp.int32), self.axis)       # (B, W+3)
+                slot.astype(jnp.int32), self.axis,
+                preds=pred & found_idx, ledger=self.mgr.traffic,
+                verb=f"{self.full_name}.get_batch")      # (B, W+3)
             return jax.vmap(self.decode_row)(rows)
 
         def cond(c):
@@ -257,14 +354,139 @@ class KVStore(Channel):
         N is P for single-op rounds and P·B for windows (participant-major,
         so record order IS participant-then-window order).  Returns
         (state, applied (N,) bool): kind-1 records miss when the local index
-        has no free position (``idx_overflow`` latched), kind-2 when the key
-        is already gone; the issuing op must then report failure.
+        has no free position in their probe window (``idx_overflow``
+        latched), kind-2 when the key is already gone; the issuing op must
+        then report failure.
 
-        Live records are compacted to the front (stable, so the
-        participant-then-window order is preserved) and applied under a
+        Dispatches to the vectorized wave scheduler (cost: one batched
+        scatter per conflict wave) or, for reference-impl stores, the
+        sequential per-record sweep.
+        """
+        if self.reference_impl:
+            return self._apply_tracker_reference(st, recs)
+        return self._apply_tracker_vectorized(st, recs)
+
+    def _apply_tracker_vectorized(self, st: KVStoreState, recs):
+        """Wave-scheduled tracker application: conflict-free record groups
+        apply as ONE batched scatter each.
+
+        Per wave, a record is *eligible* when no earlier record of the same
+        key is still pending (per-lock FIFO: same key ⇒ same lock, so the
+        integrated protocol emits at most one record per key per round and
+        this blocking only bites on adversarial direct-fed histories; when
+        a chain does block, every record after it waits, keeping failure
+        commits FIFO-exact).  Eligible deletes hit distinct USED positions
+        (distinct keys) and eligible inserts race for free positions with
+        earliest-record-wins arbitration — losers retry next wave against
+        the updated table, reproducing the sequential first-free choice.
+        Hence every wave's winners touch **distinct** index positions and
+        land in one scatter; the wave count is the conflict depth (1 for
+        typical windows), not P·B, and per-record work is O(PROBE), not
+        O(C).
+
+        Failure commits respect FIFO order: a delete miss is final at
+        eligibility (an earlier same-key record would have blocked it); an
+        insert declares overflow only once every earlier record retired,
+        since an earlier delete may still free a window position.
+
+        XLA-CPU gather/scatter cost is per-row, so the wave loop works on
+        the (C, 5) row table directly: a single row gather feeds all N
+        probes and a single row scatter commits a wave; the remaining
+        effects (host slot GC, the overflow latch) are applied once
+        post-loop.  A dead round (no live records — UPDATE/GET-only) costs
+        one loop-condition check plus two dropped scatters.
+        """
+        me = colls.my_id(self.axis)
+        N = recs.shape[0]
+        kind = recs[:, 0]
+        key_b = recs[:, 1]
+        key = _i2u(key_b)
+        node = recs[:, 2]
+        slot = recs[:, 3]
+        ctr_b = recs[:, 4]
+        live = kind != 0
+        is_ins = kind == 1
+        is_del = kind == 2
+        order = jnp.arange(N, dtype=jnp.int32)
+
+        def wave(carry):
+            # all setup lives inside the body: a dead round (no live
+            # records) costs the loop-condition check and nothing else, and
+            # live rounds recompute these cheap (N,)-shaped quantities once
+            # per conflict wave.
+            idx_c, pending, applied = carry
+            earlier = order[None, :] < order[:, None]  # [i, j]: j precedes i
+            same_key_earlier = earlier & (key[None, :] == key[:, None]) \
+                & live[None, :]
+            # probe windows are loop-invariant: only table contents change
+            pos_w = jax.vmap(self._probe_window)(key)          # (N, PROBE)
+            # committed rows: inserts [USED|key|node|slot|ctr], deletes
+            # [TOMB|0|node|slot|ctr] (a delete's node/slot/ctr ARE the
+            # entry's current values — the service round read them here)
+            upd = jnp.stack(
+                [jnp.where(is_ins, _USED, _TOMB).astype(jnp.int32),
+                 jnp.where(is_ins, key_b, 0), node, slot, ctr_b], axis=-1)
+            blocked = jnp.any(same_key_earlier & pending[None, :], axis=1)
+            after_blocked = jnp.any(earlier & blocked[None, :], axis=1)
+            elig = pending & ~blocked & ~after_blocked
+            w = idx_c[pos_w]                                  # (N, PROBE, 5)
+            states = w[..., IDX_STATE]
+            emp = (states == _EMPTY).astype(jnp.int32)
+            before_empty = (jnp.cumsum(emp, axis=1) - emp) == 0
+            m = before_empty & (states == _USED) \
+                & (w[..., IDX_KEY] == key_b[:, None])
+            free = (states == _EMPTY) | (states == _TOMB)
+            mpos = jnp.take_along_axis(
+                pos_w, jnp.argmax(m, axis=1)[:, None], axis=1)[:, 0]
+            fpos = jnp.take_along_axis(
+                pos_w, jnp.argmax(free, axis=1)[:, None], axis=1)[:, 0]
+            tgt = jnp.where(is_ins, fpos, mpos)
+            valid_tgt = jnp.where(is_ins, jnp.any(free, axis=1),
+                                  jnp.any(m, axis=1))
+            cand = elig & valid_tgt
+            # insert position races: earliest candidate wins, losers retry
+            race = earlier & (tgt[None, :] == tgt[:, None]) \
+                & (cand & is_ins)[None, :]
+            lost = is_ins & jnp.any(race, axis=1)
+            win = cand & ~lost
+            earlier_pending = jnp.any(earlier & pending[None, :], axis=1)
+            fail = elig & ~valid_tgt & (is_del | ~earlier_pending)
+            # winners occupy distinct positions: ONE row scatter per wave
+            row = jnp.where(win, tgt, self.C)
+            idx_c = idx_c.at[row].set(upd, mode="drop")
+            return idx_c, pending & ~(win | fail), applied | win
+
+        idx, _pending, applied = jax.lax.while_loop(
+            lambda c: jnp.any(c[1]), wave,
+            (st.idx, live, jnp.zeros((N,), jnp.bool_)))
+
+        # ---- post-loop commits (nothing below feeds back into scheduling)
+        # slot GC at the hosting node (counter-based GC), in record order
+        host_free = applied & is_del & (node == me)
+        hf = host_free.astype(jnp.int32)
+        hrank = jnp.cumsum(hf) - hf
+        back = jnp.where(host_free,
+                         jnp.clip(st.free_top + hrank, 0, self.S - 1),
+                         self.S)
+        st = st._replace(
+            idx=idx,
+            idx_overflow=st.idx_overflow | jnp.any(live & is_ins & ~applied),
+            free_stack=st.free_stack.at[back].set(slot, mode="drop"),
+            free_top=st.free_top + jnp.sum(hf))
+        return st, applied
+
+    def _apply_tracker_reference(self, st: KVStoreState, recs):
+        """The original sequential sweep — the executable specification.
+
+        Flat-index placement policy (first EMPTY position anywhere, O(C)
+        argmax; deletes clear back to EMPTY — the flat scan needs no
+        tombstones).  Live records are compacted to the front (stable, so
+        the participant-then-window order is preserved) and applied under a
         dynamic-trip-count loop: a round with r live records costs r
-        sequential applications, not N — UPDATE-only and GET-only rounds
-        cost zero.
+        sequential applications.  Logically equivalent to the vectorized
+        wave scheduler (same applied flags, same key → (node, slot, ctr)
+        mapping, same free-slot accounting); index *layouts* differ by
+        placement policy, which is why each impl pairs with its own lookup.
         """
         me = colls.my_id(self.axis)
         live = recs[:, 0] != 0
@@ -282,33 +504,26 @@ class KVStore(Channel):
             kind, key_b, node, slot, ctr_b = (recs[p, 0], recs[p, 1],
                                               recs[p, 2], recs[p, 3],
                                               recs[p, 4])
-            key = _i2u(key_b)
-            ctr = _i2u(ctr_b)
             # INSERT: place at first empty index position
-            free = st_c.idx_state == _EMPTY
+            free = st_c.idx[:, IDX_STATE] == _EMPTY
             has_free = jnp.any(free)
             ins_pos = jnp.argmax(free)
             do_ins = (kind == 1) & has_free
             overflow = st_c.idx_overflow | ((kind == 1) & ~has_free)
             # DELETE: clear matching entry; host frees the slot
-            match = (st_c.idx_state == _USED) & (st_c.idx_key == key)
+            match = (st_c.idx[:, IDX_STATE] == _USED) \
+                & (st_c.idx[:, IDX_KEY] == key_b)
             del_pos = jnp.argmax(match)
             do_del = (kind == 2) & jnp.any(match)
             pos = jnp.where(do_ins, ins_pos, del_pos)
-            new_state_v = jnp.where(
-                do_ins, _USED, jnp.where(do_del, _EMPTY,
-                                         st_c.idx_state[pos]))
+            old = st_c.idx[pos]
+            ins_row = jnp.stack([jnp.int32(_USED), key_b, node, slot, ctr_b])
+            del_row = jnp.concatenate(
+                [jnp.zeros((2,), jnp.int32), old[IDX_NODE:]])
+            new_row = jnp.where(do_ins, ins_row,
+                                jnp.where(do_del, del_row, old))
             st_c = st_c._replace(
-                idx_state=st_c.idx_state.at[pos].set(new_state_v),
-                idx_key=st_c.idx_key.at[pos].set(
-                    jnp.where(do_ins, key, jnp.where(do_del, jnp.uint32(0),
-                                                     st_c.idx_key[pos]))),
-                idx_node=st_c.idx_node.at[pos].set(
-                    jnp.where(do_ins, node, st_c.idx_node[pos])),
-                idx_slot=st_c.idx_slot.at[pos].set(
-                    jnp.where(do_ins, slot, st_c.idx_slot[pos])),
-                idx_ctr=st_c.idx_ctr.at[pos].set(
-                    jnp.where(do_ins, ctr, st_c.idx_ctr[pos])),
+                idx=st_c.idx.at[pos].set(new_row),
                 idx_overflow=overflow)
             # slot GC at the hosting node (paper: counter-based GC)
             host_frees = do_del & (node == me)
@@ -405,9 +620,72 @@ class KVStore(Channel):
         success = ins_ok | do_upd | do_del
         return st, pending & ~holding, holding, success
 
+    # -- the precomputed service schedule ---------------------------------------------
+    def _service_schedule(self, op, key, lock_id, ticket, want):
+        """Closed-form work-proportional schedule: each lane's service
+        round, computed ONCE per window from the gathered lane metadata
+        (one small all-gather + (P·B)² masks, all outside the service
+        loop).
+
+        Two lane pairs on the same lock *conflict* and must serialize in
+        ticket order: same-key pairs that are not both UPDATEs (the later
+        op's outcome depends on the earlier one's index/validity effect),
+        and INSERT behind DELETE (the insert must wait for the delete's
+        slot GC so a full stack can recycle within a window).  Same-key
+        UPDATE pairs commute: they leave the index untouched and the
+        round's batched row write lands them last-ticket-wins, which IS the
+        per-lock FIFO outcome — so a zipf-hot key no longer costs a round
+        per update.
+
+        A lane is *bad* when it conflicts with any earlier lane in its
+        queue; its round is 1 + the number of bad lanes at-or-before it
+        (each bad lane is a serialization barrier, and lanes never overtake
+        a barrier — overtaking could steal free slots from a stalled
+        earlier insert and diverge from the FIFO oracle).  Service rounds
+        therefore cost the per-lock conflict depth, not the queue depth: a
+        window of P·B distinct-key mutations runs in ONE round regardless
+        of how the stripe hashes them.
+
+        Returns (round_no (B,) int32 — 0 for non-mutating lanes,
+        write_winner (B,) bool — False for an UPDATE whose row write is
+        superseded by a later-ticket same-key UPDATE in the same round).
+        """
+        me = colls.my_id(self.axis)
+        B = op.shape[0]
+        lane_meta = jnp.stack(
+            [lock_id.astype(jnp.int32), _u2i(ticket), _u2i(key),
+             op.astype(jnp.int32), want.astype(jnp.int32)],
+            axis=-1)                                           # (B, 5)
+        g = jax.lax.all_gather(lane_meta, self.axis, axis=0)   # (P, B, 5)
+        g = g.reshape(-1, 5)                                   # (P·B, 5)
+        g_lock, g_tick, g_key, g_op, g_want = (
+            g[:, 0], _i2u(g[:, 1]), g[:, 2], g[:, 3], g[:, 4] != 0)
+        queued = g_want[None, :] & (g_lock[None, :] == g_lock[:, None])
+        before = queued & (g_tick[None, :] < g_tick[:, None])  # [i,j]: j<i
+        both_upd = (g_op[:, None] == UPDATE) & (g_op[None, :] == UPDATE)
+        conflict = ((g_key[None, :] == g_key[:, None]) & ~both_upd) \
+            | ((g_op[:, None] == INSERT) & (g_op[None, :] == DELETE))
+        bad = jnp.any(before & conflict, axis=1)
+        at_or_before = queued & (g_tick[None, :] <= g_tick[:, None])
+        round_all = jnp.where(
+            g_want, 1 + jnp.sum((at_or_before & bad[None, :])
+                                .astype(jnp.int32), axis=1), 0)
+        # an UPDATE's row write is superseded when a later-ticket same-key
+        # UPDATE lands in the same round (same round is implied for
+        # co-queued same-key updates unless a barrier splits them — and a
+        # split later round still wins, so checking the round is exact)
+        same_round = round_all[None, :] == round_all[:, None]
+        superseded = both_upd & (g_key[None, :] == g_key[:, None]) \
+            & same_round & (g_tick[None, :] > g_tick[:, None]) \
+            & g_want[None, :]
+        winner_all = ~jnp.any(superseded, axis=1)
+        return (jax.lax.dynamic_slice(round_all, (me * B,), (B,)),
+                jax.lax.dynamic_slice(winner_all, (me * B,), (B,)))
+
     # -- one service round over the whole (B,) window ---------------------------------
     def _service_window(self, st: KVStoreState, op, key, value, lock_id,
-                        ticket, pending, look):
+                        ticket, pending, look, serve=None,
+                        write_winner=None):
         """Vectorized :meth:`_service_round`: every window slot whose lock
         this participant currently holds executes in this round.
 
@@ -422,10 +700,30 @@ class KVStore(Channel):
         re-probing the (C,)-entry index every round the view is refreshed
         incrementally from the records this round applied; the refreshed
         view is returned for the next round.
+
+        Serving is **work-proportional**: each lock queue serves its longest
+        conflict-free prefix per round, not one ticket.  Mutations of
+        distinct keys commute (distinct live keys mean distinct rows, and
+        the tracker applies the round's records in ticket order anyway), so
+        only two pair patterns serialize: same key — the later op's outcome
+        depends on the earlier one — and INSERT behind DELETE, which must
+        wait for the delete's slot GC so a full stack can recycle within a
+        window.  The first conflicting lane stalls its whole queue suffix
+        (no overtaking — ticket FIFO remains the linearization order, and
+        queue jumping could steal free slots from a stalled earlier insert).
+        Service rounds therefore cost the per-lock *conflict depth*, not the
+        max queue depth: a window of P·B distinct-key UPDATEs completes in
+        ONE round even when a stripe lock queues 30 of them.
         """
         me = colls.my_id(self.axis)
         B = op.shape[0]
-        holding = pending & self.locks.holds(st.locks, lock_id, ticket)
+        if serve is None:
+            # PR-1 baseline serving: one ticket per lock per round
+            holding = pending & self.locks.holds(st.locks, lock_id, ticket)
+            upd_winner = jnp.ones((B,), jnp.bool_)
+        else:
+            holding = pending & serve
+            upd_winner = write_winner
         found, node, slot, ctr = look
         do_ins = holding & (op == INSERT) & ~found
         do_upd = holding & (op == UPDATE) & found
@@ -490,9 +788,13 @@ class KVStore(Channel):
             lambda v, c: self.encode_row(v, c, True))(value, ctr)
         row_del = jax.vmap(lambda c: self.encode_row(
             jnp.zeros((self.W,), jnp.int32), c, False))(ctr)
+        # Same-key UPDATEs may co-serve; the schedule precomputed which
+        # lane's write survives (last ticket), so superseded lanes are
+        # simply masked out and the batch stays collision-free
+        # (assume_unique) — no in-loop winner mask needed.
         rows2, _ = self.rows_region.write_batch(
             st.rows, node, slot, jnp.where(do_upd[:, None], row_upd, row_del),
-            preds=do_upd | do_del, assume_unique=True)
+            preds=(do_upd & upd_winner) | do_del, assume_unique=True)
         st = st._replace(rows=rows2)
 
         # ---- INSERT phase 2: mark valid **after** every peer acknowledged
@@ -502,10 +804,16 @@ class KVStore(Channel):
         st = st._replace(rows=self.rows_region.local_write_batch(
             st.rows, my_slot, row_valid, preds=gate))
 
-        # ---- release every lock held this round (effects joined first)
-        holding_rel = join(AckKey([st.rows.buf]), holding)
-        st = st._replace(locks=self.locks.release_window(
-            st.locks, lock_id, holding_rel))
+        # ---- release every lock held this round (effects joined first).
+        # The scheduled path defers the now_serving bump to the end of the
+        # window (op_window): no lane reads now_serving mid-window — the
+        # precomputed schedule replaced the holds() test — so one batched
+        # bump by the acquire totals is observably identical and saves a
+        # (P, B, L) count reduction per round.
+        if serve is None:
+            holding_rel = join(AckKey([st.rows.buf]), holding)
+            st = st._replace(locks=self.locks.release_window(
+                st.locks, lock_id, holding_rel))
 
         # ---- refresh the per-lane index view from this round's records
         # (each live key is in at most one record, so order is irrelevant)
@@ -546,6 +854,10 @@ class KVStore(Channel):
         want_lock = (ops == INSERT) | (ops == UPDATE) | (ops == DELETE)
         lstate, ticket = self.locks.acquire_window(st.locks, lock_id,
                                                    want_lock)
+        # every acquired ticket completes within this window, so the
+        # deferred end-of-window release bumps now_serving by exactly the
+        # ticket totals the acquire added (free to recover as a diff)
+        lock_totals = lstate.next_ticket - st.locks.next_ticket
         st = st._replace(locks=lstate)
 
         # one (B, C) index probe for the whole window; the service loop
@@ -559,20 +871,39 @@ class KVStore(Channel):
         get_val, get_found, retries = self._get_window(st, keys, ops == GET,
                                                        look=look0)
 
+        if self.reference_impl:
+            round_no, write_winner = None, None
+        else:
+            # work-proportional schedule, computed once outside the loop
+            round_no, write_winner = self._service_schedule(
+                ops, keys, lock_id, ticket, want_lock)
+
         def cond(c):
-            _st, pending, _succ, _look = c
+            _st, pending, _succ, _look, _r = c
             return jax.lax.psum(
                 jnp.any(pending).astype(jnp.int32), self.axis) > 0
 
         def body(c):
-            st_c, pending, succ, look = c
+            st_c, pending, succ, look, r = c
+            serve = None if round_no is None else (round_no == r)
             with self.mgr.no_tracking():
                 st_c, pending, _held, s_now, look = self._service_window(
-                    st_c, ops, keys, values, lock_id, ticket, pending, look)
-            return st_c, pending, succ | s_now, look
+                    st_c, ops, keys, values, lock_id, ticket, pending, look,
+                    serve=serve, write_winner=write_winner)
+            return st_c, pending, succ | s_now, look, r + 1
 
-        st, _pending, succ, _look = jax.lax.while_loop(
-            cond, body, (st, want_lock, jnp.zeros((B,), jnp.bool_), look0))
+        st, _pending, succ, _look, _r = jax.lax.while_loop(
+            cond, body, (st, want_lock, jnp.zeros((B,), jnp.bool_), look0,
+                         jnp.int32(1)))
+
+        if not self.reference_impl:
+            # deferred batched release: critical-section effects joined
+            # first (one end-of-window release fence, §5.4), then every
+            # lock's now_serving advances by its completed-ticket count
+            gate = join(AckKey([st.rows.buf]), True)
+            ns = jnp.where(gate, st.locks.now_serving + lock_totals,
+                           st.locks.now_serving)
+            st = st._replace(locks=st.locks._replace(now_serving=ns))
 
         is_get = ops == GET
         return st, KVResult(

@@ -126,9 +126,10 @@ class TicketLockArray(Channel):
             lock_ids | (jnp.asarray(flags, jnp.int32) << 30), self.axis)
         lids = packed & ((1 << 30) - 1)                       # (P, B)
         gflags = (packed >> 30) != 0
-        onehot = (lids[..., None] == jnp.arange(self.L)[None, None, :]) \
-            & gflags[..., None]
-        totals = jnp.sum(onehot.astype(jnp.uint32), axis=(0, 1))       # (L,)
+        # per-lock totals as a scatter-add over the P·B requests — XLA-CPU
+        # cost tracks the request count, not the dense (P·B, L) one-hot
+        totals = jnp.zeros((self.L,), jnp.uint32).at[lids.reshape(-1)].add(
+            gflags.reshape(-1).astype(jnp.uint32), mode="drop")    # (L,)
         if not need_rank:
             return None, totals
         me = colls.my_id(self.axis)

@@ -70,14 +70,19 @@ class SharedRegion(Channel):
         return state._replace(buf=state.buf.at[row].set(values, mode="drop"))
 
     # -- one-sided access (collectively served; see colls.py) -------------------
-    def read(self, state: SharedRegionState, target, index):
+    def read(self, state: SharedRegionState, target, index, pred=True):
         """One-sided read of row ``index`` at participant ``target``."""
-        val = colls.remote_read(state.buf, target, index, self.axis)
+        val = colls.remote_read(state.buf, target, index, self.axis,
+                                pred=pred, ledger=self.mgr.traffic,
+                                verb=f"{self.full_name}.read")
         ack = make_ack(val, "read", self.full_name, ALL_PEERS, self.item_nbytes)
         return val, self.mgr.track(ack)
 
-    def read_batch(self, state: SharedRegionState, targets, indices):
-        vals = colls.remote_read_batch(state.buf, targets, indices, self.axis)
+    def read_batch(self, state: SharedRegionState, targets, indices,
+                   preds=None):
+        vals = colls.remote_read_batch(state.buf, targets, indices, self.axis,
+                                       preds=preds, ledger=self.mgr.traffic,
+                                       verb=f"{self.full_name}.read_batch")
         ack = make_ack(vals, "read", self.full_name, ALL_PEERS,
                        self.item_nbytes * int(targets.shape[0]))
         return vals, self.mgr.track(ack)
@@ -86,7 +91,8 @@ class SharedRegion(Channel):
               pred=True):
         """One-sided write of ``value`` to row ``index`` at ``target``."""
         buf = colls.remote_write(state.buf, target, index, value, self.axis,
-                                 pred=pred)
+                                 pred=pred, ledger=self.mgr.traffic,
+                                 verb=f"{self.full_name}.write")
         new = state._replace(buf=buf)
         ack = make_ack(buf, "write", self.full_name, ALL_PEERS, self.item_nbytes)
         return new, self.mgr.track(ack)
@@ -95,7 +101,9 @@ class SharedRegion(Channel):
                     preds=None, assume_unique=False):
         buf = colls.remote_write_batch(state.buf, targets, indices, values,
                                        self.axis, preds=preds,
-                                       assume_unique=assume_unique)
+                                       assume_unique=assume_unique,
+                                       ledger=self.mgr.traffic,
+                                       verb=f"{self.full_name}.write_batch")
         new = state._replace(buf=buf)
         ack = make_ack(buf, "write", self.full_name, ALL_PEERS,
                        self.item_nbytes * int(targets.shape[0]))

@@ -103,6 +103,64 @@ class RegionInfo:
     nbytes: int
 
 
+class TrafficLedger:
+    """Per-verb modeled wire-byte accounting (DESIGN.md §2.3).
+
+    The one-sided verbs in :mod:`repro.core.colls` report the *modeled*
+    bytes each call would put on the wire — counting only enabled,
+    non-self-targeted lanes, so locality-placed accesses (``target == me``)
+    are measured at zero, keeping the roofline story honest about the
+    paper's NUMA-style placement claim.
+
+    Recording happens through ``jax.debug.callback`` with a traced scalar,
+    so the counts reflect runtime predicates (which lanes were actually
+    enabled / self-targeted), not static worst cases.  The ledger is
+    **disabled by default** and the enable check happens at *trace* time:
+    callables jitted while the ledger is disabled carry no callbacks and
+    pay nothing.  To account a workload, call :meth:`enable` and build a
+    fresh jitted callable (a previously traced one will not re-trace).
+
+    Under the vmap binding the callback fires once per participant, so
+    totals are cluster-wide wire bytes (each participant accounts its own
+    outgoing lanes exactly once).
+    """
+
+    def __init__(self):
+        self.enabled = False
+        self.counts: Dict[str, Dict[str, float]] = {}
+
+    def enable(self):
+        self.enabled = True
+        return self
+
+    def disable(self):
+        self.enabled = False
+        return self
+
+    def reset(self):
+        self.counts = {}
+        return self
+
+    def record(self, verb: str, wire_bytes):
+        """Record ``wire_bytes`` (a traced scalar) against ``verb``.
+
+        Must be called inside a trace; colls verbs gate on ``enabled``
+        before calling so disabled ledgers never emit callbacks.
+        """
+        def _cb(b, verb=verb):
+            entry = self.counts.setdefault(verb, {"calls": 0, "bytes": 0.0})
+            entry["calls"] += 1
+            entry["bytes"] += float(b)
+
+        jax.debug.callback(_cb, jnp.asarray(wire_bytes, jnp.float32))
+
+    def total_bytes(self) -> float:
+        return sum(e["bytes"] for e in self.counts.values())
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        return {k: dict(v) for k, v in sorted(self.counts.items())}
+
+
 class _TraceCtx(threading.local):
     def __init__(self):
         self.outstanding: List[AckKey] = []
@@ -119,6 +177,8 @@ class Manager:
         self._trace = _TraceCtx()
         # fence statistics (static, per-trace) — reported by benchmarks
         self.fence_counts = {s: 0 for s in FenceScope}
+        # modeled wire traffic per verb (DESIGN.md §2.3); disabled by default
+        self.traffic = TrafficLedger()
 
     # -- registry (join/connect analogue) -----------------------------------
     @property
@@ -145,6 +205,11 @@ class Manager:
     def memory_ledger_bytes(self) -> int:
         """Total registered network memory per participant (hugepage pool)."""
         return sum(r.nbytes for r in self.regions.values())
+
+    def traffic_ledger_bytes(self) -> float:
+        """Total modeled wire bytes recorded by the traffic ledger
+        (cluster-wide; 0.0 while the ledger is disabled)."""
+        return self.traffic.total_bytes()
 
     # -- outstanding-op tracking --------------------------------------------
     @contextlib.contextmanager

@@ -53,9 +53,13 @@ class ServingEngine:
         self.mgr = make_manager(P_NODES)
         pages_per_node = max(
             8, max_batch * (max_seq // PAGE + 1) * 2 // P_NODES)
+        # lock stripe sized to the outstanding window: _kv_ops submits
+        # (P_NODES, MAX_WINDOW) windows, so an undersized stripe would turn
+        # window throughput into max-queue-depth service rounds (the
+        # bench_kvstore footgun); the engine test asserts this invariant.
         self.pages = KVStore(None, "pagetable", self.mgr,
                              slots_per_node=pages_per_node, value_width=2,
-                             num_locks=8,
+                             num_locks=P_NODES * MAX_WINDOW,
                              index_capacity=4 * pages_per_node * P_NODES)
         self.queue = SharedQueue(None, "admission", self.mgr,
                                  slots_per_node=64, width=1)
@@ -194,7 +198,12 @@ class ServingEngine:
 
     def stats(self):
         return {"kv_ops": {k: v for k, v in self.op_counts.items()},
-                "registered_region_bytes": self.mgr.memory_ledger_bytes()}
+                "registered_region_bytes": self.mgr.memory_ledger_bytes(),
+                # modeled wire bytes per verb (DESIGN.md §2.3); zero unless
+                # the manager's traffic ledger was enabled before the
+                # engine's jitted steps were built
+                "modeled_wire_bytes": self.mgr.traffic_ledger_bytes(),
+                "traffic_by_verb": self.mgr.traffic.summary()}
 
 
 def _q_round(queue, st, val, enq_want, deq_want):

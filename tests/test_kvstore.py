@@ -124,8 +124,29 @@ class Oracle:
         return results
 
 
+def assert_lookup_pinned(store, store_mgr, st, keys=range(1, 33)):
+    """Pin the O(PROBE) hash probe bit-for-bit against the O(C) flat scan
+    on the store's current index state (found, pos, node, slot, ctr — all
+    five lanes, including the pos-0 convention for missing keys)."""
+    ks = jnp.asarray(list(keys), jnp.uint32)
+
+    @jax.jit
+    def both(st, ks):
+        def prog(s, k):
+            a = jax.vmap(lambda q: store._index_lookup_hash(s, q))(k)
+            b = jax.vmap(lambda q: store._index_lookup_reference(s, q))(k)
+            return a, b
+        return store_mgr.runtime.run(prog, st, jnp.broadcast_to(
+            ks, (store.P,) + ks.shape))
+
+    a, b = both(st, ks)
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
 def check_windows_against_oracle(windows):
     _st, outs = drive_windows(windows)
+    assert_lookup_pinned(kv, mgr, _st)
     oracle = Oracle()
     for rnd, (w, res) in enumerate(zip(windows, outs)):
         expect = oracle.apply_window(w)
@@ -146,6 +167,7 @@ def check_windows_against_oracle(windows):
 
 def check_against_oracle(rounds):
     _st, outs = drive(rounds)
+    assert_lookup_pinned(kv, mgr, _st)
     oracle = Oracle()
     for rnd, (ops, res) in enumerate(zip(rounds, outs)):
         expect = oracle.apply_round(ops)
@@ -282,12 +304,13 @@ class TestAppendixCValidation:
         assert res.retries[1] == 0  # clean read, EMPTY by case 3
 
     def test_case4_counter_mismatch_returns_empty(self):
+        from repro.core.kvstore import IDX_CTR, IDX_KEY
         st = self._seed_state()
         # stale local index at participant 1: ctr behind the slot's counter
-        idx_ctr = np.asarray(st.idx_ctr).copy()
-        pos = np.nonzero(np.asarray(st.idx_key)[1] == 5)[0][0]
-        idx_ctr[1, pos] -= 1
-        st = st._replace(idx_ctr=jnp.asarray(idx_ctr))
+        idx = np.asarray(st.idx).copy()
+        pos = np.nonzero(idx[1, :, IDX_KEY] == 5)[0][0]
+        idx[1, pos, IDX_CTR] -= 1
+        st = st._replace(idx=jnp.asarray(idx))
         res = self._get5(st)
         assert not res.found[1]
         assert res.retries[1] == 0
@@ -567,6 +590,239 @@ class TestRowEncoding:
             (np.asarray(ctr) == 5)
         np.testing.assert_array_equal(accept, [True, False, False, False])
         np.testing.assert_array_equal(np.asarray(payload)[0], v(3))
+
+
+def _np_hash32(x):
+    """Numpy mirror of kvstore._hash_u32 (lowbias32), for crafting keys."""
+    x = np.asarray(x, np.uint64)
+    x = (x ^ (x >> np.uint64(16))) & np.uint64(0xFFFFFFFF)
+    x = (x * np.uint64(0x7FEB352D)) & np.uint64(0xFFFFFFFF)
+    x = (x ^ (x >> np.uint64(15))) & np.uint64(0xFFFFFFFF)
+    x = (x * np.uint64(0x846CA68B)) & np.uint64(0xFFFFFFFF)
+    return ((x ^ (x >> np.uint64(16))) & np.uint64(0xFFFFFFFF)).astype(
+        np.uint32)
+
+
+def _keys_in_bucket(C, bucket, n, start=1):
+    """First n keys ≥ start whose hash lands in ``bucket`` (mod C)."""
+    out, k = [], start
+    while len(out) < n:
+        if int(_np_hash32(k)) % C == bucket:
+            out.append(k)
+        k += 1
+    return out
+
+
+def _recs(*entries):
+    """Tracker records from (kind, key, node, slot, ctr) tuples."""
+    r = np.zeros((len(entries), 5), np.int32)
+    for i, (kind, key, node, slot, ctr) in enumerate(entries):
+        r[i] = [kind, key, node, slot, ctr]
+    return r
+
+
+class _ApplyHarness:
+    """Drive _apply_tracker variants directly (unit level, vmap binding)."""
+
+    def __init__(self, C=8, S=16, probe=None):
+        self.mgr = make_manager(P)
+        self.kv = KVStore(None, f"kv_apply_c{C}_{probe}_{id(self)}",
+                          self.mgr, slots_per_node=S, value_width=W,
+                          num_locks=LOCKS, index_capacity=C,
+                          index_max_probe=probe)
+        self._vec = jax.jit(lambda s, r: self.mgr.runtime.run(
+            self.kv._apply_tracker_vectorized, s, r))
+        self._seq = jax.jit(lambda s, r: self.mgr.runtime.run(
+            self.kv._apply_tracker_reference, s, r))
+
+    def init(self):
+        return self.kv.init_state()
+
+    def apply(self, st, recs_np, variant="vec"):
+        recs = jnp.asarray(np.broadcast_to(recs_np, (P,) + recs_np.shape))
+        fn = self._vec if variant == "vec" else self._seq
+        st, applied = fn(st, recs)
+        return st, np.asarray(applied)[0]
+
+    def lookup(self, st, keys, impl="hash"):
+        ks = jnp.broadcast_to(jnp.asarray(keys, jnp.uint32),
+                              (P, len(keys)))
+        fn = {"hash": self.kv._index_lookup_hash,
+              "ref": self.kv._index_lookup_reference}[impl]
+
+        @jax.jit
+        def run(st, ks):
+            return self.mgr.runtime.run(
+                lambda s, k: jax.vmap(lambda q: fn(s, q))(k), st, ks)
+
+        out = run(st, ks)
+        return jax.tree.map(lambda x: np.asarray(x)[0], out)
+
+
+class TestHashIndex:
+    """Unit tests of the open-addressing index through the tracker-apply
+    path, each cross-checked bit-for-bit against _index_lookup_reference."""
+
+    def _pin(self, h, st, keys):
+        a = h.lookup(st, keys, "hash")
+        b = h.lookup(st, keys, "ref")
+        for la, lb in zip(a, b):
+            np.testing.assert_array_equal(la, lb)
+
+    def test_collision_chain_probes_through(self):
+        C = 8
+        h = _ApplyHarness(C=C)
+        ks = _keys_in_bucket(C, 3, 3)       # three keys, same bucket
+        st, applied = h.apply(h.init(), _recs(
+            *[(1, k, i % P, i, 1) for i, k in enumerate(ks)]))
+        assert applied.all()
+        found, _pos, node, slot, _ctr = h.lookup(st, ks)
+        assert found.all(), "all chain members reachable through the chain"
+        np.testing.assert_array_equal(slot, np.arange(len(ks)))
+        self._pin(h, st, ks + [99, 100])
+
+    def test_probe_wraparound(self):
+        C = 8
+        h = _ApplyHarness(C=C)
+        # fill the tail buckets so a chain starting near C-1 must wrap
+        ks = _keys_in_bucket(C, C - 1, 3)
+        st, applied = h.apply(h.init(), _recs(
+            *[(1, k, 0, i, 1) for i, k in enumerate(ks)]))
+        assert applied.all()
+        pos = h.lookup(st, ks)[1]
+        assert (pos < C).all() and pos[0] == C - 1 and (pos[1:] < C - 1).all(), \
+            "chain wrapped past C-1 to the front of the table"
+        found = h.lookup(st, ks)[0]
+        assert found.all()
+        self._pin(h, st, ks)
+
+    def test_delete_reinsert_through_tombstones(self):
+        C = 8
+        h = _ApplyHarness(C=C)
+        k1, k2, k3 = _keys_in_bucket(C, 5, 3)
+        st, _ = h.apply(h.init(), _recs((1, k1, 0, 0, 1), (1, k2, 1, 1, 1)))
+        # delete the chain head: k2 must stay reachable (tombstone, not
+        # EMPTY, so the probe does not terminate early)
+        st, applied = h.apply(st, _recs((2, k1, 0, 0, 1)))
+        assert applied.all()
+        found, _pos, _n, slot, _c = h.lookup(st, [k1, k2])
+        np.testing.assert_array_equal(found, [False, True])
+        # a fresh insert reclaims the tombstone at the chain head
+        st, applied = h.apply(st, _recs((1, k3, 2, 2, 1)))
+        assert applied.all()
+        found, pos3, _n, slot3, _c = h.lookup(st, [k3])
+        assert found[0] and pos3[0] == int(_np_hash32(k1)) % C, \
+            "reinsert through the tombstone reclaims the freed position"
+        self._pin(h, st, [k1, k2, k3])
+
+    def test_load_factor_one_overflow_latches(self):
+        C = 4
+        h = _ApplyHarness(C=C)      # PROBE == C: window covers the table
+        st, applied = h.apply(h.init(), _recs(
+            *[(1, 10 + i, 0, i, 1) for i in range(C)]))
+        assert applied.all(), "C inserts fill the table to load factor 1"
+        assert not np.asarray(st.idx_overflow).any()
+        st, applied = h.apply(st, _recs((1, 99, 0, C, 1)))
+        assert not applied.any(), "insert into a full table fails"
+        assert np.asarray(st.idx_overflow).all(), \
+            "overflow latches on every participant's replica"
+        # the table is unchanged and still fully readable
+        found = h.lookup(st, [10 + i for i in range(C)])[0]
+        assert found.all()
+        self._pin(h, st, [10 + i for i in range(C)] + [99])
+
+    def test_bounded_probe_overflow_before_capacity(self):
+        # PROBE < C: a clustered window can overflow while the table still
+        # has free positions elsewhere — the documented bounded-probe trade
+        C, PROBE = 16, 4
+        h = _ApplyHarness(C=C, probe=PROBE)
+        ks = _keys_in_bucket(C, 7, PROBE + 1)
+        st, applied = h.apply(h.init(), _recs(
+            *[(1, k, 0, i, 1) for i, k in enumerate(ks)]))
+        np.testing.assert_array_equal(applied, [True] * PROBE + [False])
+        assert np.asarray(st.idx_overflow).all()
+
+
+class TestTrackerApplyEquivalence:
+    """Vectorized wave scheduler vs the sequential reference sweep on
+    adversarial same-key record chains: same applied flags, same logical
+    key → (node, slot, ctr) mapping (via the flat scan, which is layout-
+    agnostic), same free-stack effects, same overflow latch."""
+
+    def _check(self, recs_np, C=8, S=16, hv=None, hs=None):
+        hv = hv or _ApplyHarness(C=C, S=S)
+        hs = hs or _ApplyHarness(C=C, S=S)
+        st_v, app_v = hv.apply(hv.init(), recs_np, "vec")
+        st_s, app_s = hs.apply(hs.init(), recs_np, "seq")
+        np.testing.assert_array_equal(app_v, app_s)
+        keys = sorted(set(int(r[1]) for r in recs_np)) + [999]
+        lv = hv.lookup(st_v, keys, "ref")
+        ls = hs.lookup(st_s, keys, "ref")
+        # logical equality: found everywhere; node/slot/ctr wherever found
+        # (positions may differ — hash vs flat placement policies — and a
+        # missing key's pos-0 row is layout junk in both)
+        np.testing.assert_array_equal(lv[0], ls[0], err_msg="found")
+        fnd = np.asarray(lv[0], bool)
+        for name, a, b in zip("node slot ctr".split(), lv[2:], ls[2:]):
+            np.testing.assert_array_equal(np.asarray(a)[fnd],
+                                          np.asarray(b)[fnd], err_msg=name)
+        np.testing.assert_array_equal(np.asarray(st_v.free_top),
+                                      np.asarray(st_s.free_top))
+        np.testing.assert_array_equal(np.asarray(st_v.free_stack),
+                                      np.asarray(st_s.free_stack))
+        np.testing.assert_array_equal(np.asarray(st_v.idx_overflow),
+                                      np.asarray(st_s.idx_overflow))
+
+    def test_same_key_insert_delete_insert_chain(self):
+        self._check(_recs((1, 7, 0, 0, 1), (2, 7, 0, 0, 1),
+                          (1, 7, 1, 3, 2)))
+
+    def test_interleaved_chains_and_distinct_keys(self):
+        self._check(_recs(
+            (1, 5, 0, 0, 1), (1, 6, 1, 1, 1), (2, 5, 0, 0, 1),
+            (1, 5, 2, 2, 2), (2, 6, 1, 1, 1), (1, 8, 3, 3, 1),
+            (2, 8, 3, 3, 1), (1, 6, 0, 4, 2)))
+
+    def test_delete_miss_and_dead_records(self):
+        self._check(_recs((0, 1, 0, 0, 0), (2, 42, 0, 0, 1),
+                          (1, 3, 0, 1, 1), (0, 2, 0, 0, 0),
+                          (2, 3, 0, 1, 1)))
+
+    def test_host_slot_gc_order_matches(self):
+        # multiple deletes hosted at different nodes: free-stack pushes in
+        # record order at each host
+        recs = _recs(*[(1, 10 + i, i % P, i, 1) for i in range(8)])
+        hv, hs = _ApplyHarness(C=32), _ApplyHarness(C=32)
+        st_v, _ = hv.apply(hv.init(), recs, "vec")
+        st_s, _ = hs.apply(hs.init(), recs, "seq")
+        dels = _recs(*[(2, 10 + i, i % P, i, 1) for i in (5, 1, 3, 7)])
+        st_v, av = hv.apply(st_v, dels, "vec")
+        st_s, as_ = hs.apply(st_s, dels, "seq")
+        np.testing.assert_array_equal(av, as_)
+        np.testing.assert_array_equal(np.asarray(st_v.free_stack),
+                                      np.asarray(st_s.free_stack))
+        np.testing.assert_array_equal(np.asarray(st_v.free_top),
+                                      np.asarray(st_s.free_top))
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_random_valid_chains(self, seed):
+        """Randomized protocol-valid record streams (same-key records
+        alternate insert/delete, as the lock FIFO guarantees)."""
+        rng = np.random.default_rng(200 + seed)
+        live = {}
+        entries = []
+        slot_ctr = 0
+        for _ in range(12):
+            key = int(rng.integers(1, 7))
+            if live.get(key):
+                entries.append((2, key) + live[key])
+                live[key] = None
+            else:
+                loc = (int(rng.integers(0, P)), slot_ctr % 16, slot_ctr + 1)
+                slot_ctr += 1
+                entries.append((1, key) + loc)
+                live[key] = loc
+        self._check(_recs(*entries), C=16)
 
 
 class TestBatchedGets:

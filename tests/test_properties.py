@@ -122,6 +122,76 @@ def test_decode_row_case_analysis_elementwise(rows_spec):
                                       np.asarray(payload, np.int32))
 
 
+# ------------------------------------------------- hash-index invariants
+# one harness per configuration, shared across examples (state is rebuilt
+# per example; the jitted apply/lookup callables are what we reuse)
+_H8 = kvmod._ApplyHarness(C=8, S=32)
+_HV16 = kvmod._ApplyHarness(C=16, S=32)
+_HS16 = kvmod._ApplyHarness(C=16, S=32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.booleans(),
+                          st.integers(min_value=1, max_value=6)),
+                min_size=1, max_size=14),
+       st.integers(min_value=0, max_value=3))
+def test_hash_index_lookup_pinned_to_reference_scan(chain, seed):
+    """After any protocol-valid tracker stream (same-key records alternate
+    insert/delete), the O(PROBE) hash probe is bit-for-bit equal to the
+    O(C) reference scan on the same state — found, pos, node, slot and ctr,
+    across collision chains, wraparound and tombstones (C=8 forces all
+    three)."""
+    h = _H8
+    live, entries, ctr = {}, [], 0
+    for want_ins, key in chain:
+        if live.get(key):
+            entries.append((2, key) + live[key])
+            live[key] = None
+        elif want_ins:
+            ctr += 1
+            loc = ((key + seed) % P, ctr % 16, ctr)
+            entries.append((1, key) + loc)
+            live[key] = loc
+    if not entries:
+        return
+    state, applied = h.apply(h.init(), kvmod._recs(*entries))
+    probe_keys = list(range(1, 12))
+    a = h.lookup(state, probe_keys, "hash")
+    b = h.lookup(state, probe_keys, "ref")
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(la, lb)
+    # every live key is reachable; dead/absent keys are not (keys are
+    # capped at 6 < C so no insert can overflow the window)
+    found = dict(zip(probe_keys, np.asarray(a[0], bool)))
+    for key in range(1, 7):
+        assert found[key] == bool(live.get(key))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.booleans(),
+                          st.integers(min_value=1, max_value=6)),
+                min_size=1, max_size=12))
+def test_tracker_apply_vectorized_equals_sequential(chain):
+    """The wave-scheduled tracker apply is logically equivalent to the
+    sequential reference sweep on adversarial same-key chains: identical
+    applied flags, per-key logical lookups, free-stack effects and
+    overflow latch."""
+    live, entries, ctr = {}, [], 0
+    for want_ins, key in chain:
+        if live.get(key):
+            entries.append((2, key) + live[key])
+            live[key] = None
+        elif want_ins:
+            ctr += 1
+            loc = (key % P, ctr % 16, ctr)
+            entries.append((1, key) + loc)
+            live[key] = loc
+    if not entries:
+        return
+    kvmod.TestTrackerApplyEquivalence()._check(
+        kvmod._recs(*entries), hv=_HV16, hs=_HS16)
+
+
 # ----------------------------------------------------------------- queue FIFO
 qmgr = make_manager(P)
 q = SharedQueue(None, "pq", qmgr, slots_per_node=3, width=1)

@@ -11,9 +11,12 @@ from repro.roofline import analysis as RA
 
 class TestServingEngine:
     def test_generate_with_channel_page_table(self):
-        from repro.serving.engine import ServingEngine
+        from repro.serving.engine import MAX_WINDOW, P_NODES, ServingEngine
         cfg = get_smoke_config("llama3.2-3b").replace(dtype="float32")
         eng = ServingEngine(cfg, max_batch=2, max_seq=48)
+        # lock stripe must cover the outstanding (P, MAX_WINDOW) window —
+        # an undersized stripe degrades windows to max-queue-depth rounds
+        assert eng.pages.L >= P_NODES * MAX_WINDOW
         rng = np.random.default_rng(0)
         prompts = [rng.integers(1, cfg.vocab, size=(12,)).astype(np.int32)
                    for _ in range(4)]
@@ -25,6 +28,7 @@ class TestServingEngine:
         # rounds did lock-free gets
         assert stats["kv_ops"][INSERT] == stats["kv_ops"][DELETE]
         assert stats["kv_ops"][GET] >= 4
+        assert "modeled_wire_bytes" in stats
 
 
 class TestRooflineAnalysis:

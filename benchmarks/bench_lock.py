@@ -19,7 +19,10 @@ paper's fairness constraint); they differ structurally:
               while LOCO wins transactions.
 
 Reported: wall-µs/round of the simulation, modeled txn/s, and completed
-transactions per collective round (the contention signal).
+transactions per collective round (the contention signal).  Rows also land
+in ``BENCH_lock.json`` via the ``jt`` BenchJson sink (same schema as the
+kvstore benchmark) so the lock-path perf trajectory is machine-readable
+across PRs.
 """
 from __future__ import annotations
 
@@ -31,7 +34,7 @@ from repro.core import SharedRegion, TicketLock, TicketLockArray, \
     make_manager
 from repro.core.lock import NO_TICKET
 
-from .common import Csv, model_round_us, timed
+from .common import BenchJson, Csv, model_round_us, timed
 
 N_LOCKS = 341
 
@@ -119,7 +122,8 @@ def _sim(P, n_accounts, window_size, rounds, seed=0):
     return done_total, rounds, us_total / max(rounds, 1)
 
 
-def run(csv: Csv, rounds: int = 12):
+def run(csv: Csv, rounds: int = 12, jt: BenchJson | None = None):
+    jt = jt if jt is not None else BenchJson()
     P, n_accounts = 8, 8 * 341
     # --- single contended lock (paper: MPI wins here)
     mgr = make_manager(P)
@@ -144,6 +148,10 @@ def run(csv: Csv, rounds: int = 12):
             f"modeled_ops_per_s={loco_single:.0f}")
     csv.add("lock_single_mpi", us,
             f"modeled_ops_per_s={mpi_single:.0f}")
+    jt.add("lock_single", "loco", us, ops=P,
+           modeled_ops_per_s=round(loco_single))
+    jt.add("lock_single", "mpi", us, ops=P,
+           modeled_ops_per_s=round(mpi_single))
 
     # --- transactional locking (paper: LOCO wins)
     for name, wsize, extra_rounds in (("loco", 1, 0),
@@ -155,3 +163,7 @@ def run(csv: Csv, rounds: int = 12):
         csv.add(f"txn_{name}", us_round,
                 f"txn_per_round={txn_per_round:.2f};"
                 f"modeled_txn_per_s={modeled_txn_s:.0f};done={done}")
+        jt.add("lock_txn", name, us_round,
+               txn_per_round=round(txn_per_round, 2),
+               modeled_txn_per_s=round(modeled_txn_s), done=done)
+    return jt

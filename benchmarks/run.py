@@ -7,10 +7,11 @@
   Fig. 7   bench_power     DC/DC control-loop stability vs period
   §Roofline bench_roofline dry-run-derived roofline table (reads reports/)
 
-Prints ``name,us_per_call,derived`` CSV rows; the kvstore benchmark
-additionally persists machine-readable rows (variant, us, ops/s, modeled
-wire bytes, speedup columns) to ``BENCH_kvstore.json`` at the repo root so
-the perf trajectory is tracked across PRs.
+Prints ``name,us_per_call,derived`` CSV rows; the kvstore and lock
+benchmarks additionally persist machine-readable rows (variant, us,
+ops/s, modeled wire bytes, hit-rate/speedup columns) to
+``BENCH_kvstore.json`` / ``BENCH_lock.json`` at the repo root so the perf
+trajectory is tracked across PRs (CI uploads both as artifacts).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only barrier,lock,...]
                                                [--smoke] [--json-dir DIR]
@@ -46,7 +47,10 @@ def main() -> None:
         bench_barrier.run(csv)
     if enabled("lock"):
         from . import bench_lock
-        bench_lock.run(csv)
+        jt = BenchJson()
+        bench_lock.run(csv, rounds=4 if args.smoke else 12, jt=jt)
+        path = jt.dump(os.path.join(args.json_dir, "BENCH_lock.json"))
+        print(f"# wrote {path} ({len(jt.rows)} rows)", file=sys.stderr)
     if enabled("kvstore"):
         from . import bench_kvstore
         jt = BenchJson()

@@ -7,11 +7,12 @@ Public surface:
 * channels:        :class:`SharedRegion`, :class:`OwnedVar`, :class:`AtomicVar`,
                    :class:`SST`, :class:`Barrier`, :class:`TicketLock`,
                    :class:`TicketLockArray`, :class:`Ringbuffer`,
-                   :class:`SharedQueue`, :class:`KVStore`
+                   :class:`SharedQueue`, :class:`KVStore`, :class:`ReadCache`
 """
 from .ack import ALL_PEERS, AckKey, FenceScope, OpDesc, join, make_ack
 from .atomic import AtomicVar, AtomicVarState
 from .barrier import Barrier, BarrierState
+from .cache import ReadCache, ReadCacheState
 from .channel import Channel
 from .kvstore import (DELETE, GET, INSERT, NOP, UPDATE, KVResult, KVStore,
                       KVStoreState)
@@ -30,7 +31,8 @@ __all__ = [
     "NOP", "GET", "INSERT", "UPDATE", "DELETE", "KVResult", "KVStore",
     "KVStoreState", "NO_TICKET", "TicketLock", "TicketLockArray",
     "TicketLockArrayState", "TicketLockState", "OwnedVar", "OwnedVarState",
-    "checksum", "SharedQueue", "SharedQueueState", "SharedRegion",
+    "checksum", "ReadCache", "ReadCacheState", "SharedQueue",
+    "SharedQueueState", "SharedRegion",
     "SharedRegionState", "Ringbuffer", "RingbufferState", "Manager",
     "Runtime", "make_manager", "SST", "SSTState",
 ]

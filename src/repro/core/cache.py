@@ -1,0 +1,136 @@
+"""read_cache — the locality-managed read tier's cached channel layer.
+
+LOCO's headline read performance comes from letting the *programmer*
+manage locality per object, NUMA-style (paper §1, §6).  :class:`ReadCache`
+is that policy made a channel: a small **direct-mapped cache of hot remote
+rows**, keyed by ``(node, slot)`` and validated by the per-slot reuse
+counter the kvstore's rows already carry — the same counter the local
+index returns, so validation costs nothing the read path did not already
+pay (DESIGN.md §8.2).
+
+The cache is *private* per-participant memory, like the kvstore's local
+index: it is declared in the memory ledger (the process-heap analogue) but
+never addressed by peers.  Consistency is the composing channel's job —
+the kvstore invalidates lines from the mutation metadata its windows
+already put on the wire, and the counter check catches slot reuse — so a
+tag+counter hit can be served from local memory at **zero modeled wire
+bytes** while a stale or missing entry falls through to the coalesced
+one-sided read and refills.
+
+State layout (per participant):
+
+* ``tags``: (N, 2) int32 ``[node | slot]`` — ``node == -1`` marks an
+  invalid line (participant ids are non-negative, so no sentinel clash);
+* ``rows``: (N, RW) int32 — the cached full encoded row (payload, counter,
+  valid bit and checksum ride along, so a cached row re-validates exactly
+  like a freshly read one).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .channel import Channel
+from .runtime import Manager
+
+
+def hash_u32(x):
+    """lowbias32 avalanche hash (uint32 → uint32) — the kvstore index's
+    bucket function (hosted here so the index and any future hashed tier
+    share one definition; the cache itself maps lines by plain modulo —
+    see :meth:`ReadCache.lines_for`)."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+class ReadCacheState(NamedTuple):
+    tags: jax.Array  # (N, 2) int32: [node | slot]; node == -1 → invalid
+    rows: jax.Array  # (N, RW) int32 cached encoded rows
+
+
+class ReadCache(Channel):
+    """Direct-mapped cache of remote rows, keyed by ``(node, slot)``.
+
+    ``lines`` cache lines of ``row_width`` int32 words each; the line for
+    a row is its linear id ``node · backing_slots + slot`` modulo
+    ``lines`` — deliberately **not** hashed: kvstore slots are allocated
+    densely from a per-node free stack, so modulo placement is
+    conflict-free whenever the cache covers the live rows
+    (``lines ≥ P · backing_slots`` caches everything with zero aliasing;
+    see DESIGN.md §8.4 for the sizing trade).  All three verbs are
+    batched, scatter/gather only, and collective-free — the cache *is*
+    the local tier.
+    """
+
+    def __init__(self, parent, name: str, mgr: Manager, *, lines: int,
+                 row_width: int, backing_slots: int):
+        super().__init__(parent, name, mgr)
+        self.N = int(lines)
+        self.RW = int(row_width)
+        self.backing_slots = int(backing_slots)
+        if self.N <= 0:
+            raise ValueError("ReadCache needs at least one line")
+        # private memory, but ledger-accounted like the kvstore index
+        self.declare_region("tags", (self.N, 2), jnp.int32)
+        self.declare_region("rows", (self.N, self.RW), jnp.int32)
+
+    def init_state(self) -> ReadCacheState:
+        return ReadCacheState(
+            tags=jnp.full((self.P, self.N, 2), -1, jnp.int32),
+            rows=jnp.zeros((self.P, self.N, self.RW), jnp.int32))
+
+    @staticmethod
+    def empty_state(P: int, row_width: int) -> ReadCacheState:
+        """Zero-line state for cache-less composers: keeps the state pytree
+        structure identical whether or not the tier is enabled."""
+        return ReadCacheState(tags=jnp.zeros((P, 0, 2), jnp.int32),
+                              rows=jnp.zeros((P, 0, row_width), jnp.int32))
+
+    # -- line addressing -------------------------------------------------------
+    def lines_for(self, nodes, slots):
+        lid = nodes.astype(jnp.uint32) * jnp.uint32(self.backing_slots) \
+            + slots.astype(jnp.uint32)
+        return (lid % jnp.uint32(self.N)).astype(jnp.int32)
+
+    # -- verbs (all local, all batched) ---------------------------------------
+    def lookup(self, st: ReadCacheState, nodes, slots):
+        """(R,) lookups → (rows (R, RW), tag_hit (R,)).  A tag hit only
+        says the line holds *some* copy of (node, slot); the caller must
+        still validate the cached row's counter against the index's (the
+        §8.2 protocol) before serving it."""
+        line = self.lines_for(nodes, slots)
+        tag = st.tags[line]                                     # (R, 2)
+        hit = (tag[:, 0] == nodes.astype(jnp.int32)) \
+            & (tag[:, 1] == slots.astype(jnp.int32))
+        return st.rows[line], hit
+
+    def fill(self, st: ReadCacheState, nodes, slots, rows, preds):
+        """Refill lines for the enabled lanes (one tag + one row scatter).
+        Direct-mapped conflicts resolve last-lane-wins; disabled lanes are
+        dropped, not written."""
+        line = jnp.where(preds, self.lines_for(nodes, slots), self.N)
+        tag = jnp.stack([nodes.astype(jnp.int32),
+                         slots.astype(jnp.int32)], axis=-1)
+        return ReadCacheState(
+            tags=st.tags.at[line].set(tag, mode="drop"),
+            rows=st.rows.at[line].set(rows, mode="drop"))
+
+    def invalidate(self, st: ReadCacheState, nodes, slots, preds):
+        """Drop the lines addressed by the enabled (node, slot) lanes.
+
+        Conservative by construction: the line *might* currently hold a
+        different row that merely shares the line — dropping it is a miss,
+        never a wrong value — but a line holding (node, slot) is always
+        this one, so a mutated row can never survive its invalidation.
+        """
+        line = jnp.where(preds, self.lines_for(nodes, slots), self.N)
+        return st._replace(
+            tags=st.tags.at[line].set(jnp.full((2,), -1, jnp.int32),
+                                      mode="drop"))

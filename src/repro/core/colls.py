@@ -14,6 +14,11 @@ enabled non-self lanes, so NUMA-style placement (the paper's headline
 programming model) shows up as measured-zero traffic rather than being
 silently priced like a remote access.
 
+Read tier (DESIGN.md §8.1): the batched read verb coalesces duplicate
+(target, index) pairs per participant before the wire — unique rows ride
+the collective, duplicates fan out locally — so modeled read bytes scale
+with unique remote rows, not lane count.
+
 Conventions: all functions run inside a per-participant trace (under vmap or
 shard_map) with collectives over ``axis``.
 """
@@ -26,7 +31,16 @@ import jax.numpy as jnp
 
 
 def axis_size(axis: str) -> int:
-    return jax.lax.axis_size(axis)
+    """Static size of a named axis (vmap or shard_map binding), across the
+    jax 0.4 → 0.5+ API (``jax.lax.axis_size`` is new; 0.4.x exposes the
+    size through the axis frame)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    from jax import core
+    # late 0.4 releases return the size directly; earlier ones return an
+    # AxisEnvFrame whose .size carries it
+    frame = core.axis_frame(axis)
+    return getattr(frame, "size", frame)
 
 
 def my_id(axis: str):
@@ -131,31 +145,17 @@ def remote_read(local_buf, target, index, axis: str, pred=True,
     return out
 
 
-def remote_read_batch(local_buf, targets, indices, axis: str, preds=None,
-                      ledger=None, verb: str = "remote_read_batch"):
-    """Vector form of :func:`remote_read`: R requests per participant.
-
-    targets, indices: (R,) int32; preds: (R,) bool (default all-enabled).
-    Returns (R, *item).  Served via all-gather(requests) + local gather +
-    psum_scatter of the (P, R, *item) served tensor — each participant
-    receives exactly its R answers, so the wire cost is ≈ 2·P·R·|item| on a
-    ring (reduce-scatter), not P²·R·|item|.
-
-    Locality tier (DESIGN.md §2.3): disabled lanes and ``target == me``
-    lanes are masked out of the served tensor (they contribute zeros to the
-    reduce and are modeled at zero wire bytes); self lanes are served from
-    ``local_buf`` after the scatter, disabled lanes return zeros.
+def _serve_scatter(local_buf, targets, indices, wire_lane, axis: str):
+    """The shared wire path of the batched read verbs: all-gather the (R,)
+    read requests (a lane rides iff ``wire_lane``), serve the gathered
+    requests addressed to me from ``local_buf``, and psum_scatter the
+    (P, R, *item) served tensor back so requester q receives exactly its R
+    answers.  Lanes with ``wire_lane == False`` contribute zeros to the
+    reduce and come back as zero rows.  Returns (R, *item).
     """
     me = my_id(axis)
     R = targets.shape[0]
-    targets = targets.astype(jnp.int32)
-    indices = indices.astype(jnp.int32)
-    if preds is None:
-        preds = jnp.ones((R,), jnp.bool_)
-    preds = jnp.asarray(preds)
-    self_lane = preds & (targets == me)
-    remote_lane = preds & (targets != me)
-    req = jnp.stack([targets, indices, remote_lane.astype(jnp.int32)],
+    req = jnp.stack([targets, indices, wire_lane.astype(jnp.int32)],
                     axis=-1)
     reqs = jax.lax.all_gather(req, axis, axis=0, tiled=False)       # (P, R, 3)
     P = reqs.shape[0]
@@ -167,7 +167,44 @@ def remote_read_batch(local_buf, targets, indices, axis: str, preds=None,
     mask = ((tgt == me) & en).reshape((P, R) + (1,) * (local_buf.ndim - 1))
     served = jnp.where(mask, served, jnp.zeros_like(served))
     # psum_scatter over the requester axis: requester q receives sum_p served[p, q]
-    out = jax.lax.psum_scatter(served, axis, scatter_dimension=0, tiled=False)
+    return jax.lax.psum_scatter(served, axis, scatter_dimension=0, tiled=False)
+
+
+def remote_read_batch(local_buf, targets, indices, axis: str, preds=None,
+                      ledger=None, verb: str = "remote_read_batch",
+                      coalesce: bool = True):
+    """Vector form of :func:`remote_read`: R requests per participant.
+
+    targets, indices: (R,) int32; preds: (R,) bool (default all-enabled).
+    Returns (R, *item).  Served via all-gather(requests) + local gather +
+    psum_scatter of the (P, R, *item) served tensor — each participant
+    receives exactly its R answers, so the wire cost is ≈ 2·P·R·|item| on a
+    ring (reduce-scatter), not P²·R·|item|.
+
+    By default this delegates to :func:`remote_read_coalesced`, which
+    dedupes the (target, index) pairs per participant before the wire —
+    modeled wire bytes scale with *unique* remote rows, not lane count
+    (DESIGN.md §8.1).  ``coalesce=False`` keeps every enabled remote lane
+    on the wire (the pre-coalescing cost model, retained for benchmarking).
+
+    Locality tier (DESIGN.md §2.3): disabled lanes and ``target == me``
+    lanes are masked out of the served tensor (they contribute zeros to the
+    reduce and are modeled at zero wire bytes); self lanes are served from
+    ``local_buf`` after the scatter, disabled lanes return zeros.
+    """
+    if coalesce:
+        return remote_read_coalesced(local_buf, targets, indices, axis,
+                                     preds=preds, ledger=ledger, verb=verb)
+    me = my_id(axis)
+    R = targets.shape[0]
+    targets = targets.astype(jnp.int32)
+    indices = indices.astype(jnp.int32)
+    if preds is None:
+        preds = jnp.ones((R,), jnp.bool_)
+    preds = jnp.asarray(preds)
+    self_lane = preds & (targets == me)
+    remote_lane = preds & (targets != me)
+    out = _serve_scatter(local_buf, targets, indices, remote_lane, axis)
     # locality fast path: self lanes served from local memory, zero wire
     local_vals = local_buf[jnp.clip(indices, 0, local_buf.shape[0] - 1)]
     lane = (R,) + (1,) * (local_buf.ndim - 1)
@@ -175,6 +212,63 @@ def remote_read_batch(local_buf, targets, indices, axis: str, preds=None,
     out = jnp.where(preds.reshape(lane), out, jnp.zeros_like(out))
     _record(ledger, verb, 2.0 * _item_nbytes(local_buf)
             * jnp.sum(remote_lane.astype(jnp.float32)))
+    return out  # (R, *item)
+
+
+def remote_read_coalesced(local_buf, targets, indices, axis: str, preds=None,
+                          ledger=None, verb: str = "remote_read_coalesced"):
+    """Duplicate-coalescing batched read (DESIGN.md §8.1).
+
+    Same contract as :func:`remote_read_batch`, but each participant's R
+    lanes are deduplicated on (target, index) before the wire: the *first*
+    enabled remote lane of each distinct pair (its **leader**) rides the
+    all-gather/psum_scatter; duplicate lanes are masked out of the wire
+    tensors and fan out locally from their leader's answer with one (R,)
+    gather.  Bitwise-identical results to the uncoalesced path — reads
+    commute and every duplicate observes the same served row.
+
+    Leader election is O(R): a min-scatter of lane order into a
+    (P·slots,) linear-row-id table (first lane wins), one gather back —
+    no R² pairwise masks, so election stays cheap even when it is hoisted
+    out of a caller's retry loop as loop-invariant code.
+
+    Modeled wire bytes: 2·|item|·(unique enabled remote pairs) — a zipf
+    window with R lanes over U distinct hot rows costs U rows, not R
+    (the ~R/U reduction the read-tier benchmarks measure).  Self lanes and
+    disabled lanes cost nothing, exactly as in the direct verb.
+    """
+    me = my_id(axis)
+    R = targets.shape[0]
+    targets = targets.astype(jnp.int32)
+    indices = indices.astype(jnp.int32)
+    if preds is None:
+        preds = jnp.ones((R,), jnp.bool_)
+    preds = jnp.asarray(preds)
+    self_lane = preds & (targets == me)
+    remote_lane = preds & (targets != me)
+    # leader election via min-scatter on the linear row id: table[lid] =
+    # first enabled remote lane addressing that row; lane i's
+    # representative is table[lid_i], and i leads iff that is i itself.
+    slots = local_buf.shape[0]
+    n_rows = axis_size(axis) * slots
+    order = jnp.arange(R, dtype=jnp.int32)
+    lid = targets * slots + jnp.clip(indices, 0, slots - 1)
+    table = jnp.full((n_rows,), R, jnp.int32).at[
+        jnp.where(remote_lane, lid, n_rows)].min(order, mode="drop")
+    rep = jnp.clip(table[lid], 0, R - 1)
+    leader = remote_lane & (rep == order)
+    out = _serve_scatter(local_buf, targets, indices, leader, axis)
+    # duplicate fan-out: every remote lane reads its leader's answer (a
+    # leader's rep is itself, so this is the identity for leaders).
+    lane = (R,) + (1,) * (local_buf.ndim - 1)
+    out = jnp.where(remote_lane.reshape(lane), out[rep],
+                    jnp.zeros_like(out))
+    # locality fast path: self lanes served from local memory, zero wire
+    local_vals = local_buf[jnp.clip(indices, 0, local_buf.shape[0] - 1)]
+    out = jnp.where(self_lane.reshape(lane), local_vals, out)
+    out = jnp.where(preds.reshape(lane), out, jnp.zeros_like(out))
+    _record(ledger, verb, 2.0 * _item_nbytes(local_buf)
+            * jnp.sum(leader.astype(jnp.float32)))
     return out  # (R, *item)
 
 

@@ -72,6 +72,30 @@ Window semantics (intra-window ordering and linearization points):
 :meth:`op_window`; ``_op_round_reference`` keeps the original scalar
 implementation as the executable specification the regression suite pins
 ``op_window`` against bit-for-bit.
+
+The locality-managed read tier (DESIGN.md §8)
+---------------------------------------------
+
+Reads are where the paper's explicit-locality model pays off, so the GET
+paths run through a two-layer tier:
+
+* **coalescing** (``coalesce_reads=``, default on): duplicate (node, slot)
+  GET lanes are deduplicated per participant before the wire — modeled
+  read bytes scale with *unique* remote rows, not lane count
+  (:func:`colls.remote_read_coalesced`);
+* **caching** (``cache_slots=``, default off): a direct-mapped
+  :class:`~repro.core.cache.ReadCache` of hot remote rows keyed by
+  (node, slot), validated by the per-slot reuse counter the index already
+  returns — a tag+counter hit is served from local memory at zero modeled
+  wire bytes; a miss falls through to the coalesced verb and refills.
+  Coherence: mutation rounds piggyback a "row mutated" flag on the tracker
+  gather and every participant invalidates the touched lines; counter
+  validation catches slot reuse.  An all-hit window issues zero collective
+  rounds.
+
+Both layers preserve results bit-for-bit; ``_get_window_reference`` keeps
+the uncached path as the executable specification the oracle suites pin
+the cached path against under interleaved mutation.
 """
 from __future__ import annotations
 
@@ -82,6 +106,7 @@ import jax.numpy as jnp
 
 from . import colls
 from .ack import AckKey, join
+from .cache import ReadCache, ReadCacheState, hash_u32
 from .channel import Channel
 from .lock import TicketLockArray, TicketLockArrayState
 from .ownedvar import checksum
@@ -106,15 +131,9 @@ MAX_GET_RETRIES = 3
 DEFAULT_MAX_PROBE = 32
 
 
-def _hash_u32(x):
-    """lowbias32 avalanche hash (uint32 → uint32), the index's bucket fn."""
-    x = jnp.asarray(x, jnp.uint32)
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(0x7FEB352D)
-    x = x ^ (x >> 15)
-    x = x * jnp.uint32(0x846CA68B)
-    x = x ^ (x >> 16)
-    return x
+# lowbias32 avalanche hash (uint32 → uint32), the index's bucket fn —
+# shared with the read cache's line placement (cache.py).
+_hash_u32 = hash_u32
 
 
 class KVResult(NamedTuple):
@@ -132,6 +151,7 @@ class KVStoreState(NamedTuple):
     idx: jax.Array            # (C, 5) int32: state|key_bits|node|slot|ctr_bits
     idx_overflow: jax.Array   # () bool — a probe window ran out of space
     acks: SSTState            # tracker ack counters
+    cache: ReadCacheState     # read tier (zero-line when cache_slots == 0)
 
 
 def _u2i(x):
@@ -147,6 +167,7 @@ class KVStore(Channel):
                  slots_per_node: int, value_width: int = 2,
                  num_locks: int = 8, index_capacity: int | None = None,
                  index_max_probe: int | None = None,
+                 cache_slots: int = 0, coalesce_reads: bool = True,
                  reference_impl: bool = False):
         super().__init__(parent, name, mgr)
         self.S = int(slots_per_node)
@@ -160,6 +181,15 @@ class KVStore(Channel):
         # apply — the executable specification, kept hot-swappable so the
         # benchmark suite can measure the work-proportional paths against it.
         self.reference_impl = bool(reference_impl)
+        # read tier (DESIGN.md §8): coalesce_reads dedupes duplicate
+        # (node, slot) GET lanes before the wire; cache_slots > 0 adds a
+        # direct-mapped counter-validated cache of hot remote rows in front
+        # of the coalesced verb.  Both knobs preserve results bit-for-bit
+        # (the uncached path survives as _get_window_reference).
+        self.coalesce_reads = bool(coalesce_reads)
+        self.cache = ReadCache(self, "readcache", mgr, lines=cache_slots,
+                               row_width=self.W + 3,
+                               backing_slots=self.S) if cache_slots else None
         self.locks = TicketLockArray(self, "locks", mgr, num_locks=self.L)
         self.rows_region = SharedRegion(self, "data", mgr, slots=self.S,
                                         item_shape=(self.W + 3,),
@@ -196,7 +226,9 @@ class KVStore(Channel):
             free_top=jnp.full((P,), self.S, jnp.int32),
             idx=jnp.zeros((P, self.C, 5), jnp.int32),
             idx_overflow=jnp.zeros((P,), jnp.bool_),
-            acks=self.acks.init_state())
+            acks=self.acks.init_state(),
+            cache=(self.cache.init_state() if self.cache is not None
+                   else ReadCache.empty_state(P, self.W + 3)))
 
     # -- local index (open-addressing hash table, DESIGN.md §7) ------------------
     def _probe_window(self, key):
@@ -261,7 +293,17 @@ class KVStore(Channel):
 
     # -- lock-free GET (paper Fig. 3 read path) -------------------------------------
     def _get(self, st: KVStoreState, key, pred):
-        """Scalar read path — part of the ``_op_round_reference`` spec."""
+        """Scalar read path — part of the ``_op_round_reference`` spec.
+
+        On a cache-enabled store the scalar GET routes through the read
+        tier as a B=1 window (hits served from the cache; refills are
+        dropped — this path returns no state, and the windowed entry
+        points are where refills persist)."""
+        if self.cache is not None:
+            values, found, tries, _cache = self._get_window(
+                st, jnp.reshape(jnp.asarray(key, jnp.uint32), (1,)),
+                jnp.reshape(jnp.asarray(pred), (1,)))
+            return values[0], found[0], tries
         found_idx, _pos, node, slot, ctr = self._index_lookup(st, key)
 
         def read_once(_):
@@ -297,14 +339,38 @@ class KVStore(Channel):
         return value, found, tries
 
     def _get_window(self, st: KVStoreState, keys, pred, look=None):
-        """B lock-free GETs in one batched collective round (Fig. 3 / §7).
+        """B lock-free GETs through the read tier (DESIGN.md §8).
 
         keys: (B,) uint32; pred: (B,) bool masking the GET lanes.  Returns
-        (values (B, W), found (B,), tries ()).  Retry-on-checksum is
-        per-batch — one extra round if any predicated element tore —
-        and the Appendix C case analysis is applied elementwise.  ``look``
-        optionally passes a precomputed (found, node, slot, ctr) lane
-        lookup so callers probing the index anyway don't pay it twice.
+        (values (B, W), found (B,), tries (), cache ReadCacheState) — the
+        returned cache state carries this window's refills; callers thread
+        it into their output state (``op_window``, :meth:`get_batch`) or
+        drop it (the scalar spec path).
+
+        Dispatch: a cache-less store runs ``_get_window_reference`` (the
+        retained uncached specification, bit-for-bit the PR-2 read path);
+        a cache-enabled store serves counter-validated hits from local
+        memory and falls through to the coalesced verb for the misses —
+        results are pinned bitwise against the reference under concurrent
+        mutation by the oracle suites.
+        """
+        keys = jnp.asarray(keys, jnp.uint32)
+        pred = jnp.asarray(pred)
+        if self.cache is None:
+            values, found, tries = self._get_window_reference(
+                st, keys, pred, look=look)
+            return values, found, tries, st.cache
+        return self._get_window_cached(st, keys, pred, look=look)
+
+    def _get_window_reference(self, st: KVStoreState, keys, pred, look=None):
+        """The uncached read path (Fig. 3 / §7): every live GET lane pays
+        the one-sided read.  Kept as the executable specification the
+        cached tier is pinned against — and the production path for
+        cache-less stores.  Retry-on-checksum is per-batch — one extra
+        round if any predicated element tore — and the Appendix C case
+        analysis is applied elementwise.  ``look`` optionally passes a
+        precomputed (found, node, slot, ctr) lane lookup so callers
+        probing the index anyway don't pay it twice.
         """
         keys = jnp.asarray(keys, jnp.uint32)
         pred = jnp.asarray(pred)
@@ -322,7 +388,8 @@ class KVStore(Channel):
                 st.rows.buf, node.astype(jnp.int32),
                 slot.astype(jnp.int32), self.axis,
                 preds=pred & found_idx, ledger=self.mgr.traffic,
-                verb=f"{self.full_name}.get_batch")      # (B, W+3)
+                verb=f"{self.full_name}.get_batch",
+                coalesce=self.coalesce_reads)            # (B, W+3)
             return jax.vmap(self.decode_row)(rows)
 
         def cond(c):
@@ -345,6 +412,91 @@ class KVStore(Channel):
         values = jnp.where(found[:, None], payload,
                            jnp.zeros((keys.shape[0], self.W), jnp.int32))
         return values, found, tries
+
+    def _get_window_cached(self, st: KVStoreState, keys, pred, look=None):
+        """The cached read path (DESIGN.md §8.2).
+
+        Hit protocol: a lane whose (node, slot) tag-matches a cache line
+        AND whose cached row re-validates — checksum clean, valid bit set,
+        row counter equal to the counter the local index returned — is
+        served from local memory at zero modeled wire bytes.  Counter
+        validation catches slot reuse (a re-inserted slot bumped its
+        counter); UPDATE/DELETE staleness cannot reach a hit because
+        ``op_window`` invalidates every mutated (node, slot) from the
+        mutation metadata its rounds already gather (§8.3).
+
+        Miss lanes fall through to the coalesced one-sided read and refill
+        their lines with the fetched (accepted) rows.  The whole fetch —
+        including the first round — lives inside the retry while_loop, so
+        an all-hit window issues **zero** collective rounds: the hot
+        serving pattern (decode re-reading its active pages) skips the
+        wire entirely, in wall time as well as in modeled bytes.
+        """
+        me = colls.my_id(self.axis)
+        B = keys.shape[0]
+        if look is None:
+            found_idx, _pos, node, slot, ctr = jax.vmap(
+                lambda k: self._index_lookup(st, k))(keys)
+        else:
+            found_idx, node, slot, ctr = look
+        node = node.astype(jnp.int32)
+        slot = slot.astype(jnp.int32)
+        live = pred & found_idx
+        remote = live & (node != me)
+        crows, tag_hit = self.cache.lookup(st.cache, node, slot)
+        cpay, cctr, cvalid, cok = jax.vmap(self.decode_row)(crows)
+        hit = remote & tag_hit & cok & (cctr == ctr) & cvalid
+        miss = live & ~hit
+
+        def read_all(_):
+            rows = colls.remote_read_batch(
+                st.rows.buf, node, slot, self.axis,
+                preds=miss, ledger=self.mgr.traffic,
+                verb=f"{self.full_name}.get_batch",
+                coalesce=self.coalesce_reads)            # (B, W+3)
+            return rows
+
+        def cond(c):
+            rounds, _p, _rc, _v, csum_ok, _cache = c
+            # the first fetch is round 1 of this loop: no misses anywhere
+            # → zero iterations → zero collective rounds for the window
+            # (and no fetch decode, no refill scatter — the all-hit fast
+            # path is pure local serve).
+            retrying = jnp.any(miss & ~csum_ok) \
+                & (rounds < 1 + MAX_GET_RETRIES)
+            return jax.lax.psum(retrying.astype(jnp.int32), self.axis) > 0
+
+        def body(c):
+            rounds, *_ = c
+            cache = c[-1]
+            rows = read_all(None)
+            p, rc, vd, ok = jax.vmap(self.decode_row)(rows)
+            # refill accepted remote rows — no negative caching, so the
+            # in-flight-insert / mid-delete cases of Appendix C always
+            # re-read.
+            acc = miss & ok & (rc == ctr) & vd & (node != me)
+            cache = self.cache.fill(cache, node, slot, rows, acc)
+            return rounds + 1, p, rc, vd, ok | ~miss, cache
+
+        with self.mgr.no_tracking():
+            rounds, payload, row_ctr, valid, csum_ok, cache = \
+                jax.lax.while_loop(cond, body, (
+                    jnp.int32(0), jnp.zeros((B, self.W), jnp.int32),
+                    jnp.zeros((B,), jnp.uint32), jnp.zeros((B,), jnp.bool_),
+                    ~miss, st.cache))
+
+        found_miss = miss & csum_ok & (row_ctr == ctr) & valid
+        found = hit | found_miss
+        values = jnp.where(hit[:, None], cpay,
+                           jnp.where(found_miss[:, None], payload,
+                                     jnp.zeros((B, self.W), jnp.int32)))
+        if self.mgr.traffic.enabled:
+            self.mgr.traffic.record_cache(
+                f"{self.full_name}.readcache",
+                jnp.sum(hit.astype(jnp.float32)),
+                jnp.sum(remote.astype(jnp.float32)))
+        tries = jnp.maximum(rounds - 1, 0)
+        return values, found, tries, cache
 
     # -- tracker application ----------------------------------------------------------
     def _apply_tracker(self, st: KVStoreState, recs):
@@ -574,7 +726,15 @@ class KVStore(Channel):
         rec = jnp.stack([kind, _u2i(key), jnp.where(do_ins, me, node),
                          jnp.where(do_ins, my_slot, slot),
                          _u2i(jnp.where(do_ins, new_ctr, ctr))])
-        recs = jax.lax.all_gather(rec, self.axis, axis=0)        # (P, 5)
+        if self.cache is not None:
+            # read-tier coherence on the scalar spec path too (§8.3)
+            rec = jnp.concatenate(
+                [rec, (do_upd | do_del).astype(jnp.int32).reshape(1)])
+        recs = jax.lax.all_gather(rec, self.axis, axis=0)        # (P, 5|6)
+        if self.cache is not None:
+            st = st._replace(cache=self.cache.invalidate(
+                st.cache, recs[:, 2], recs[:, 3], recs[:, 5] != 0))
+            recs = recs[:, :5]
         n_recs = jnp.sum(recs[:, 0] != 0).astype(jnp.uint32)
         st, applied = self._apply_tracker(st, recs)
         # acknowledge through the SST; inserter requires all peers caught up.
@@ -757,8 +917,22 @@ class KVStore(Channel):
                          jnp.where(do_ins, my_slot, slot).astype(jnp.int32),
                          _u2i(jnp.where(do_ins, new_ctr, ctr))],
                         axis=1)                                # (B, 5)
-        recs = jax.lax.all_gather(rec, self.axis, axis=0)      # (P, B, 5)
-        recs = recs.reshape(-1, 5)                             # participant-major
+        if self.cache is not None:
+            # read-tier coherence (DESIGN.md §8.3): piggyback a "row
+            # mutated" flag on the tracker gather — an UPDATE lane's rec is
+            # kind-0 but its node/slot columns already carry the row it is
+            # about to write, so one extra int column is all the metadata
+            # every peer needs to invalidate its cached copy.  (INSERTs
+            # need no invalidation: slot reuse bumps the counter the hit
+            # protocol validates.)
+            rec = jnp.concatenate(
+                [rec, (do_upd | do_del).astype(jnp.int32)[:, None]], axis=1)
+        recs = jax.lax.all_gather(rec, self.axis, axis=0)      # (P, B, 5|6)
+        recs = recs.reshape(-1, rec.shape[1])                  # participant-major
+        if self.cache is not None:
+            st = st._replace(cache=self.cache.invalidate(
+                st.cache, recs[:, 2], recs[:, 3], recs[:, 5] != 0))
+            recs = recs[:, :5]
         n_recs = jnp.sum(recs[:, 0] != 0).astype(jnp.uint32)
         st, applied = self._apply_tracker(st, recs)
         my_applied = jax.lax.dynamic_slice(applied, (me * B,), (B,))
@@ -867,9 +1041,13 @@ class KVStore(Channel):
             lambda k: self._index_lookup(st, k))(keys)
         look0 = (found0, node0, slot0, ctr0)
 
-        # lock-free GETs against pre-window state (linearized at window start)
-        get_val, get_found, retries = self._get_window(st, keys, ops == GET,
-                                                       look=look0)
+        # lock-free GETs against pre-window state (linearized at window
+        # start), through the read tier; refills land in the state BEFORE
+        # the service loop, so this window's own mutations invalidate any
+        # line they touch (§8.3 refill-then-invalidate order).
+        get_val, get_found, retries, cache0 = self._get_window(
+            st, keys, ops == GET, look=look0)
+        st = st._replace(cache=cache0)
 
         if self.reference_impl:
             round_no, write_winner = None, None
@@ -967,15 +1145,23 @@ class KVStore(Channel):
             retries=retries)
 
     # -- batched lock-free GETs (the paper's §7 "large window" mode) ---------
-    def get_batch(self, st: KVStoreState, keys):
+    def get_batch(self, st: KVStoreState, keys, pred=None):
         """R lock-free GETs per participant in ONE collective round.
 
-        keys: (R,) uint32.  Returns (values (R, W), found (R,)).  This is
-        the read-only corner of :meth:`op_window`: R outstanding one-sided
-        reads amortize the request/serve round-trip — realized here as a
-        single batched remote read (colls.remote_read_batch).
+        keys: (R,) uint32; ``pred``: optional (R,) bool lane mask (parity
+        with ``_get_window``) — disabled lanes return zeros/not-found and
+        cost nothing on the wire, so short batches need no dummy lanes.
+        Returns (state, values (R, W), found (R,)): the state carries the
+        read tier's refills (and nothing else — GETs mutate no store
+        data), so hot rows served this call are cache hits on the next.
+
+        This is the read-only corner of :meth:`op_window`: R outstanding
+        one-sided reads amortize the request/serve round-trip — realized
+        as a single coalesced remote read, short-circuited entirely when
+        every lane hits the cache.
         """
         keys = jnp.asarray(keys, jnp.uint32)
-        values, found, _tries = self._get_window(
-            st, keys, jnp.ones(keys.shape, jnp.bool_))
-        return values, found
+        if pred is None:
+            pred = jnp.ones(keys.shape, jnp.bool_)
+        values, found, _tries, cache = self._get_window(st, keys, pred)
+        return st._replace(cache=cache), values, found

@@ -79,10 +79,14 @@ class SharedRegion(Channel):
         return val, self.mgr.track(ack)
 
     def read_batch(self, state: SharedRegionState, targets, indices,
-                   preds=None):
+                   preds=None, coalesce=True):
+        """Batched one-sided read; ``coalesce`` (default on) dedupes each
+        participant's duplicate (target, index) lanes before the wire
+        (DESIGN.md §8.1) — results are bitwise-identical either way."""
         vals = colls.remote_read_batch(state.buf, targets, indices, self.axis,
                                        preds=preds, ledger=self.mgr.traffic,
-                                       verb=f"{self.full_name}.read_batch")
+                                       verb=f"{self.full_name}.read_batch",
+                                       coalesce=coalesce)
         ack = make_ack(vals, "read", self.full_name, ALL_PEERS,
                        self.item_nbytes * int(targets.shape[0]))
         return vals, self.mgr.track(ack)

@@ -128,6 +128,8 @@ class TrafficLedger:
     def __init__(self):
         self.enabled = False
         self.counts: Dict[str, Dict[str, float]] = {}
+        # read-tier hit/lookup counters (DESIGN.md §8.2), keyed by channel
+        self.cache_counts: Dict[str, Dict[str, float]] = {}
 
     def enable(self):
         self.enabled = True
@@ -139,6 +141,7 @@ class TrafficLedger:
 
     def reset(self):
         self.counts = {}
+        self.cache_counts = {}
         return self
 
     def record(self, verb: str, wire_bytes):
@@ -154,11 +157,34 @@ class TrafficLedger:
 
         jax.debug.callback(_cb, jnp.asarray(wire_bytes, jnp.float32))
 
+    def record_cache(self, name: str, hits, lookups):
+        """Record read-cache ``hits`` out of ``lookups`` (traced scalars)
+        against channel ``name``.  Same trace-time gating contract as
+        :meth:`record`: callers check ``enabled`` before calling, so
+        disabled ledgers never emit callbacks."""
+        def _cb(h, lk, name=name):
+            e = self.cache_counts.setdefault(
+                name, {"hits": 0.0, "lookups": 0.0})
+            e["hits"] += float(h)
+            e["lookups"] += float(lk)
+
+        jax.debug.callback(_cb, jnp.asarray(hits, jnp.float32),
+                           jnp.asarray(lookups, jnp.float32))
+
     def total_bytes(self) -> float:
         return sum(e["bytes"] for e in self.counts.values())
 
     def summary(self) -> Dict[str, Dict[str, float]]:
         return {k: dict(v) for k, v in sorted(self.counts.items())}
+
+    def cache_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-channel read-tier counters with derived hit rates."""
+        out = {}
+        for k, v in sorted(self.cache_counts.items()):
+            e = dict(v)
+            e["hit_rate"] = (v["hits"] / v["lookups"]) if v["lookups"] else 0.0
+            out[k] = e
+        return out
 
 
 class _TraceCtx(threading.local):

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..launch.mesh import compat_shard_map
 from ..models import moe as M
 from .sharding import TP, dp_axes
 
@@ -42,9 +43,9 @@ def make_moe_fn(cfg: ArchConfig, mesh):
                    TP if S % mesh.shape[TP] == 0 else None, None)
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            compat_shard_map, mesh=mesh,
             in_specs=(param_specs(params), x_spec),
-            out_specs=(x_spec, P()), check_vma=False)
+            out_specs=(x_spec, P()))
         def run(p, xl):
             out, aux = M.moe_block_a2a(p, xl, cfg, TP)
             # aux is per-shard; average over the whole mesh for a replicated

@@ -12,10 +12,16 @@ table is a :class:`repro.core.KVStore` channel —
   * completion DELETEs the pages, freeing slots for the next admission
     (counter-based GC guards stale readers — Appendix C case 4).
 
-All page-table traffic flows through ``KVStore.op_window``: admission,
-decode-round lookups and eviction each submit a whole (P, B) window of ops
-in a single traced collective round-set (the paper's "large window" mode)
-rather than one jit dispatch per P-op round.
+Mutations (admission INSERTs, eviction DELETEs) flow through
+``KVStore.op_window``: each submits a whole (P, B) window of ops in a
+single traced collective round-set (the paper's "large window" mode)
+rather than one jit dispatch per P-op round.  Decode-round page lookups
+are pure reads, so they take the cheaper path: ``KVStore.get_batch`` with
+a per-lane ``pred`` mask (no NOP dummy lanes for short batches) through
+the store's **read tier** (DESIGN.md §8) — decode re-reads the same hot
+pages every round, so after the first round the counter-validated page
+cache serves them from local memory at zero modeled wire bytes and the
+dispatch skips the collective entirely.
 
 The neural cache itself is the model's dense per-slot cache; the channel
 manages placement/ownership bookkeeping exactly as LOCO manages memory it
@@ -57,16 +63,24 @@ class ServingEngine:
         # (P_NODES, MAX_WINDOW) windows, so an undersized stripe would turn
         # window throughput into max-queue-depth service rounds (the
         # bench_kvstore footgun); the engine test asserts this invariant.
+        # read tier: decode rounds re-read the same active pages, so the
+        # page cache is sized to hold every provisioned page (a few KB) —
+        # steady-state decode lookups then cost zero modeled wire bytes
+        # (§8.4 sizing guidance: cache ≈ hot working set, here all pages).
         self.pages = KVStore(None, "pagetable", self.mgr,
                              slots_per_node=pages_per_node, value_width=2,
                              num_locks=P_NODES * MAX_WINDOW,
-                             index_capacity=4 * pages_per_node * P_NODES)
+                             index_capacity=4 * pages_per_node * P_NODES,
+                             cache_slots=2 * pages_per_node * P_NODES)
         self.queue = SharedQueue(None, "admission", self.mgr,
                                  slots_per_node=64, width=1)
         self._kv_state = self.pages.init_state()
         self._q_state = self.queue.init_state()
         self._kv_step = jax.jit(lambda st, op, key, val: self.mgr.runtime.run(
             self.pages.op_window, st, op, key, val))
+        self._kv_get = jax.jit(lambda st, key, pred: self.mgr.runtime.run(
+            lambda s, k, p: self.pages.get_batch(s, k, pred=p),
+            st, key, pred))
         self._q_step = jax.jit(
             lambda st, v, ew, dw: self.mgr.runtime.run(
                 lambda s, v, ew, dw: _q_round(self.queue, s, v, ew, dw),
@@ -113,6 +127,33 @@ class ServingEngine:
             value = np.asarray(res.value).transpose(1, 0, 2).reshape(n, -1)
             results.extend(zip(found, value))
         return results[:len(ops)]
+
+    def _kv_reads(self, keys: List[int]):
+        """Lock-free page lookups: one ``get_batch`` dispatch per (P, B)
+        chunk, real lanes enabled by ``pred`` — no NOP dummy lanes, and
+        the read tier serves repeat lookups from the page cache.  B is
+        padded to a power of two (≤ MAX_WINDOW) to bound jit
+        specializations, but padding lanes are *disabled*, not NOPs: they
+        never reach the index or the wire."""
+        results = []
+        for start in range(0, len(keys), P_NODES * MAX_WINDOW):
+            chunk = keys[start:start + P_NODES * MAX_WINDOW]
+            w = -(-len(chunk) // P_NODES)
+            w = 1 << (w - 1).bit_length()
+            n = P_NODES * w
+            kk = np.ones(n, np.uint32)
+            kk[:len(chunk)] = chunk
+            pred = np.zeros(n, bool)
+            pred[:len(chunk)] = True
+            self._kv_state, vals, found = self._kv_get(
+                self._kv_state,
+                jnp.asarray(kk.reshape(w, P_NODES).T.copy()),
+                jnp.asarray(pred.reshape(w, P_NODES).T.copy()))
+            self.op_counts[GET] += len(chunk)
+            found = np.asarray(found).T.reshape(n)
+            vals = np.asarray(vals).transpose(1, 0, 2).reshape(n, -1)
+            results.extend(zip(found, vals))
+        return results[:len(keys)]
 
     @staticmethod
     def _page_key(request_id: int, page_no: int) -> int:
@@ -174,11 +215,11 @@ class ServingEngine:
             for step in range(gen_len):
                 for j, (rid, _p) in enumerate(active):
                     outputs[rid].append(int(np.asarray(next_tok)[j]))
-                # lock-free page lookups for the pages being written
+                # lock-free page lookups for the pages being written —
+                # pure reads go through the read tier, not op_window
                 page_no = int(np.asarray(pos)[0]) // PAGE
-                gets = [(GET, self._page_key(rid, min(page_no, 0xFF)),
-                         (0, 0)) for (rid, _p) in active]
-                self._kv_ops(gets)
+                self._kv_reads([self._page_key(rid, min(page_no, 0xFF))
+                                for (rid, _p) in active])
                 if step == gen_len - 1:
                     break
                 tok_in = next_tok[:, None]
@@ -203,7 +244,10 @@ class ServingEngine:
                 # the manager's traffic ledger was enabled before the
                 # engine's jitted steps were built
                 "modeled_wire_bytes": self.mgr.traffic_ledger_bytes(),
-                "traffic_by_verb": self.mgr.traffic.summary()}
+                "traffic_by_verb": self.mgr.traffic.summary(),
+                # read-tier hit/lookup counters (zero unless the ledger
+                # was enabled before the jitted steps were built)
+                "read_cache": self.mgr.traffic.cache_summary()}
 
 
 def _q_round(queue, st, val, enq_want, deq_want):

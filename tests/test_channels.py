@@ -432,3 +432,129 @@ class TestManagerAndFences:
             return s0b.cached
 
         run(mgr, prog, s0, s1)
+
+
+# ------------------------------------------------- coalesced read verbs (§8.1)
+class TestCoalescedReads:
+    """remote_read_coalesced / remote_read_batch(coalesce=True): modeled
+    wire bytes scale with *unique* enabled remote (target, index) pairs —
+    duplicates fan out locally — and results stay bitwise-identical to the
+    uncoalesced verb on every lane pattern."""
+
+    ITEM = 8            # item_shape=(2,) int32 → 8 payload bytes per row
+    R = 6
+
+    def _setup(self, tag):
+        mgr = make_manager(P)
+        reg = SharedRegion(None, f"coal_{tag}", mgr, slots=4,
+                           item_shape=(2,), dtype=jnp.int32)
+        st = reg.init_state()
+        # distinct, recognizable rows: row[i] at participant p = (100p+i)·(1, 10)
+        buf = (np.arange(P)[:, None, None] * 100
+               + np.arange(4)[None, :, None]) * np.array([1, 10])[None, None, :]
+        st = st._replace(buf=jnp.asarray(buf, jnp.int32))
+        return mgr, reg, st
+
+    def _read(self, mgr, reg, st, tgts, idxs, preds=None, coalesce=True):
+        """tgts/idxs/preds: (P, R) per-participant lanes.  Returns
+        (values (P, R, 2), modeled wire bytes)."""
+        tp = jnp.asarray(tgts, jnp.int32)
+        ip = jnp.asarray(idxs, jnp.int32)
+        pp = None if preds is None else jnp.asarray(preds)
+        mgr.traffic.enable().reset()
+
+        def prog(st, t, i, *p):
+            got, _ = reg.read_batch(st, t, i, preds=p[0] if p else None,
+                                    coalesce=coalesce)
+            return got
+
+        args = (st, tp, ip) + ((pp,) if pp is not None else ())
+        got = run(mgr, prog, *args)
+        jax.block_until_ready(got)
+        total = mgr.traffic.total_bytes()
+        mgr.traffic.disable().reset()
+        return np.asarray(got), total
+
+    def _expect(self, tgts, idxs, preds=None):
+        """Reference values + unique/total remote lane counts (numpy)."""
+        tgts, idxs = np.asarray(tgts), np.asarray(idxs)
+        preds = np.ones_like(tgts, bool) if preds is None else np.asarray(preds)
+        vals = np.zeros(tgts.shape + (2,), np.int64)
+        uniq = total = 0
+        for p in range(P):
+            seen = set()
+            for r in range(tgts.shape[1]):
+                if not preds[p, r]:
+                    continue
+                t, i = int(tgts[p, r]), int(idxs[p, r])
+                vals[p, r] = (100 * t + i) * np.array([1, 10])
+                if t != p:
+                    total += 1
+                    if (t, i) not in seen:
+                        seen.add((t, i))
+                        uniq += 1
+        return vals, uniq, total
+
+    def test_duplicate_heavy_lanes_pay_unique_rows_only(self):
+        mgr, reg, st = self._setup("dup")
+        tgts = np.stack([np.full(self.R, (p + 1) % P) for p in range(P)])
+        idxs = np.zeros((P, self.R), np.int64)      # all lanes, one hot row
+        vals, uniq, total = self._expect(tgts, idxs)
+        got_c, bytes_c = self._read(mgr, reg, st, tgts, idxs, coalesce=True)
+        got_d, bytes_d = self._read(mgr, reg, st, tgts, idxs, coalesce=False)
+        np.testing.assert_array_equal(got_c, vals)
+        np.testing.assert_array_equal(got_c, got_d)    # bitwise-identical
+        assert uniq == P and total == P * self.R
+        assert bytes_c == 2 * self.ITEM * uniq         # one row per part.
+        assert bytes_d == 2 * self.ITEM * total        # R rows per part.
+
+    def test_all_self_lanes_cost_zero(self):
+        mgr, reg, st = self._setup("self")
+        tgts = np.repeat(np.arange(P)[:, None], self.R, axis=1)
+        idxs = np.tile(np.arange(self.R) % 4, (P, 1))
+        vals, uniq, total = self._expect(tgts, idxs)
+        assert uniq == total == 0
+        got_c, bytes_c = self._read(mgr, reg, st, tgts, idxs, coalesce=True)
+        np.testing.assert_array_equal(got_c, vals)
+        assert bytes_c == 0.0
+
+    def test_all_unique_lanes_match_uncoalesced_cost(self):
+        mgr, reg, st = self._setup("uniq")
+        # R=4 distinct (target, index) pairs per participant, all remote
+        tgts = np.stack([[(p + 1) % P, (p + 1) % P,
+                          (p + 2) % P, (p + 3) % P] for p in range(P)])
+        idxs = np.tile([0, 1, 0, 2], (P, 1))
+        vals, uniq, total = self._expect(tgts, idxs)
+        assert uniq == total == 4 * P
+        got_c, bytes_c = self._read(mgr, reg, st, tgts, idxs, coalesce=True)
+        got_d, bytes_d = self._read(mgr, reg, st, tgts, idxs, coalesce=False)
+        np.testing.assert_array_equal(got_c, vals)
+        np.testing.assert_array_equal(got_c, got_d)
+        assert bytes_c == bytes_d == 2 * self.ITEM * uniq
+
+    def test_disabled_duplicates_neither_lead_nor_count(self):
+        mgr, reg, st = self._setup("pred")
+        tgts = np.stack([np.full(self.R, (p + 1) % P) for p in range(P)])
+        idxs = np.tile(np.arange(self.R) % 2, (P, 1))  # two hot rows
+        preds = np.tile([False, True, True, False, True, False], (P, 1))
+        vals, uniq, total = self._expect(tgts, idxs, preds)
+        got_c, bytes_c = self._read(mgr, reg, st, tgts, idxs, preds, True)
+        np.testing.assert_array_equal(got_c, vals)     # disabled → zeros
+        assert bytes_c == 2 * self.ITEM * uniq
+        assert uniq == 2 * P                           # rows 0 and 1 each
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_random_patterns_bitwise_equal_and_cheaper(self, seed):
+        rng = np.random.default_rng(seed)
+        mgr, reg, st = self._setup(f"rand{seed}")
+        tgts = rng.integers(0, P, (P, self.R))
+        idxs = rng.integers(0, 4, (P, self.R))
+        preds = rng.random((P, self.R)) < 0.8
+        vals, uniq, total = self._expect(tgts, idxs, preds)
+        got_c, bytes_c = self._read(mgr, reg, st, tgts, idxs, preds, True)
+        got_d, bytes_d = self._read(mgr, reg, st, tgts, idxs, preds, False)
+        np.testing.assert_array_equal(got_c, got_d)
+        np.testing.assert_array_equal(got_c, vals)
+        assert bytes_c == 2 * self.ITEM * uniq
+        assert bytes_d == 2 * self.ITEM * total
+        assert bytes_c <= bytes_d

@@ -144,10 +144,11 @@ def assert_lookup_pinned(store, store_mgr, st, keys=range(1, 33)):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
-def check_windows_against_oracle(windows):
-    _st, outs = drive_windows(windows)
-    assert_lookup_pinned(kv, mgr, _st)
-    oracle = Oracle()
+def check_windows_against_oracle(windows, store_mgr=None, store=None):
+    skv, smgr = (store or kv), (store_mgr or mgr)
+    _st, outs = drive_windows(windows, store_mgr=store_mgr, store=store)
+    assert_lookup_pinned(skv, smgr, _st)
+    oracle = Oracle(slots=skv.S)
     for rnd, (w, res) in enumerate(zip(windows, outs)):
         expect = oracle.apply_window(w)
         for p, lane in enumerate(w):
@@ -465,8 +466,9 @@ class TestWindowedOps:
 
         @jax.jit
         def probe_all(st, keys):
-            return emgr.runtime.run(lambda s, k: ekv.get_batch(s, k),
-                                    st, keys)
+            _st, v, f = emgr.runtime.run(lambda s, k: ekv.get_batch(s, k),
+                                         st, keys)
+            return v, f
 
         vw, fw = probe_all(st_w, probe)
         vs, fs = probe_all(st_s, probe)
@@ -838,8 +840,9 @@ class TestBatchedGets:
 
         @jax.jit
         def batch_get(st, keys):
-            return mgr.runtime.run(
+            _st, v, f = mgr.runtime.run(
                 lambda s, k: kv.get_batch(s, k), st, keys)
+            return v, f
 
         keys = jnp.asarray([[1, 2, 3, 9], [5, 6, 9, 1],
                             [4, 4, 4, 4], [9, 9, 9, 9]], jnp.uint32)
@@ -850,3 +853,200 @@ class TestBatchedGets:
         np.testing.assert_array_equal(found, expect_found)
         np.testing.assert_array_equal(values[0, 0], v(1))
         np.testing.assert_array_equal(values[2, 3], v(4))
+
+
+# ------------------------------------------------------- read tier (§8)
+cmgr = make_manager(P)
+ckv = KVStore(None, "kv_cached", cmgr, slots_per_node=S, value_width=W,
+              num_locks=LOCKS, index_capacity=64, cache_slots=64)
+
+
+@jax.jit
+def cached_window_step(st, op, key, val):
+    return cmgr.runtime.run(ckv.op_window, st, op, key, val)
+
+
+@jax.jit
+def cached_get_batch(st, keys, preds):
+    return cmgr.runtime.run(
+        lambda s, k, p: ckv.get_batch(s, k, pred=p), st, keys, preds)
+
+
+@jax.jit
+def cached_vs_reference_reads(st, keys):
+    """Both read paths on the SAME state: the cached tier and the retained
+    uncached specification.  Returns ((values, found) cached,
+    (values, found) reference)."""
+    def prog(s, k):
+        pred = jnp.ones(k.shape, jnp.bool_)
+        cv, cf, _ct, _cache = ckv._get_window(s, k, pred)
+        rv, rf, _rt = ckv._get_window_reference(s, k, pred)
+        return (cv, cf), (rv, rf)
+    return cmgr.runtime.run(prog, st, keys)
+
+
+def _drive_cached(windows):
+    st = ckv.init_state()
+    outs = []
+    for w in windows:
+        op = jnp.asarray([[o[0] for o in lane] for lane in w], jnp.int32)
+        key = jnp.asarray([[o[1] for o in lane] for lane in w], jnp.uint32)
+        val = jnp.asarray([[o[2] for o in lane] for lane in w], jnp.int32)
+        st, res = cached_window_step(st, op, key, val)
+        outs.append(jax.tree.map(np.asarray, res))
+    return st, outs
+
+
+class TestReadTier:
+    """The locality-managed read tier (DESIGN.md §8): counter-validated
+    cache + coalesced verb, pinned against the uncached specification and
+    checked for coherence under every mutation pattern."""
+
+    def test_cached_store_windows_match_oracle(self):
+        """The full oracle suite runs against a cache-enabled store: the
+        tier must be observably invisible."""
+        check_windows_against_oracle([
+            [[(INSERT, 1, v(1)), (INSERT, 2, v(2))],
+             [(INSERT, 3, v(3)), (INSERT, 4, v(4))],
+             [NOPR, NOPR], [NOPR, NOPR]],
+            [[(GET, 4, v(0)), (GET, 3, v(0))],
+             [(GET, 2, v(0)), (GET, 9, v(0))],
+             [(GET, 1, v(0)), NOPR], [NOPR, (GET, 2, v(0))]],
+            # the same reads again: served from the cache, same answers
+            [[(GET, 4, v(0)), (GET, 3, v(0))],
+             [(GET, 2, v(0)), (GET, 9, v(0))],
+             [(GET, 1, v(0)), NOPR], [NOPR, (GET, 2, v(0))]],
+            # mutate under the cached rows, then re-read
+            [[(UPDATE, 4, v(4, 7)), (DELETE, 3, v(0))],
+             [NOPR, NOPR], [NOPR, NOPR], [NOPR, NOPR]],
+            [[(GET, 4, v(0)), (GET, 3, v(0))],
+             [(GET, 4, v(0)), (GET, 3, v(0))],
+             [(GET, 4, v(0)), NOPR], [NOPR, (GET, 4, v(0))]],
+        ], store_mgr=cmgr, store=ckv)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_random_cached_windows_match_oracle(self, seed):
+        rng = np.random.default_rng(300 + seed)
+        keys = list(range(1, 7))
+        B = 3
+        windows = []
+        for rnd in range(5):
+            w = []
+            for p in range(P):
+                lane = []
+                for b in range(B):
+                    op = int(rng.choice(
+                        [NOP, GET, INSERT, UPDATE, DELETE],
+                        p=[.1, .35, .25, .15, .15]))
+                    key = int(rng.choice(keys))
+                    lane.append((op, key, v(key, rnd * B + b)))
+                w.append(lane)
+            windows.append(w)
+        check_windows_against_oracle(windows, store_mgr=cmgr, store=ckv)
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_cached_reads_pinned_bitwise_to_reference_under_mutation(
+            self, seed):
+        """Acceptance: after EVERY window of a randomized interleaved
+        mutation history, the cached ``_get_window`` and the uncached
+        ``_get_window_reference`` return bit-identical (values, found) on
+        the same state — the cache never serves anything the wire would
+        not."""
+        rng = np.random.default_rng(400 + seed)
+        keys = list(range(1, 7))
+        probe = jnp.broadcast_to(
+            jnp.arange(1, 9, dtype=jnp.uint32), (P, 8))
+        st = ckv.init_state()
+        for rnd in range(6):
+            op = rng.choice([NOP, GET, INSERT, UPDATE, DELETE],
+                            size=(P, 2), p=[.1, .3, .25, .2, .15])
+            kk = rng.choice(keys, size=(P, 2))
+            vv = np.stack([kk * 11 + rnd, kk * 13 + rnd],
+                          axis=-1).astype(np.int32)
+            st, _res = cached_window_step(
+                st, jnp.asarray(op, jnp.int32), jnp.asarray(kk, jnp.uint32),
+                jnp.asarray(vv))
+            (cv, cf), (rv, rf) = cached_vs_reference_reads(st, probe)
+            np.testing.assert_array_equal(np.asarray(cf), np.asarray(rf))
+            np.testing.assert_array_equal(np.asarray(cv), np.asarray(rv))
+
+    def test_update_invalidates_cached_row(self):
+        # participant 0 inserts key 5; everyone caches it; participant 2
+        # updates it; every cached copy must be dropped (same slot ctr!)
+        w_ins = [[(INSERT, 5, v(5))]] + [[NOPR]] * (P - 1)
+        w_get = [[(GET, 5, v(0))] for _ in range(P)]
+        w_upd = [[NOPR], [NOPR], [(UPDATE, 5, (42, 43))], [NOPR]]
+        _st, outs = _drive_cached([w_ins, w_get, w_get, w_upd, w_get])
+        for p in range(P):
+            np.testing.assert_array_equal(outs[1].value[p][0], v(5))
+            np.testing.assert_array_equal(outs[2].value[p][0], v(5))
+            np.testing.assert_array_equal(outs[4].value[p][0], (42, 43))
+
+    def test_delete_invalidates_cached_row(self):
+        w_ins = [[(INSERT, 5, v(5))]] + [[NOPR]] * (P - 1)
+        w_get = [[(GET, 5, v(0))] for _ in range(P)]
+        w_del = [[NOPR], [(DELETE, 5, v(0))], [NOPR], [NOPR]]
+        _st, outs = _drive_cached([w_ins, w_get, w_del, w_get])
+        assert all(bool(outs[1].found[p][0]) for p in range(P))
+        assert not any(bool(outs[3].found[p][0]) for p in range(P))
+
+    def test_slot_reuse_bumps_counter_past_cache(self):
+        # delete key 5 and re-insert key 7 into the SAME slot: a stale
+        # cached row for (node, slot) fails counter validation for 7 and
+        # the index lookup already fails for 5.
+        w_ins = [[(INSERT, 5, v(5))]] + [[NOPR]] * (P - 1)
+        w_get5 = [[(GET, 5, v(0))] for _ in range(P)]
+        w_cycle = [[(DELETE, 5, v(0)), (INSERT, 7, v(7))]] + \
+            [[NOPR, NOPR]] * (P - 1)
+        w_get = [[(GET, 5, v(0)), (GET, 7, v(0))] for _ in range(P)]
+        st, outs = _drive_cached([w_ins, w_get5, w_cycle, w_get])
+        for p in range(P):
+            assert not bool(outs[3].found[p][0])
+            assert bool(outs[3].found[p][1])
+            np.testing.assert_array_equal(outs[3].value[p][1], v(7))
+
+    def test_warm_reads_cost_zero_wire_bytes_and_count_hits(self):
+        st = ckv.init_state()
+        w_ins = [[(INSERT, 1 + p, v(1 + p))] for p in range(P)]
+        op = jnp.asarray([[o[0] for o in lane] for lane in w_ins], jnp.int32)
+        kk = jnp.asarray([[o[1] for o in lane] for lane in w_ins], jnp.uint32)
+        vv = jnp.asarray([[o[2] for o in lane] for lane in w_ins], jnp.int32)
+        st, _res = cached_window_step(st, op, kk, vv)
+        keys = jnp.broadcast_to(jnp.arange(1, 1 + P, dtype=jnp.uint32),
+                                (P, P))
+        preds = jnp.ones((P, P), jnp.bool_)
+        cmgr.traffic.enable().reset()
+        fresh = jax.jit(lambda s, k, p: cmgr.runtime.run(
+            lambda ss, kk, pp: ckv.get_batch(ss, kk, pred=pp), s, k, p))
+        st, _v, f = fresh(st, keys, preds)
+        jax.block_until_ready(f)
+        assert bool(jnp.all(f))
+        cold = cmgr.traffic.total_bytes()
+        cmgr.traffic.reset()
+        st, _v, f = fresh(st, keys, preds)
+        jax.block_until_ready(f)
+        warm = cmgr.traffic.total_bytes()
+        cs = cmgr.traffic.cache_summary()["kv_cached.readcache"]
+        cmgr.traffic.disable().reset()
+        assert bool(jnp.all(f))
+        assert cold > 0.0
+        assert warm == 0.0, "all-hit window must put nothing on the wire"
+        # P participants × (P-1) remote lanes each, all hits on the warm call
+        assert cs["hits"] == P * (P - 1) and cs["hit_rate"] == 1.0
+
+    def test_get_batch_pred_masks_lanes(self):
+        st = ckv.init_state()
+        op = jnp.asarray([[INSERT]] * P, jnp.int32)
+        kk = jnp.asarray([[1 + p] for p in range(P)], jnp.uint32)
+        vv = jnp.asarray([[v(1 + p)] for p in range(P)], jnp.int32)
+        st, _res = cached_window_step(st, op, kk, vv)
+        keys = jnp.broadcast_to(jnp.arange(1, 5, dtype=jnp.uint32), (P, 4))
+        preds = jnp.asarray(np.tile([True, False, True, False], (P, 1)))
+        st, vals, found = cached_get_batch(st, keys, preds)
+        found, vals = np.asarray(found), np.asarray(vals)
+        assert found[:, 0].all() and found[:, 2].all()
+        assert not found[:, 1].any() and not found[:, 3].any()
+        np.testing.assert_array_equal(vals[:, 1], np.zeros((P, W)))
+        for p in range(P):
+            np.testing.assert_array_equal(vals[p, 0], v(1))
+            np.testing.assert_array_equal(vals[p, 2], v(3))

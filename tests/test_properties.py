@@ -68,6 +68,53 @@ def test_kvstore_windows_linearizable_against_oracle(batches):
     kvmod.check_windows_against_oracle(windows)
 
 
+# ------------------------------------------------- read-tier properties (§8)
+@settings(max_examples=12, deadline=None)
+@given(st.lists(
+    st.lists(st.lists(op_strategy, min_size=2, max_size=2),
+             min_size=P, max_size=P),
+    min_size=1, max_size=4))
+def test_cached_windows_never_return_stale_values(batches):
+    """Random interleavings of writes and cached reads on a cache-enabled
+    store match the sequential oracle — a GET served from the cache is
+    indistinguishable from one served over the wire, under every
+    insert/update/delete/reuse interleaving hypothesis finds."""
+    windows = []
+    for rnd, lanes in enumerate(batches):
+        windows.append([[(op, key, kvmod.v(key, rnd * 2 + b))
+                         for b, (op, key) in enumerate(lane)]
+                        for lane in lanes])
+    kvmod.check_windows_against_oracle(windows, store_mgr=kvmod.cmgr,
+                                       store=kvmod.ckv)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(
+    st.lists(st.lists(op_strategy, min_size=2, max_size=2),
+             min_size=P, max_size=P),
+    min_size=1, max_size=4))
+def test_cached_get_window_bitwise_equals_reference(batches):
+    """After every window of a random mutation history, the cached read
+    path and ``_get_window_reference`` return bit-identical (values,
+    found) on the same state (the §8.2 validation protocol never serves a
+    row the wire would not)."""
+    import jax.numpy as jnp
+    state = kvmod.ckv.init_state()
+    probe = jnp.broadcast_to(jnp.arange(1, 9, dtype=jnp.uint32), (P, 8))
+    for rnd, lanes in enumerate(batches):
+        op = jnp.asarray([[o for o, _k in lane] for lane in lanes],
+                         jnp.int32)
+        key = jnp.asarray([[k for _o, k in lane] for lane in lanes],
+                          jnp.uint32)
+        val = jnp.asarray([[kvmod.v(k, rnd * 2 + b)
+                            for b, (_o, k) in enumerate(lane)]
+                           for lane in lanes], jnp.int32)
+        state, _res = kvmod.cached_window_step(state, op, key, val)
+        (cv, cf), (rv, rf) = kvmod.cached_vs_reference_reads(state, probe)
+        np.testing.assert_array_equal(np.asarray(cf), np.asarray(rf))
+        np.testing.assert_array_equal(np.asarray(cv), np.asarray(rv))
+
+
 # ------------------------------------------------------------- row encoding
 word = st.integers(min_value=-2**31, max_value=2**31 - 1)
 

@@ -1,0 +1,220 @@
+"""Streaming tier benchmark (DESIGN.md §9): windowed SharedQueue /
+Ringbuffer channels vs their scalar references, and the ReplicatedLog
+composition.
+
+Three row families, persisted to ``BENCH_stream.json``:
+
+* ``stream_queue``  — a (B,) window of pushes + pops per participant in
+  one ``enqueue_window``/``dequeue_window`` round-set vs the same ops
+  through B scalar ``_enqueue_reference``/``_dequeue_reference`` rounds
+  (the Brock et al. batched-verbs-vs-per-op comparison on the queue
+  workload).  Acceptance: ≥2× ops/s at window=32.
+* ``stream_ringbuffer`` — B messages through one
+  ``publish_window``/``recv_window`` round-set vs B scalar
+  ``send``/``recv_one`` rounds.  Acceptance: ≥2× ops/s at window=32.
+* ``stream_replog`` — a leader kvstore running mixed mutation windows
+  with ``ReplicatedLog.append`` + follower ``sync`` each window,
+  reporting per-window latency, replication lag and modeled log wire
+  bytes (the ledger's ``.publish`` verb — bytes scale with slots actually
+  moved).  The run asserts the follower store ends **bitwise-equal** to
+  the leader on every state leaf.
+
+Wall times are the CPU vmap functional simulation (regression tracking);
+the modeled quantities are the cross-design comparable ones, as in the
+other benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DELETE, GET, INSERT, NOP, UPDATE, KVStore,
+                        ReplicatedLog, Ringbuffer, SharedQueue, make_manager)
+from repro.core.replog import diverging_leaves
+
+from .bench_kvstore import _timed_interleaved
+from .common import BenchJson, Csv
+
+WINDOW = 32
+
+
+def _queue_jobs(P, window):
+    mgr = make_manager(P)
+    q = SharedQueue(None, f"bq_p{P}_w{window}", mgr,
+                    slots_per_node=2 * window, width=2)
+    st = q.init_state()
+
+    def win_round(st, vals):
+        st, _g = q.enqueue_window(st, vals, jnp.ones((window,), jnp.bool_))
+        st, _v, _ok = q.dequeue_window(st, jnp.ones((window,), jnp.bool_))
+        return st
+
+    def scalar_round(st, vals):
+        for b in range(window):
+            st, _g = q._enqueue_reference(st, vals[b])
+        for b in range(window):
+            st, _v, _ok = q._dequeue_reference(st)
+        return st
+
+    vals = jnp.arange(window * 2, dtype=jnp.int32).reshape(window, 2)
+    vals = jnp.broadcast_to(vals, (P, window, 2))
+    win = jax.jit(lambda s, v: mgr.runtime.run(win_round, s, v))
+    sca = jax.jit(lambda s, v: mgr.runtime.run(scalar_round, s, v))
+    return {"window": (win, (st, vals)), "scalar": (sca, (st, vals))}
+
+
+def _ring_jobs(P, window):
+    mgr = make_manager(P)
+    rb = Ringbuffer(None, f"brb_p{P}_w{window}", mgr, owner=0,
+                    capacity=2 * window, width=4)
+    st = rb.init_state()
+    msgs = jnp.arange(window * 4, dtype=jnp.int32).reshape(window, 4)
+    msgs = jnp.broadcast_to(msgs, (P, window, 4))
+    lens = jnp.broadcast_to(jnp.full((window,), 4, jnp.int32), (P, window))
+
+    def win_round(st, msgs, lens):
+        st, _s, _a = rb.publish_window(st, msgs, lens)
+        st, _m, _l, _g = rb.recv_window(st, window)
+        return st
+
+    def scalar_round(st, msgs, lens):
+        for b in range(window):
+            st, _s, _a = rb.send(st, msgs[b], lens[b])
+        for b in range(window):
+            st, _m, _l, _g = rb.recv_one(st)
+        return st
+
+    win = jax.jit(lambda s, m, l: mgr.runtime.run(win_round, s, m, l))
+    sca = jax.jit(lambda s, m, l: mgr.runtime.run(scalar_round, s, m, l))
+    return {"window": (win, (st, msgs, lens)),
+            "scalar": (sca, (st, msgs, lens))}
+
+
+def _replog_setup(P, window, keyspace):
+    mgr = make_manager(P)
+    kw = dict(slots_per_node=keyspace // P + 4, value_width=2,
+              num_locks=max(64, P * window), index_capacity=4 * keyspace)
+    leader = KVStore(None, f"brl_lead_p{P}", mgr, **kw)
+    follower = KVStore(None, f"brl_foll_p{P}", mgr, **kw)
+    log = ReplicatedLog(None, f"brl_log_p{P}", mgr, store=leader,
+                        window=window, capacity=2)
+
+    def step(lst, fst, gst, op, key, val):
+        lst, _res = leader.op_window(lst, op, key, val)
+        gst, _ok = log.append(gst, op, key, val)
+        gst, fst, _n = log.sync(gst, follower, fst, max_entries=1)
+        return lst, fst, gst
+
+    jstep = jax.jit(lambda *a: mgr.runtime.run(step, *a))
+    return mgr, leader, follower, log, jstep
+
+
+def _replog_windows(rng, P, window, keyspace, n_rounds):
+    """Mixed mutation schedule: distinct keys per window (the engine
+    contract), op mix rotating insert → update/delete → reinsert."""
+    spans = []
+    live = np.zeros(keyspace + 1, bool)
+    for r in range(n_rounds):
+        keys = rng.choice(np.arange(1, keyspace + 1, dtype=np.uint32),
+                          size=P * window, replace=False)
+        ops = np.empty(P * window, np.int32)
+        for i, k in enumerate(keys):
+            if not live[k]:
+                ops[i], live[k] = INSERT, True
+            elif rng.random() < 0.3:
+                ops[i], live[k] = DELETE, False
+            else:
+                ops[i] = UPDATE
+        vals = np.stack([keys.astype(np.int32) * 3 + r,
+                         np.full(P * window, r, np.int32)], axis=-1)
+        spans.append((jnp.asarray(ops.reshape(P, window)),
+                      jnp.asarray(keys.reshape(P, window)),
+                      jnp.asarray(vals.reshape(P, window, 2))))
+    return spans
+
+
+def run(csv: Csv, rounds: int = 8, jt: BenchJson | None = None,
+        smoke: bool = False):
+    jt = jt if jt is not None else BenchJson()
+    P, window = (4, 8) if smoke else (4, WINDOW)
+    iters = max(3, rounds)
+
+    # ---- queue: window round-set vs scalar reference rounds --------------
+    qus = _timed_interleaved(_queue_jobs(P, window), iters=iters)
+    ops = 2 * P * window                       # pushes + pops per dispatch
+    speed_q = qus["scalar"] / qus["window"]
+    csv.add(f"stream_queue_window_p{P}_w{window}", qus["window"],
+            f"ops_per_round={ops};speedup_vs_scalar={speed_q:.2f}")
+    csv.add(f"stream_queue_scalar_p{P}_w{window}", qus["scalar"],
+            f"ops_per_round={ops}")
+    jt.add("stream_queue", "window", qus["window"], ops=ops,
+           speedup_vs_scalar=round(speed_q, 2))
+    jt.add("stream_queue", "scalar", qus["scalar"], ops=ops)
+    # acceptance bar is at window=32 (full runs); wall-clock ratios are
+    # load-sensitive, so — like the other benchmarks — smoke runs on
+    # shared CI runners report them but do not gate on them
+    assert smoke or speed_q >= 2.0, (
+        f"windowed queue must be ≥2× its scalar reference "
+        f"(got {speed_q:.2f}: {qus['scalar']:.1f}us → {qus['window']:.1f}us)")
+
+    # ---- ringbuffer: window publish/drain vs scalar send/recv ------------
+    rus = _timed_interleaved(_ring_jobs(P, window), iters=iters)
+    ops = 2 * window + 2 * (P - 1) * window    # sends + receives
+    speed_r = rus["scalar"] / rus["window"]
+    csv.add(f"stream_ringbuffer_window_p{P}_w{window}", rus["window"],
+            f"ops_per_round={ops};speedup_vs_scalar={speed_r:.2f}")
+    csv.add(f"stream_ringbuffer_scalar_p{P}_w{window}", rus["scalar"],
+            f"ops_per_round={ops}")
+    jt.add("stream_ringbuffer", "window", rus["window"], ops=ops,
+           speedup_vs_scalar=round(speed_r, 2))
+    jt.add("stream_ringbuffer", "scalar", rus["scalar"], ops=ops)
+    assert smoke or speed_r >= 2.0, (
+        f"windowed ringbuffer must be ≥2× its scalar reference "
+        f"(got {speed_r:.2f}: {rus['scalar']:.1f}us → {rus['window']:.1f}us)")
+
+    # ---- replicated log: mixed mutation workload, follower convergence ---
+    keyspace = 64 if smoke else 256
+    n_rounds = 4 if smoke else 8
+    mgr, leader, follower, log, jstep = _replog_setup(P, window, keyspace)
+    rng = np.random.default_rng(0)
+    windows = _replog_windows(rng, P, window, keyspace, n_rounds)
+    lst, fst, gst = (leader.init_state(), follower.init_state(),
+                     log.init_state())
+    # warm-up/compile on the first window, then time the rest
+    lst, fst, gst = jstep(lst, fst, gst, *windows[0])
+    jax.block_until_ready(jax.tree.leaves(gst))
+    import time
+    samples = []
+    for w in windows[1:]:
+        t0 = time.perf_counter()
+        lst, fst, gst = jstep(lst, fst, gst, *w)
+        jax.block_until_ready(jax.tree.leaves(gst))
+        samples.append(time.perf_counter() - t0)
+    us = float(np.median(samples)) * 1e6
+
+    # modeled log bytes: re-trace one append+sync with the ledger enabled
+    mgr.traffic.enable().reset()
+    fresh = jax.jit(lambda *a: mgr.runtime.run(
+        lambda lst, fst, gst, op, key, val: (
+            log.append(gst, op, key, val)[0]), *a))
+    jax.block_until_ready(jax.tree.leaves(
+        fresh(lst, fst, gst, *windows[-1])))
+    log_bytes = sum(v["bytes"] for k, v in mgr.traffic.summary().items()
+                    if k.endswith(".publish"))
+    mgr.traffic.disable().reset()
+
+    lag = int(np.asarray(mgr.runtime.run(log.lag, gst))[0])
+    converged = not diverging_leaves(
+        jax.tree.map(np.asarray, lst), jax.tree.map(np.asarray, fst))
+    assert converged, ("ReplicatedLog follower must converge bitwise to "
+                       "the leader after a mixed mutation workload")
+    assert lag == 0, f"sync-after-append must leave zero lag (got {lag})"
+    csv.add(f"stream_replog_p{P}_w{window}", us,
+            f"ops_per_round={P * window};lag={lag};"
+            f"log_bytes_per_window={log_bytes:.0f};"
+            f"follower_bitwise_equal={int(converged)}")
+    jt.add("stream_replog", "append_sync", us, ops=P * window,
+           lag=lag, log_bytes_per_window=log_bytes,
+           follower_bitwise_equal=int(converged))
+    return jt

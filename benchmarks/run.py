@@ -4,6 +4,8 @@
   Fig. 4   bench_lock      single-lock + transactional locking vs MPI-style
   Fig. 5   bench_kvstore   kv throughput × mix × distribution × window
                            × implementation (hash vs reference)
+  §9       bench_stream    windowed queue/ringbuffer vs scalar references,
+                           ReplicatedLog append+sync latency/lag/bytes
   Fig. 7   bench_power     DC/DC control-loop stability vs period
   §Roofline bench_roofline dry-run-derived roofline table (reads reports/)
 
@@ -26,7 +28,8 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: barrier,lock,kvstore,power,roofline")
+                    help="comma list: barrier,lock,kvstore,stream,power,"
+                         "roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny configs for CI smoke runs")
     ap.add_argument("--json-dir", default=os.path.dirname(
@@ -57,6 +60,13 @@ def main() -> None:
         bench_kvstore.run(csv, rounds=2 if args.smoke else 8, jt=jt,
                           smoke=args.smoke)
         path = jt.dump(os.path.join(args.json_dir, "BENCH_kvstore.json"))
+        print(f"# wrote {path} ({len(jt.rows)} rows)", file=sys.stderr)
+    if enabled("stream"):
+        from . import bench_stream
+        jt = BenchJson()
+        bench_stream.run(csv, rounds=2 if args.smoke else 8, jt=jt,
+                         smoke=args.smoke)
+        path = jt.dump(os.path.join(args.json_dir, "BENCH_stream.json"))
         print(f"# wrote {path} ({len(jt.rows)} rows)", file=sys.stderr)
     if enabled("power"):
         from . import bench_power

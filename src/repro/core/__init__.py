@@ -7,7 +7,8 @@ Public surface:
 * channels:        :class:`SharedRegion`, :class:`OwnedVar`, :class:`AtomicVar`,
                    :class:`SST`, :class:`Barrier`, :class:`TicketLock`,
                    :class:`TicketLockArray`, :class:`Ringbuffer`,
-                   :class:`SharedQueue`, :class:`KVStore`, :class:`ReadCache`
+                   :class:`SharedQueue`, :class:`KVStore`, :class:`ReadCache`,
+                   :class:`ReplicatedLog`
 """
 from .ack import ALL_PEERS, AckKey, FenceScope, OpDesc, join, make_ack
 from .atomic import AtomicVar, AtomicVarState
@@ -21,6 +22,7 @@ from .lock import (NO_TICKET, TicketLock, TicketLockArray,
 from .ownedvar import OwnedVar, OwnedVarState, checksum
 from .queue import SharedQueue, SharedQueueState
 from .region import SharedRegion, SharedRegionState
+from .replog import ReplicatedLog, ReplicatedLogState
 from .ringbuffer import Ringbuffer, RingbufferState
 from .runtime import Manager, Runtime, make_manager
 from .sst import SST, SSTState
@@ -31,7 +33,8 @@ __all__ = [
     "NOP", "GET", "INSERT", "UPDATE", "DELETE", "KVResult", "KVStore",
     "KVStoreState", "NO_TICKET", "TicketLock", "TicketLockArray",
     "TicketLockArrayState", "TicketLockState", "OwnedVar", "OwnedVarState",
-    "checksum", "ReadCache", "ReadCacheState", "SharedQueue",
+    "checksum", "ReadCache", "ReadCacheState", "ReplicatedLog",
+    "ReplicatedLogState", "SharedQueue",
     "SharedQueueState", "SharedRegion",
     "SharedRegionState", "Ringbuffer", "RingbufferState", "Manager",
     "Runtime", "make_manager", "SST", "SSTState",

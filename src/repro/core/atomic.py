@@ -61,6 +61,32 @@ class AtomicVar(Channel):
                        jnp.dtype(self.dtype).itemsize)
         return new, jnp.where(pred, my_old, old), self.mgr.track(ack)
 
+    def fetch_add_window(self, state: AtomicVarState, amount, preds):
+        """Windowed fetch-and-add: B requests per participant resolved in
+        ONE ranked prefix scan over all P·B lanes (:func:`colls.window_prefix`).
+
+        Serialization order is **(participant, lane) lexicographic** — the
+        windowed generalization of :meth:`fetch_add`'s participant-order
+        contract, so the B=1 window is bit-for-bit the scalar path.
+
+        amount: () or (B,) added per enabled lane; preds: (B,) bool.
+        Returns (new_state, my_old (B,), ack); disabled lanes report the
+        pre-round official value, matching the scalar convention.
+        """
+        preds = jnp.asarray(preds)
+        amt = jnp.where(preds,
+                        jnp.broadcast_to(jnp.asarray(amount, self.dtype),
+                                         preds.shape),
+                        jnp.zeros((), self.dtype))
+        old = colls.bcast_from(state.official, self.host, self.axis)
+        excl, total = colls.window_prefix(amt, self.axis)
+        my_old = old + excl.astype(self.dtype)
+        new_val = old + total.astype(self.dtype)
+        new = AtomicVarState(official=new_val, cached=new_val)
+        ack = make_ack(new_val, "atomic", self.full_name, (self.host,),
+                       jnp.dtype(self.dtype).itemsize * int(preds.shape[0]))
+        return new, jnp.where(preds, my_old, old), self.mgr.track(ack)
+
     def compare_swap(self, state: AtomicVarState, expected, desired, pred=True):
         """Atomic CAS; among same-round contenders the lowest participant id
         whose ``expected`` matches wins.  Returns (state, old, success, ack)."""

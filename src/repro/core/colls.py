@@ -100,6 +100,27 @@ def prefix_sums(x, axis: str) -> Tuple[jax.Array, jax.Array, jax.Array]:
     return excl, total, g
 
 
+def window_prefix(x, axis: str) -> Tuple[jax.Array, jax.Array]:
+    """(exclusive_prefix, total) for a (B,) lane vector per participant,
+    flattened in **(participant, lane) lexicographic order** over all P·B
+    lanes — the windowed generalization of :func:`prefix_sums`.
+
+    ``excl[b]`` sums every lane (q, c) with q < me, plus my own lanes
+    c < b; ``total`` sums all P·B lanes.  One (B,)-word all-gather plus a
+    local scan — the single ranked prefix-scan that resolves a whole
+    window of contended FAA requests (tickets, queue slots) in one
+    round-set, preserving the scalar path's participant-order fairness
+    lane-wise within each participant.
+    """
+    x = jnp.asarray(x)
+    g = jax.lax.all_gather(x, axis, axis=0, tiled=False)        # (P, B)
+    me = my_id(axis)
+    qs = jnp.arange(g.shape[0])
+    before_me = jnp.sum(jnp.where((qs < me)[:, None], g, jnp.zeros_like(g)))
+    mine = jnp.cumsum(x) - x                                    # lane-local
+    return before_me + mine, jnp.sum(g)
+
+
 def remote_read(local_buf, target, index, axis: str, pred=True,
                 ledger=None, verb: str = "remote_read"):
     """One-sided READ: each participant reads row ``index`` of participant

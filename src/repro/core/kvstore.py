@@ -1144,6 +1144,49 @@ class KVStore(Channel):
             found=jnp.where(is_get, get_found, succ),
             retries=retries)
 
+    # -- replication record export hook (DESIGN.md §9.3) ----------------------
+    @property
+    def record_width(self) -> int:
+        """Width (int32 words) of one exported mutation record:
+        ``[op | key_bits | value…W | reserved]`` — 5 for the default W=2,
+        the same row shape as the (P·B, 5) tracker records the service
+        rounds gather."""
+        return 3 + self.W
+
+    def export_window_records(self, ops, keys, values):
+        """Encode one (B,) window lane set as replication records.
+
+        Returns (B, record_width) int32 rows ``[op | key_bits | value… |
+        0]`` with non-mutating lanes (NOP/GET) masked to NOP — exactly the
+        information a replica needs to replay the window's state effect:
+        GETs mutate nothing, and every mutation's outcome is a
+        deterministic function of (op, key, value) under the window's
+        (participant, lane) order.  This is the record-export hook the
+        :class:`~repro.core.replog.ReplicatedLog` publishes per mutation
+        window.
+        """
+        ops = jnp.asarray(ops, jnp.int32)
+        B = ops.shape[0]
+        keys = jnp.asarray(keys, jnp.uint32).reshape(B)
+        values = jnp.asarray(values, jnp.int32).reshape(B, self.W)
+        mut = (ops == INSERT) | (ops == UPDATE) | (ops == DELETE)
+        return jnp.concatenate([
+            jnp.where(mut, ops, NOP)[:, None], _u2i(keys)[:, None],
+            values, jnp.zeros((B, 1), jnp.int32)], axis=1)
+
+    def replay_window_records(self, st: KVStoreState, recs, pred=True):
+        """Apply one exported (B, record_width) record lane set through
+        :meth:`op_window` — the existing vectorized service machinery, so
+        a replica's state evolves through exactly the leader's code path.
+        ``pred=False`` masks the whole window to NOP lanes, which
+        ``op_window`` executes as the identity (no locks wanted, zero
+        service rounds) — an absent log entry replays as a no-op.
+        Returns (state, KVResult)."""
+        recs = jnp.asarray(recs, jnp.int32)
+        ops = jnp.where(jnp.asarray(pred), recs[:, 0], NOP)
+        return self.op_window(st, ops, _i2u(recs[:, 1]),
+                              recs[:, 2:2 + self.W])
+
     # -- batched lock-free GETs (the paper's §7 "large window" mode) ---------
     def get_batch(self, st: KVStoreState, keys, pred=None):
         """R lock-free GETs per participant in ONE collective round.

@@ -10,6 +10,31 @@ Flow control is resolved *before* ticket issue: requesters are ranked by the
 same participant-order prefix scan used for FAA, and only ranks that fit
 (space for enqueues, available items for dequeues) receive tickets — the
 SPMD analogue of CRQ's closed/empty checks, made deterministic (DESIGN §2).
+
+Windowed streaming rounds (DESIGN.md §9.1)
+------------------------------------------
+
+:meth:`enqueue_window` / :meth:`dequeue_window` execute a ``(B,)`` lane
+window of pushes/pops per participant in ONE collective round-set:
+
+* flow control + ticket issue ride a single ranked prefix scan over all
+  P·B lanes (:func:`colls.window_prefix`) in **(participant, lane)
+  lexicographic order** — all of participant p's lanes rank ahead of
+  participant p+1's, and one participant's lanes rank in window order —
+  so grants are exactly the lanes whose global rank fits (a full queue
+  rejects a rank *suffix*, never a random subset);
+* slot traffic moves through the PR-2/3 batched one-sided verbs
+  (``write_batch``/``read_batch``) with per-lane ``preds``: dead lanes
+  never ride the wire, granted lanes land in one scatter
+  (``assume_unique`` — consecutive tickets mean distinct slots).
+
+:meth:`enqueue`/:meth:`dequeue` are the B=1 wrappers; the original scalar
+paths are retained verbatim as :meth:`_enqueue_reference` /
+:meth:`_dequeue_reference` — the executable specification the regression
+suite pins the B=1 window against bit-for-bit (state and grant lanes; the
+window paths additionally zero-mask the *values* of failed dequeue lanes,
+where the scalar path leaked whatever the head slot held — the only
+intentional divergence, see DESIGN.md §9.1).
 """
 from __future__ import annotations
 
@@ -72,12 +97,103 @@ class SharedQueue(Channel):
     def _slot_of(self, ticket):
         # cyclic: global slot = ticket mod capacity (flow control guarantees
         # the slot was consumed before reuse; seq check guards ABA).
+        # Elementwise, so it serves scalar tickets and (B,) windows alike.
         t = (ticket % jnp.uint32(self.capacity)).astype(jnp.int32)
         return t % jnp.int32(self.P), t // jnp.int32(self.P)
 
-    # -- enqueue -----------------------------------------------------------------
+    # -- windowed enqueue --------------------------------------------------------
+    def enqueue_window(self, state: SharedQueueState, values, preds=None):
+        """Push a (B,) lane window of values in ONE collective round-set.
+
+        values: (B, width) dtype; preds: (B,) bool lane mask (default all
+        enabled).  Returns (state, grant (B,)): ``grant[b]`` is True iff
+        lane b received a ticket — flow control ranks all P·B enabled
+        lanes in (participant, lane) lexicographic order and grants the
+        ranks that fit the queue's remaining space, so rejections form a
+        suffix of the global rank order.  Granted payloads move through
+        one batched one-sided write (dead lanes cost nothing on the wire).
+        """
+        values = jnp.asarray(values, self.dtype).reshape(-1, self.width)
+        B = values.shape[0]
+        if preds is None:
+            preds = jnp.ones((B,), jnp.bool_)
+        want = jnp.asarray(preds)
+        head_now = colls.bcast_from(state.head.official, 0, self.axis)
+        tail_now = colls.bcast_from(state.tail.official, 0, self.axis)
+        rank, _total = colls.window_prefix(want.astype(jnp.int32), self.axis)
+        space = jnp.int32(self.capacity) - (tail_now - head_now).astype(
+            jnp.int32)
+        grant = want & (rank < space)
+        tail_st, tickets, _ack = self.tail.fetch_add_window(
+            state.tail, jnp.uint32(1), preds=grant)
+        # one batched one-sided write of every granted (seq, payload) entry;
+        # consecutive tickets → distinct slots, so the scatter is unique.
+        node, row = self._slot_of(tickets)
+        entries = jnp.concatenate(
+            [self._to_lane(tickets)[:, None], values], axis=1)
+        slots, _ack2 = self.region.write_batch(state.slots, node, row,
+                                               entries, preds=grant,
+                                               assume_unique=True)
+        return state._replace(tail=tail_st, slots=slots), grant
+
+    # -- windowed dequeue --------------------------------------------------------
+    def dequeue_window(self, state: SharedQueueState, preds):
+        """Pop a (B,) lane window in ONE collective round-set.
+
+        preds: (B,) bool lane mask.  Returns (state, values (B, width),
+        ok (B,)); FIFO in the same (participant, lane) ticket order as
+        :meth:`enqueue_window`.  Slot reads ride one batched (coalesced)
+        one-sided read with per-lane preds — dead lanes are masked off the
+        wire (the PR-2 verb contract; the scalar reference path predates
+        it and pays for dead lanes, which the regression suite documents).
+        Values of non-granted/failed lanes are zero.
+        """
+        want = jnp.asarray(preds)
+        head_now = colls.bcast_from(state.head.official, 0, self.axis)
+        tail_now = colls.bcast_from(state.tail.official, 0, self.axis)
+        rank, _total = colls.window_prefix(want.astype(jnp.int32), self.axis)
+        avail = (tail_now - head_now).astype(jnp.int32)
+        grant = want & (rank < avail)
+        head_st, tickets, _ack = self.head.fetch_add_window(
+            state.head, jnp.uint32(1), preds=grant)
+        node, row = self._slot_of(tickets)
+        entries, _ack2 = self.region.read_batch(state.slots, node, row,
+                                                preds=grant)
+        seq = self._from_lane(entries[:, 0])
+        ok = grant & (seq == tickets)
+        values = jnp.where(ok[:, None], entries[:, 1:],
+                           jnp.zeros_like(entries[:, 1:]))
+        # clear the consumed slots in one batched write (ABA safety on wrap)
+        B = entries.shape[0]
+        empty = jnp.concatenate([
+            jnp.broadcast_to(self._to_lane(EMPTY_SEQ), (B, 1)),
+            jnp.zeros((B, self.width), self.dtype)], axis=1)
+        slots, _ack3 = self.region.write_batch(state.slots, node, row, empty,
+                                               preds=ok, assume_unique=True)
+        return state._replace(head=head_st, slots=slots), values, ok
+
+    # -- scalar entry points: B=1 windows ----------------------------------------
     def enqueue(self, state: SharedQueueState, value, want=True):
-        """Push ``value`` ((width,) dtype).  Returns (state, ok)."""
+        """Push ``value`` ((width,) dtype).  Returns (state, ok).  The B=1
+        wrapper around :meth:`enqueue_window`; pinned bit-for-bit against
+        :meth:`_enqueue_reference` by the regression suite."""
+        new, grant = self.enqueue_window(
+            state, jnp.asarray(value, self.dtype).reshape(1, self.width),
+            jnp.reshape(jnp.asarray(want), (1,)))
+        return new, grant[0]
+
+    def dequeue(self, state: SharedQueueState, want=True):
+        """Pop one value.  Returns (state, value, ok); FIFO in ticket order.
+        The B=1 wrapper around :meth:`dequeue_window` (failed lanes return
+        zeros, where the scalar reference leaked the head slot's bits)."""
+        new, values, ok = self.dequeue_window(
+            state, jnp.reshape(jnp.asarray(want), (1,)))
+        return new, values[0], ok[0]
+
+    # -- retained scalar reference paths (the executable specification) ----------
+    def _enqueue_reference(self, state: SharedQueueState, value, want=True):
+        """Original scalar enqueue — kept verbatim as the executable
+        specification the windowed path is pinned against bit-for-bit."""
         want = jnp.asarray(want)
         # flow control: rank requesters, grant ranks that fit.
         head_now = colls.bcast_from(state.head.official, 0, self.axis)
@@ -97,9 +213,12 @@ class SharedQueue(Channel):
         new = state._replace(tail=tail_st, slots=slots)
         return new, grant
 
-    # -- dequeue -----------------------------------------------------------------
-    def dequeue(self, state: SharedQueueState, want=True):
-        """Pop one value.  Returns (state, value, ok); FIFO in ticket order."""
+    def _dequeue_reference(self, state: SharedQueueState, want=True):
+        """Original scalar dequeue — the executable specification.  Note
+        the pre-PR-4 verb usage it specifies: the slot read is *unmasked*
+        (dead lanes pay wire bytes and the returned ``value`` of a failed
+        pop is whatever the head slot held) — the windowed path fixes both
+        under the PR-2 locality-masked verb contract."""
         want = jnp.asarray(want)
         head_now = colls.bcast_from(state.head.official, 0, self.axis)
         tail_now = colls.bcast_from(state.tail.official, 0, self.axis)

@@ -1,0 +1,181 @@
+"""ReplicatedLog — a kvstore replication log composed from channel objects.
+
+LOCO's central claim is that channels *compose*: bigger distributed
+objects are built from smaller ones without giving up one-sided
+performance (§4.1).  This module is the streaming-tier proof, the
+headline scenario of Aguilera et al. (*The Impact of RDMA on Agreement*):
+a **replicated log** built from shared-memory-style primitives —
+
+* a :class:`~repro.core.ringbuffer.Ringbuffer` owned by the *leader*
+  carries one log entry per kvstore mutation window: the gathered
+  ``(P·B, record_width)`` mutation records the window's service rounds
+  already put on the wire (``KVStore.export_window_records``);
+* the ringbuffer's embedded SST of read cursors doubles as the
+  replication-progress table — ``lag()`` is head minus the slowest
+  cursor, and ring reuse *is* commit acknowledgement;
+* followers drain entries with one bulk checksum-validated read per sync
+  (``Ringbuffer.recv_window``) and replay them through the kvstore's
+  existing vectorized apply machinery
+  (``KVStore.replay_window_records`` → ``op_window``), so a follower
+  replica's state converges **bitwise** to the leader's.
+
+Convergence argument (DESIGN.md §9.3): ``op_window`` is a pure
+deterministic function of (state, ops, keys, values); GET/NOP lanes
+provably do not touch non-cache state; the log delivers every mutation
+window exactly once, in publish order, with the mutating lanes intact and
+everything else masked to NOP.  Two identically-configured stores that
+start from ``init_state()`` and apply the same window sequence are
+therefore bit-for-bit equal on every state leaf (the read tier's private
+cache aside, which is local policy, not replicated data) — the property
+the test/bench suites check leaf-by-leaf.
+
+In the SPMD adaptation every participant hosts a lane of *both* the
+leader store and each follower store; "leader" names the ring-owning
+participant whose publish linearizes the log, exactly as the paper's
+single-writer ringbuffer prescribes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import colls
+from .channel import Channel
+from .kvstore import KVStore, KVStoreState
+from .ringbuffer import Ringbuffer, RingbufferState
+from .runtime import Manager
+
+
+def diverging_leaves(a: KVStoreState, b: KVStoreState,
+                     skip: Sequence[str] = ("cache",)):
+    """Names of the KVStoreState fields on which two states differ bitwise
+    — the convergence check of the §9.3 argument, shared by the serving
+    engine, the benchmarks and the test suites so the skip-list (the read
+    ``cache`` is local policy, not replicated data) lives in ONE place.
+    Returns [] iff the states are leaf-for-leaf equal outside ``skip``.
+    """
+    out = []
+    for name, la, lb in zip(a._fields, a, b):
+        if name in skip:
+            continue
+        for xa, xb in zip(jax.tree.leaves(la), jax.tree.leaves(lb)):
+            if not bool(jnp.all(xa == xb)):
+                out.append(name)
+                break
+    return out
+
+
+class ReplicatedLogState(NamedTuple):
+    ring: RingbufferState
+    published: jax.Array  # () uint32 — entries appended to the log
+    dropped: jax.Array    # () uint32 — appends rejected by flow control
+
+
+class ReplicatedLog(Channel):
+    """Replication log for ``store``-shaped mutation windows.
+
+    window:   the (B,) window width of the entries it carries (one log
+              entry = one gathered (P·B, record_width) record block);
+    capacity: ring entries provisioned between the leader and the slowest
+              follower (sizing guidance in DESIGN.md §9.4 — syncing after
+              every append needs only 2; batching syncs needs the sync
+              period plus slack);
+    leader:   the ring-owning participant (default 0).
+    """
+
+    def __init__(self, parent, name: str, mgr: Manager, *, store: KVStore,
+                 window: int, capacity: int = 4, leader: int = 0):
+        super().__init__(parent, name, mgr)
+        self.store = store
+        self.window = int(window)
+        self.leader = int(leader)
+        self.rec_width = store.record_width
+        self.entry_width = self.P * self.window * self.rec_width
+        self.ring = Ringbuffer(self, "log", mgr, owner=self.leader,
+                               capacity=int(capacity),
+                               width=self.entry_width, dtype=jnp.int32)
+
+    def init_state(self) -> ReplicatedLogState:
+        z = jnp.zeros((self.P,), jnp.uint32)
+        return ReplicatedLogState(ring=self.ring.init_state(),
+                                  published=z, dropped=z)
+
+    # -- leader side -----------------------------------------------------------
+    def append(self, st: ReplicatedLogState, ops, keys, values, pred=True):
+        """Publish one (B,) mutation window to the log.
+
+        Every participant passes its own window lanes (the same arrays it
+        handed ``op_window``); the records are gathered to the full
+        (P·B, record_width) block — the all-gather the window's service
+        rounds pay anyway — and the leader broadcasts the block as ONE
+        ring entry.  The entry's ``lens`` metadata carries the live
+        mutation-record count, but the entry itself (and hence the
+        modeled wire bytes the ring's ledger records) is the fixed
+        P·B·record_width slot: replication cost is per published
+        *window*, not per live record (§9.4 — why variable-B callers pad
+        to one log shape instead of building per-shape logs).  Returns
+        (state, ok):
+        ``ok`` is False everywhere when the ring had no space (slowest
+        follower more than ``capacity`` windows behind); the drop is
+        counted and the caller retries after a sync.
+        """
+        recs = self.store.export_window_records(ops, keys, values)
+        block = jax.lax.all_gather(recs, self.axis, axis=0)   # (P, B, rw)
+        n_live = jnp.sum(block[..., 0] != 0).astype(jnp.int32)
+        ring, sent, _ack = self.ring.publish_window(
+            st.ring, block.reshape(1, self.entry_width),
+            jnp.reshape(n_live, (1,)),
+            preds=jnp.reshape(jnp.asarray(pred), (1,)))
+        # publish grants at the owner only; everyone learns the outcome
+        ok = jax.lax.psum(sent[0].astype(jnp.int32), self.axis) > 0
+        tried = jax.lax.psum(
+            (jnp.asarray(pred) & (colls.my_id(self.axis) == self.leader))
+            .astype(jnp.int32), self.axis) > 0
+        return st._replace(
+            ring=ring,
+            published=st.published + ok.astype(jnp.uint32),
+            dropped=st.dropped + (tried & ~ok).astype(jnp.uint32)), ok
+
+    # -- follower side ---------------------------------------------------------
+    def sync(self, st: ReplicatedLogState, followers, follower_states,
+             max_entries: int = 1):
+        """Drain up to ``max_entries`` log entries and replay each into
+        every follower store, in log order.
+
+        followers: a KVStore or a sequence of KVStores (every follower
+        must share the leader store's shape); follower_states: matching
+        state or sequence.  One ``recv_window`` serves the whole sync
+        (single bulk validated read + single cursor ack); each drained
+        entry replays through ``replay_window_records`` with absent
+        entries masked to the identity.  Returns (state, follower_states,
+        applied ()) with ``applied`` the number of entries replayed.
+        """
+        single = isinstance(followers, KVStore)
+        fls: Sequence[KVStore] = [followers] if single else list(followers)
+        fsts = [follower_states] if single else list(follower_states)
+        me = colls.my_id(self.axis)
+        ring, entries, _lens, got = self.ring.recv_window(
+            st.ring, max_entries)
+        for k in range(max_entries):
+            block = entries[k].reshape(self.P, self.window, self.rec_width)
+            mine = block[me]                        # my (B, rw) lane slice
+            for i, fl in enumerate(fls):
+                fsts[i], _res = fl.replay_window_records(
+                    fsts[i], mine, pred=got[k])
+        applied = jnp.sum(got.astype(jnp.int32))
+        out_states = fsts[0] if single else tuple(fsts)
+        return st._replace(ring=ring), out_states, applied
+
+    # -- progress --------------------------------------------------------------
+    def lag(self, st: ReplicatedLogState):
+        """Entries the slowest follower is behind the leader's log head
+        (the ring's SST cursors ARE the replication-progress table)."""
+        return (st.ring.head
+                - jnp.min(self.ring.acks.rows(st.ring.acks))).astype(
+                    jnp.int32)
+
+    def entry_nbytes(self) -> int:
+        """Wire bytes of one full log entry (the ring's slot size)."""
+        return self.ring.slot_nbytes

@@ -6,6 +6,25 @@ with a custom atomicity mechanism for mixed-size messages: each slot carries
 stale slots.  Consumers acknowledge consumption through an SST of read
 cursors, which the producer consults for buffer reuse (slots are reusable
 once every consumer's cursor has passed them).
+
+Slot checksums cover the payload **and** the (seq, len) metadata
+(:meth:`Ringbuffer._slot_csum`): a torn or corrupted length/sequence word
+can never present as a checksum-valid message — the §5.1.1 atomicity
+contract extended to the mixed-size slot format.  (The seed checksummed
+the payload alone, so a corrupt ``len`` delivered a "valid" message of the
+wrong size; the streaming-tier fuzz properties pinned this down.)
+
+Windowed streaming rounds (DESIGN.md §9.2)
+------------------------------------------
+
+:meth:`publish_window` broadcasts up to B messages in ONE round-set (flow
+control grants a rank-prefix of the enabled lanes against the slowest
+consumer's window; modeled wire bytes scale with the slots actually
+moved); :meth:`recv_window` drains up to B messages with one bulk
+checksum-validated read of the cached slots and a **single SST cursor ack
+for the whole window** — where B scalar ``recv_one`` calls pay B cursor
+broadcasts.  ``send``/``recv_one`` are the scalar reference paths the B=1
+windows are pinned against bit-for-bit.
 """
 from __future__ import annotations
 
@@ -26,7 +45,7 @@ class RingbufferState(NamedTuple):
     payload: jax.Array  # (capacity, width) message words (cached everywhere)
     seq: jax.Array      # (capacity,) uint32 slot sequence numbers
     length: jax.Array   # (capacity,) int32 message lengths (words)
-    csum: jax.Array     # (capacity,) uint32 payload checksums
+    csum: jax.Array     # (capacity,) uint32 payload+metadata checksums
     head: jax.Array     # () uint32 producer cursor (cached everywhere)
     acks: SSTState      # per-consumer read cursors
 
@@ -55,6 +74,27 @@ class Ringbuffer(Channel):
             head=jnp.zeros((P,), jnp.uint32),
             acks=self.acks.init_state())
 
+    # -- slot integrity ---------------------------------------------------------
+    def _slot_csum(self, msg, seq, length):
+        """Checksum of one slot's payload AND metadata (seq, len).
+
+        Covering the metadata is load-bearing: a consumer validates
+        ``seq == cursor`` separately (staleness), but ``len`` has no
+        independent check — only the checksum stands between a torn
+        length word and a mis-sized "valid" delivery.
+        """
+        payload = jnp.asarray(msg, self.dtype).reshape(self.width)
+        if payload.dtype == jnp.uint32:
+            lanes = payload
+        else:
+            lanes = jax.lax.bitcast_convert_type(
+                payload.astype(self.dtype), jnp.uint32)
+        meta = jnp.stack([
+            jnp.asarray(seq, jnp.uint32),
+            jax.lax.bitcast_convert_type(
+                jnp.asarray(length, jnp.int32), jnp.uint32)])
+        return checksum(jnp.concatenate([lanes, meta]))
+
     # -- producer ------------------------------------------------------------
     def can_send(self, state: RingbufferState):
         """Space check: head may lead the slowest consumer by < capacity."""
@@ -64,7 +104,9 @@ class Ringbuffer(Channel):
     def send(self, state: RingbufferState, msg, msg_len, pred=True):
         """Producer broadcasts ``msg`` ((width,) padded, ``msg_len`` valid
         words).  Returns (state, sent, ack).  ``sent`` is False when the
-        caller is not the owner, pred is False, or the ring is full."""
+        caller is not the owner, pred is False, or the ring is full.
+        The scalar reference path; :meth:`publish_window` is the windowed
+        production verb (one round-set for B messages)."""
         me = colls.my_id(self.axis)
         is_owner = me == self.owner
         do = jnp.asarray(pred) & is_owner & self.can_send(state)
@@ -76,7 +118,8 @@ class Ringbuffer(Channel):
         seq_v = jnp.where(do, state.head, state.seq[slot])
         len_v = jnp.where(do, jnp.asarray(msg_len, jnp.int32),
                           state.length[slot])
-        csum_v = jnp.where(do, checksum(msg), state.csum[slot])
+        csum_v = jnp.where(do, self._slot_csum(msg, state.head, msg_len),
+                           state.csum[slot])
         head_v = jnp.where(do, state.head + jnp.uint32(1), state.head)
 
         # one-sided push from owner to all consumers (masked all-reduce).
@@ -98,25 +141,131 @@ class Ringbuffer(Channel):
                        ALL_PEERS, self.slot_nbytes)
         return new, do & sent_any, self.mgr.track(ack)
 
+    def publish_window(self, state: RingbufferState, msgs, lens, preds=None):
+        """Owner broadcasts up to B messages in ONE collective round-set.
+
+        msgs: (B, width) dtype; lens: (B,) int32; preds: (B,) bool lane
+        mask (default all enabled).  Returns (state, sent (B,), ack):
+        ``sent[b]`` is True (at the owner) iff lane b's message landed —
+        flow control grants the longest rank-prefix of enabled lanes that
+        fits the slowest consumer's window, so a nearly-full ring rejects
+        a *suffix* of the window (retry next round-set), mirroring the
+        queue's flow-control ranking.  Non-owners' lanes never send.
+
+        Modeled wire bytes (traffic ledger, verb ``<name>.publish``)
+        scale with the slots actually moved: 2·slot_bytes per granted
+        lane (the §2 ring-broadcast price), zero for masked/rejected
+        lanes and for windows published by non-owners.
+        """
+        msgs = jnp.asarray(msgs, self.dtype).reshape(-1, self.width)
+        B = msgs.shape[0]
+        if preds is None:
+            preds = jnp.ones((B,), jnp.bool_)
+        me = colls.my_id(self.axis)
+        is_owner = me == self.owner
+        want = jnp.asarray(preds) & is_owner
+        lens = jnp.asarray(lens, jnp.int32).reshape(B)
+        min_ack = jnp.min(self.acks.rows(state.acks))
+        space = jnp.int32(self.capacity) - (state.head - min_ack).astype(
+            jnp.int32)
+        w = want.astype(jnp.int32)
+        rank = jnp.cumsum(w) - w                    # owner-local lane rank
+        grant = want & (rank < space)
+        seqs = state.head + rank.astype(jnp.uint32)
+        slots = (seqs % jnp.uint32(self.capacity)).astype(jnp.int32)
+        csums = jax.vmap(self._slot_csum)(msgs, seqs, lens)
+        n_moved = jnp.sum(grant.astype(jnp.uint32))
+        head_v = state.head + n_moved
+
+        # one push from the owner: the whole window's slots + new head.
+        sent_any = jax.lax.psum(grant.astype(jnp.int32), self.axis) > 0
+        msgs_b = colls.bcast_from(msgs, self.owner, self.axis)
+        seqs_b = colls.bcast_from(seqs, self.owner, self.axis)
+        lens_b = colls.bcast_from(lens, self.owner, self.axis)
+        csums_b = colls.bcast_from(csums, self.owner, self.axis)
+        head_b = colls.bcast_from(head_v, self.owner, self.axis)
+        slots_b = colls.bcast_from(slots, self.owner, self.axis)
+        grant_b = colls.bcast_from(grant, self.owner, self.axis)
+
+        # granted lanes land in one scatter; rejected lanes are dropped
+        row = jnp.where(grant_b, slots_b, self.capacity)
+        new = state._replace(
+            payload=state.payload.at[row].set(msgs_b, mode="drop"),
+            seq=state.seq.at[row].set(seqs_b, mode="drop"),
+            length=state.length.at[row].set(lens_b, mode="drop"),
+            csum=state.csum.at[row].set(csums_b, mode="drop"),
+            head=head_b)
+        if self.mgr.traffic.enabled:
+            # wire bytes ∝ slots actually moved (owner-side accounting;
+            # non-owners moved nothing)
+            self.mgr.traffic.record(
+                f"{self.full_name}.publish",
+                2.0 * self.slot_nbytes * n_moved.astype(jnp.float32))
+        ack = make_ack((msgs_b, head_b), "bcast", self.full_name,
+                       ALL_PEERS, self.slot_nbytes * B)
+        return new, grant & sent_any, self.mgr.track(ack)
+
     # -- consumer -------------------------------------------------------------
-    def recv_one(self, state: RingbufferState):
-        """Consume the next unread message if available.
+    def recv_one(self, state: RingbufferState, pred=True):
+        """Consume the next unread message if available (and ``pred``).
 
         Returns (state, msg, msg_len, got).  Validates seq (staleness) and
-        checksum (tearing); a failed validation returns got=False without
+        checksum (tearing; the checksum also covers seq+len — see
+        :meth:`_slot_csum`); a failed validation returns got=False without
         advancing the cursor (the retry is the next call).  The advanced
         cursor is acknowledged through the SST (push) so the producer can
-        reuse slots.
+        reuse slots.  ``pred=False`` lanes consume nothing and return
+        zeros (the PR-2 masked-lane contract; the seed had no pred and
+        leaked the slot's bits on failed receives).
         """
         me = colls.my_id(self.axis)
         my_ack = self.acks.rows(state.acks)[me]
-        have = my_ack < state.head
+        have = jnp.asarray(pred) & (my_ack < state.head)
         slot = (my_ack % jnp.uint32(self.capacity)).astype(jnp.int32)
         msg = state.payload[slot]
-        ok = (state.seq[slot] == my_ack) & (checksum(msg) == state.csum[slot])
+        ok = (state.seq[slot] == my_ack) \
+            & (self._slot_csum(msg, state.seq[slot], state.length[slot])
+               == state.csum[slot])
         got = have & ok
         new_ack = jnp.where(got, my_ack + jnp.uint32(1), my_ack)
         acks = self.acks.store_mine(state.acks, new_ack)
         acks, _a = self.acks.push_broadcast(acks)
         new = state._replace(acks=acks)
-        return new, msg, state.length[slot], got
+        msg = jnp.where(got, msg, jnp.zeros_like(msg))
+        msg_len = jnp.where(got, state.length[slot], 0)
+        return new, msg, msg_len, got
+
+    def recv_window(self, state: RingbufferState, window: int, pred=True):
+        """Drain up to ``window`` messages in ONE round-set.
+
+        Returns (state, msgs (window, width), lens (window,),
+        got (window,)).  One bulk checksum-validated read of the cached
+        slots serves the whole window, and the advanced cursor is
+        acknowledged with a **single** SST push — the windowed analogue of
+        ``window`` scalar :meth:`recv_one` calls (which pay one cursor
+        broadcast each).  ``got`` is a contiguous prefix: the cursor
+        stalls at the first slot that fails validation (stale seq or
+        checksum mismatch) and retries from there next call, exactly like
+        the scalar path.  Masked/empty lanes return zeros.
+        """
+        me = colls.my_id(self.axis)
+        my_ack = self.acks.rows(state.acks)[me]
+        k = jnp.arange(window, dtype=jnp.uint32)
+        seqs = my_ack + k
+        slots = (seqs % jnp.uint32(self.capacity)).astype(jnp.int32)
+        rows = state.payload[slots]                       # (window, width)
+        valid = (state.seq[slots] == seqs) \
+            & (jax.vmap(self._slot_csum)(rows, state.seq[slots],
+                                         state.length[slots])
+               == state.csum[slots])
+        avail = state.head - my_ack                       # uint32, ≥ 0
+        good = jnp.asarray(pred) & (k < avail) & valid
+        # contiguous prefix: a lane delivers iff no earlier lane failed
+        bad = (~good).astype(jnp.int32)
+        got = good & ((jnp.cumsum(bad) - bad) == 0)
+        n_got = jnp.sum(got.astype(jnp.uint32))
+        msgs = jnp.where(got[:, None], rows, jnp.zeros_like(rows))
+        lens = jnp.where(got, state.length[slots], 0)
+        acks = self.acks.store_mine(state.acks, my_ack + n_got)
+        acks, _a = self.acks.push_broadcast(acks)
+        return state._replace(acks=acks), msgs, lens, got

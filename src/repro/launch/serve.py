@@ -35,12 +35,16 @@ def main(argv=None):
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="follower page-table replicas fed by the "
+                         "ReplicatedLog channel (DESIGN.md §9.3)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.replace(dtype=args.dtype)
     engine = ServingEngine(cfg, max_batch=args.max_batch,
-                           max_seq=args.prompt_len + args.gen_len)
+                           max_seq=args.prompt_len + args.gen_len,
+                           replicas=args.replicas)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -54,6 +58,14 @@ def main(argv=None):
     print(f"[serve] sample output: {outs[0][:8]}")
     stats = engine.stats()
     print(f"[serve] page-table (kvstore) stats: {stats}")
+    if args.replicas:
+        rep = stats["replication"]
+        diverged = rep["diverged_leaves"]
+        print(f"[serve] replication: {rep['published']} windows published, "
+              f"lag={rep['lag']}, log_bytes={rep['wire_bytes']}, "
+              f"diverged_leaves={diverged}")
+        assert not any(diverged), \
+            "follower page tables must converge bitwise to the leader"
 
 
 if __name__ == "__main__":

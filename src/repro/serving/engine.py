@@ -23,6 +23,15 @@ pages every round, so after the first round the counter-validated page
 cache serves them from local memory at zero modeled wire bytes and the
 dispatch skips the collective entirely.
 
+With ``replicas=N`` the engine additionally maintains N follower copies of
+the page table fed by a :class:`repro.core.ReplicatedLog` (DESIGN.md §9.3):
+every mutation window is published to the log after it commits on the
+leader and replayed into each follower through the kvstore's vectorized
+apply, so follower state stays bitwise-converged with the leader
+(``replica_divergence()``/``stats()["replication"]`` report progress, lag
+and modeled log bytes) — warm standbys for failover without a second
+source of truth.
+
 The neural cache itself is the model's dense per-slot cache; the channel
 manages placement/ownership bookkeeping exactly as LOCO manages memory it
 does not itself compute on.  Participants simulate the serving pod's nodes
@@ -38,8 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..core import DELETE, GET, INSERT, NOP, KVStore, SharedQueue, \
-    make_manager
+from ..core import DELETE, GET, INSERT, NOP, KVStore, ReplicatedLog, \
+    SharedQueue, make_manager
 from ..models import build_model
 
 PAGE = 128          # tokens per logical page
@@ -49,10 +58,11 @@ MAX_WINDOW = 32     # max KV ops per participant per collective round-set
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, max_batch: int = 4,
-                 max_seq: int = 256):
+                 max_seq: int = 256, replicas: int = 0):
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_seq = max_seq
+        self.replicas = int(replicas)
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(0))
         # --- channels
@@ -76,6 +86,35 @@ class ServingEngine:
                                  slots_per_node=64, width=1)
         self._kv_state = self.pages.init_state()
         self._q_state = self.queue.init_state()
+        # --- replication (DESIGN.md §9.3): follower page-table replicas fed
+        # by a ReplicatedLog of the leader's mutation windows.  Followers
+        # are cache-less (the read cache is local serving policy, not
+        # replicated data); every other leaf converges bitwise to the
+        # leader's, which replica_divergence() checks on demand.  The
+        # engine syncs after every append, so capacity 2 never drops.
+        if self.replicas:
+            self.page_log = ReplicatedLog(None, "pagelog", self.mgr,
+                                          store=self.pages,
+                                          window=MAX_WINDOW, capacity=2)
+            self.replica_tables = [
+                KVStore(None, f"pagetable_replica{i}", self.mgr,
+                        slots_per_node=pages_per_node, value_width=2,
+                        num_locks=P_NODES * MAX_WINDOW,
+                        index_capacity=4 * pages_per_node * P_NODES)
+                for i in range(self.replicas)]
+            self._log_state = self.page_log.init_state()
+            self._rep_states = tuple(t.init_state()
+                                     for t in self.replica_tables)
+
+            def _rep(log_st, f_sts, op, key, val):
+                log_st, ok = self.page_log.append(log_st, op, key, val)
+                log_st, f_sts, applied = self.page_log.sync(
+                    log_st, self.replica_tables, f_sts, max_entries=1)
+                return log_st, f_sts, ok, applied, self.page_log.lag(log_st)
+
+            self._rep_step = jax.jit(lambda *a: self.mgr.runtime.run(
+                _rep, *a))
+            self.rep_counts = collections.Counter()
         self._kv_step = jax.jit(lambda st, op, key, val: self.mgr.runtime.run(
             self.pages.op_window, st, op, key, val))
         self._kv_get = jax.jit(lambda st, key, pred: self.mgr.runtime.run(
@@ -121,6 +160,25 @@ class ServingEngine:
             self._kv_state, res = self._kv_step(
                 self._kv_state, jnp.asarray(op), jnp.asarray(key),
                 jnp.asarray(val))
+            if self.replicas and any(c[0] != NOP for c in chunk):
+                # publish the mutation window to the replication log and
+                # sync every follower replica (one jit dispatch; windows
+                # are padded to the log's fixed MAX_WINDOW entry shape —
+                # padding lanes are NOPs, the replay identity)
+                pw = np.full((P_NODES, MAX_WINDOW), NOP, np.int32)
+                pk = np.ones((P_NODES, MAX_WINDOW), np.uint32)
+                pv = np.zeros((P_NODES, MAX_WINDOW, 2), np.int32)
+                pw[:, :w], pk[:, :w], pv[:, :w] = op, key, val
+                (self._log_state, self._rep_states, ok, applied,
+                 lag) = self._rep_step(
+                    self._log_state, self._rep_states, jnp.asarray(pw),
+                    jnp.asarray(pk), jnp.asarray(pv))
+                self.rep_counts["published"] += int(np.asarray(ok)[0])
+                self.rep_counts["dropped"] += 1 - int(np.asarray(ok)[0])
+                self.rep_counts["applied"] += int(np.asarray(applied)[0])
+                self.rep_counts["lag"] = int(np.asarray(lag)[0])
+                self.rep_counts["wire_bytes"] += (
+                    self.page_log.entry_nbytes() * int(np.asarray(ok)[0]))
             for c in chunk:
                 self.op_counts[c[0]] += 1
             found = np.asarray(res.found).T.reshape(n)
@@ -237,8 +295,24 @@ class ServingEngine:
             active = []
         return [outputs[i] for i in range(len(prompts))]
 
+    def replica_divergence(self):
+        """Per-replica count of state fields differing from the leader's
+        page table (``repro.core.replog.diverging_leaves`` — the read
+        ``cache`` leaf is excluded there as local serving policy, not
+        replicated data).  All-zero ⇔ every follower is bitwise-converged
+        with the leader."""
+        from ..core.replog import diverging_leaves
+        return [len(diverging_leaves(self._kv_state, f_st))
+                for f_st in self._rep_states]
+
     def stats(self):
+        rep = {}
+        if self.replicas:
+            rep = {"replication": dict(self.rep_counts)
+                   | {"replicas": self.replicas,
+                      "diverged_leaves": self.replica_divergence()}}
         return {"kv_ops": {k: v for k, v in self.op_counts.items()},
+                **rep,
                 "registered_region_bytes": self.mgr.memory_ledger_bytes(),
                 # modeled wire bytes per verb (DESIGN.md §2.3); zero unless
                 # the manager's traffic ledger was enabled before the

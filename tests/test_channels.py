@@ -386,6 +386,423 @@ class TestSharedQueue:
         assert not np.any(np.asarray(ok2))  # capacity P already used
 
 
+# ------------------------------------------------ windowed streaming (§9.1)
+class QueueWindowOracle:
+    """Sequential FIFO oracle for windowed queue rounds: grants resolve in
+    (participant, lane) lexicographic rank order against the space/items
+    available at round start — rejections are always a rank suffix."""
+
+    def __init__(self, capacity):
+        self.capacity = capacity
+        self.fifo = []
+
+    def enqueue(self, wants, vals):
+        """wants: (P, B) bool; vals: (P, B, width).  Returns grants."""
+        wants = np.asarray(wants)
+        space = self.capacity - len(self.fifo)
+        grants = np.zeros_like(wants, bool)
+        r = 0
+        for p in range(wants.shape[0]):
+            for b in range(wants.shape[1]):
+                if wants[p, b]:
+                    if r < space:
+                        grants[p, b] = True
+                        self.fifo.append(np.asarray(vals)[p, b])
+                    r += 1
+        return grants
+
+    def dequeue(self, wants):
+        """Returns (grants, values) with values zeros where not granted."""
+        wants = np.asarray(wants)
+        avail = len(self.fifo)
+        grants = np.zeros_like(wants, bool)
+        vals = {}
+        r = 0
+        for p in range(wants.shape[0]):
+            for b in range(wants.shape[1]):
+                if wants[p, b]:
+                    if r < avail:
+                        grants[p, b] = True
+                        vals[(p, b)] = self.fifo.pop(0)
+                    r += 1
+        return grants, vals
+
+
+def assert_queue_window_round(q, got_grants, got_vals, oracle_grants,
+                              oracle_vals=None):
+    np.testing.assert_array_equal(np.asarray(got_grants),
+                                  oracle_grants)
+    if oracle_vals is not None:
+        got_vals = np.asarray(got_vals)
+        for (p, b), v in oracle_vals.items():
+            np.testing.assert_array_equal(got_vals[p, b], v)
+        dead = ~oracle_grants
+        assert np.all(got_vals[dead] == 0), \
+            "non-granted dequeue lanes must return zeros"
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(bool(jnp.all(x == y)) for x, y in zip(la, lb))
+
+
+class TestSharedQueueWindows:
+    B = 3
+    WIDTH = 2
+
+    def _mk(self, tag, slots_per_node=4, width=WIDTH):
+        mgr = make_manager(P)
+        q = SharedQueue(None, f"qw_{tag}", mgr, slots_per_node=slots_per_node,
+                        width=width)
+        return mgr, q, q.init_state()
+
+    def _step(self, mgr, q):
+        @jax.jit
+        def step(st, ew, ev, dw):
+            def prog(st, ew, ev, dw):
+                st, g = q.enqueue_window(st, ev, ew)
+                st, v, ok = q.dequeue_window(st, dw)
+                return st, g, v, ok
+            return mgr.runtime.run(prog, st, ew, ev, dw)
+        return step
+
+    def test_mixed_push_pop_windows_match_fifo_oracle(self):
+        mgr, q, st = self._mk("oracle")
+        step = self._step(mgr, q)
+        oracle = QueueWindowOracle(q.capacity)
+        rng = np.random.default_rng(7)
+        for rnd in range(6):
+            ew = rng.random((P, self.B)) < 0.7
+            dw = rng.random((P, self.B)) < 0.7
+            ev = rng.integers(1, 1000, (P, self.B, self.WIDTH)).astype(
+                np.int32)
+            st, g, v, ok = step(st, jnp.asarray(ew), jnp.asarray(ev),
+                                jnp.asarray(dw))
+            eg = oracle.enqueue(ew, ev)
+            dg, dv = oracle.dequeue(dw)
+            assert_queue_window_round(q, g, None, eg)
+            assert_queue_window_round(q, ok, v, dg, dv)
+
+    def test_full_queue_rejects_rank_suffix(self):
+        # capacity 4 (1 slot/node): 12 wanting lanes → exactly ranks 0–3
+        # granted = all of p0's window plus p1's first lane
+        mgr, q, st = self._mk("full", slots_per_node=1)
+        step = self._step(mgr, q)
+        ev = np.arange(P * self.B * self.WIDTH, dtype=np.int32).reshape(
+            P, self.B, self.WIDTH)
+        st, g, _v, ok = step(st, jnp.ones((P, self.B), bool),
+                             jnp.asarray(ev), jnp.zeros((P, self.B), bool))
+        expect = np.zeros((P, self.B), bool)
+        expect[0, :] = True
+        expect[1, 0] = True
+        np.testing.assert_array_equal(np.asarray(g), expect)
+        assert not np.any(np.asarray(ok))
+
+    def test_empty_queue_rejects_pop_rank_suffix(self):
+        mgr, q, st = self._mk("empty")
+        step = self._step(mgr, q)
+        # two items in the queue, five wanting pop lanes → ranks 0–1 pop
+        ew = np.zeros((P, self.B), bool)
+        ew[0, 0] = ew[2, 1] = True
+        ev = np.full((P, self.B, self.WIDTH), 9, np.int32)
+        dw = np.zeros((P, self.B), bool)
+        dw[0, 2] = dw[1, 0] = dw[1, 2] = dw[3, 0] = dw[3, 1] = True
+        st, g, v, ok = step(st, jnp.asarray(ew), jnp.asarray(ev),
+                            jnp.asarray(dw))
+        expect = np.zeros((P, self.B), bool)
+        expect[0, 2] = expect[1, 0] = True        # lex ranks 0 and 1
+        np.testing.assert_array_equal(np.asarray(ok), expect)
+        assert np.all(np.asarray(v)[~expect] == 0)
+
+    def test_pred_masked_lanes_never_rank(self):
+        # a masked lane between two enabled ones must not consume a rank
+        mgr, q, st = self._mk("mask", slots_per_node=1)  # capacity 4
+        step = self._step(mgr, q)
+        ew = np.ones((P, self.B), bool)
+        ew[0, 1] = ew[1, :] = False               # p0 lane1 + all of p1 out
+        ev = np.arange(P * self.B * self.WIDTH, dtype=np.int32).reshape(
+            P, self.B, self.WIDTH)
+        st, g, _v, _ok = step(st, jnp.asarray(ew), jnp.asarray(ev),
+                              jnp.zeros((P, self.B), bool))
+        # enabled lanes in lex order: (0,0) (0,2) (2,0) (2,1) (2,2) (3,0)…
+        expect = np.zeros((P, self.B), bool)
+        expect[0, 0] = expect[0, 2] = expect[2, 0] = expect[2, 1] = True
+        np.testing.assert_array_equal(np.asarray(g), expect)
+
+    def test_b1_window_pinned_to_scalar_reference(self):
+        """The B=1 wrappers (enqueue/dequeue) replay a mixed scalar
+        sequence bit-for-bit against the retained reference paths: state
+        leaves identical after every round, grant/ok lanes identical,
+        values identical on granted lanes (the window path additionally
+        zero-masks failed pops — the documented divergence)."""
+        mgr, q, st_w = self._mk("pin", slots_per_node=2)
+        st_r = st_w
+
+        @jax.jit
+        def round_w(st, ew, ev, dw):
+            def prog(st, ew, ev, dw):
+                st, g = q.enqueue(st, ev, want=ew)
+                st, v, ok = q.dequeue(st, want=dw)
+                return st, g, v, ok
+            return mgr.runtime.run(prog, st, ew, ev, dw)
+
+        @jax.jit
+        def round_r(st, ew, ev, dw):
+            def prog(st, ew, ev, dw):
+                st, g = q._enqueue_reference(st, ev, want=ew)
+                st, v, ok = q._dequeue_reference(st, want=dw)
+                return st, g, v, ok
+            return mgr.runtime.run(prog, st, ew, ev, dw)
+
+        rng = np.random.default_rng(3)
+        for rnd in range(8):
+            ew = jnp.asarray(rng.random(P) < 0.6)
+            dw = jnp.asarray(rng.random(P) < 0.6)
+            ev = jnp.asarray(rng.integers(1, 99, (P, self.WIDTH)), jnp.int32)
+            st_w, gw, vw, okw = round_w(st_w, ew, ev, dw)
+            st_r, gr, vr, okr = round_r(st_r, ew, ev, dw)
+            assert _tree_equal(st_w, st_r), f"state diverged at round {rnd}"
+            np.testing.assert_array_equal(np.asarray(gw), np.asarray(gr))
+            np.testing.assert_array_equal(np.asarray(okw), np.asarray(okr))
+            ok = np.asarray(okw)
+            np.testing.assert_array_equal(np.asarray(vw)[ok],
+                                          np.asarray(vr)[ok])
+
+    def test_single_participant_window_equals_scalar_rounds(self):
+        """One active participant: the window's (participant, lane) order
+        degenerates to the scalar sequence, so a (B,) window is bitwise
+        one round-set of B reference enqueues."""
+        mgr, q, st0 = self._mk("seq")
+        ev = np.arange(1, 1 + self.B * self.WIDTH, dtype=np.int32).reshape(
+            self.B, self.WIDTH)
+
+        @jax.jit
+        def win(st, ev):
+            def prog(st, ev):
+                me = mgr.runtime.my_id()
+                st, g = q.enqueue_window(
+                    st, ev, jnp.broadcast_to(me == 0, (self.B,)))
+                return st, g
+            return mgr.runtime.run(prog, st, ev)
+
+        @jax.jit
+        def seq(st, ev):
+            def prog(st, ev):
+                me = mgr.runtime.my_id()
+                gs = []
+                for b in range(self.B):
+                    st, g = q._enqueue_reference(st, ev[b], want=me == 0)
+                    gs.append(g)
+                return st, jnp.stack(gs)
+            return mgr.runtime.run(prog, st, ev)
+
+        evb = jnp.broadcast_to(jnp.asarray(ev), (P, self.B, self.WIDTH))
+        st_w, gw = win(st0, evb)
+        st_s, gs = seq(st0, evb)
+        assert _tree_equal(st_w, st_s)
+        np.testing.assert_array_equal(np.asarray(gw), np.asarray(gs))
+
+    def test_masked_window_lanes_cost_zero_wire_bytes(self):
+        """Regression for the pred-handling audit (DESIGN.md §9.1): the
+        windowed verbs mask dead lanes off the wire — an all-masked
+        dequeue window records ZERO modeled read bytes, where the scalar
+        reference path (pre-PR-2 verb usage) pays for its unmasked slot
+        read."""
+        mgr, q, st = self._mk("wire")
+        mgr.traffic.enable().reset()
+        fresh = jax.jit(lambda s: mgr.runtime.run(
+            lambda ss: q.dequeue_window(ss, jnp.zeros((self.B,), bool)), s))
+        jax.block_until_ready(jax.tree.leaves(fresh(st)))
+        win_bytes = mgr.traffic.total_bytes()
+        mgr.traffic.reset()
+        fresh_ref = jax.jit(lambda s: mgr.runtime.run(
+            lambda ss: q._dequeue_reference(ss, want=False), s))
+        jax.block_until_ready(jax.tree.leaves(fresh_ref(st)))
+        ref_bytes = mgr.traffic.total_bytes()
+        mgr.traffic.disable().reset()
+        assert win_bytes == 0.0, \
+            "masked dequeue lanes must not ride the wire"
+        assert ref_bytes > 0.0, \
+            "the retained reference path documents the pre-fix cost"
+
+
+# --------------------------------------------- windowed ringbuffer (§9.2)
+class TestRingbufferWindows:
+    B = 4
+    WIDTH = 3
+
+    def _mk(self, tag, capacity=8):
+        mgr = make_manager(P)
+        rb = Ringbuffer(None, f"rbw_{tag}", mgr, owner=0, capacity=capacity,
+                        width=self.WIDTH)
+        return mgr, rb, rb.init_state()
+
+    def _step(self, mgr, rb):
+        @jax.jit
+        def step(st, msgs, lens, preds):
+            def prog(st, msgs, lens, preds):
+                st, sent, _ = rb.publish_window(st, msgs, lens, preds)
+                st, m, l, got = rb.recv_window(st, self.B)
+                return st, sent, m, l, got
+            return mgr.runtime.run(prog, st, msgs, lens, preds)
+        return step
+
+    def _msgs(self, base):
+        m = (np.arange(self.B * self.WIDTH, dtype=np.int32)
+             .reshape(self.B, self.WIDTH) + 100 * base)
+        return np.broadcast_to(m, (P, self.B, self.WIDTH)).copy()
+
+    def test_window_broadcast_in_order_with_wrap(self):
+        mgr, rb, st = self._mk("wrap", capacity=5)  # wraps on round 2
+        step = self._step(mgr, rb)
+        for rnd in range(3):
+            msgs = self._msgs(rnd)
+            lens = np.broadcast_to(
+                np.arange(1, self.B + 1, dtype=np.int32),
+                (P, self.B)).copy()
+            st, sent, m, l, got = step(
+                st, jnp.asarray(msgs), jnp.asarray(lens),
+                jnp.ones((P, self.B), bool))
+            assert np.all(np.asarray(sent)[0]), "owner publishes all lanes"
+            assert not np.any(np.asarray(sent)[1:]), "non-owners never send"
+            assert np.all(np.asarray(got)), "every consumer drains in order"
+            np.testing.assert_array_equal(np.asarray(m), msgs)
+            np.testing.assert_array_equal(np.asarray(l), lens)
+
+    def test_full_ring_grants_prefix_and_resumes_after_acks(self):
+        mgr, rb, st = self._mk("full", capacity=6)
+
+        @jax.jit
+        def pub_only(st, msgs, lens):
+            def prog(st, msgs, lens):
+                st, sent, _ = rb.publish_window(st, msgs, lens)
+                return st, sent
+            return mgr.runtime.run(prog, st, msgs, lens)
+
+        @jax.jit
+        def drain(st):
+            def prog(st):
+                st, m, l, got = rb.recv_window(st, self.B)
+                return st, got
+            return mgr.runtime.run(prog, st)
+
+        msgs = self._msgs(0)
+        lens = np.full((P, self.B), self.WIDTH, np.int32)
+        st, sent1 = pub_only(st, jnp.asarray(msgs), jnp.asarray(lens))
+        assert np.all(np.asarray(sent1)[0])               # 4 of 6 slots used
+        st, sent2 = pub_only(st, jnp.asarray(self._msgs(1)),
+                             jnp.asarray(lens))
+        # only 2 slots left: grant is the first-2 lane prefix, never a
+        # scattered subset
+        np.testing.assert_array_equal(np.asarray(sent2)[0],
+                                      [True, True, False, False])
+        st, got = drain(st)
+        assert np.all(np.asarray(got))                    # drains 4 + backlog
+        st, got = drain(st)
+        assert np.asarray(got).sum(axis=1).tolist() == [2] * P
+        st, sent3 = pub_only(st, jnp.asarray(self._msgs(2)),
+                             jnp.asarray(lens))
+        assert np.all(np.asarray(sent3)[0]), "acks free the ring again"
+
+    def test_b1_window_pinned_to_scalar_send_recv(self):
+        mgr, rb, st_w = self._mk("pin")
+        st_r = st_w
+
+        @jax.jit
+        def round_w(st, msg, ln, pred):
+            def prog(st, msg, ln, pred):
+                st, sent, _ = rb.publish_window(
+                    st, msg[None, :], jnp.reshape(ln, (1,)),
+                    jnp.reshape(pred, (1,)))
+                st, m, l, got = rb.recv_window(st, 1)
+                return st, sent[0], m[0], l[0], got[0]
+            return mgr.runtime.run(prog, st, msg, ln, pred)
+
+        @jax.jit
+        def round_r(st, msg, ln, pred):
+            def prog(st, msg, ln, pred):
+                st, sent, _ = rb.send(st, msg, ln, pred=pred)
+                st, m, l, got = rb.recv_one(st)
+                return st, sent, m, l, got
+            return mgr.runtime.run(prog, st, msg, ln, pred)
+
+        rng = np.random.default_rng(5)
+        for rnd in range(6):
+            msg = jnp.broadcast_to(
+                jnp.asarray(rng.integers(0, 99, self.WIDTH), jnp.int32),
+                (P, self.WIDTH))
+            ln = jnp.full((P,), int(rng.integers(1, self.WIDTH + 1)),
+                          jnp.int32)
+            pred = jnp.full((P,), bool(rng.random() < 0.8))
+            st_w, *out_w = round_w(st_w, msg, ln, pred)
+            st_r, *out_r = round_r(st_r, msg, ln, pred)
+            assert _tree_equal(st_w, st_r), f"state diverged at round {rnd}"
+            for a, b in zip(out_w, out_r):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_corrupt_length_never_validates(self):
+        """Regression for the slot-checksum coverage fix: the seed
+        checksummed the payload alone, so a corrupted length word
+        delivered a "valid" message of the wrong size.  The checksum now
+        covers (payload, seq, len) — any single-field corruption must
+        fail validation and stall the cursor."""
+        mgr, rb, st = self._mk("tear")
+
+        @jax.jit
+        def pub(st, msgs, lens):
+            return mgr.runtime.run(
+                lambda s, m, l: rb.publish_window(s, m, l)[0],
+                st, msgs, lens)
+
+        @jax.jit
+        def drain(st):
+            def prog(st):
+                return rb.recv_window(st, self.B)
+            return mgr.runtime.run(prog, st)
+
+        msgs = self._msgs(0)
+        lens = np.full((P, self.B), 2, np.int32)
+        st = pub(st, jnp.asarray(msgs), jnp.asarray(lens))
+
+        for field, delta in (("length", 1), ("payload", 7), ("seq", 1)):
+            buf = np.asarray(getattr(st, field)).copy()
+            corrupt = st._replace(**{field: jnp.asarray(
+                buf + np.asarray(delta, buf.dtype))})
+            _st2, _m, _l, got = drain(corrupt)
+            assert not np.any(np.asarray(got)), \
+                f"corrupted {field} must never deliver"
+        # uncorrupted state still drains everything
+        _st3, m, _l, got = drain(st)
+        assert np.all(np.asarray(got))
+        np.testing.assert_array_equal(np.asarray(m), msgs)
+
+    def test_recv_one_pred_masks_consumption(self):
+        """Pred-handling regression (DESIGN.md §9.1): a masked consumer
+        neither advances its cursor nor leaks the slot's bits."""
+        mgr, rb, st = self._mk("pred")
+
+        @jax.jit
+        def prog(st):
+            def body(st):
+                me = mgr.runtime.my_id()
+                msg = jnp.arange(self.WIDTH, dtype=jnp.int32) + 1
+                st, _s, _ = rb.send(st, msg, self.WIDTH, pred=me == 0)
+                st, m, l, got = rb.recv_one(st, pred=me % 2 == 0)
+                return st, m, l, got
+            return mgr.runtime.run(body, st)
+
+        st, m, l, got = prog(st)
+        got = np.asarray(got)
+        np.testing.assert_array_equal(got, [True, False, True, False])
+        m, l = np.asarray(m), np.asarray(l)
+        assert np.all(m[1] == 0) and np.all(m[3] == 0) and l[1] == l[3] == 0
+        np.testing.assert_array_equal(m[0], np.arange(self.WIDTH) + 1)
+        # masked consumers' cursors did not advance
+        acks = np.asarray(st.acks.cached)
+        np.testing.assert_array_equal(acks[0], [1, 0, 1, 0])
+
+
 # --------------------------------------------------------------- manager/fences
 class TestManagerAndFences:
     def test_channel_name_collision_rejected(self):

@@ -7,7 +7,14 @@ Invariants checked:
   participant-then-window order).
 * row encoding: the checksum catches any single-word tear; the Appendix C
   counter/valid case analysis holds elementwise over batched rows.
-* shared queue: FIFO, no loss, no duplication, pop≤push.
+* shared queue: FIFO, no loss, no duplication, pop≤push — scalar rounds
+  AND windowed rounds (enqueue_window/dequeue_window) under random
+  (P, B, capacity) configurations, against the lex-order FIFO oracle.
+* ringbuffer: fuzzed payload/seq/len/csum corruption of a consumer's
+  cached slots must never yield a checksum-valid *wrong* message — every
+  delivered message is exactly the published one at that cursor.
+* ReplicatedLog: follower kvstore state ≡ leader state (bitwise, per
+  leaf) after random mutation-window schedules.
 * atomic_var FAA: tickets are a permutation (mutual exclusion of tickets).
 * checksum: detects any single-lane corruption; deterministic.
 
@@ -27,9 +34,12 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (DELETE, GET, INSERT, NOP, UPDATE, AtomicVar,
-                        SharedQueue, make_manager)
+                        KVStore, ReplicatedLog, Ringbuffer, SharedQueue,
+                        make_manager)
 from repro.core.ownedvar import checksum
+from repro.core.replog import diverging_leaves
 
+import test_channels as chmod
 import test_kvstore as kvmod
 
 P = 4
@@ -283,6 +293,200 @@ def test_queue_fifo_no_loss_no_dup(rounds):
     assert popped == pushed[:len(popped)]
     assert len(set(popped)) == len(popped)          # no duplication
     assert len(popped) <= len(pushed)               # pop ≤ push
+
+
+# ------------------------------------------------- windowed queue (§9.1)
+class _QueueWindowHarness:
+    """One jitted windowed-round callable per (P, B, slots_per_node)
+    configuration, shared across hypothesis examples (state is rebuilt per
+    example)."""
+
+    _cache = {}
+
+    def __new__(cls, nP, B, spn):
+        key = (nP, B, spn)
+        if key not in cls._cache:
+            cls._cache[key] = super().__new__(cls)
+            cls._cache[key]._build(nP, B, spn)
+        return cls._cache[key]
+
+    def _build(self, nP, B, spn):
+        self.P, self.B = nP, B
+        self.mgr = make_manager(nP)
+        self.q = SharedQueue(None, f"pqw_{nP}_{B}_{spn}", self.mgr,
+                             slots_per_node=spn, width=1)
+
+        @jax.jit
+        def step(st, ew, ev, dw):
+            def prog(st, ew, ev, dw):
+                st, g = self.q.enqueue_window(st, ev, ew)
+                st, v, ok = self.q.dequeue_window(st, dw)
+                return st, g, v, ok
+            return self.mgr.runtime.run(prog, st, ew, ev, dw)
+
+        self.step = step
+
+
+def check_queue_windows(nP, B, spn, rounds):
+    """rounds: list of ((P,B) enq wants, (P,B) deq wants) bool nests."""
+    h = _QueueWindowHarness(nP, B, spn)
+    oracle = chmod.QueueWindowOracle(h.q.capacity)
+    st = h.q.init_state()
+    counter = 0
+    pushed, popped = [], []
+    for ew, dw in rounds:
+        ew = np.asarray(ew, bool).reshape(nP, B)
+        dw = np.asarray(dw, bool).reshape(nP, B)
+        ev = np.arange(counter, counter + nP * B, dtype=np.int32) \
+            .reshape(nP, B, 1)
+        counter += nP * B
+        st, g, v, ok = h.step(st, jnp.asarray(ew), jnp.asarray(ev),
+                              jnp.asarray(dw))
+        g, v, ok = np.asarray(g), np.asarray(v), np.asarray(ok)
+        eg = oracle.enqueue(ew, ev)
+        dg, dv = oracle.dequeue(dw)
+        np.testing.assert_array_equal(g, eg)
+        np.testing.assert_array_equal(ok, dg)
+        for (p, b), val in dv.items():
+            np.testing.assert_array_equal(v[p, b], val)
+        # ticket conservation: collect grant-ordered push/pop streams
+        for p in range(nP):
+            for b in range(B):
+                if eg[p, b]:
+                    pushed.append(int(ev[p, b, 0]))
+                if dg[p, b]:
+                    popped.append(int(v[p, b, 0]))
+    assert popped == pushed[:len(popped)]          # FIFO, no loss
+    assert len(set(popped)) == len(popped)         # no duplication
+    assert len(popped) <= len(pushed)              # pop ≤ push
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([2, 4]), st.sampled_from([1, 2, 3]),
+       st.sampled_from([1, 2]), st.data())
+def test_queue_windows_fifo_ticket_conservation(nP, B, spn, data):
+    lane = st.lists(st.booleans(), min_size=nP * B, max_size=nP * B)
+    rounds = data.draw(st.lists(st.tuples(lane, lane),
+                                min_size=1, max_size=4))
+    check_queue_windows(nP, B, spn, rounds)
+
+
+# ------------------------------------------------- ringbuffer fuzz (§9.2)
+_rb_mgr = make_manager(P)
+_rb = Ringbuffer(None, "prb", _rb_mgr, owner=0, capacity=6, width=3)
+
+
+@jax.jit
+def _rb_fill(st, msgs, lens):
+    def prog(st, msgs, lens):
+        st, sent, _ = _rb.publish_window(st, msgs, lens)
+        return st, sent
+    return _rb_mgr.runtime.run(prog, st, msgs, lens)
+
+
+@jax.jit
+def _rb_drain(st):
+    def prog(st):
+        return _rb.recv_window(st, 4)
+    return _rb_mgr.runtime.run(prog, st)
+
+
+def check_ringbuffer_corruption(victim, field, slot, word, delta):
+    """Publish 4 known messages, corrupt one word of one consumer's
+    cached slot state, drain: every lane the consumer reports ``got``
+    must carry exactly the published message + length for its cursor
+    position — corruption may stall delivery, never forge it."""
+    msgs = np.arange(12, dtype=np.int32).reshape(4, 3) * 7 + 1
+    lens = np.asarray([3, 2, 1, 3], np.int32)
+    st, sent = _rb_fill(
+        _rb.init_state(),
+        jnp.broadcast_to(jnp.asarray(msgs), (P, 4, 3)),
+        jnp.broadcast_to(jnp.asarray(lens), (P, 4)))
+    assert np.all(np.asarray(sent)[0])
+    buf = np.asarray(getattr(st, field)).copy()
+    if field == "payload":
+        buf[victim, slot, word] += delta
+    else:
+        buf[victim, slot] += np.asarray(delta, buf.dtype)
+    changed = not np.array_equal(buf, np.asarray(getattr(st, field)))
+    st = st._replace(**{field: jnp.asarray(buf)})
+    _st2, m, l, got = _rb_drain(st)
+    m, l, got = np.asarray(m), np.asarray(l), np.asarray(got)
+    for p in range(P):
+        for k in range(4):
+            if got[p, k]:
+                np.testing.assert_array_equal(
+                    m[p, k], msgs[k],
+                    err_msg=f"consumer {p} lane {k} forged a message "
+                            f"after {field} corruption")
+                assert l[p, k] == lens[k]
+    # a consumer with a corrupted live slot must stall at or before it
+    if changed and slot < 4 and field in ("payload", "seq", "length",
+                                          "csum"):
+        assert not got[victim, slot:].any(), \
+            f"corrupted {field} word validated at consumer {victim}"
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=P - 1),
+       st.sampled_from(["payload", "seq", "length", "csum"]),
+       st.integers(min_value=0, max_value=5),
+       st.integers(min_value=0, max_value=2),
+       st.integers(min_value=1, max_value=2**31 - 1))
+def test_ringbuffer_corruption_never_forges_messages(victim, field, slot,
+                                                     word, delta):
+    check_ringbuffer_corruption(victim, field, slot, word, delta)
+
+
+# ------------------------------------------------- replicated log (§9.3)
+_rl_mgr = make_manager(P)
+_rl_kw = dict(slots_per_node=4, value_width=2, num_locks=8,
+              index_capacity=64)
+_rl_leader = KVStore(None, "prl_leader", _rl_mgr, **_rl_kw)
+_rl_follower = KVStore(None, "prl_follower", _rl_mgr, **_rl_kw)
+_rl_log = ReplicatedLog(None, "prl_log", _rl_mgr, store=_rl_leader,
+                        window=2, capacity=2)
+
+
+@jax.jit
+def _rl_step(lst, fst, gst, op, key, val):
+    def prog(lst, fst, gst, op, key, val):
+        lst, _res = _rl_leader.op_window(lst, op, key, val)
+        gst, ok = _rl_log.append(gst, op, key, val)
+        gst, fst, _n = _rl_log.sync(gst, _rl_follower, fst, max_entries=1)
+        return lst, fst, gst, ok
+    return _rl_mgr.runtime.run(prog, lst, fst, gst, op, key, val)
+
+
+def check_replog_convergence(batches):
+    """batches: rounds of P lanes × B=2 of (op, key) — replay on the
+    leader, replicate each window, require bitwise leader ≡ follower on
+    every state leaf (cache excluded: local read policy) after every
+    window."""
+    lst, fst = _rl_leader.init_state(), _rl_follower.init_state()
+    gst = _rl_log.init_state()
+    for rnd, lanes in enumerate(batches):
+        op = jnp.asarray([[o for o, _k in lane] for lane in lanes],
+                         jnp.int32)
+        key = jnp.asarray([[k for _o, k in lane] for lane in lanes],
+                          jnp.uint32)
+        val = jnp.asarray([[kvmod.v(k, rnd * 2 + b)
+                            for b, (_o, k) in enumerate(lane)]
+                           for lane in lanes], jnp.int32)
+        lst, fst, gst, ok = _rl_step(lst, fst, gst, op, key, val)
+        assert np.all(np.asarray(ok)), "sync-after-append never drops"
+        diverged = diverging_leaves(lst, fst)
+        assert not diverged, \
+            f"leader/follower diverged on {diverged} after window {rnd}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(
+    st.lists(st.lists(op_strategy, min_size=2, max_size=2),
+             min_size=P, max_size=P),
+    min_size=1, max_size=3))
+def test_replog_follower_state_equals_leader(batches):
+    check_replog_convergence(batches)
 
 
 # ------------------------------------------------------------------ FAA tickets

@@ -1,0 +1,209 @@
+"""ReplicatedLog (DESIGN.md §9.3): the kvstore replication log composed
+from Ringbuffer + SST.
+
+Checked here:
+* follower state converges **bitwise** to the leader after scripted mixed
+  mutation windows (insert/update/delete/get lanes), replayed through the
+  kvstore's existing vectorized apply;
+* the record-export hook masks non-mutating lanes to NOP and replay of an
+  absent (pred=False) entry is the state identity;
+* log flow control: appends beyond ring capacity are rejected and counted,
+  a sync drains the backlog in order and lag returns to zero;
+* multiple followers fed from ONE log drain (single cursor ack) all
+  converge.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DELETE, GET, INSERT, NOP, UPDATE, KVStore,
+                        ReplicatedLog, make_manager)
+from repro.core.replog import diverging_leaves
+
+P = 4
+B = 2
+S = 4
+W = 2
+
+mgr = make_manager(P)
+_kw = dict(slots_per_node=S, value_width=W, num_locks=8, index_capacity=64)
+leader = KVStore(None, "rl_leader", mgr, **_kw)
+follower = KVStore(None, "rl_follower", mgr, **_kw)
+follower2 = KVStore(None, "rl_follower2", mgr, **_kw)
+log = ReplicatedLog(None, "rl_log", mgr, store=leader, window=B, capacity=2)
+
+
+@jax.jit
+def lead_append_sync(lst, fst, gst, op, key, val):
+    def prog(lst, fst, gst, op, key, val):
+        lst, res = leader.op_window(lst, op, key, val)
+        gst, ok = log.append(gst, op, key, val)
+        gst, fst, applied = log.sync(gst, follower, fst, max_entries=1)
+        return lst, fst, gst, res, ok, applied
+    return mgr.runtime.run(prog, lst, fst, gst, op, key, val)
+
+
+@jax.jit
+def append_only(lst, gst, op, key, val):
+    def prog(lst, gst, op, key, val):
+        lst, _res = leader.op_window(lst, op, key, val)
+        gst, ok = log.append(gst, op, key, val)
+        return lst, gst, ok
+    return mgr.runtime.run(prog, lst, gst, op, key, val)
+
+
+@jax.jit
+def append_retry(gst, op, key, val):
+    """Publish-only retry: the leader already committed the window."""
+    def prog(gst, op, key, val):
+        return log.append(gst, op, key, val)
+    return mgr.runtime.run(prog, gst, op, key, val)
+
+
+@jax.jit
+def sync_many(gst, fst, n=2):
+    def prog(gst, fst):
+        gst, fst, applied = log.sync(gst, follower, fst, max_entries=2)
+        return gst, fst, applied
+    return mgr.runtime.run(prog, gst, fst)
+
+
+def states():
+    return leader.init_state(), follower.init_state(), log.init_state()
+
+
+def window(*lanes):
+    """lanes: P lists of B (op, key, (v0, v1)) tuples → jnp arrays."""
+    op = jnp.asarray([[o[0] for o in ln] for ln in lanes], jnp.int32)
+    key = jnp.asarray([[o[1] for o in ln] for ln in lanes], jnp.uint32)
+    val = jnp.asarray([[o[2] for o in ln] for ln in lanes], jnp.int32)
+    return op, key, val
+
+
+def assert_converged(lst, fst):
+    """Bitwise leaf-by-leaf equality of leader and follower states (the
+    shared §9.3 check; the read cache is local policy, not replicated
+    data and is skipped there)."""
+    diverged = diverging_leaves(lst, fst)
+    assert not diverged, f"leader/follower diverged on leaves {diverged}"
+
+
+NL = (NOP, 1, (0, 0))
+
+
+class TestReplicatedLog:
+    def test_follower_bitwise_converges_on_mixed_windows(self):
+        lst, fst, gst = states()
+        rounds = [
+            window([(INSERT, 1, (10, 11)), (INSERT, 5, (50, 51))],
+                   [(INSERT, 2, (20, 21)), NL],
+                   [NL, (INSERT, 3, (30, 31))],
+                   [(INSERT, 4, (40, 41)), NL]),
+            window([(UPDATE, 1, (12, 13)), (GET, 2, (0, 0))],
+                   [(DELETE, 5, (0, 0)), NL],
+                   [(GET, 3, (0, 0)), (UPDATE, 3, (32, 33))],
+                   [NL, (DELETE, 4, (0, 0))]),
+            window([(INSERT, 6, (60, 61)), (DELETE, 1, (0, 0))],
+                   [(UPDATE, 2, (22, 23)), (INSERT, 7, (70, 71))],
+                   [NL, NL],
+                   [(GET, 6, (0, 0)), (UPDATE, 6, (62, 63))]),
+        ]
+        for op, key, val in rounds:
+            lst, fst, gst, _res, ok, applied = lead_append_sync(
+                lst, fst, gst, op, key, val)
+            assert np.all(np.asarray(ok)), "append must land (ring sized)"
+            np.testing.assert_array_equal(np.asarray(applied), [1] * P)
+            assert_converged(lst, fst)
+        lag = np.asarray(mgr.runtime.run(log.lag, gst))
+        np.testing.assert_array_equal(lag, [0] * P)
+
+    def test_export_masks_non_mutations_and_replay_identity(self):
+        op, key, val = window(
+            [(GET, 1, (1, 1)), (INSERT, 2, (2, 2))],
+            [(NOP, 3, (3, 3)), (UPDATE, 4, (4, 4))],
+            [(DELETE, 5, (5, 5)), (GET, 6, (6, 6))],
+            [NL, NL])
+
+        @jax.jit
+        def export(op, key, val):
+            return mgr.runtime.run(leader.export_window_records, op, key,
+                                   val)
+
+        recs = np.asarray(export(op, key, val))          # (P, B, 5)
+        assert recs.shape == (P, B, leader.record_width)
+        np.testing.assert_array_equal(
+            recs[..., 0], [[NOP, INSERT], [NOP, UPDATE],
+                           [DELETE, NOP], [NOP, NOP]])
+        # value words ride along; reserved word is zero
+        np.testing.assert_array_equal(recs[0, 1, 2:4], [2, 2])
+        assert np.all(recs[..., 4] == 0)
+
+        # replay with pred=False is the state identity
+        lst = leader.init_state()
+
+        @jax.jit
+        def replay_masked(lst, recs):
+            def prog(lst, recs):
+                lst, _res = leader.replay_window_records(
+                    lst, recs, pred=False)
+                return lst
+            return mgr.runtime.run(prog, lst, recs)
+
+        lst2 = replay_masked(lst, jnp.asarray(recs))
+        for la, lb in zip(jax.tree.leaves(lst), jax.tree.leaves(lst2)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_flow_control_counts_drops_and_backlog_drains_in_order(self):
+        lst, fst, gst = states()
+        wins = [window([(INSERT, k, (int(k), int(k))), NL],
+                       [NL, NL], [NL, NL], [NL, NL]) for k in (1, 2, 3)]
+        # capacity 2: two appends fill the ring, the third drops (the
+        # leader's op still committed locally — replication falls behind,
+        # never forks)
+        for i, (op, key, val) in enumerate(wins):
+            lst, gst, ok = append_only(lst, gst, op, key, val)
+            assert bool(np.asarray(ok)[0]) == (i < 2)
+        pub = np.asarray(gst.published)[0]
+        drop = np.asarray(gst.dropped)[0]
+        assert (pub, drop) == (2, 1)
+        lag = np.asarray(mgr.runtime.run(log.lag, gst))[0]
+        assert lag == 2
+        # one sync drains the whole backlog, in log order
+        gst, fst, applied = sync_many(gst, fst)
+        np.testing.assert_array_equal(np.asarray(applied), [2] * P)
+        assert np.asarray(mgr.runtime.run(log.lag, gst))[0] == 0
+        # the caller's retry protocol: re-APPEND the dropped window
+        # (publish-only — the leader already committed it) and sync
+        gst, ok = append_retry(gst, *wins[2])
+        assert np.all(np.asarray(ok)), "append retry lands after the drain"
+        gst, fst, applied = sync_many(gst, fst)
+        np.testing.assert_array_equal(np.asarray(applied), [1] * P)
+        assert_converged(lst, fst)
+
+    def test_multiple_followers_one_drain(self):
+        lst = leader.init_state()
+        f1, f2 = follower.init_state(), follower2.init_state()
+        gst = log.init_state()
+
+        @jax.jit
+        def step(lst, f1, f2, gst, op, key, val):
+            def prog(lst, f1, f2, gst, op, key, val):
+                lst, _res = leader.op_window(lst, op, key, val)
+                gst, ok = log.append(gst, op, key, val)
+                gst, (f1, f2), applied = log.sync(
+                    gst, [follower, follower2], (f1, f2), max_entries=1)
+                return lst, f1, f2, gst, ok, applied
+            return mgr.runtime.run(prog, lst, f1, f2, gst, op, key, val)
+
+        rounds = [
+            window([(INSERT, 1, (1, 2)), (INSERT, 2, (3, 4))],
+                   [(INSERT, 8, (5, 6)), NL], [NL, NL], [NL, NL]),
+            window([(UPDATE, 1, (7, 8)), (DELETE, 2, (0, 0))],
+                   [NL, (UPDATE, 8, (9, 9))], [NL, NL], [NL, NL]),
+        ]
+        for op, key, val in rounds:
+            lst, f1, f2, gst, ok, applied = step(
+                lst, f1, f2, gst, op, key, val)
+            assert np.all(np.asarray(ok))
+        assert_converged(lst, f1)
+        assert_converged(lst, f2)

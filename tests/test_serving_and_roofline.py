@@ -30,6 +30,25 @@ class TestServingEngine:
         assert stats["kv_ops"][GET] >= 4
         assert "modeled_wire_bytes" in stats
 
+    def test_generate_with_replicated_page_table(self):
+        """replicas= mode (DESIGN.md §9.3): every mutation window is
+        published through the ReplicatedLog and the follower page tables
+        stay bitwise-converged with the leader through a full serve."""
+        from repro.serving.engine import ServingEngine
+        cfg = get_smoke_config("llama3.2-3b").replace(dtype="float32")
+        eng = ServingEngine(cfg, max_batch=2, max_seq=32, replicas=2)
+        rng = np.random.default_rng(1)
+        prompts = [rng.integers(1, cfg.vocab, size=(8,)).astype(np.int32)
+                   for _ in range(2)]
+        outs = eng.generate(prompts, gen_len=2)
+        assert len(outs) == 2 and all(len(o) == 2 for o in outs)
+        rep = eng.stats()["replication"]
+        assert rep["replicas"] == 2
+        assert rep["published"] >= 2 and rep["dropped"] == 0
+        assert rep["lag"] == 0, "sync-after-append leaves zero lag"
+        assert rep["diverged_leaves"] == [0, 0], \
+            "follower page tables must stay bitwise-equal to the leader"
+
 
 class TestRooflineAnalysis:
     def test_collective_parser_shapes_and_ring_model(self):

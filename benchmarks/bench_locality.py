@@ -1,0 +1,197 @@
+"""Locality tier (DESIGN.md §10): skewed-reader placement + rebalance.
+
+The paper's headline programming-model claim is that objects expose
+memory placement instead of hiding it.  This benchmark prices the payoff
+on the adversarial-but-typical case: rows inserted writer-locally whose
+**dominant reader lives on another node** (every read pays remote wire
+bytes forever under static placement).
+
+Workload: P participants insert P·W keys writer-locally; participant r
+then reads zipf-drawn keys from its assigned shard {k : k ≡ r (mod P)}
+(90%, plus 10% uniform noise) — every hot read is remote by construction
+(key k's writer-local home is (k−1) mod P ≠ r).  The read rounds feed the
+HotTracker; ``rebalance()`` then MOVEs each row to its dominant reader,
+and the same read rounds are re-priced.
+
+Asserted (the PR-5 acceptance bars):
+* modeled wire bytes of the steady skewed read window drop ≥3× after
+  rebalancing (measured ~8–10×: only the noise reads stay remote);
+* the migrated store returns bit-for-bit the results of a never-migrated
+  twin on an interleaved GET/UPDATE/DELETE window (§10.2 transparency);
+* a ReplicatedLog follower that replays every window — inserts, the MOVE
+  windows, the mixed window — converges leaf-for-leaf across migrations.
+
+Rows land in ``BENCH_locality.json`` (before/after wire bytes, moves,
+rebalance cost, replication convergence) via the ``jt`` BenchJson sink.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DELETE, GET, MOVE, NOP, UPDATE, INSERT, KVStore,
+                        ReplicatedLog, make_manager)
+from repro.core.replog import diverging_leaves
+
+from .common import BenchJson, Csv, timed, zipf_keys
+
+
+def _reader_keys(rng, P, WB, keyspace, theta=0.99):
+    """(P, WB) read window: participant r draws zipf keys from its shard
+    {k ≡ r (mod P)} with 10% uniform noise lanes."""
+    shard = keyspace // P
+    zipf = zipf_keys(rng, P * WB, shard, theta=theta).reshape(P, WB)
+    keys = np.empty((P, WB), np.uint32)
+    for r in range(P):
+        # rank i of shard r is key (i-1)*P + r, mapped into [1, keyspace]
+        k = (zipf[r].astype(np.int64) - 1) * P + r
+        k = np.where(k == 0, P, k)             # key 0 is invalid; remap
+        keys[r] = k.astype(np.uint32)
+    noise = rng.random((P, WB)) < 0.10
+    keys[noise] = rng.integers(1, keyspace + 1,
+                               size=int(noise.sum())).astype(np.uint32)
+    return jnp.asarray(keys)
+
+
+def _account_read(mgr, kv, st, keys):
+    mgr.traffic.enable().reset()
+    fresh = jax.jit(lambda s, k: mgr.runtime.run(
+        lambda ss, kk: kv.get_batch(ss, kk), s, k))
+    out = fresh(st, keys)
+    jax.block_until_ready(jax.tree.leaves(out))
+    total = mgr.traffic.total_bytes()
+    mgr.traffic.disable().reset()
+    return total
+
+
+def run(csv: Csv, rounds: int = 8, jt: BenchJson | None = None,
+        smoke: bool = False):
+    jt = jt if jt is not None else BenchJson()
+    P, WB = (4, 8) if smoke else (8, 16)
+    keyspace = P * WB                      # one (P, WB) window prefills all
+    S = 2 * (keyspace // P) + 4            # headroom: rebalance can pack a node
+    heat_rounds = 6
+    rng = np.random.default_rng(0)
+
+    mgr = make_manager(P)
+    kw = dict(slots_per_node=S, value_width=2, num_locks=max(64, P * WB),
+              index_capacity=4 * keyspace)
+    kv = KVStore(None, "kv_loc", mgr, track_heat=True, **kw)
+    twin = KVStore(None, "kv_loc_twin", mgr, **kw)       # never migrated
+    follower = KVStore(None, "kv_loc_follower", mgr, **kw)
+    log = ReplicatedLog(None, "kv_loc_log", mgr, store=kv, window=WB,
+                        capacity=2)
+
+    @jax.jit
+    def led_window(st, gst, fst, op, key, val, tgt):
+        """Leader window + publish + follower sync, one dispatch."""
+        def prog(st, gst, fst, op, key, val, tgt):
+            st, res = kv.op_window(st, op, key, val, targets=tgt)
+            gst, ok = log.append(gst, op, key, val, targets=tgt)
+            gst, fst, _n = log.sync(gst, follower, fst, max_entries=1)
+            return st, gst, fst, res, ok
+        return mgr.runtime.run(prog, st, gst, fst, op, key, val, tgt)
+
+    @jax.jit
+    def twin_window(st, op, key, val):
+        return mgr.runtime.run(twin.op_window, st, op, key, val)
+
+    read_step = jax.jit(lambda s, k: mgr.runtime.run(
+        lambda ss, kk: kv.get_batch(ss, kk), s, k))
+
+    @jax.jit
+    def propose(st):
+        return mgr.runtime.run(
+            lambda s: kv.rebalance_proposals(s, P * WB), st)
+
+    st, gst, fst = kv.init_state(), log.init_state(), follower.init_state()
+    st_twin = twin.init_state()
+
+    # ---- prefill: writer-local inserts, key k homed at (k-1) % P ---------
+    keys = np.arange(1, keyspace + 1, dtype=np.uint32)
+    pk = keys.reshape(WB, P).T.copy()       # key k at lane ((k-1)%P, ...)
+    pop = np.full((P, WB), INSERT, np.int32)
+    pv = np.stack([pk.astype(np.int32) * 3, pk.astype(np.int32) * 7],
+                  axis=-1)
+    pt = np.zeros((P, WB), np.int32)
+    st, gst, fst, res, ok = led_window(st, gst, fst, jnp.asarray(pop),
+                                       jnp.asarray(pk), jnp.asarray(pv),
+                                       jnp.asarray(pt))
+    assert bool(jnp.all(res.found)) and bool(np.asarray(ok)[0])
+    st_twin, res_t = twin_window(st_twin, jnp.asarray(pop),
+                                 jnp.asarray(pk), jnp.asarray(pv))
+    assert bool(jnp.all(res_t.found))
+
+    # ---- skewed read rounds: price one, then feed the tracker ------------
+    read_windows = [_reader_keys(rng, P, WB, keyspace)
+                    for _ in range(heat_rounds)]
+    wire_before = _account_read(mgr, kv, st, read_windows[0])
+    us_before, (st, _v, found) = timed(read_step, st, read_windows[0],
+                                       iters=max(2, rounds // 2))
+    assert bool(jnp.all(found))
+    for rk in read_windows:
+        st, _v, found = read_step(st, rk)
+        assert bool(jnp.all(found))
+
+    # ---- rebalance: MOVE each row to its dominant reader (logged) --------
+    total_moves = 0
+    us_reb = 0.0
+    for _pass in range(2):                 # a full node defers to pass 2
+        us_p, (mk, md, mv) = timed(propose, st, iters=1, warmup=0)
+        ops = jnp.where(mv, jnp.int32(MOVE), jnp.int32(NOP))
+        zero_v = jnp.zeros((P, WB, 2), jnp.int32)
+        us_m, (st, gst, fst, res, ok) = timed(
+            led_window, st, gst, fst, ops, mk, zero_v, md,
+            iters=1, warmup=0)
+        us_reb += us_p + us_m
+        total_moves += int(jnp.sum(res.found & mv))
+        assert bool(np.asarray(ok)[0])
+    assert total_moves > 0, "the skewed workload must propose moves"
+
+    # ---- re-price the same read rounds on the migrated store -------------
+    wire_after = _account_read(mgr, kv, st, read_windows[0])
+    us_after, (st, _v, found) = timed(read_step, st, read_windows[0],
+                                      iters=max(2, rounds // 2))
+    assert bool(jnp.all(found))
+    reduction = wire_before / max(wire_after, 1.0)
+
+    # ---- §10.2 transparency: migrated ≡ never-migrated, bit for bit ------
+    mop = rng.choice([GET, UPDATE, DELETE], size=(P, WB),
+                     p=[.6, .3, .1]).astype(np.int32)
+    mkey = rng.permutation(keys)[:P * WB].reshape(P, WB)
+    mval = np.stack([mkey.astype(np.int32) * 11, mkey.astype(np.int32)],
+                    axis=-1)
+    st, gst, fst, res_m, ok = led_window(
+        st, gst, fst, jnp.asarray(mop), jnp.asarray(mkey),
+        jnp.asarray(mval), jnp.asarray(pt))
+    st_twin, res_tw = twin_window(st_twin, jnp.asarray(mop),
+                                  jnp.asarray(mkey), jnp.asarray(mval))
+    for lm, lt in zip(res_m, res_tw):
+        assert bool(jnp.all(lm == lt)), \
+            "migrated store diverged from the never-migrated twin"
+
+    # ---- follower converged across INSERT + MOVE + mixed windows ---------
+    diverged = diverging_leaves(st, fst)
+    assert not diverged, f"follower diverged on {diverged} across MOVEs"
+
+    # ---- the acceptance bar ----------------------------------------------
+    assert reduction >= 3.0, (
+        f"rebalance must cut skewed-reader wire bytes ≥3× "
+        f"(got {reduction:.2f}: {wire_before:.0f} → {wire_after:.0f})")
+
+    csv.add(f"kv_locality_read_before_p{P}_w{WB}", us_before,
+            f"ops_per_round={P * WB};modeled_wire_bytes={wire_before:.0f}")
+    csv.add(f"kv_locality_read_after_p{P}_w{WB}", us_after,
+            f"ops_per_round={P * WB};modeled_wire_bytes={wire_after:.0f};"
+            f"wire_reduction={reduction:.2f};moves={total_moves}")
+    csv.add(f"kv_locality_rebalance_p{P}_w{WB}", us_reb,
+            f"moves={total_moves};passes=2;replog_diverged={len(diverged)}")
+    jt.add("kv_locality_read", "writer_local", us_before, ops=P * WB,
+           modeled_wire_bytes=wire_before)
+    jt.add("kv_locality_read", "rebalanced", us_after, ops=P * WB,
+           modeled_wire_bytes=wire_after,
+           wire_reduction=round(reduction, 2), moves=total_moves)
+    jt.add("kv_locality_rebalance", "rebalance", us_reb, ops=total_moves,
+           replog_diverged=len(diverged), transparency_checked=1)
+    return jt

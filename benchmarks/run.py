@@ -6,6 +6,8 @@
                            × implementation (hash vs reference)
   §9       bench_stream    windowed queue/ringbuffer vs scalar references,
                            ReplicatedLog append+sync latency/lag/bytes
+  §10      bench_locality  skewed-reader placement: wire bytes before/after
+                           rebalance(), migration transparency + replication
   Fig. 7   bench_power     DC/DC control-loop stability vs period
   §Roofline bench_roofline dry-run-derived roofline table (reads reports/)
 
@@ -28,8 +30,8 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: barrier,lock,kvstore,stream,power,"
-                         "roofline")
+                    help="comma list: barrier,lock,kvstore,stream,"
+                         "locality,power,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny configs for CI smoke runs")
     ap.add_argument("--json-dir", default=os.path.dirname(
@@ -67,6 +69,13 @@ def main() -> None:
         bench_stream.run(csv, rounds=2 if args.smoke else 8, jt=jt,
                          smoke=args.smoke)
         path = jt.dump(os.path.join(args.json_dir, "BENCH_stream.json"))
+        print(f"# wrote {path} ({len(jt.rows)} rows)", file=sys.stderr)
+    if enabled("locality"):
+        from . import bench_locality
+        jt = BenchJson()
+        bench_locality.run(csv, rounds=2 if args.smoke else 8, jt=jt,
+                           smoke=args.smoke)
+        path = jt.dump(os.path.join(args.json_dir, "BENCH_locality.json"))
         print(f"# wrote {path} ({len(jt.rows)} rows)", file=sys.stderr)
     if enabled("power"):
         from . import bench_power

@@ -16,10 +16,10 @@ from repro.core import DELETE, GET, INSERT, NOP, UPDATE, KVStore, \
 P, KEYSPACE, ROUNDS = 8, 256, 40
 
 
-def main():
+def main(keyspace=KEYSPACE, rounds=ROUNDS):
     mgr = make_manager(P)
-    kv = KVStore(None, "ycsb", mgr, slots_per_node=KEYSPACE // P + 4,
-                 value_width=2, num_locks=32, index_capacity=4 * KEYSPACE)
+    kv = KVStore(None, "ycsb", mgr, slots_per_node=keyspace // P + 4,
+                 value_width=2, num_locks=32, index_capacity=4 * keyspace)
     step = jax.jit(lambda st, o, k, v: mgr.runtime.run(kv.op_round,
                                                        st, o, k, v))
     st = kv.init_state()
@@ -27,7 +27,7 @@ def main():
     oracle = {}
 
     # prefill 80%
-    keys = rng.permutation(np.arange(1, KEYSPACE + 1))[:int(KEYSPACE * .8)]
+    keys = rng.permutation(np.arange(1, keyspace + 1))[:int(keyspace * .8)]
     for i in range(0, len(keys), P):
         chunk = keys[i:i + P]
         op = np.full(P, NOP, np.int32); op[:len(chunk)] = INSERT
@@ -41,10 +41,10 @@ def main():
 
     t0 = time.time()
     checked = ops = 0
-    for r in range(ROUNDS):
+    for r in range(rounds):
         op = rng.choice([GET, UPDATE, INSERT, DELETE], size=P,
                         p=[.6, .2, .1, .1]).astype(np.int32)
-        kk = rng.integers(1, KEYSPACE + 1, P).astype(np.uint32)
+        kk = rng.integers(1, keyspace + 1, P).astype(np.uint32)
         vv = np.stack([kk.astype(np.int32) * 5 + r, np.full(P, r)], 1) \
             .astype(np.int32)
         pre = dict(oracle)

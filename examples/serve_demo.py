@@ -6,8 +6,8 @@ Run:  PYTHONPATH=src python examples/serve_demo.py
 from repro.launch import serve as serve_launcher
 
 
-def main():
-    serve_launcher.main([
+def main(argv=None):
+    serve_launcher.main(argv if argv is not None else [
         "--arch", "qwen3-8b", "--smoke", "--requests", "8",
         "--prompt-len", "24", "--gen-len", "8", "--max-batch", "4"])
 

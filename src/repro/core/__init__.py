@@ -8,15 +8,16 @@ Public surface:
                    :class:`SST`, :class:`Barrier`, :class:`TicketLock`,
                    :class:`TicketLockArray`, :class:`Ringbuffer`,
                    :class:`SharedQueue`, :class:`KVStore`, :class:`ReadCache`,
-                   :class:`ReplicatedLog`
+                   :class:`HotTracker`, :class:`ReplicatedLog`
 """
 from .ack import ALL_PEERS, AckKey, FenceScope, OpDesc, join, make_ack
 from .atomic import AtomicVar, AtomicVarState
 from .barrier import Barrier, BarrierState
 from .cache import ReadCache, ReadCacheState
 from .channel import Channel
-from .kvstore import (DELETE, GET, INSERT, NOP, UPDATE, KVResult, KVStore,
-                      KVStoreState)
+from .hottracker import HotTracker, HotTrackerState
+from .kvstore import (DELETE, GET, INSERT, MOVE, NOP, PLACEMENTS, UPDATE,
+                      KVResult, KVStore, KVStoreState)
 from .lock import (NO_TICKET, TicketLock, TicketLockArray,
                    TicketLockArrayState, TicketLockState)
 from .ownedvar import OwnedVar, OwnedVarState, checksum
@@ -30,7 +31,8 @@ from .sst import SST, SSTState
 __all__ = [
     "ALL_PEERS", "AckKey", "FenceScope", "OpDesc", "join", "make_ack",
     "AtomicVar", "AtomicVarState", "Barrier", "BarrierState", "Channel",
-    "NOP", "GET", "INSERT", "UPDATE", "DELETE", "KVResult", "KVStore",
+    "NOP", "GET", "INSERT", "UPDATE", "DELETE", "MOVE", "PLACEMENTS",
+    "HotTracker", "HotTrackerState", "KVResult", "KVStore",
     "KVStoreState", "NO_TICKET", "TicketLock", "TicketLockArray",
     "TicketLockArrayState", "TicketLockState", "OwnedVar", "OwnedVarState",
     "checksum", "ReadCache", "ReadCacheState", "ReplicatedLog",

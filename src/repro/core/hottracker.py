@@ -1,0 +1,112 @@
+"""hot_tracker — decayed read-heat counters for the locality tier (§10).
+
+LOCO's programming model makes the *programmer* responsible for placement
+(NUMA-style, paper §1); the missing piece after the read tier (§8) is the
+evidence to place *with*.  :class:`HotTracker` is that evidence made a
+channel: a per-participant vector of **exponentially decayed read
+counters**, one per global (node, slot) row of a backing store, fed from
+the same lane metadata the store's read path already resolves (the ledger
+verbs' view of traffic, kept on-device so placement decisions can run
+inside a traced collective program).
+
+Each participant tracks only *its own* reads — ``heat[lid]`` is "how hot
+row ``lid`` is **to me**" — so the full (readers × rows) heat matrix is
+one all-gather away, and the dominant reader of a row is an argmax over
+the gathered axis.  :meth:`KVStore.rebalance` consumes exactly that:
+rows whose dominant reader is not their current home become MOVE
+proposals (DESIGN.md §10.3).
+
+Like the read cache and the local index, the tracker is private memory:
+ledger-accounted (process-heap analogue) but never addressed by peers.
+Decay is applied once per observed window (not per lane) and
+**unconditionally on every participant** — observe runs in SPMD
+lockstep, so all counters tick one shared clock and dominant-reader
+comparisons across participants are scale-consistent.  The ``heat``
+leaf is local policy, skipped by the replication convergence check like
+the read cache (§9.3); zero heat is a decay fixed point, so heat-less
+replicas replay as the exact state identity regardless.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .channel import Channel
+from .runtime import Manager
+
+
+class HotTrackerState(NamedTuple):
+    heat: jax.Array  # (rows,) float32 — MY decayed read count per global row
+
+
+class HotTracker(Channel):
+    """Decayed per-(node, slot) read counters, one lane per participant.
+
+    rows = nodes · slots (the backing store's global row count); ``decay``
+    is the per-observed-window retention factor (0.9 ≈ a ~10-window
+    horizon — sizing guidance in DESIGN.md §10.3).
+    """
+
+    def __init__(self, parent, name: str, mgr: Manager, *, nodes: int,
+                 slots: int, decay: float = 0.9):
+        super().__init__(parent, name, mgr)
+        self.nodes = int(nodes)
+        self.slots = int(slots)
+        self.rows = self.nodes * self.slots
+        self.decay = float(decay)
+        if not 0.0 < self.decay <= 1.0:
+            raise ValueError("decay must be in (0, 1]")
+        # private memory, ledger-accounted like the kvstore index (§4)
+        self.declare_region("heat", (self.rows,), jnp.float32)
+
+    def init_state(self) -> HotTrackerState:
+        return HotTrackerState(heat=jnp.zeros((self.P, self.rows),
+                                              jnp.float32))
+
+    @staticmethod
+    def empty_state(P: int) -> HotTrackerState:
+        """Zero-row state for heat-less composers: keeps the composing
+        store's state pytree structure independent of the knob."""
+        return HotTrackerState(heat=jnp.zeros((P, 0), jnp.float32))
+
+    # -- verbs (all local, all batched) ---------------------------------------
+    def line_of(self, nodes, slots):
+        lid = nodes.astype(jnp.int32) * jnp.int32(self.slots) \
+            + slots.astype(jnp.int32)
+        return jnp.clip(lid, 0, self.rows - 1)
+
+    def observe(self, st: HotTrackerState, nodes, slots,
+                preds) -> HotTrackerState:
+        """Account one (R,) read window: decay once, then +1 per live
+        lane.
+
+        Decay is **unconditional**: observe runs in SPMD lockstep, so
+        every participant applies it on every observed window whether or
+        not its own lanes are live — all counters share one clock and
+        the cross-participant argmax in ``rebalance_proposals`` compares
+        like with like (a participant whose lanes went idle would
+        otherwise hold stale undecayed evidence forever).  Zero heat is
+        a fixed point, so replayed windows on heat-less replicas remain
+        the state identity."""
+        preds = jnp.asarray(preds)
+        lane = jnp.where(preds, self.line_of(nodes, slots), self.rows)
+        return st._replace(
+            heat=(st.heat * self.decay).at[lane].add(1.0, mode="drop"))
+
+    def forget(self, st: HotTrackerState, nodes, slots,
+               preds) -> HotTrackerState:
+        """Zero the heat lines of vacated rows (DELETE and MOVE free a
+        (node, slot)): the slot's next tenant starts cold instead of
+        inheriting the previous key's read evidence — without this,
+        ``rebalance`` would migrate cold rows on a dead key's heat."""
+        preds = jnp.asarray(preds)
+        lane = jnp.where(preds, self.line_of(nodes, slots), self.rows)
+        return st._replace(heat=st.heat.at[lane].set(0.0, mode="drop"))
+
+    def all_heat(self, st: HotTrackerState):
+        """The full (readers, rows) heat matrix — one all-gather of the
+        per-participant vectors (P·rows floats on the wire, the price of
+        a placement decision; see §10.3 on amortizing it)."""
+        return jax.lax.all_gather(st.heat, self.axis, axis=0)

@@ -96,6 +96,43 @@ paths run through a two-layer tier:
 Both layers preserve results bit-for-bit; ``_get_window_reference`` keeps
 the uncached path as the executable specification the oracle suites pin
 the cached path against under interleaved mutation.
+
+The explicit locality tier: placement + migration (DESIGN.md §10)
+-----------------------------------------------------------------
+
+The paper's channel objects "do not hide memory complexity" — placement
+is the programmer's job.  Two knobs make that job expressible:
+
+* **placement policies** (``placement=``) decide the *home node* of every
+  INSERT: ``"local"`` (default — the writer hosts the row, today's
+  behavior, zero protocol overhead), ``"hashed"`` (``key % P`` — load-
+  balanced, reader-oblivious), ``"explicit"`` (a per-lane ``targets=``
+  hint threaded through :meth:`op_window` /
+  :meth:`export_window_records` — the caller homes each row on the node
+  that will read it, e.g. the serving engine homing decode pages on
+  their decoder).  Non-local inserts allocate at the home via a
+  two-collective grant round-trip and write the row with the batched
+  one-sided verb; the index protocol is unchanged (the tracker record
+  simply names the home).
+* **online migration**: a ``MOVE`` lane (:meth:`migrate_window`) re-homes
+  a live row inside the existing windowed mutation rounds — under the
+  key's ticket lock the mover reads the row at its old home, allocates a
+  fresh slot at the destination, emits ONE kind-3 tracker record that
+  every participant applies as tombstone+reinsert *in the same conflict
+  wave* (`_apply_tracker_vectorized`), writes the row at the destination
+  after all peers acknowledged, clears the vacated row, and the old home
+  bumps the slot-reuse counter so stale cache lines and in-flight reads
+  self-invalidate.  Moves ride the replication log like any mutation
+  (the record export carries the target lane), so followers converge
+  bitwise across migrations.
+
+Placement evidence comes from the :class:`~repro.core.hottracker.HotTracker`
+channel (``track_heat=True``): decayed per-(node, slot) read counters fed
+by the GET paths.  :meth:`rebalance` turns them into policy — rows whose
+dominant reader is remote become MOVE proposals, executed as one
+migration window.  ``_migrate_reference`` (the B=1 sequential spec) and
+the oracle/hypothesis suites pin migrated stores result-for-result
+against never-migrated ones under interleaved GET/UPDATE/DELETE.
 """
 from __future__ import annotations
 
@@ -108,14 +145,18 @@ from . import colls
 from .ack import AckKey, join
 from .cache import ReadCache, ReadCacheState, hash_u32
 from .channel import Channel
+from .hottracker import HotTracker, HotTrackerState
 from .lock import TicketLockArray, TicketLockArrayState
 from .ownedvar import checksum
 from .region import SharedRegion, SharedRegionState
 from .runtime import Manager
 from .sst import SST, SSTState
 
-# op codes
-NOP, GET, INSERT, UPDATE, DELETE = 0, 1, 2, 3, 4
+# op codes (MOVE re-homes a live row — the §10 migration lane)
+NOP, GET, INSERT, UPDATE, DELETE, MOVE = 0, 1, 2, 3, 4, 5
+
+# placement policies (DESIGN.md §10.1): who hosts an INSERTed row
+PLACEMENTS = ("local", "hashed", "explicit")
 
 # local-index slot states (DESIGN.md §7): tombstones keep probe chains
 # intact across deletions; inserts reclaim them.  The index is ONE (C, 5)
@@ -152,6 +193,7 @@ class KVStoreState(NamedTuple):
     idx_overflow: jax.Array   # () bool — a probe window ran out of space
     acks: SSTState            # tracker ack counters
     cache: ReadCacheState     # read tier (zero-line when cache_slots == 0)
+    heat: HotTrackerState     # read-heat tier (zero-row when untracked)
 
 
 def _u2i(x):
@@ -168,6 +210,8 @@ class KVStore(Channel):
                  num_locks: int = 8, index_capacity: int | None = None,
                  index_max_probe: int | None = None,
                  cache_slots: int = 0, coalesce_reads: bool = True,
+                 placement: str = "local", track_heat: bool = False,
+                 heat_decay: float = 0.9,
                  reference_impl: bool = False):
         super().__init__(parent, name, mgr)
         self.S = int(slots_per_node)
@@ -190,6 +234,16 @@ class KVStore(Channel):
         self.cache = ReadCache(self, "readcache", mgr, lines=cache_slots,
                                row_width=self.W + 3,
                                backing_slots=self.S) if cache_slots else None
+        # explicit locality tier (DESIGN.md §10): placement picks the home
+        # node of every INSERT; track_heat feeds the HotTracker channel
+        # from the GET paths so rebalance() can propose MOVEs for rows
+        # whose dominant reader is remote.
+        if placement not in PLACEMENTS:
+            raise ValueError(f"placement must be one of {PLACEMENTS}, "
+                             f"got {placement!r}")
+        self.placement = placement
+        self.hot = HotTracker(self, "heat", mgr, nodes=self.P, slots=self.S,
+                              decay=heat_decay) if track_heat else None
         self.locks = TicketLockArray(self, "locks", mgr, num_locks=self.L)
         self.rows_region = SharedRegion(self, "data", mgr, slots=self.S,
                                         item_shape=(self.W + 3,),
@@ -228,7 +282,9 @@ class KVStore(Channel):
             idx_overflow=jnp.zeros((P,), jnp.bool_),
             acks=self.acks.init_state(),
             cache=(self.cache.init_state() if self.cache is not None
-                   else ReadCache.empty_state(P, self.W + 3)))
+                   else ReadCache.empty_state(P, self.W + 3)),
+            heat=(self.hot.init_state() if self.hot is not None
+                  else HotTracker.empty_state(P)))
 
     # -- local index (open-addressing hash table, DESIGN.md §7) ------------------
     def _probe_window(self, key):
@@ -300,7 +356,7 @@ class KVStore(Channel):
         dropped — this path returns no state, and the windowed entry
         points are where refills persist)."""
         if self.cache is not None:
-            values, found, tries, _cache = self._get_window(
+            values, found, tries, _st = self._get_window(
                 st, jnp.reshape(jnp.asarray(key, jnp.uint32), (1,)),
                 jnp.reshape(jnp.asarray(pred), (1,)))
             return values[0], found[0], tries
@@ -342,25 +398,37 @@ class KVStore(Channel):
         """B lock-free GETs through the read tier (DESIGN.md §8).
 
         keys: (B,) uint32; pred: (B,) bool masking the GET lanes.  Returns
-        (values (B, W), found (B,), tries (), cache ReadCacheState) — the
-        returned cache state carries this window's refills; callers thread
-        it into their output state (``op_window``, :meth:`get_batch`) or
-        drop it (the scalar spec path).
+        (values (B, W), found (B,), tries (), state) — the returned state
+        carries this window's cache refills and heat observations (and
+        nothing else: GETs mutate no store data); callers thread it into
+        their output state (``op_window``, :meth:`get_batch`) or drop it
+        (the scalar spec path).
 
         Dispatch: a cache-less store runs ``_get_window_reference`` (the
         retained uncached specification, bit-for-bit the PR-2 read path);
         a cache-enabled store serves counter-validated hits from local
         memory and falls through to the coalesced verb for the misses —
         results are pinned bitwise against the reference under concurrent
-        mutation by the oracle suites.
+        mutation by the oracle suites.  A heat-tracked store additionally
+        accounts the live lanes in the HotTracker (§10.3) — observation
+        only, never a result change.
         """
         keys = jnp.asarray(keys, jnp.uint32)
         pred = jnp.asarray(pred)
+        if look is None:
+            found_idx, _pos, node, slot, ctr = jax.vmap(
+                lambda k: self._index_lookup(st, k))(keys)
+            look = (found_idx, node, slot, ctr)
+        if self.hot is not None:
+            st = st._replace(heat=self.hot.observe(
+                st.heat, look[1], look[2], pred & look[0]))
         if self.cache is None:
             values, found, tries = self._get_window_reference(
                 st, keys, pred, look=look)
-            return values, found, tries, st.cache
-        return self._get_window_cached(st, keys, pred, look=look)
+            return values, found, tries, st
+        values, found, tries, cache = self._get_window_cached(
+            st, keys, pred, look=look)
+        return values, found, tries, st._replace(cache=cache)
 
     def _get_window_reference(self, st: KVStoreState, keys, pred, look=None):
         """The uncached read path (Fig. 3 / §7): every live GET lane pays
@@ -501,7 +569,10 @@ class KVStore(Channel):
     # -- tracker application ----------------------------------------------------------
     def _apply_tracker(self, st: KVStoreState, recs):
         """Apply gathered tracker records (N, 5) in record order:
-        rec = [kind(0/1=ins/2=del), key_bits, node, slot, ctr_bits].
+        rec = [kind(0/1=ins/2=del/3=move), key_bits, node, slot, ctr_bits].
+        Kind-3 (MOVE, §10.2) carries the key's NEW location; the old one is
+        recovered from the index entry it replaces, and the old host frees
+        the vacated slot and bumps its reuse counter.
 
         N is P for single-op rounds and P·B for windows (participant-major,
         so record order IS participant-then-window order).  Returns
@@ -532,7 +603,10 @@ class KVStore(Channel):
         earliest-record-wins arbitration — losers retry next wave against
         the updated table, reproducing the sequential first-free choice.
         Hence every wave's winners touch **distinct** index positions and
-        land in one scatter; the wave count is the conflict depth (1 for
+        land in one committed-row scatter (plus one tombstone scatter for
+        the wave's MOVE winners — a kind-3 record tombstones the position
+        it vacates and reinserts at its first free-or-own position in the
+        SAME wave, §10.2); the wave count is the conflict depth (1 for
         typical windows), not P·B, and per-record work is O(PROBE), not
         O(C).
 
@@ -559,6 +633,8 @@ class KVStore(Channel):
         live = kind != 0
         is_ins = kind == 1
         is_del = kind == 2
+        is_mov = kind == 3
+        is_put = is_ins | is_mov      # records that place a [USED|key|...] row
         order = jnp.arange(N, dtype=jnp.int32)
 
         def wave(carry):
@@ -566,18 +642,19 @@ class KVStore(Channel):
             # records) costs the loop-condition check and nothing else, and
             # live rounds recompute these cheap (N,)-shaped quantities once
             # per conflict wave.
-            idx_c, pending, applied = carry
+            idx_c, pending, applied, old_node, old_slot = carry
             earlier = order[None, :] < order[:, None]  # [i, j]: j precedes i
             same_key_earlier = earlier & (key[None, :] == key[:, None]) \
                 & live[None, :]
             # probe windows are loop-invariant: only table contents change
             pos_w = jax.vmap(self._probe_window)(key)          # (N, PROBE)
-            # committed rows: inserts [USED|key|node|slot|ctr], deletes
-            # [TOMB|0|node|slot|ctr] (a delete's node/slot/ctr ARE the
-            # entry's current values — the service round read them here)
+            # committed rows: inserts AND move-reinserts place
+            # [USED|key|node|slot|ctr] (the record's NEW location),
+            # deletes [TOMB|0|node|slot|ctr] (a delete's node/slot/ctr ARE
+            # the entry's current values — the service round read them)
             upd = jnp.stack(
-                [jnp.where(is_ins, _USED, _TOMB).astype(jnp.int32),
-                 jnp.where(is_ins, key_b, 0), node, slot, ctr_b], axis=-1)
+                [jnp.where(is_put, _USED, _TOMB).astype(jnp.int32),
+                 jnp.where(is_put, key_b, 0), node, slot, ctr_b], axis=-1)
             blocked = jnp.any(same_key_earlier & pending[None, :], axis=1)
             after_blocked = jnp.any(earlier & blocked[None, :], axis=1)
             elig = pending & ~blocked & ~after_blocked
@@ -592,39 +669,79 @@ class KVStore(Channel):
                 pos_w, jnp.argmax(m, axis=1)[:, None], axis=1)[:, 0]
             fpos = jnp.take_along_axis(
                 pos_w, jnp.argmax(free, axis=1)[:, None], axis=1)[:, 0]
-            tgt = jnp.where(is_ins, fpos, mpos)
+            # a MOVE reinserts at the first free-or-own position: the
+            # entry it tombstones is inside its own probe window, so a
+            # found key ALWAYS has a landing position — kind-3 can miss
+            # (key gone) but never overflow (§10.2).
+            fpos_m = jnp.take_along_axis(
+                pos_w, jnp.argmax(free | m, axis=1)[:, None], axis=1)[:, 0]
+            tgt = jnp.where(is_ins, fpos, jnp.where(is_mov, fpos_m, mpos))
             valid_tgt = jnp.where(is_ins, jnp.any(free, axis=1),
                                   jnp.any(m, axis=1))
             cand = elig & valid_tgt
-            # insert position races: earliest candidate wins, losers retry
+            # placement position races: earliest candidate wins, losers
+            # retry (a mover's own matched position stays USED until it
+            # wins, so only the mover itself can ever land there)
             race = earlier & (tgt[None, :] == tgt[:, None]) \
-                & (cand & is_ins)[None, :]
-            lost = is_ins & jnp.any(race, axis=1)
+                & (cand & is_put)[None, :]
+            lost = is_put & jnp.any(race, axis=1)
             win = cand & ~lost
             earlier_pending = jnp.any(earlier & pending[None, :], axis=1)
-            fail = elig & ~valid_tgt & (is_del | ~earlier_pending)
-            # winners occupy distinct positions: ONE row scatter per wave
+            fail = elig & ~valid_tgt & (is_del | is_mov | ~earlier_pending)
+            # capture the vacated location of winning movers (slot GC and
+            # the reuse-counter bump are post-loop host effects)
+            mrow = w[order, jnp.argmax(m, axis=1)]             # (N, 5)
+            mwin = win & is_mov
+            old_node = jnp.where(mwin, mrow[:, IDX_NODE], old_node)
+            old_slot = jnp.where(mwin, mrow[:, IDX_SLOT], old_slot)
+            # winners occupy distinct positions: the movers' tombstones
+            # and everyone's committed rows are TWO row scatters per wave
+            # (a mover landing in place is tombstoned then overwritten —
+            # scatter order makes that the reinsert, as required)
+            tomb = jnp.stack(
+                [jnp.full((N,), _TOMB, jnp.int32), jnp.zeros((N,), jnp.int32),
+                 mrow[:, IDX_NODE], mrow[:, IDX_SLOT], mrow[:, IDX_CTR]],
+                axis=-1)
+            row_t = jnp.where(mwin, mpos, self.C)
+            idx_c = idx_c.at[row_t].set(tomb, mode="drop")
             row = jnp.where(win, tgt, self.C)
             idx_c = idx_c.at[row].set(upd, mode="drop")
-            return idx_c, pending & ~(win | fail), applied | win
+            return idx_c, pending & ~(win | fail), applied | win, \
+                old_node, old_slot
 
-        idx, _pending, applied = jax.lax.while_loop(
+        idx, _pending, applied, old_node, old_slot = jax.lax.while_loop(
             lambda c: jnp.any(c[1]), wave,
-            (st.idx, live, jnp.zeros((N,), jnp.bool_)))
+            (st.idx, live, jnp.zeros((N,), jnp.bool_),
+             jnp.zeros((N,), jnp.int32), jnp.zeros((N,), jnp.int32)))
 
         # ---- post-loop commits (nothing below feeds back into scheduling)
-        # slot GC at the hosting node (counter-based GC), in record order
-        host_free = applied & is_del & (node == me)
+        # slot GC at the hosting node (counter-based GC), in record order:
+        # deletes free the record's slot, moves free the VACATED one
+        host_free = applied & ((is_del & (node == me))
+                               | (is_mov & (old_node == me)))
+        gc_slot = jnp.where(is_mov, old_slot, slot)
         hf = host_free.astype(jnp.int32)
         hrank = jnp.cumsum(hf) - hf
         back = jnp.where(host_free,
                          jnp.clip(st.free_top + hrank, 0, self.S - 1),
                          self.S)
+        # §10.2 self-invalidation: the old home bumps the vacated slot's
+        # reuse counter so stale cached copies and in-flight reads fail
+        # counter validation even against a not-yet-refreshed index view
+        bump = jnp.where(applied & is_mov & (old_node == me), old_slot,
+                         self.S)
         st = st._replace(
             idx=idx,
             idx_overflow=st.idx_overflow | jnp.any(live & is_ins & ~applied),
-            free_stack=st.free_stack.at[back].set(slot, mode="drop"),
-            free_top=st.free_top + jnp.sum(hf))
+            free_stack=st.free_stack.at[back].set(gc_slot, mode="drop"),
+            free_top=st.free_top + jnp.sum(hf),
+            slot_ctr=st.slot_ctr.at[bump].add(jnp.uint32(1), mode="drop"))
+        if self.hot is not None:
+            # vacated rows start cold for their next tenant (§10.3) —
+            # every participant sees the freeing records in the gather
+            st = st._replace(heat=self.hot.forget(
+                st.heat, jnp.where(is_mov, old_node, node), gc_slot,
+                applied & (is_del | is_mov)))
         return st, applied
 
     def _apply_tracker_reference(self, st: KVStoreState, recs):
@@ -662,30 +779,49 @@ class KVStore(Channel):
             ins_pos = jnp.argmax(free)
             do_ins = (kind == 1) & has_free
             overflow = st_c.idx_overflow | ((kind == 1) & ~has_free)
-            # DELETE: clear matching entry; host frees the slot
+            # DELETE: clear matching entry; host frees the slot.
+            # MOVE (kind-3, §10.2): re-point the matched entry IN PLACE to
+            # the record's new location (the flat scan needs no tombstone
+            # dance — each impl pairs its own placement with its own
+            # lookup); the OLD host frees the vacated slot and bumps its
+            # reuse counter, logically equivalent to the wave scheduler.
             match = (st_c.idx[:, IDX_STATE] == _USED) \
                 & (st_c.idx[:, IDX_KEY] == key_b)
             del_pos = jnp.argmax(match)
             do_del = (kind == 2) & jnp.any(match)
+            do_mov = (kind == 3) & jnp.any(match)
             pos = jnp.where(do_ins, ins_pos, del_pos)
             old = st_c.idx[pos]
             ins_row = jnp.stack([jnp.int32(_USED), key_b, node, slot, ctr_b])
             del_row = jnp.concatenate(
                 [jnp.zeros((2,), jnp.int32), old[IDX_NODE:]])
-            new_row = jnp.where(do_ins, ins_row,
+            new_row = jnp.where(do_ins | do_mov, ins_row,
                                 jnp.where(do_del, del_row, old))
             st_c = st_c._replace(
                 idx=st_c.idx.at[pos].set(new_row),
                 idx_overflow=overflow)
-            # slot GC at the hosting node (paper: counter-based GC)
-            host_frees = do_del & (node == me)
+            # slot GC at the hosting node (paper: counter-based GC) — a
+            # move frees the VACATED slot at the old host
+            host_frees = (do_del & (node == me)) \
+                | (do_mov & (old[IDX_NODE] == me))
+            freed = jnp.where(do_mov, old[IDX_SLOT], slot)
             top = st_c.free_top
+            bump = jnp.where(do_mov & (old[IDX_NODE] == me),
+                             old[IDX_SLOT], self.S)
             st_c = st_c._replace(
                 free_stack=st_c.free_stack.at[jnp.clip(top, 0, self.S - 1)]
-                .set(jnp.where(host_frees, slot,
+                .set(jnp.where(host_frees, freed,
                                st_c.free_stack[jnp.clip(top, 0, self.S - 1)])),
-                free_top=jnp.where(host_frees, top + 1, top))
-            applied = applied.at[p].set(do_ins | do_del)
+                free_top=jnp.where(host_frees, top + 1, top),
+                slot_ctr=st_c.slot_ctr.at[bump].add(jnp.uint32(1),
+                                                    mode="drop"))
+            if self.hot is not None:
+                st_c = st_c._replace(heat=self.hot.forget(
+                    st_c.heat,
+                    jnp.where(do_mov, old[IDX_NODE], node).reshape(1),
+                    jnp.where(do_mov, old[IDX_SLOT], slot).reshape(1),
+                    jnp.reshape(do_del | do_mov, (1,))))
+            applied = applied.at[p].set(do_ins | do_del | do_mov)
             return st_c, applied
 
         applied0 = jnp.zeros((recs.shape[0],), jnp.bool_)
@@ -823,8 +959,12 @@ class KVStore(Channel):
         queued = g_want[None, :] & (g_lock[None, :] == g_lock[:, None])
         before = queued & (g_tick[None, :] < g_tick[:, None])  # [i,j]: j<i
         both_upd = (g_op[:, None] == UPDATE) & (g_op[None, :] == UPDATE)
+        # allocating lanes (INSERT, MOVE) behind freeing lanes (DELETE,
+        # MOVE) serialize so a full free stack can recycle within a window
+        alloc_i = (g_op[:, None] == INSERT) | (g_op[:, None] == MOVE)
+        free_j = (g_op[None, :] == DELETE) | (g_op[None, :] == MOVE)
         conflict = ((g_key[None, :] == g_key[:, None]) & ~both_upd) \
-            | ((g_op[:, None] == INSERT) & (g_op[None, :] == DELETE))
+            | (alloc_i & free_j)
         bad = jnp.any(before & conflict, axis=1)
         at_or_before = queued & (g_tick[None, :] <= g_tick[:, None])
         round_all = jnp.where(
@@ -845,9 +985,15 @@ class KVStore(Channel):
     # -- one service round over the whole (B,) window ---------------------------------
     def _service_window(self, st: KVStoreState, op, key, value, lock_id,
                         ticket, pending, look, serve=None,
-                        write_winner=None):
+                        write_winner=None, homes=None):
         """Vectorized :meth:`_service_round`: every window slot whose lock
         this participant currently holds executes in this round.
+
+        ``homes`` (set by :meth:`op_window` when the store places
+        non-locally or the caller passed explicit targets) switches to the
+        placed service round (:meth:`_service_window_placed`) — the same
+        protocol with home-node allocation and MOVE support; ``None`` runs
+        the writer-local fast path below (zero extra collectives).
 
         Concurrently-executing mutations hold distinct locks, hence act on
         distinct keys and distinct live slots — which is what makes the
@@ -875,6 +1021,10 @@ class KVStore(Channel):
         max queue depth: a window of P·B distinct-key UPDATEs completes in
         ONE round even when a stripe lock queues 30 of them.
         """
+        if homes is not None:
+            return self._service_window_placed(
+                st, op, key, value, lock_id, ticket, pending, look, homes,
+                serve=serve, write_winner=write_winner)
         me = colls.my_id(self.axis)
         B = op.shape[0]
         if serve is None:
@@ -1007,15 +1157,258 @@ class KVStore(Channel):
         success = ins_ok | do_upd | do_del
         return st, pending & ~holding, holding, success, look
 
+    # -- the placed service round (explicit locality tier, DESIGN.md §10) -------
+    def _service_window_placed(self, st: KVStoreState, op, key, value,
+                               lock_id, ticket, pending, look, homes,
+                               serve=None, write_winner=None):
+        """One service round under explicit placement: the generalization
+        of :meth:`_service_window` in which INSERT slots are allocated at
+        the lane's *home* node and MOVE lanes re-home live rows.
+
+        Differences from the writer-local fast path:
+
+        * **allocation** is a two-collective round-trip — one (P·B, 2)
+          request gather (want, home) and one (P·B, 3) grant psum (ok,
+          slot, ctr).  Each home grants its requests in global
+          (participant, lane) order from its own free stack, so the
+          writer-local case (home == writer for every lane) degenerates
+          to exactly the fast path's slot choices;
+        * **phase-1/phase-2 row writes** ride the batched one-sided write
+          verb addressed at the home — a self-targeted lane is a local
+          store at zero modeled wire bytes (§2.3), so writer-local lanes
+          cost the fast path's bytes and land the fast path's bits (the
+          replication suite pins the two paths against each other:
+          followers always replay through this one);
+        * **MOVE** (§10.2): under the key's ticket lock the mover reads
+          the row at its old home (one clean read — the lock excludes
+          writers, so no retry loop), allocates at the destination, and
+          emits ONE kind-3 tracker record naming the NEW location.  Every
+          participant applies it as tombstone+reinsert in the same
+          conflict wave (`_apply_tracker_vectorized`), the old home frees
+          the vacated slot and bumps its reuse counter (stale readers and
+          cache lines self-invalidate), and after all peers acknowledged
+          the mover writes the row at the destination and clears the old
+          one — both lanes of the round's single batched write.  A MOVE
+          whose destination IS the current home succeeds with no effects.
+
+        All mutation kinds share one final 2B-lane ``write_batch``:
+        UPDATE winners and DELETE clears (ungated), ack-gated INSERT
+        valid rows and MOVE destination rows, and ack-gated MOVE
+        old-slot clears — every enabled lane addresses a distinct row
+        (distinct keys per round; fresh destination slots; old slots are
+        freed *after* this round's allocation), so ``assume_unique``
+        holds.
+        """
+        me = colls.my_id(self.axis)
+        B = op.shape[0]
+        if serve is None:
+            holding = pending & self.locks.holds(st.locks, lock_id, ticket)
+            upd_winner = jnp.ones((B,), jnp.bool_)
+        else:
+            holding = pending & serve
+            upd_winner = write_winner
+        found, node, slot, ctr = look
+        node = node.astype(jnp.int32)
+        slot = slot.astype(jnp.int32)
+        do_ins = holding & (op == INSERT) & ~found
+        do_upd = holding & (op == UPDATE) & found
+        do_del = holding & (op == DELETE) & found
+        is_move = holding & (op == MOVE) & found
+        do_move = is_move & (homes != node)
+        move_noop = is_move & (homes == node)
+
+        # ---- MOVE phase 0: read the row at the old home.  The lane holds
+        # the key's ticket lock, so no concurrent writer exists and one
+        # validated read suffices (the §10.2 protocol).
+        moved = colls.remote_read_batch(
+            st.rows.buf, node, slot, self.axis, preds=do_move,
+            ledger=self.mgr.traffic, verb=f"{self.full_name}.move_read",
+            coalesce=False)[:, :self.W]
+
+        # ---- allocation at the home nodes (request gather + grant psum)
+        alloc_want = do_ins | do_move
+        req = jnp.stack([alloc_want.astype(jnp.int32), homes], axis=-1)
+        reqs = jax.lax.all_gather(req, self.axis, axis=0).reshape(-1, 2)
+        g_want = reqs[:, 0] != 0
+        mine = g_want & (reqs[:, 1] == me)
+        mn = mine.astype(jnp.int32)
+        rank = jnp.cumsum(mn) - mn
+        grant = mine & (rank < st.free_top)
+        a_slot = st.free_stack[
+            jnp.clip(st.free_top - 1 - rank, 0, self.S - 1)]
+        a_ctr = st.slot_ctr[a_slot] + jnp.uint32(1)
+        ctr_row = jnp.where(grant, a_slot, self.S)
+        st = st._replace(
+            slot_ctr=st.slot_ctr.at[ctr_row].set(a_ctr, mode="drop"),
+            free_top=st.free_top - jnp.sum(grant.astype(jnp.int32)))
+        tbl = jnp.where(
+            grant[:, None],
+            jnp.stack([jnp.ones_like(a_slot), a_slot, _u2i(a_ctr)],
+                      axis=-1),
+            jnp.zeros((reqs.shape[0], 3), jnp.int32))
+        tbl = jax.lax.psum(tbl, self.axis)
+        my_tbl = jax.lax.dynamic_slice(tbl, (me * B, 0), (B, 3))
+        aok = my_tbl[:, 0] != 0
+        my_slot = my_tbl[:, 1]
+        new_ctr = _i2u(my_tbl[:, 2])
+        do_ins = do_ins & aok
+        do_move = do_move & aok
+        placed = do_ins | do_move
+
+        # ---- INSERT phase 1: the writer one-sided-writes the invalid row
+        # at its home (a self lane is a local store, zero wire bytes)
+        row_invalid = jax.vmap(
+            lambda v, c: self.encode_row(v, c, False))(value, new_ctr)
+        rows_inv, _ = self.rows_region.write_batch(
+            st.rows, homes, my_slot, row_invalid, preds=do_ins,
+            assume_unique=True)
+        st = st._replace(rows=rows_inv)
+
+        # ---- tracker broadcast: ONE record per lane — kind-1/3 records
+        # name the NEW location (a kind-3's old one is recovered from the
+        # index at apply time), kind-2 the current one.
+        kind = jnp.where(do_ins, jnp.int32(1),
+                         jnp.where(do_del, jnp.int32(2),
+                                   jnp.where(do_move, jnp.int32(3),
+                                             jnp.int32(0))))
+        rec = jnp.stack([kind, _u2i(key),
+                         jnp.where(placed, homes, node),
+                         jnp.where(placed, my_slot, slot),
+                         _u2i(jnp.where(placed, new_ctr, ctr))], axis=1)
+        if self.cache is not None:
+            # read-tier coherence (§8.3): invalidate the PRE-mutation
+            # location.  For UPDATE/DELETE that is the record's own
+            # (node, slot); a MOVE vacates its OLD home, which the record
+            # no longer carries — so the flag column travels with the
+            # old coordinates from the lane's index view.
+            rec = jnp.concatenate(
+                [rec,
+                 (do_upd | do_del | do_move).astype(jnp.int32)[:, None],
+                 node[:, None], slot[:, None]], axis=1)
+        recs = jax.lax.all_gather(rec, self.axis, axis=0)
+        recs = recs.reshape(-1, rec.shape[1])               # participant-major
+        if self.cache is not None:
+            st = st._replace(cache=self.cache.invalidate(
+                st.cache, recs[:, 6], recs[:, 7], recs[:, 5] != 0))
+            recs = recs[:, :5]
+        n_recs = jnp.sum(recs[:, 0] != 0).astype(jnp.uint32)
+        st, applied = self._apply_tracker(st, recs)
+        my_applied = jax.lax.dynamic_slice(applied, (me * B,), (B,))
+        acks, _a = self.acks.push_accumulate(st.acks, n_recs)
+        my_acked = self.acks.rows(acks)[me]
+        all_acked = jnp.all(self.acks.rows(acks) >= my_acked)
+        st = st._replace(acks=acks)
+
+        # ---- failed placements return their slots to the HOME stacks
+        # (the grant table is global, so each home sees its own failures)
+        fail = grant & ~applied
+        fl = fail.astype(jnp.int32)
+        f_rank = jnp.cumsum(fl) - fl
+        back = jnp.where(fail,
+                         jnp.clip(st.free_top + f_rank, 0, self.S - 1),
+                         self.S)
+        st = st._replace(
+            free_stack=st.free_stack.at[back].set(a_slot, mode="drop"),
+            free_top=st.free_top + jnp.sum(fl))
+        ins_ok = do_ins & my_applied
+        move_ok = do_move & my_applied
+
+        # ---- the round's one-sided row writes, ONE 2B-lane collective
+        row_upd = jax.vmap(
+            lambda v, c: self.encode_row(v, c, True))(value, ctr)
+        row_del = jax.vmap(lambda c: self.encode_row(
+            jnp.zeros((self.W,), jnp.int32), c, False))(ctr)
+        row_ins = jax.vmap(
+            lambda v, c: self.encode_row(v, c, True))(value, new_ctr)
+        row_mov = jax.vmap(
+            lambda v, c: self.encode_row(v, c, True))(moved, new_ctr)
+        gate = join(AckKey(jax.tree.leaves(acks)),
+                    (ins_ok | move_ok) & all_acked)
+        prim = jnp.where(do_upd[:, None], row_upd,
+                         jnp.where(do_del[:, None], row_del,
+                                   jnp.where(do_ins[:, None], row_ins,
+                                             row_mov)))
+        rows2, _ = self.rows_region.write_batch(
+            st.rows,
+            jnp.concatenate([jnp.where(placed, homes, node), node]),
+            jnp.concatenate([jnp.where(placed, my_slot, slot), slot]),
+            jnp.concatenate([prim, row_del], axis=0),
+            preds=jnp.concatenate([(do_upd & upd_winner) | do_del | gate,
+                                   gate & do_move]),
+            assume_unique=True)
+        st = st._replace(rows=rows2)
+
+        if serve is None:
+            holding_rel = join(AckKey([st.rows.buf]), holding)
+            st = st._replace(locks=self.locks.release_window(
+                st.locks, lock_id, holding_rel))
+
+        # ---- refresh the per-lane index view: kind-1 AND kind-3 records
+        # re-point a key; kind-2 records clear it
+        rec_key = _i2u(recs[:, 1])
+        put_rec = applied & ((recs[:, 0] == 1) | (recs[:, 0] == 3))
+        del_rec = applied & (recs[:, 0] == 2)
+        m_put = put_rec[None, :] & (rec_key[None, :] == key[:, None])
+        hit_put = jnp.any(m_put, axis=1)
+        r_idx = jnp.argmax(m_put, axis=1)
+        hit_del = jnp.any(
+            del_rec[None, :] & (rec_key[None, :] == key[:, None]), axis=1)
+        look = (jnp.where(hit_put, True, found & ~hit_del),
+                jnp.where(hit_put, recs[r_idx, 2], node),
+                jnp.where(hit_put, recs[r_idx, 3], slot),
+                jnp.where(hit_put, _i2u(recs[r_idx, 4]), ctr))
+
+        success = ins_ok | do_upd | do_del | move_ok | move_noop
+        return st, pending & ~holding, holding, success, look
+
     # -- public windowed round-set API ------------------------------------------------
-    def op_window(self, st: KVStoreState, ops, keys, values):
+    def _lane_homes(self, ops, keys, targets):
+        """Per-lane home nodes ((B,) int32) under the store's placement
+        policy, or ``None`` for the writer-local fast path (placement
+        ``"local"`` with no explicit targets — today's zero-overhead
+        protocol, traced without the allocation round-trip).  MOVE lanes
+        home at their explicit target when one is given, else at the
+        policy home (so ``"hashed"`` stores can MOVE keys back to their
+        hash home without a hint)."""
+        if targets is None and self.placement == "local":
+            return None
+        B = ops.shape[0]
+        t = None
+        if targets is not None:
+            t = jnp.clip(jnp.asarray(targets, jnp.int32).reshape(B),
+                         0, self.P - 1)
+        if self.placement == "hashed":
+            ph = (keys % jnp.uint32(self.P)).astype(jnp.int32)
+        elif self.placement == "explicit":
+            if t is None:
+                raise ValueError(
+                    "placement='explicit' stores need per-lane targets=")
+            ph = t
+        else:
+            ph = jnp.broadcast_to(colls.my_id(self.axis), (B,))
+        if t is None:
+            return ph
+        return jnp.where(ops == MOVE, t, ph)
+
+    def op_window(self, st: KVStoreState, ops, keys, values, targets=None,
+                  targets_are_homes=False):
         """Every participant submits a (B,) window of mixed operations; the
         whole window executes in one traced collective round-set.  Service
         rounds run until every mutation in every window completed.  Returns
         (state, KVResult) with (B,)-batched result lanes.
 
-        ops: (B,) int32 in {NOP, GET, INSERT, UPDATE, DELETE}
+        ops: (B,) int32 in {NOP, GET, INSERT, UPDATE, DELETE, MOVE}
         keys: (B,) uint32 (nonzero); values: (B, W) int32.
+        targets: optional (B,) int32 per-lane placement hints (§10.1) —
+        the home node of INSERT lanes under ``placement="explicit"`` and
+        the destination of MOVE lanes.  MOVE lanes require the placed
+        path (a non-local placement or explicit ``targets``); under the
+        writer-local fast path they acquire their lock and complete as
+        failures (``found=False``) with no effect.
+        ``targets_are_homes=True`` (the replay entry point) bypasses the
+        placement policy entirely: ``targets`` ARE the per-lane homes —
+        exported records carry the leader's *resolved* homes, so a
+        replica converges whatever its own policy is configured as.
 
         See the module docstring for the intra-window ordering and
         linearization-point contract.
@@ -1024,8 +1417,14 @@ class KVStore(Channel):
         B = ops.shape[0]
         keys = jnp.asarray(keys, jnp.uint32).reshape(B)
         values = jnp.asarray(values, jnp.int32).reshape(B, self.W)
+        if targets_are_homes:
+            homes = jnp.clip(jnp.asarray(targets, jnp.int32).reshape(B),
+                             0, self.P - 1)
+        else:
+            homes = self._lane_homes(ops, keys, targets)
         lock_id = (keys % jnp.uint32(self.L)).astype(jnp.int32)
-        want_lock = (ops == INSERT) | (ops == UPDATE) | (ops == DELETE)
+        want_lock = (ops == INSERT) | (ops == UPDATE) | (ops == DELETE) \
+            | (ops == MOVE)
         lstate, ticket = self.locks.acquire_window(st.locks, lock_id,
                                                    want_lock)
         # every acquired ticket completes within this window, so the
@@ -1045,9 +1444,8 @@ class KVStore(Channel):
         # start), through the read tier; refills land in the state BEFORE
         # the service loop, so this window's own mutations invalidate any
         # line they touch (§8.3 refill-then-invalidate order).
-        get_val, get_found, retries, cache0 = self._get_window(
+        get_val, get_found, retries, st = self._get_window(
             st, keys, ops == GET, look=look0)
-        st = st._replace(cache=cache0)
 
         if self.reference_impl:
             round_no, write_winner = None, None
@@ -1067,7 +1465,7 @@ class KVStore(Channel):
             with self.mgr.no_tracking():
                 st_c, pending, _held, s_now, look = self._service_window(
                     st_c, ops, keys, values, lock_id, ticket, pending, look,
-                    serve=serve, write_winner=write_winner)
+                    serve=serve, write_winner=write_winner, homes=homes)
             return st_c, pending, succ | s_now, look, r + 1
 
         st, _pending, succ, _look, _r = jax.lax.while_loop(
@@ -1144,24 +1542,134 @@ class KVStore(Channel):
             found=jnp.where(is_get, get_found, succ),
             retries=retries)
 
+    # -- online migration + rebalancing (the §10 locality tier) ----------------
+    def migrate_window(self, st: KVStoreState, keys, dests, preds=None):
+        """Re-home a (B,) lane window of live rows in one collective
+        round-set: lane b moves ``keys[b]`` to node ``dests[b]``.
+
+        Sugar for :meth:`op_window` with MOVE lanes — migrations ride the
+        ordinary windowed mutation rounds (ticket locks, tracker waves,
+        ack-gated writes) and therefore linearize with concurrent
+        GET/INSERT/UPDATE/DELETE windows exactly like any mutation.
+        Returns (state, moved (B,) bool): a lane fails (False) when the
+        key is absent, when the destination's free stack is exhausted, or
+        when the lane is pred-masked; a move to the key's CURRENT home
+        succeeds with no effect.
+        """
+        keys = jnp.asarray(keys, jnp.uint32).reshape(-1)
+        B = keys.shape[0]
+        if preds is None:
+            preds = jnp.ones((B,), jnp.bool_)
+        ops = jnp.where(jnp.asarray(preds), jnp.int32(MOVE), jnp.int32(NOP))
+        st, res = self.op_window(st, ops, keys,
+                                 jnp.zeros((B, self.W), jnp.int32),
+                                 targets=jnp.asarray(dests, jnp.int32)
+                                 .reshape(B))
+        return st, res.found
+
+    def _migrate_reference(self, st: KVStoreState, keys, dests, preds=None):
+        """Executable migration specification: the (B,) lanes run as B
+        sequential single-lane MOVE windows (trace-unrolled), so each move
+        flows one at a time through the already-pinned op_window
+        machinery.  The regression suite pins :meth:`migrate_window`
+        against this spec result-for-result (states may differ in slot
+        assignment order when several lanes target one destination — the
+        same latitude the windowed mutation paths already have vs their
+        scalar specs)."""
+        keys = jnp.asarray(keys, jnp.uint32).reshape(-1)
+        B = keys.shape[0]
+        dests = jnp.asarray(dests, jnp.int32).reshape(B)
+        if preds is None:
+            preds = jnp.ones((B,), jnp.bool_)
+        preds = jnp.asarray(preds)
+        moved = []
+        for b in range(B):
+            st, ok = self.migrate_window(st, keys[b:b + 1], dests[b:b + 1],
+                                         preds=preds[b:b + 1])
+            moved.append(ok[0])
+        return st, jnp.stack(moved)
+
+    def rebalance_proposals(self, st: KVStoreState, max_moves: int,
+                            min_heat: float = 1.0):
+        """Propose up to ``max_moves`` MOVEs for rows whose **dominant
+        reader is remote** (§10.3), from the HotTracker's decayed
+        counters.  Requires ``track_heat=True``.
+
+        One heat all-gather, then pure local work on replicated state:
+        every participant derives the identical global proposal list
+        (the index and the gathered heat agree everywhere), scores each
+        live index entry by (dominant-reader heat − current-home heat),
+        and takes the top ``max_moves``.  Proposals are dealt round-robin
+        to participants — proposal j rides lane j÷P of participant j%P —
+        so the returned per-participant lanes partition the list.
+
+        Returns (keys (B,), dests (B,), valid (B,)) with
+        B = ceil(max_moves / P); invalid lanes are padding.
+        """
+        if self.hot is None:
+            raise ValueError("rebalance needs a heat-tracked store "
+                             "(track_heat=True)")
+        me = colls.my_id(self.axis)
+        B = -(-int(max_moves) // self.P)
+        M = min(B * self.P, self.C)
+        B = -(-M // self.P)
+        g = self.hot.all_heat(st.heat)                   # (P, P·S)
+        dom = jnp.argmax(g, axis=0).astype(jnp.int32)    # dominant reader
+        dom_heat = jnp.max(g, axis=0)
+        used = st.idx[:, IDX_STATE] == _USED
+        node = jnp.clip(st.idx[:, IDX_NODE], 0, self.P - 1)
+        lid = self.hot.line_of(node, st.idx[:, IDX_SLOT])
+        home_heat = g[node, lid]
+        want = used & (dom[lid] != node) & (dom_heat[lid] >= min_heat)
+        score = jnp.where(want, dom_heat[lid] - home_heat, -1.0)
+        top_score, top_pos = jax.lax.top_k(score, M)
+        valid_all = top_score > 0.0
+        keys_all = _i2u(st.idx[top_pos, IDX_KEY])
+        dests_all = dom[lid[top_pos]]
+        sel = jnp.clip(me + jnp.arange(B, dtype=jnp.int32) * self.P,
+                       0, M - 1)
+        # honor the caller's bound exactly: proposal indices at or past
+        # max_moves are padding even when the padded lane grid (B·P)
+        # rounds past it
+        lane_ok = (me + jnp.arange(B, dtype=jnp.int32) * self.P) \
+            < min(int(max_moves), M)
+        return (keys_all[sel], dests_all[sel], valid_all[sel] & lane_ok)
+
+    def rebalance(self, st: KVStoreState, max_moves: int,
+                  min_heat: float = 1.0):
+        """Propose and execute one migration window: rows whose dominant
+        reader is remote move to that reader.  Returns (state, n_moved ()
+        int32 — the cluster-wide count of executed moves)."""
+        keys, dests, valid = self.rebalance_proposals(st, max_moves,
+                                                      min_heat=min_heat)
+        st, moved = self.migrate_window(st, keys, dests, preds=valid)
+        return st, jax.lax.psum(jnp.sum(moved.astype(jnp.int32)), self.axis)
+
     # -- replication record export hook (DESIGN.md §9.3) ----------------------
     @property
     def record_width(self) -> int:
         """Width (int32 words) of one exported mutation record:
-        ``[op | key_bits | value…W | reserved]`` — 5 for the default W=2,
+        ``[op | key_bits | value…W | home]`` — 5 for the default W=2,
         the same row shape as the (P·B, 5) tracker records the service
-        rounds gather."""
+        rounds gather.  The trailing word carries the lane's resolved
+        §10 home (placement/MOVE target after policy resolution)."""
         return 3 + self.W
 
-    def export_window_records(self, ops, keys, values):
+    def export_window_records(self, ops, keys, values, targets=None):
         """Encode one (B,) window lane set as replication records.
 
         Returns (B, record_width) int32 rows ``[op | key_bits | value… |
-        0]`` with non-mutating lanes (NOP/GET) masked to NOP — exactly the
-        information a replica needs to replay the window's state effect:
-        GETs mutate nothing, and every mutation's outcome is a
-        deterministic function of (op, key, value) under the window's
-        (participant, lane) order.  This is the record-export hook the
+        home]`` with non-mutating lanes (NOP/GET) masked to NOP —
+        exactly the information a replica needs to replay the window's
+        state effect: GETs mutate nothing, and every mutation's outcome is
+        a deterministic function of (op, key, value, home) under the
+        window's (participant, lane) order.  The trailing column carries
+        the lane's **resolved §10 home** — the placement policy applied
+        to (op, key, target) by the exporting participant, not the raw
+        hint — so replay is *policy-independent*: a replica converges
+        bitwise even if its own ``placement=`` knob differs from the
+        leader's (the misconfiguration that would otherwise silently
+        diverge).  This is the record-export hook the
         :class:`~repro.core.replog.ReplicatedLog` publishes per mutation
         window.
         """
@@ -1169,10 +1677,18 @@ class KVStore(Channel):
         B = ops.shape[0]
         keys = jnp.asarray(keys, jnp.uint32).reshape(B)
         values = jnp.asarray(values, jnp.int32).reshape(B, self.W)
-        mut = (ops == INSERT) | (ops == UPDATE) | (ops == DELETE)
+        mut = (ops == INSERT) | (ops == UPDATE) | (ops == DELETE) \
+            | (ops == MOVE)
+        homes = self._lane_homes(ops, keys, targets)
+        if homes is None:        # writer-local fast path: home IS the writer
+            # ... and MOVE lanes are documented no-ops there, so their
+            # records must be masked too — a follower replays through the
+            # placed path and would otherwise execute a phantom move
+            mut = mut & (ops != MOVE)
+            homes = jnp.broadcast_to(colls.my_id(self.axis), (B,))
         return jnp.concatenate([
             jnp.where(mut, ops, NOP)[:, None], _u2i(keys)[:, None],
-            values, jnp.zeros((B, 1), jnp.int32)], axis=1)
+            values, homes.astype(jnp.int32)[:, None]], axis=1)
 
     def replay_window_records(self, st: KVStoreState, recs, pred=True):
         """Apply one exported (B, record_width) record lane set through
@@ -1181,11 +1697,20 @@ class KVStore(Channel):
         ``pred=False`` masks the whole window to NOP lanes, which
         ``op_window`` executes as the identity (no locks wanted, zero
         service rounds) — an absent log entry replays as a no-op.
-        Returns (state, KVResult)."""
+
+        The record's resolved-home column is threaded back in as the
+        authoritative per-lane home (``targets_are_homes=True``), so
+        replay runs the placed service path (§10) with the LEADER's
+        placement decisions whatever path — or policy — the leader used;
+        the paths commit identical state bits for identical windows,
+        which the replication suites pin leaf-by-leaf.  Returns
+        (state, KVResult)."""
         recs = jnp.asarray(recs, jnp.int32)
         ops = jnp.where(jnp.asarray(pred), recs[:, 0], NOP)
         return self.op_window(st, ops, _i2u(recs[:, 1]),
-                              recs[:, 2:2 + self.W])
+                              recs[:, 2:2 + self.W],
+                              targets=recs[:, 2 + self.W],
+                              targets_are_homes=True)
 
     # -- batched lock-free GETs (the paper's §7 "large window" mode) ---------
     def get_batch(self, st: KVStoreState, keys, pred=None):
@@ -1195,8 +1720,9 @@ class KVStore(Channel):
         with ``_get_window``) — disabled lanes return zeros/not-found and
         cost nothing on the wire, so short batches need no dummy lanes.
         Returns (state, values (R, W), found (R,)): the state carries the
-        read tier's refills (and nothing else — GETs mutate no store
-        data), so hot rows served this call are cache hits on the next.
+        read tier's refills and heat observations (and nothing else —
+        GETs mutate no store data), so hot rows served this call are
+        cache hits on the next and evidence for :meth:`rebalance`.
 
         This is the read-only corner of :meth:`op_window`: R outstanding
         one-sided reads amortize the request/serve round-trip — realized
@@ -1206,5 +1732,5 @@ class KVStore(Channel):
         keys = jnp.asarray(keys, jnp.uint32)
         if pred is None:
             pred = jnp.ones(keys.shape, jnp.bool_)
-        values, found, _tries, cache = self._get_window(st, keys, pred)
-        return st._replace(cache=cache), values, found
+        values, found, _tries, st = self._get_window(st, keys, pred)
+        return st, values, found

@@ -29,12 +29,13 @@ window of pushes/pops per participant in ONE collective round-set:
   (``assume_unique`` — consecutive tickets mean distinct slots).
 
 :meth:`enqueue`/:meth:`dequeue` are the B=1 wrappers; the original scalar
-paths are retained verbatim as :meth:`_enqueue_reference` /
+paths are retained as :meth:`_enqueue_reference` /
 :meth:`_dequeue_reference` — the executable specification the regression
-suite pins the B=1 window against bit-for-bit (state and grant lanes; the
-window paths additionally zero-mask the *values* of failed dequeue lanes,
-where the scalar path leaked whatever the head slot held — the only
-intentional divergence, see DESIGN.md §9.1).
+suite pins the B=1 window against bit-for-bit (state, grant lanes AND
+values: the PR-5 pred audit gave the scalar dequeue's slot read a
+``pred`` and zero-masked failed pops, closing the one divergence PR-4
+had documented — dead scalar lanes now cost zero wire bytes too, see
+DESIGN.md §9.1).
 """
 from __future__ import annotations
 
@@ -143,10 +144,9 @@ class SharedQueue(Channel):
         preds: (B,) bool lane mask.  Returns (state, values (B, width),
         ok (B,)); FIFO in the same (participant, lane) ticket order as
         :meth:`enqueue_window`.  Slot reads ride one batched (coalesced)
-        one-sided read with per-lane preds — dead lanes are masked off the
-        wire (the PR-2 verb contract; the scalar reference path predates
-        it and pays for dead lanes, which the regression suite documents).
-        Values of non-granted/failed lanes are zero.
+        one-sided read with per-lane preds — dead lanes are masked off
+        the wire (the PR-2 verb contract, which the scalar reference now
+        follows too).  Values of non-granted/failed lanes are zero.
         """
         want = jnp.asarray(preds)
         head_now = colls.bcast_from(state.head.official, 0, self.axis)
@@ -183,9 +183,10 @@ class SharedQueue(Channel):
         return new, grant[0]
 
     def dequeue(self, state: SharedQueueState, want=True):
-        """Pop one value.  Returns (state, value, ok); FIFO in ticket order.
-        The B=1 wrapper around :meth:`dequeue_window` (failed lanes return
-        zeros, where the scalar reference leaked the head slot's bits)."""
+        """Pop one value.  Returns (state, value, ok); FIFO in ticket
+        order.  The B=1 wrapper around :meth:`dequeue_window`, pinned
+        bit-for-bit — state, grant and value — against
+        :meth:`_dequeue_reference`."""
         new, values, ok = self.dequeue_window(
             state, jnp.reshape(jnp.asarray(want), (1,)))
         return new, values[0], ok[0]
@@ -214,11 +215,14 @@ class SharedQueue(Channel):
         return new, grant
 
     def _dequeue_reference(self, state: SharedQueueState, want=True):
-        """Original scalar dequeue — the executable specification.  Note
-        the pre-PR-4 verb usage it specifies: the slot read is *unmasked*
-        (dead lanes pay wire bytes and the returned ``value`` of a failed
-        pop is whatever the head slot held) — the windowed path fixes both
-        under the PR-2 locality-masked verb contract."""
+        """Original scalar dequeue — the executable specification.
+
+        The PR-5 pred audit closed its one divergence from the windowed
+        path: the slot read now rides the verb's ``pred`` (a non-granted
+        lane costs zero wire bytes, per the PR-2 locality-masked
+        contract) and a failed pop returns zeros instead of leaking
+        whatever the head slot held — so the B=1 window is pinned
+        bit-for-bit against this spec on state, grants AND values."""
         want = jnp.asarray(want)
         head_now = colls.bcast_from(state.head.official, 0, self.axis)
         tail_now = colls.bcast_from(state.tail.official, 0, self.axis)
@@ -228,11 +232,11 @@ class SharedQueue(Channel):
         head_st, ticket, _ack = self.head.fetch_add(
             state.head, jnp.uint32(1), pred=grant)
         node, row = self._slot_of(ticket)
-        entry, _ack2 = self.region.read(state.slots, node, row)
+        entry, _ack2 = self.region.read(state.slots, node, row, pred=grant)
         seq = self._from_lane(entry[0])
         matches = seq == ticket
         ok = grant & matches
-        value = entry[1:]
+        value = jnp.where(ok, entry[1:], jnp.zeros_like(entry[1:]))
         # clear the consumed slot (mark empty for ABA safety on wrap).
         empty = jnp.concatenate([
             self._to_lane(EMPTY_SEQ).reshape(1),

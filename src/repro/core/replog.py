@@ -49,12 +49,13 @@ from .runtime import Manager
 
 
 def diverging_leaves(a: KVStoreState, b: KVStoreState,
-                     skip: Sequence[str] = ("cache",)):
+                     skip: Sequence[str] = ("cache", "heat")):
     """Names of the KVStoreState fields on which two states differ bitwise
     — the convergence check of the §9.3 argument, shared by the serving
     engine, the benchmarks and the test suites so the skip-list (the read
-    ``cache`` is local policy, not replicated data) lives in ONE place.
-    Returns [] iff the states are leaf-for-leaf equal outside ``skip``.
+    ``cache`` and the ``heat`` tracker are local policy, not replicated
+    data) lives in ONE place.  Returns [] iff the states are leaf-for-leaf
+    equal outside ``skip``.
     """
     out = []
     for name, la, lb in zip(a._fields, a, b):
@@ -103,8 +104,12 @@ class ReplicatedLog(Channel):
                                   published=z, dropped=z)
 
     # -- leader side -----------------------------------------------------------
-    def append(self, st: ReplicatedLogState, ops, keys, values, pred=True):
-        """Publish one (B,) mutation window to the log.
+    def append(self, st: ReplicatedLogState, ops, keys, values,
+               targets=None, pred=True):
+        """Publish one (B,) mutation window to the log.  ``targets``
+        forwards the window's §10 placement/MOVE target lanes into the
+        exported records (followers replay them, so migrations converge
+        bitwise like any mutation).
 
         Every participant passes its own window lanes (the same arrays it
         handed ``op_window``); the records are gathered to the full
@@ -121,7 +126,8 @@ class ReplicatedLog(Channel):
         follower more than ``capacity`` windows behind); the drop is
         counted and the caller retries after a sync.
         """
-        recs = self.store.export_window_records(ops, keys, values)
+        recs = self.store.export_window_records(ops, keys, values,
+                                                targets=targets)
         block = jax.lax.all_gather(recs, self.axis, axis=0)   # (P, B, rw)
         n_live = jnp.sum(block[..., 0] != 0).astype(jnp.int32)
         ring, sent, _ack = self.ring.publish_window(

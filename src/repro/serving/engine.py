@@ -12,6 +12,13 @@ table is a :class:`repro.core.KVStore` channel —
   * completion DELETEs the pages, freeing slots for the next admission
     (counter-based GC guards stale readers — Appendix C case 4).
 
+The page table runs the §10 explicit locality tier: admission INSERTs
+carry per-lane placement targets that home each request's pages on the
+node whose decode lane re-reads them every round, so steady-state page
+lookups are LOCAL memory reads even before the page cache warms —
+``stats()["locality"]`` reports the realized local/remote read split and
+the modeled wire bytes saved vs writer-local placement.
+
 Mutations (admission INSERTs, eviction DELETEs) flow through
 ``KVStore.op_window``: each submits a whole (P, B) window of ops in a
 single traced collective round-set (the paper's "large window" mode)
@@ -51,6 +58,10 @@ from ..core import DELETE, GET, INSERT, NOP, KVStore, ReplicatedLog, \
     SharedQueue, make_manager
 from ..models import build_model
 
+# wire bytes of one page-table row read (modeled, §2.1: 2·|row| per
+# remote read) — the unit of the locality stats' bytes-saved column
+_ROW_READ_BYTES = 2 * (2 + 3) * 4
+
 PAGE = 128          # tokens per logical page
 P_NODES = 4         # simulated serving nodes (channel participants)
 MAX_WINDOW = 32     # max KV ops per participant per collective round-set
@@ -77,11 +88,18 @@ class ServingEngine:
         # page cache is sized to hold every provisioned page (a few KB) —
         # steady-state decode lookups then cost zero modeled wire bytes
         # (§8.4 sizing guidance: cache ≈ hot working set, here all pages).
+        # locality tier (§10.1): explicit placement homes each request's
+        # pages on the node that will resolve them every decode round
+        # (request batch-slot k reads through participant k % P), so the
+        # steady-state lookup is a LOCAL read even before the cache warms
+        # — stats()["locality"] reports the realized local fraction and
+        # the modeled wire bytes this placement saves vs writer-local.
         self.pages = KVStore(None, "pagetable", self.mgr,
                              slots_per_node=pages_per_node, value_width=2,
                              num_locks=P_NODES * MAX_WINDOW,
                              index_capacity=4 * pages_per_node * P_NODES,
-                             cache_slots=2 * pages_per_node * P_NODES)
+                             cache_slots=2 * pages_per_node * P_NODES,
+                             placement="explicit")
         self.queue = SharedQueue(None, "admission", self.mgr,
                                  slots_per_node=64, width=1)
         self._kv_state = self.pages.init_state()
@@ -100,14 +118,16 @@ class ServingEngine:
                 KVStore(None, f"pagetable_replica{i}", self.mgr,
                         slots_per_node=pages_per_node, value_width=2,
                         num_locks=P_NODES * MAX_WINDOW,
-                        index_capacity=4 * pages_per_node * P_NODES)
+                        index_capacity=4 * pages_per_node * P_NODES,
+                        placement="explicit")
                 for i in range(self.replicas)]
             self._log_state = self.page_log.init_state()
             self._rep_states = tuple(t.init_state()
                                      for t in self.replica_tables)
 
-            def _rep(log_st, f_sts, op, key, val):
-                log_st, ok = self.page_log.append(log_st, op, key, val)
+            def _rep(log_st, f_sts, op, key, val, tgt):
+                log_st, ok = self.page_log.append(log_st, op, key, val,
+                                                  targets=tgt)
                 log_st, f_sts, applied = self.page_log.sync(
                     log_st, self.replica_tables, f_sts, max_entries=1)
                 return log_st, f_sts, ok, applied, self.page_log.lag(log_st)
@@ -115,8 +135,11 @@ class ServingEngine:
             self._rep_step = jax.jit(lambda *a: self.mgr.runtime.run(
                 _rep, *a))
             self.rep_counts = collections.Counter()
-        self._kv_step = jax.jit(lambda st, op, key, val: self.mgr.runtime.run(
-            self.pages.op_window, st, op, key, val))
+        self._kv_step = jax.jit(
+            lambda st, op, key, val, tgt: self.mgr.runtime.run(
+                lambda s, o, k, v, t: self.pages.op_window(s, o, k, v,
+                                                           targets=t),
+                st, op, key, val, tgt))
         self._kv_get = jax.jit(lambda st, key, pred: self.mgr.runtime.run(
             lambda s, k, p: self.pages.get_batch(s, k, pred=p),
             st, key, pred))
@@ -127,10 +150,21 @@ class ServingEngine:
         self._decode = jax.jit(self.model.decode_step)
         self._prefill = jax.jit(self.model.prefill, static_argnums=(2,))
         self.op_counts = collections.Counter()
+        # locality bookkeeping (§10.1): per page key, (explicit home,
+        # writer-local home) — read-time tallies for stats()["locality"].
+        # _saved_keys caps the bytes-saved model at ONE avoided remote
+        # read per inserted page: with the page cache covering every
+        # page, writer-local placement would pay the wire only on the
+        # cold miss, so warm repeats save nothing.
+        self.loc_counts = collections.Counter()
+        self._page_home: Dict[int, tuple] = {}
+        self._saved_keys: set = set()
 
     # -- channel helpers (windowed round-sets over the P simulated nodes) ---
     def _kv_ops(self, ops: List[tuple]):
-        """ops: list of (op_code, key, (v0, v1)); executed as (P, B) windows.
+        """ops: list of (op_code, key, (v0, v1), home); executed as (P, B)
+        windows.  ``home`` is the §10.1 explicit-placement target of
+        INSERT lanes (the node whose decode rounds will read the page).
 
         Submission order maps op i → (participant i % P, window slot i // P),
         so an n-op batch is ONE ``op_window`` dispatch (one traced collective
@@ -149,7 +183,7 @@ class ServingEngine:
             w = -(-len(chunk) // P_NODES)
             w = 1 << (w - 1).bit_length()        # pad window to power of two
             n = P_NODES * w
-            chunk = chunk + [(NOP, 1, (0, 0))] * (n - len(chunk))
+            chunk = chunk + [(NOP, 1, (0, 0), 0)] * (n - len(chunk))
             # (n,) submission order → (P, B) participant-major windows
             op = np.asarray([c[0] for c in chunk],
                             np.int32).reshape(w, P_NODES).T
@@ -157,9 +191,11 @@ class ServingEngine:
                              np.uint32).reshape(w, P_NODES).T
             val = np.asarray([c[2] for c in chunk],
                              np.int32).reshape(w, P_NODES, 2).transpose(1, 0, 2)
+            tgt = np.asarray([c[3] for c in chunk],
+                             np.int32).reshape(w, P_NODES).T
             self._kv_state, res = self._kv_step(
                 self._kv_state, jnp.asarray(op), jnp.asarray(key),
-                jnp.asarray(val))
+                jnp.asarray(val), jnp.asarray(tgt))
             if self.replicas and any(c[0] != NOP for c in chunk):
                 # publish the mutation window to the replication log and
                 # sync every follower replica (one jit dispatch; windows
@@ -168,11 +204,13 @@ class ServingEngine:
                 pw = np.full((P_NODES, MAX_WINDOW), NOP, np.int32)
                 pk = np.ones((P_NODES, MAX_WINDOW), np.uint32)
                 pv = np.zeros((P_NODES, MAX_WINDOW, 2), np.int32)
+                pt = np.zeros((P_NODES, MAX_WINDOW), np.int32)
                 pw[:, :w], pk[:, :w], pv[:, :w] = op, key, val
+                pt[:, :w] = tgt
                 (self._log_state, self._rep_states, ok, applied,
                  lag) = self._rep_step(
                     self._log_state, self._rep_states, jnp.asarray(pw),
-                    jnp.asarray(pk), jnp.asarray(pv))
+                    jnp.asarray(pk), jnp.asarray(pv), jnp.asarray(pt))
                 self.rep_counts["published"] += int(np.asarray(ok)[0])
                 self.rep_counts["dropped"] += 1 - int(np.asarray(ok)[0])
                 self.rep_counts["applied"] += int(np.asarray(applied)[0])
@@ -183,6 +221,18 @@ class ServingEngine:
                 self.op_counts[c[0]] += 1
             found = np.asarray(res.found).T.reshape(n)
             value = np.asarray(res.value).transpose(1, 0, 2).reshape(n, -1)
+            # locality bookkeeping from the RESULT lanes: a failed INSERT
+            # (full home stack / index overflow) placed nothing and must
+            # not register a home, or stats()["locality"] would count
+            # phantom local reads.  The writer-local home would have been
+            # the submitting participant (j % P) — kept for bytes-saved.
+            for j, c in enumerate(chunk):
+                if c[0] == INSERT and found[j]:
+                    self._page_home[c[1]] = (c[3], j % P_NODES)
+                    self._saved_keys.discard(c[1])
+                elif c[0] == DELETE:
+                    self._page_home.pop(c[1], None)
+                    self._saved_keys.discard(c[1])
             results.extend(zip(found, value))
         return results[:len(ops)]
 
@@ -196,6 +246,20 @@ class ServingEngine:
         results = []
         for start in range(0, len(keys), P_NODES * MAX_WINDOW):
             chunk = keys[start:start + P_NODES * MAX_WINDOW]
+            for j, k in enumerate(chunk):
+                homes = self._page_home.get(k)
+                if homes is None:
+                    continue
+                reader = j % P_NODES
+                local = homes[0] == reader
+                self.loc_counts["local_reads" if local
+                                else "remote_reads"] += 1
+                if local and homes[1] != reader and k not in self._saved_keys:
+                    # writer-local placement would have paid a remote
+                    # read — once, on the page's cold miss (the page
+                    # cache serves warm repeats either way)
+                    self.loc_counts["modeled_bytes_saved"] += _ROW_READ_BYTES
+                    self._saved_keys.add(k)
             w = -(-len(chunk) // P_NODES)
             w = 1 << (w - 1).bit_length()
             n = P_NODES * w
@@ -248,10 +312,13 @@ class ServingEngine:
                 rid = int(np.asarray(vals)[0, 0])
                 _, prompt = waiting.popleft()
                 slot = len(active)
-                # page-table INSERTs for the prompt's pages
+                # page-table INSERTs for the prompt's pages, homed on the
+                # node whose decode lane will re-read them (§10.1: batch
+                # slot k resolves its pages through participant k % P)
                 n_pages = (len(prompt) + gen_len + PAGE - 1) // PAGE
                 self._kv_ops([(INSERT, self._page_key(rid, p),
-                               (slot, p)) for p in range(n_pages)])
+                               (slot, p), slot % P_NODES)
+                              for p in range(n_pages)])
                 active.append((rid, prompt))
 
             # ---- prefill the admitted batch
@@ -289,7 +356,7 @@ class ServingEngine:
             # ---- evict: DELETE the finished requests' pages
             for (rid, prompt) in active:
                 n_pages = (len(prompt) + gen_len + PAGE - 1) // PAGE
-                self._kv_ops([(DELETE, self._page_key(rid, p), (0, 0))
+                self._kv_ops([(DELETE, self._page_key(rid, p), (0, 0), 0)
                               for p in range(n_pages)])
                 done.add(rid)
             active = []
@@ -311,7 +378,22 @@ class ServingEngine:
             rep = {"replication": dict(self.rep_counts)
                    | {"replicas": self.replicas,
                       "diverged_leaves": self.replica_divergence()}}
+        loc_reads = self.loc_counts["local_reads"]
+        rem_reads = self.loc_counts["remote_reads"]
         return {"kv_ops": {k: v for k, v in self.op_counts.items()},
+                # §10.1 placement outcome: fraction of decode page
+                # lookups resolved on their reader's node, plus the
+                # modeled wire bytes explicit placement saved vs the
+                # writer-local policy (moves counts executed MOVE lanes —
+                # zero while admission-time placement keeps pages home)
+                "locality": {
+                    "local_reads": loc_reads,
+                    "remote_reads": rem_reads,
+                    "local_fraction": (loc_reads / (loc_reads + rem_reads)
+                                       if loc_reads + rem_reads else 0.0),
+                    "moves": self.loc_counts["moves"],
+                    "modeled_bytes_saved":
+                        self.loc_counts["modeled_bytes_saved"]},
                 **rep,
                 "registered_region_bytes": self.mgr.memory_ledger_bytes(),
                 # modeled wire bytes per verb (DESIGN.md §2.3); zero unless

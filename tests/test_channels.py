@@ -534,8 +534,9 @@ class TestSharedQueueWindows:
         """The B=1 wrappers (enqueue/dequeue) replay a mixed scalar
         sequence bit-for-bit against the retained reference paths: state
         leaves identical after every round, grant/ok lanes identical,
-        values identical on granted lanes (the window path additionally
-        zero-masks failed pops — the documented divergence)."""
+        values identical on EVERY lane (the PR-5 pred audit zero-masks
+        failed scalar pops too, so the last documented divergence is
+        closed)."""
         mgr, q, st_w = self._mk("pin", slots_per_node=2)
         st_r = st_w
 
@@ -565,9 +566,7 @@ class TestSharedQueueWindows:
             assert _tree_equal(st_w, st_r), f"state diverged at round {rnd}"
             np.testing.assert_array_equal(np.asarray(gw), np.asarray(gr))
             np.testing.assert_array_equal(np.asarray(okw), np.asarray(okr))
-            ok = np.asarray(okw)
-            np.testing.assert_array_equal(np.asarray(vw)[ok],
-                                          np.asarray(vr)[ok])
+            np.testing.assert_array_equal(np.asarray(vw), np.asarray(vr))
 
     def test_single_participant_window_equals_scalar_rounds(self):
         """One active participant: the window's (participant, lane) order
@@ -604,11 +603,10 @@ class TestSharedQueueWindows:
         np.testing.assert_array_equal(np.asarray(gw), np.asarray(gs))
 
     def test_masked_window_lanes_cost_zero_wire_bytes(self):
-        """Regression for the pred-handling audit (DESIGN.md §9.1): the
-        windowed verbs mask dead lanes off the wire — an all-masked
-        dequeue window records ZERO modeled read bytes, where the scalar
-        reference path (pre-PR-2 verb usage) pays for its unmasked slot
-        read."""
+        """Regression for the pred-handling audit (DESIGN.md §9.1): dead
+        lanes never ride the wire on EITHER dequeue path — an all-masked
+        dequeue window records ZERO modeled read bytes, and so does the
+        scalar reference since the PR-5 fix gave its slot read a pred."""
         mgr, q, st = self._mk("wire")
         mgr.traffic.enable().reset()
         fresh = jax.jit(lambda s: mgr.runtime.run(
@@ -623,8 +621,8 @@ class TestSharedQueueWindows:
         mgr.traffic.disable().reset()
         assert win_bytes == 0.0, \
             "masked dequeue lanes must not ride the wire"
-        assert ref_bytes > 0.0, \
-            "the retained reference path documents the pre-fix cost"
+        assert ref_bytes == 0.0, \
+            "the scalar dequeue's slot read must honor its pred"
 
 
 # --------------------------------------------- windowed ringbuffer (§9.2)

@@ -1,0 +1,660 @@
+"""The explicit locality tier (DESIGN.md §10): placement policies, online
+MOVE migration, the HotTracker heat channel and rebalance().
+
+Checked here:
+
+* placement policies home INSERTs correctly (``hashed`` → key % P,
+  ``explicit`` → the per-lane target) and the windowed oracle semantics
+  survive — capacity accounting follows the HOME node's free stack, not
+  the writer's;
+* reads served by a row's home node cost ZERO modeled wire bytes
+  (placement is the §2.3 locality story made controllable);
+* ``migrate_window`` re-homes live rows: index entries re-point on every
+  participant (hash and flat lookups stay pinned), values survive, the
+  vacated slot returns to the old home's free stack with a bumped reuse
+  counter, moves of absent keys / to full destinations fail cleanly with
+  the row intact, and self-moves succeed with no effect;
+* migrated stores stay **result-for-result identical** to never-migrated
+  ones under interleaved GET/UPDATE/DELETE (the §10.2 transparency
+  contract), with ``_migrate_reference`` retained as the sequential spec;
+* MOVE records ride the ReplicatedLog: followers replay migrations
+  through the placed service path and converge bitwise;
+* HotTracker decay/observe semantics and rebalance(): rows whose
+  dominant reader is remote move to that reader and the skewed-reader
+  read window's modeled wire bytes collapse.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DELETE, GET, INSERT, MOVE, NOP, UPDATE, HotTracker,
+                        KVStore, ReplicatedLog, make_manager)
+from repro.core.kvstore import IDX_NODE, IDX_SLOT, IDX_STATE, _USED
+from repro.core.replog import diverging_leaves
+
+from test_kvstore import Oracle, assert_lookup_pinned
+
+P = 4
+S = 4
+W = 2
+
+mgr = make_manager(P)
+_kw = dict(slots_per_node=S, value_width=W, num_locks=8, index_capacity=64)
+kv_hashed = KVStore(None, "loc_hashed", mgr, placement="hashed", **_kw)
+kv_expl = KVStore(None, "loc_expl", mgr, placement="explicit", **_kw)
+kv_mig = KVStore(None, "loc_mig", mgr, **_kw)
+kv_plain = KVStore(None, "loc_plain", mgr, **_kw)
+
+
+def tstep(kv):
+    @jax.jit
+    def f(st, op, key, val, tgt):
+        return mgr.runtime.run(
+            lambda s, o, k, v, t: kv.op_window(s, o, k, v, targets=t),
+            st, op, key, val, tgt)
+    return f
+
+
+def migf(kv):
+    @jax.jit
+    def f(st, keys, dests, preds):
+        return mgr.runtime.run(kv.migrate_window, st, keys, dests, preds)
+    return f
+
+
+def arrs(window):
+    op = jnp.asarray([[o[0] for o in ln] for ln in window], jnp.int32)
+    key = jnp.asarray([[o[1] for o in ln] for ln in window], jnp.uint32)
+    val = jnp.asarray([[o[2] for o in ln] for ln in window], jnp.int32)
+    tgt = jnp.asarray([[o[3] if len(o) > 3 else 0 for o in ln]
+                       for ln in window], jnp.int32)
+    return op, key, val, tgt
+
+
+class PlacedOracle(Oracle):
+    """The sequential oracle with a home function: INSERT capacity follows
+    the HOME node's free stack (§10.1), not the writer's."""
+
+    def __init__(self, home_fn, slots=S):
+        super().__init__(slots=slots)
+        self.home_fn = home_fn
+
+    def _mod(self, p, op, key, val, tgt=0):
+        if op == INSERT:
+            home = self.home_fn(p, key, tgt)
+            if key not in self.map and self.free[home] > 0:
+                self.map[key] = tuple(val)
+                self.loc[key] = home
+                self.free[home] -= 1
+                return True
+            return False
+        if op == MOVE:
+            if key not in self.map:
+                return False
+            dest = int(tgt)
+            if dest == self.loc[key]:
+                return True
+            if self.free[dest] <= 0:
+                return False
+            self.free[self.loc[key]] += 1
+            self.loc[key] = dest
+            self.free[dest] -= 1
+            return True
+        return super()._mod(p, op, key, val)
+
+    def apply_window(self, window):
+        pre = dict(self.map)
+        results = [[None] * len(lane) for lane in window]
+        for p, lane in enumerate(window):
+            for b, op_t in enumerate(lane):
+                if op_t[0] == GET:
+                    results[p][b] = pre.get(op_t[1])
+        for p, lane in enumerate(window):
+            for b, op_t in enumerate(lane):
+                op, key, val = op_t[0], op_t[1], op_t[2]
+                tgt = op_t[3] if len(op_t) > 3 else 0
+                if op in (INSERT, UPDATE, DELETE, MOVE):
+                    results[p][b] = self._mod(p, op, key, val, tgt)
+        return results
+
+
+def drive_placed(kv, windows, oracle):
+    st = kv.init_state()
+    step = tstep(kv)
+    for rnd, w in enumerate(windows):
+        op, key, val, tgt = arrs(w)
+        st, res = step(st, op, key, val, tgt)
+        expect = oracle.apply_window(w)
+        for p, lane in enumerate(w):
+            for b, op_t in enumerate(lane):
+                o, k = op_t[0], op_t[1]
+                if o == NOP:
+                    continue
+                if o == GET:
+                    exp = expect[p][b]
+                    assert bool(res.found[p][b]) == (exp is not None), \
+                        f"round {rnd} p{p}b{b} GET({k})"
+                    if exp is not None:
+                        np.testing.assert_array_equal(
+                            np.asarray(res.value[p][b]), exp)
+                else:
+                    assert bool(res.found[p][b]) == expect[p][b], \
+                        f"round {rnd} p{p}b{b} op{o}({k})"
+    return st
+
+
+def key_locations(st):
+    """key → (node, slot) from participant 0's index (all participants
+    apply identical tracker records, so the indexes agree)."""
+    idx = np.asarray(st.idx[0])
+    used = idx[:, IDX_STATE] == _USED
+    return {int(np.uint32(r[1])): (int(r[IDX_NODE]), int(r[IDX_SLOT]))
+            for r in idx[used]}
+
+
+def v(key, salt=0):
+    return (int(key) * 10 + salt, int(key) * 100 + salt)
+
+
+NOPR = (NOP, 1, (0, 0), 0)
+
+
+# ------------------------------------------------------ placement policies
+class TestPlacementPolicies:
+    def test_hashed_placement_homes_at_key_mod_p(self):
+        windows = [[[(INSERT, 1 + p * 2 + b, v(1 + p * 2 + b), 0)
+                     for b in range(2)] for p in range(P)]]
+        oracle = PlacedOracle(lambda p, k, t: k % P)
+        st = drive_placed(kv_hashed, windows, oracle)
+        locs = key_locations(st)
+        assert locs, "inserts must land"
+        for k, (node, _slot) in locs.items():
+            assert node == k % P, f"key {k} homed at {node}, want {k % P}"
+        assert_lookup_pinned(kv_hashed, mgr, st)
+
+    def test_hashed_oracle_with_mixed_windows(self):
+        rng = np.random.default_rng(7)
+        oracle = PlacedOracle(lambda p, k, t: k % P)
+        windows = []
+        for _ in range(6):
+            w = []
+            for p in range(P):
+                lane = []
+                for _b in range(2):
+                    op = int(rng.choice([NOP, GET, INSERT, UPDATE, DELETE]))
+                    k = int(rng.integers(1, 9))
+                    lane.append((op, k, v(k, int(rng.integers(0, 5))), 0))
+                w.append(lane)
+            windows.append(w)
+        drive_placed(kv_hashed, windows, oracle)
+
+    def test_hashed_capacity_follows_home_stack(self):
+        """P·S inserts that all hash to node 0: exactly S (node 0's
+        stack) succeed — capacity is the HOME's, not the writer's."""
+        keys = [P * (i + 1) for i in range(P * S)]     # all ≡ 0 (mod P)
+        windows = [[[(INSERT, keys[p * S + b], v(keys[p * S + b]), 0)
+                     for b in range(S)] for p in range(P)]]
+        oracle = PlacedOracle(lambda p, k, t: k % P)
+        st = drive_placed(kv_hashed, windows, oracle)
+        locs = key_locations(st)
+        assert len(locs) == S
+        assert all(node == 0 for node, _ in locs.values())
+
+    def test_explicit_placement_lands_at_targets(self):
+        windows = [[[(INSERT, 1 + p, v(1 + p), (p + 1) % P)]
+                    for p in range(P)]]
+        oracle = PlacedOracle(lambda p, k, t: t)
+        st = drive_placed(kv_expl, windows, oracle)
+        locs = key_locations(st)
+        for p in range(P):
+            assert locs[1 + p][0] == (p + 1) % P
+
+    def test_explicit_placement_requires_targets(self):
+        with pytest.raises(ValueError, match="targets"):
+            mgr.runtime.run(
+                lambda s: kv_expl.op_window(
+                    s, jnp.asarray([INSERT]), jnp.asarray([1], jnp.uint32),
+                    jnp.zeros((1, W), jnp.int32)),
+                kv_expl.init_state())
+
+    def test_bad_placement_rejected(self):
+        with pytest.raises(ValueError, match="placement"):
+            KVStore(None, "loc_bad", mgr, placement="nope", **_kw)
+
+    def test_home_reads_cost_zero_wire_bytes(self):
+        """Every participant reads only keys homed at it: the §2.3
+        locality fast path serves them from local memory — zero modeled
+        read bytes, now under programmer-controlled placement."""
+        windows = [[[(INSERT, 1 + p, v(1 + p), p)] for p in range(P)]]
+        oracle = PlacedOracle(lambda p, k, t: t)
+        st = drive_placed(kv_expl, windows, oracle)
+        mgr.traffic.enable().reset()
+        fresh = jax.jit(lambda s, k: mgr.runtime.run(
+            lambda ss, kk: kv_expl.get_batch(ss, kk), s, k))
+        me_keys = jnp.arange(1, P + 1, dtype=jnp.uint32).reshape(P, 1)
+        _st, _v, found = fresh(st, me_keys)
+        jax.block_until_ready(found)
+        total = mgr.traffic.total_bytes()
+        mgr.traffic.disable().reset()
+        assert bool(jnp.all(found))
+        assert total == 0.0, "home-placed reads must be wire-free"
+
+
+# ------------------------------------------------------ MOVE / migration
+class TestMigration:
+    def _seed(self, kv):
+        """Insert 2 keys per participant writer-locally; key 1+p and
+        1+P+p live at node p."""
+        windows = [[[(INSERT, 1 + p + P * b, v(1 + p + P * b), 0)
+                     for b in range(2)] for p in range(P)]]
+        oracle = PlacedOracle(lambda p, k, t: p)
+        return drive_placed(kv, windows, oracle)
+
+    def test_move_rehomes_and_preserves_values(self):
+        st = self._seed(kv_mig)
+        pre = key_locations(st)
+        mig = migf(kv_mig)
+        keys = jnp.arange(1, P + 1, dtype=jnp.uint32).reshape(P, 1)
+        dests = jnp.asarray([[(p + 1) % P] for p in range(P)], jnp.int32)
+        st, moved = mig(st, keys, dests, jnp.ones((P, 1), bool))
+        assert bool(jnp.all(moved))
+        locs = key_locations(st)
+        for p in range(P):
+            assert locs[1 + p][0] == (p + 1) % P
+            assert pre[1 + P + p] == locs[1 + P + p]  # unmoved keys stay
+        assert_lookup_pinned(kv_mig, mgr, st)
+        getb = jax.jit(lambda s, k: mgr.runtime.run(
+            lambda ss, kk: kv_mig.get_batch(ss, kk), s, k))
+        gk = jnp.broadcast_to(jnp.arange(1, 2 * P + 1, dtype=jnp.uint32),
+                              (P, 2 * P))
+        _st2, vals, found = getb(st, gk)
+        assert bool(jnp.all(found))
+        np.testing.assert_array_equal(
+            np.asarray(vals[..., 0]), np.asarray(gk, np.int32) * 10)
+
+    def test_move_frees_old_slot_and_bumps_reuse_counter(self):
+        st = self._seed(kv_mig)
+        pre = key_locations(st)
+        old_node, old_slot = pre[1]                     # key 1 lives at p0
+        top_before = int(np.asarray(st.free_top)[old_node])
+        ctr_before = int(np.asarray(st.slot_ctr)[old_node, old_slot])
+        mig = migf(kv_mig)
+        keys = jnp.concatenate([jnp.ones((1, 1), jnp.uint32),
+                                jnp.zeros((P - 1, 1), jnp.uint32)])
+        dests = jnp.full((P, 1), 1, jnp.int32)
+        preds = jnp.asarray([[True]] + [[False]] * (P - 1))
+        st, moved = mig(st, keys, dests, preds)
+        assert bool(np.asarray(moved)[0, 0])
+        # vacated slot is back on the old home's stack, counter bumped
+        assert int(np.asarray(st.free_top)[old_node]) == top_before + 1
+        stack = np.asarray(st.free_stack)[old_node]
+        assert old_slot in stack[:top_before + 1]
+        assert int(np.asarray(st.slot_ctr)[old_node, old_slot]) \
+            == ctr_before + 1
+
+    def test_move_of_absent_key_fails_cleanly(self):
+        st = self._seed(kv_mig)
+        mig = migf(kv_mig)
+        keys = jnp.full((P, 1), 99, jnp.uint32)
+        dests = jnp.zeros((P, 1), jnp.int32)
+        preds = jnp.asarray([[True]] + [[False]] * (P - 1))
+        st2, moved = mig(st, keys, dests, preds)
+        assert not bool(np.asarray(moved)[0, 0])
+        assert key_locations(st) == key_locations(st2)
+
+    def test_move_to_current_home_is_a_successful_noop(self):
+        st = self._seed(kv_mig)
+        pre = key_locations(st)
+        mig = migf(kv_mig)
+        keys = jnp.asarray([[1 + p] for p in range(P)], jnp.uint32)
+        dests = jnp.asarray([[p] for p in range(P)], jnp.int32)  # = homes
+        st, moved = mig(st, keys, dests, jnp.ones((P, 1), bool))
+        assert bool(jnp.all(moved))
+        assert key_locations(st) == pre
+
+    def test_move_to_full_destination_fails_with_row_intact(self):
+        # fill node 0 completely: participant 0 inserts its 2 remaining
+        # writer-local slots (placement "local" ignores INSERT targets)
+        st = self._seed(kv_mig)   # node 0 already hosts 2 rows (S = 4)
+        step = tstep(kv_mig)
+        w = [[(INSERT, 100 + b, v(100 + b), 0) for b in range(2)]
+             if p == 0 else [NOPR, NOPR] for p in range(P)]
+        op, key, val, tgt = arrs(w)
+        st, res = step(st, op, key, val, tgt)
+        assert bool(jnp.all(res.found[0]))
+        mig = migf(kv_mig)
+        keys = jnp.asarray([[2]] + [[0]] * (P - 1), jnp.uint32)  # at node 1
+        dests = jnp.zeros((P, 1), jnp.int32)                     # full node
+        preds = jnp.asarray([[True]] + [[False]] * (P - 1))
+        st2, moved = mig(st, keys, dests, preds)
+        assert not bool(np.asarray(moved)[0, 0])
+        assert key_locations(st2)[2] == key_locations(st)[2]
+        getb = jax.jit(lambda s, k: mgr.runtime.run(
+            lambda ss, kk: kv_mig.get_batch(ss, kk), s, k))
+        _s, vals, found = getb(st2, jnp.full((P, 1), 2, jnp.uint32))
+        assert bool(jnp.all(found))
+        np.testing.assert_array_equal(np.asarray(vals[..., 0]), 20)
+
+    def test_migrate_window_matches_reference_results(self):
+        st_w = self._seed(kv_mig)
+        st_r = st_w
+        keys = jnp.asarray([[1 + p, 1 + P + p] for p in range(P)],
+                           jnp.uint32)
+        dests = jnp.asarray([[(p + 2) % P, (p + 1) % P] for p in range(P)],
+                            jnp.int32)
+        preds = jnp.ones((P, 2), bool)
+        mig = migf(kv_mig)
+        ref = jax.jit(lambda s, k, d, p: mgr.runtime.run(
+            kv_mig._migrate_reference, s, k, d, p))
+        st_w, moved_w = mig(st_w, keys, dests, preds)
+        st_r, moved_r = ref(st_r, keys, dests, preds)
+        np.testing.assert_array_equal(np.asarray(moved_w),
+                                      np.asarray(moved_r))
+        # HOME nodes agree lane-for-lane; slot choice may differ (the
+        # windowed path allocates before the wave's GC recycles, the
+        # sequential spec interleaves — same latitude as op_window vs its
+        # scalar spec)
+        locs_w, locs_r = key_locations(st_w), key_locations(st_r)
+        assert {k: n for k, (n, _s) in locs_w.items()} \
+            == {k: n for k, (n, _s) in locs_r.items()}
+        getb = jax.jit(lambda s, k: mgr.runtime.run(
+            lambda ss, kk: kv_mig.get_batch(ss, kk), s, k))
+        gk = jnp.broadcast_to(jnp.arange(1, 2 * P + 1, dtype=jnp.uint32),
+                              (P, 2 * P))
+        _s, vw, fw = getb(st_w, gk)
+        _s, vr, fr = getb(st_r, gk)
+        np.testing.assert_array_equal(np.asarray(fw), np.asarray(fr))
+        np.testing.assert_array_equal(np.asarray(vw), np.asarray(vr))
+
+    def test_migrated_store_results_equal_never_migrated(self):
+        """The §10.2 transparency contract: after migration, interleaved
+        GET/UPDATE/DELETE windows return bit-for-bit the results a
+        never-migrated twin returns."""
+        st_m = self._seed(kv_mig)
+        st_p = self._seed(kv_plain)
+        mig = migf(kv_mig)
+        keys = jnp.asarray([[1 + p] for p in range(P)], jnp.uint32)
+        dests = jnp.asarray([[(p + 1) % P] for p in range(P)], jnp.int32)
+        st_m, moved = mig(st_m, keys, dests, jnp.ones((P, 1), bool))
+        assert bool(jnp.all(moved))
+        step_m, step_p = tstep(kv_mig), tstep(kv_plain)
+        rng = np.random.default_rng(11)
+        for rnd in range(6):
+            w = []
+            for p in range(P):
+                lane = []
+                for _b in range(2):
+                    op = int(rng.choice([NOP, GET, UPDATE, DELETE]))
+                    k = int(rng.integers(1, 2 * P + 1))
+                    lane.append((op, k, v(k, rnd), 0))
+                w.append(lane)
+            op, key, val, tgt = arrs(w)
+            st_m, res_m = step_m(st_m, op, key, val, tgt)
+            st_p, res_p = step_p(st_p, op, key, val, tgt)
+            for leaf_m, leaf_p in zip(res_m, res_p):
+                np.testing.assert_array_equal(np.asarray(leaf_m),
+                                              np.asarray(leaf_p),
+                                              err_msg=f"round {rnd}")
+
+    def test_move_records_replicate_bitwise(self):
+        """MOVE windows ride the ReplicatedLog like any mutation: a
+        follower that replays the exported records (targets included)
+        converges leaf-for-leaf."""
+        m2 = make_manager(P)
+        leader = KVStore(None, "mig_leader", m2, **_kw)
+        follower = KVStore(None, "mig_follower", m2, **_kw)
+        log = ReplicatedLog(None, "mig_log", m2, store=leader, window=2,
+                            capacity=2)
+
+        @jax.jit
+        def round_(lst, fst, gst, op, key, val, tgt):
+            def prog(lst, fst, gst, op, key, val, tgt):
+                lst, res = leader.op_window(lst, op, key, val, targets=tgt)
+                gst, ok = log.append(gst, op, key, val, targets=tgt)
+                gst, fst, _n = log.sync(gst, follower, fst, max_entries=1)
+                return lst, fst, gst, res, ok
+            return m2.runtime.run(prog, lst, fst, gst, op, key, val, tgt)
+
+        lst, fst, gst = (leader.init_state(), follower.init_state(),
+                         log.init_state())
+        wins = [
+            [[(INSERT, 1 + p, v(1 + p), 0), (INSERT, 1 + P + p,
+                                             v(1 + P + p), 0)]
+             for p in range(P)],
+            [[(MOVE, 1 + p, (0, 0), (p + 1) % P), NOPR] for p in range(P)],
+            [[(UPDATE, 1 + p, v(1 + p, 9), 0),
+              (DELETE, 1 + P + p, (0, 0), 0)] for p in range(P)],
+        ]
+        for w in wins:
+            op, key, val, tgt = arrs(w)
+            lst, fst, gst, res, ok = round_(lst, fst, gst, op, key, val,
+                                            tgt)
+            assert bool(np.asarray(ok)[0])
+        diverged = diverging_leaves(lst, fst)
+        assert not diverged, f"diverged on {diverged} across MOVE records"
+
+    def test_fastpath_move_exports_as_nop(self):
+        """Regression (code review): a MOVE lane submitted WITHOUT
+        targets on a writer-local store is a documented no-op — its
+        exported record must be masked to NOP, or a follower (which
+        always replays through the placed path) would execute a phantom
+        migration the leader never performed."""
+        @jax.jit
+        def export(op, key, val):
+            return mgr.runtime.run(kv_plain.export_window_records,
+                                   op, key, val)
+
+        op = jnp.asarray([[MOVE, INSERT]] * P, jnp.int32)
+        key = jnp.asarray([[1 + p, 1 + P + p] for p in range(P)],
+                          jnp.uint32)
+        val = jnp.zeros((P, 2, W), jnp.int32)
+        recs = np.asarray(export(op, key, val))      # (P, B, record_width)
+        assert (recs[:, 0, 0] == NOP).all(), \
+            "fast-path MOVE lanes must export as NOP"
+        assert (recs[:, 1, 0] == INSERT).all()
+
+    def test_replication_is_placement_policy_independent(self):
+        """Regression: an ``explicit``-placement leader replicated into a
+        follower left at the DEFAULT policy must still converge bitwise —
+        exported records carry the leader's *resolved* homes, so replay
+        never re-derives placement from the follower's own knob."""
+        m2 = make_manager(P)
+        leader = KVStore(None, "pol_leader", m2, placement="explicit",
+                         **_kw)
+        follower = KVStore(None, "pol_follower", m2, **_kw)  # 'local'!
+        log = ReplicatedLog(None, "pol_log", m2, store=leader, window=2,
+                            capacity=2)
+
+        @jax.jit
+        def round_(lst, fst, gst, op, key, val, tgt):
+            def prog(lst, fst, gst, op, key, val, tgt):
+                lst, res = leader.op_window(lst, op, key, val, targets=tgt)
+                gst, ok = log.append(gst, op, key, val, targets=tgt)
+                gst, fst, _n = log.sync(gst, follower, fst, max_entries=1)
+                return lst, fst, gst, res, ok
+            return m2.runtime.run(prog, lst, fst, gst, op, key, val, tgt)
+
+        lst, fst, gst = (leader.init_state(), follower.init_state(),
+                         log.init_state())
+        # inserts homed AWAY from their writers — the case that silently
+        # diverged when replay re-applied the follower's local policy
+        w = [[(INSERT, 1 + p, v(1 + p), (p + 2) % P),
+              (INSERT, 1 + P + p, v(1 + P + p), (p + 1) % P)]
+             for p in range(P)]
+        op, key, val, tgt = arrs(w)
+        lst, fst, gst, res, ok = round_(lst, fst, gst, op, key, val, tgt)
+        assert bool(jnp.all(res.found)) and bool(np.asarray(ok)[0])
+        diverged = diverging_leaves(lst, fst)
+        assert not diverged, \
+            f"policy-mismatched follower diverged on {diverged}"
+        for k, (node, _s) in key_locations(fst).items():
+            want = ((k - 1) % P + 2) % P if k <= P else ((k - 1) % P + 1) % P
+            assert node == want, f"follower homed key {k} at {node}"
+
+
+# ------------------------------------------------------ heat + rebalance
+class TestHotTrackerAndRebalance:
+    def test_observe_decays_every_window_and_counts_live_lanes(self):
+        m2 = make_manager(2)
+        hot = HotTracker(None, "hot_unit", m2, nodes=2, slots=2, decay=0.5)
+        st = hot.init_state()
+
+        @jax.jit
+        def obs(st, nodes, slots, preds):
+            return m2.runtime.run(hot.observe, st, nodes, slots, preds)
+
+        nodes = jnp.zeros((2, 2), jnp.int32)
+        slots = jnp.asarray([[0, 1], [0, 0]], jnp.int32)
+        live = jnp.asarray([[True, True], [False, False]])
+        st = obs(st, nodes, slots, live)
+        # participant 0 observed rows (0,0) and (0,1); participant 1
+        # counted nothing (zero heat is a decay fixed point)
+        np.testing.assert_allclose(np.asarray(st.heat[0]), [1, 1, 0, 0])
+        np.testing.assert_allclose(np.asarray(st.heat[1]), [0, 0, 0, 0])
+        st = obs(st, nodes, slots, live)
+        np.testing.assert_allclose(np.asarray(st.heat[0]),
+                                   [1.5, 1.5, 0, 0])
+        # decay ticks EVERY observed window on EVERY participant — an
+        # idle reader's old evidence fades on the same clock as active
+        # readers', keeping the dominant-reader argmax scale-consistent
+        st = obs(st, nodes, slots, jnp.asarray([[False, False],
+                                                [True, False]]))
+        np.testing.assert_allclose(np.asarray(st.heat[0]),
+                                   [0.75, 0.75, 0, 0])
+        np.testing.assert_allclose(np.asarray(st.heat[1]), [1, 0, 0, 0])
+
+    def test_freed_slots_forget_their_heat(self):
+        """Regression (code review): a DELETEd or MOVEd-out row's heat
+        line is zeroed on every participant, so the slot's next tenant
+        starts cold instead of inheriting a dead key's evidence (which
+        would trigger unjustified rebalance moves)."""
+        m2 = make_manager(P)
+        kv = KVStore(None, "loc_forget", m2, slots_per_node=S,
+                     value_width=W, num_locks=8, index_capacity=64,
+                     track_heat=True)
+        step = jax.jit(lambda st, o, k, v_: m2.runtime.run(
+            kv.op_window, st, o, k, v_))
+        getb = jax.jit(lambda st, k, p: m2.runtime.run(
+            lambda s, kk, pp: kv.get_batch(s, kk, pred=pp), st, k, p))
+        mig = jax.jit(lambda st, k, d, p: m2.runtime.run(
+            kv.migrate_window, st, k, d, p))
+        st = kv.init_state()
+        w = [[(INSERT, 1 + p, v(1 + p), 0)] for p in range(P)]
+        op, key, val, _t = arrs(w)
+        st, res = step(st, op, key, val)
+        assert bool(jnp.all(res.found))
+        locs = key_locations(st)
+        lid1 = locs[1][0] * S + locs[1][1]
+        lid2 = locs[2][0] * S + locs[2][1]
+        # participant 3 reads keys 1 and 2 → both lines heat up
+        rk = jnp.broadcast_to(jnp.asarray([1, 2], jnp.uint32), (P, 2))
+        pred = jnp.zeros((P, 2), bool).at[3].set(True)
+        st, _v, ff = getb(st, rk, pred)
+        assert np.asarray(st.heat.heat)[3, lid1] > 0
+        assert np.asarray(st.heat.heat)[3, lid2] > 0
+        # DELETE key 1, MOVE key 2 → both vacated lines forget, on every
+        # participant
+        op = jnp.asarray([[DELETE]] + [[NOP]] * (P - 1), jnp.int32)
+        st, res = step(st, op, jnp.full((P, 1), 1, jnp.uint32),
+                       jnp.zeros((P, 1, W), jnp.int32))
+        assert bool(np.asarray(res.found)[0, 0])
+        st, moved = mig(st, jnp.full((P, 1), 2, jnp.uint32),
+                        jnp.full((P, 1), 3, jnp.int32),
+                        jnp.asarray([[True]] + [[False]] * (P - 1)))
+        assert bool(np.asarray(moved)[0, 0])
+        heat = np.asarray(st.heat.heat)
+        assert (heat[:, lid1] == 0).all(), "deleted row's line must forget"
+        assert (heat[:, lid2] == 0).all(), "moved-out row's line must forget"
+
+    def test_rebalance_moves_hot_rows_to_dominant_reader(self):
+        m2 = make_manager(P)
+        kv = KVStore(None, "loc_heat", m2, slots_per_node=2 * P,
+                     value_width=W, num_locks=max(8, P * P),
+                     index_capacity=256, track_heat=True)
+        step = jax.jit(lambda st, o, k, v_, t: m2.runtime.run(
+            lambda s, o2, k2, v2, t2: kv.op_window(s, o2, k2, v2,
+                                                   targets=t2),
+            st, o, k, v_, t))
+        getb = jax.jit(lambda st, k, p: m2.runtime.run(
+            lambda s, kk, pp: kv.get_batch(s, kk, pred=pp), st, k, p))
+        reb = jax.jit(lambda st: m2.runtime.run(
+            lambda s: kv.rebalance(s, 2 * P), st))
+        reb1 = jax.jit(lambda st: m2.runtime.run(
+            lambda s: kv.rebalance(s, 1), st))
+        st = kv.init_state()
+        # each participant inserts one key writer-locally...
+        w = [[(INSERT, 1 + p, v(1 + p), 0)] for p in range(P)]
+        op, key, val, tgt = arrs(w)
+        st, res = step(st, op, key, val, tgt)
+        assert bool(jnp.all(res.found))
+        # ...but participant 0 is the dominant reader of ALL of them
+        rk = jnp.broadcast_to(jnp.arange(1, P + 1, dtype=jnp.uint32),
+                              (P, P))
+        pred = jnp.zeros((P, P), bool).at[0].set(True)
+        for _ in range(4):
+            st, _vv, ff = getb(st, rk, pred)
+            assert bool(jnp.all(ff[0]))
+        # max_moves is an exact bound even when the P-lane grid rounds
+        # past it (code-review regression)
+        st, n1 = reb1(st)
+        assert int(np.asarray(n1)[0]) == 1
+        st, n_moved = reb(st)
+        # keys 2..P move to node 0 (key 1 already lives there)
+        assert int(np.asarray(n1)[0]) + int(np.asarray(n_moved)[0]) == P - 1
+        locs = key_locations(st)
+        assert all(locs[k][0] == 0 for k in range(1, P + 1))
+        # and the skewed reader's window is now wire-free
+        m2.traffic.enable().reset()
+        fresh = jax.jit(lambda s, k, p: m2.runtime.run(
+            lambda ss, kk, pp: kv.get_batch(ss, kk, pred=pp), s, k, p))
+        _s, _vv, ff = fresh(st, rk, pred)
+        jax.block_until_ready(ff)
+        total = m2.traffic.total_bytes()
+        m2.traffic.disable().reset()
+        assert bool(jnp.all(ff[0]))
+        assert total == 0.0, "rebalanced hot rows must read locally"
+
+    def test_rebalance_requires_heat_tracking(self):
+        with pytest.raises(ValueError, match="track_heat"):
+            mgr.runtime.run(lambda s: kv_plain.rebalance(s, 4),
+                            kv_plain.init_state())
+
+    def test_heat_tracked_store_matches_oracle(self):
+        m2 = make_manager(P)
+        kv = KVStore(None, "loc_heat_oracle", m2, slots_per_node=S,
+                     value_width=W, num_locks=8, index_capacity=64,
+                     track_heat=True)
+        step = jax.jit(lambda st, o, k, v_, t: m2.runtime.run(
+            lambda s, o2, k2, v2, t2: kv.op_window(s, o2, k2, v2,
+                                                   targets=t2),
+            st, o, k, v_, t))
+        rng = np.random.default_rng(3)
+        oracle = PlacedOracle(lambda p, k, t: p)
+        st = kv.init_state()
+        for rnd in range(6):
+            w = []
+            for p in range(P):
+                lane = []
+                for _b in range(2):
+                    op = int(rng.choice([NOP, GET, INSERT, UPDATE,
+                                         DELETE]))
+                    k = int(rng.integers(1, 9))
+                    lane.append((op, k, v(k, rnd), 0))
+                w.append(lane)
+            op, key, val, tgt = arrs(w)
+            st, res = step(st, op, key, val, tgt)
+            expect = oracle.apply_window(w)
+            for p, lane in enumerate(w):
+                for b, op_t in enumerate(lane):
+                    o, k = op_t[0], op_t[1]
+                    if o == NOP:
+                        continue
+                    if o == GET:
+                        exp = expect[p][b]
+                        assert bool(res.found[p][b]) == (exp is not None)
+                        if exp is not None:
+                            np.testing.assert_array_equal(
+                                np.asarray(res.value[p][b]), exp)
+                    else:
+                        assert bool(res.found[p][b]) == expect[p][b]

@@ -15,6 +15,9 @@ Invariants checked:
   delivered message is exactly the published one at that cursor.
 * ReplicatedLog: follower kvstore state ≡ leader state (bitwise, per
   leaf) after random mutation-window schedules.
+* migration transparency (§10.2): a store migrating random live keys
+  between windows returns bit-identical results to a never-migrated twin
+  on every interleaved GET/UPDATE/DELETE window.
 * atomic_var FAA: tickets are a permutation (mutual exclusion of tickets).
 * checksum: detects any single-lane corruption; deterministic.
 
@@ -487,6 +490,81 @@ def check_replog_convergence(batches):
     min_size=1, max_size=3))
 def test_replog_follower_state_equals_leader(batches):
     check_replog_convergence(batches)
+
+
+# ---------------------------------------------- migration transparency (§10)
+_mig_mgr = make_manager(P)
+_mig_kw = dict(slots_per_node=4, value_width=2, num_locks=8,
+               index_capacity=64)
+mig_kv = KVStore(None, "prop_mig", _mig_mgr, **_mig_kw)
+mig_twin = KVStore(None, "prop_mig_twin", _mig_mgr, **_mig_kw)
+
+
+@jax.jit
+def _mig_window(st, op, key, val):
+    return _mig_mgr.runtime.run(mig_kv.op_window, st, op, key, val)
+
+
+@jax.jit
+def _twin_window(st, op, key, val):
+    return _mig_mgr.runtime.run(mig_twin.op_window, st, op, key, val)
+
+
+@jax.jit
+def _mig_move(st, keys, dests):
+    return _mig_mgr.runtime.run(mig_kv.migrate_window, st, keys, dests)
+
+
+def _mig_prefill(step, kv_):
+    st = kv_.init_state()
+    op = jnp.asarray([[INSERT, INSERT], [INSERT, INSERT],
+                      [INSERT, NOP], [INSERT, NOP]], jnp.int32)
+    key = jnp.asarray([[1, 5], [2, 6], [3, 1], [4, 1]], jnp.uint32)
+    val = jnp.asarray([[kvmod.v(1), kvmod.v(5)], [kvmod.v(2), kvmod.v(6)],
+                       [kvmod.v(3), kvmod.v(3)], [kvmod.v(4), kvmod.v(4)]],
+                      jnp.int32)
+    st, _res = step(st, op, key, val)
+    return st
+
+
+interleave_op = st.tuples(st.sampled_from([NOP, GET, UPDATE, DELETE]),
+                          st.integers(min_value=1, max_value=6))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(
+    st.tuples(
+        st.lists(st.lists(interleave_op, min_size=2, max_size=2),
+                 min_size=P, max_size=P),
+        st.lists(st.tuples(st.integers(min_value=1, max_value=6),
+                           st.integers(min_value=0, max_value=P - 1)),
+                 min_size=P, max_size=P)),
+    min_size=1, max_size=4))
+def test_migration_transparent_to_interleaved_ops(rounds):
+    """The §10.2 transparency contract, fuzzed: a store that migrates
+    random live keys to random destinations between windows returns
+    bit-for-bit the (value, found, retries) lanes of a never-migrated
+    twin on every interleaved GET/UPDATE/DELETE window — wherever a row
+    lives, reads and writes behave identically (moves may themselves
+    fail on full destinations; that too must be invisible)."""
+    st_a = _mig_prefill(_mig_window, mig_kv)
+    st_b = _mig_prefill(_twin_window, mig_twin)
+    for rnd, (lanes, moves) in enumerate(rounds):
+        op = jnp.asarray([[o for o, _k in lane] for lane in lanes],
+                         jnp.int32)
+        key = jnp.asarray([[k for _o, k in lane] for lane in lanes],
+                          jnp.uint32)
+        val = jnp.asarray([[kvmod.v(k, rnd * 2 + b)
+                            for b, (_o, k) in enumerate(lane)]
+                           for lane in lanes], jnp.int32)
+        st_a, res_a = _mig_window(st_a, op, key, val)
+        st_b, res_b = _twin_window(st_b, op, key, val)
+        for la, lb in zip(res_a, res_b):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=f"window {rnd}")
+        mk = jnp.asarray([[m[0]] for m in moves], jnp.uint32)
+        md = jnp.asarray([[m[1]] for m in moves], jnp.int32)
+        st_a, _moved = _mig_move(st_a, mk, md)
 
 
 # ------------------------------------------------------------------ FAA tickets

@@ -134,9 +134,13 @@ class TestReplicatedLog:
         np.testing.assert_array_equal(
             recs[..., 0], [[NOP, INSERT], [NOP, UPDATE],
                            [DELETE, NOP], [NOP, NOP]])
-        # value words ride along; reserved word is zero
+        # value words ride along; the trailing word is the lane's
+        # RESOLVED home — the writer itself on this writer-local store
+        # (§10: replay is policy-independent because the record carries
+        # the decision, not the hint)
         np.testing.assert_array_equal(recs[0, 1, 2:4], [2, 2])
-        assert np.all(recs[..., 4] == 0)
+        np.testing.assert_array_equal(
+            recs[..., 4], np.broadcast_to(np.arange(P)[:, None], (P, B)))
 
         # replay with pred=False is the state identity
         lst = leader.init_state()

@@ -39,6 +39,15 @@ Keyspace prefilled to 80% capacity (the paper's setup, scaled down);
 prefill itself runs through the window path (one dispatch per P·W inserts)
 and is timed as the insert-heavy acceptance workload.
 
+The ``kv_lockfree_*`` rows price the §11 lock-free commuting fast path:
+pure-GET and commuting same-key-UPDATE windows dispatched with
+``lockfree=True`` vs the pinned locked schedule on the identical store
+and state.  The ≥1.5× ops/s acceptance bar is asserted on the modeled
+round-count ratio (deterministic; the same analytic currency as every
+other ops/s claim in this file) with the measured wall-clock speedup
+reported alongside and softly gated, and a ledger-enabled trace proves
+both windows actually CLASSIFY fast (fast_rate 1.0).
+
 Rows also land in ``BENCH_kvstore.json`` via the ``jt`` BenchJson sink so
 the perf trajectory is machine-readable across PRs.
 """
@@ -382,4 +391,127 @@ def run(csv: Csv, rounds: int = 8, jt: BenchJson | None = None,
                    modeled_wire_bytes=wire)
             jt.add(f"kv_{mix_name}_{dist}_window", "reference",
                    variant_us["reference"], ops=P * window)
+
+    # ---- §11 lock-free commuting fast path: pure-GET + commuting UPDATE --
+    # Same store, same state, two traces: ``lockfree=True`` dispatches
+    # op_window through the fused single-gather plan; the locked trace is
+    # the pinned executable spec (the torture suite pins both paths
+    # bitwise-equal).  Both windows qualify for the fast serve — no
+    # lock-wanting lane that isn't an UPDATE — so the lock-free dispatch
+    # skips ticket serving rounds, tracker waves and ack collectives.
+    #
+    # The pure-GET row runs on the WARM cached store from the read sweep
+    # (the decode steady state: every lane an all-hit local serve) —
+    # that's the §11 motivating workload, where the locked round-set
+    # machinery IS the bill because the read itself moves nothing.  The
+    # commuting-UPDATE row runs on the plain prefilled store with
+    # distinct keys (the engine's non-conflicting window contract).
+    cmgr, ckv, cst = read_meta["cache_coalesce"]
+    zval = jnp.zeros((P, window, 2), jnp.int32)
+    gop = jnp.full((P, window), GET, jnp.int32)
+    lf_step = jax.jit(lambda s, o, k, v: mgr.runtime.run(
+        lambda ss, oo, kk, vv: kv.op_window(ss, oo, kk, vv, lockfree=True),
+        s, o, k, v))
+    c_locked = jax.jit(lambda s, o, k, v: cmgr.runtime.run(
+        ckv.op_window, s, o, k, v))
+    c_lf = jax.jit(lambda s, o, k, v: cmgr.runtime.run(
+        lambda ss, oo, kk, vv: ckv.op_window(ss, oo, kk, vv, lockfree=True),
+        s, o, k, v))
+    lf_keys = rng.choice(np.arange(1, n_fill + 1, dtype=np.uint32),
+                         size=P * window, replace=False).reshape(P, window)
+    uop = jnp.full((P, window), UPDATE, jnp.int32)
+    ukey = jnp.asarray(lf_keys)
+    uval = jnp.asarray(np.stack([lf_keys.astype(np.int32) * 9,
+                                 np.ones((P, window), np.int32)], axis=-1))
+    lf_jobs = {
+        "get_locked": (c_locked, (cst, gop, rkeys, zval)),
+        "get_lockfree": (c_lf, (cst, gop, rkeys, zval)),
+        "update_locked": (window_step, (st0, uop, ukey, uval)),
+        "update_lockfree": (lf_step, (st0, uop, ukey, uval)),
+    }
+    for fn, args in lf_jobs.values():
+        _res = fn(*args)[1]
+        assert bool(jnp.all(_res.found)), \
+            "prefilled keys: every qualifying lane lands on both paths"
+    lf_us = _timed_interleaved(lf_jobs, iters=max(iters, 8))
+
+    # deterministic §11 accounting: a fresh ledger-enabled trace of each
+    # lock-free dispatch must CLASSIFY both windows fast (fast_rate 1.0)
+    # — the fastpath ledger is the proof the skipped rounds were actually
+    # skipped, not just faster on this machine.
+    for m2, k2, (fn_st, fn_o, fn_k, fn_v) in (
+            (cmgr, ckv, (cst, gop, rkeys, zval)),
+            (mgr, kv, (st0, uop, ukey, uval))):
+        m2.traffic.enable().reset()
+        acct = jax.jit(lambda s, o, kk, v, m2=m2, k2=k2: m2.runtime.run(
+            lambda ss, oo, kx, vv: k2.op_window(ss, oo, kx, vv,
+                                                lockfree=True),
+            s, o, kk, v))
+        jax.block_until_ready(jax.tree.leaves(acct(fn_st, fn_o, fn_k,
+                                                   fn_v)))
+        fp = m2.traffic.fastpath_summary()
+        m2.traffic.disable().reset()
+        assert fp and next(iter(fp.values()))["fast_rate"] == 1.0, \
+            f"qualifying window must classify lock-free: {fp}"
+
+    # the paper-model ops/s comparison (the same analytic round-count
+    # currency as the windowed sweeps above): per window the locked
+    # dispatch pays the acquire gather (8B/lane of lock-id + want) and
+    # the schedule gather (7 i32 metadata columns/lane) before any data
+    # round; the lock-free dispatch pays ONE scalar classify allreduce
+    # for pure-GET windows, or the fused plan gather (same 7 columns,
+    # subsuming both locked gathers) for commuting-UPDATE windows.  Data
+    # rounds are identical on both paths (all-hit GETs serve locally;
+    # the fast UPDATE write is one batched round, matched by the locked
+    # schedule's serve round) except the locked UPDATE's extra tracker
+    # gather (16B/lane).  This ratio is deterministic — wall-clock under
+    # the vmap emulation is trace-overhead-bound and load-sensitive, so
+    # it is reported (and softly gated) but is not the acceptance bar.
+    n_lane = P * window
+    acq_us = model_round_us(n_lane * 8)
+    plan_us = model_round_us(n_lane * 28)
+    trk_us = model_round_us(n_lane * 16)
+    wr_us = model_round_us(64 * window)
+    modeled_us = {
+        "get_locked": acq_us + plan_us,
+        "get_lockfree": model_round_us(4),
+        "update_locked": acq_us + plan_us + trk_us + wr_us,
+        "update_lockfree": plan_us + wr_us,
+    }
+    for mix, extra in (("get", {"cache": "warm"}), ("update", {})):
+        locked_us = lf_us[f"{mix}_locked"]
+        fast_us = lf_us[f"{mix}_lockfree"]
+        speed = locked_us / fast_us
+        m_locked = modeled_us[f"{mix}_locked"]
+        m_fast = modeled_us[f"{mix}_lockfree"]
+        m_speed = m_locked / m_fast
+        m_ops = P * window * 1e6 / m_fast
+        csv.add(f"kv_lockfree_{mix}_p{P}_window{window}", fast_us,
+                f"ops_per_round={P * window};"
+                f"locked_us={locked_us:.2f};"
+                f"speedup_vs_locked={speed:.2f};"
+                f"modeled_ops_per_s={m_ops:.0f};"
+                f"modeled_speedup_vs_locked={m_speed:.2f};"
+                f"fast_rate=1.0")
+        jt.add(f"kv_lockfree_{mix}_window", "lockfree", fast_us,
+               ops=P * window, speedup_vs_locked=round(speed, 2),
+               modeled_ops_per_s=round(m_ops),
+               modeled_speedup_vs_locked=round(m_speed, 2),
+               fast_rate=1.0, **extra)
+        jt.add(f"kv_lockfree_{mix}_window", "locked", locked_us,
+               ops=P * window,
+               modeled_ops_per_s=round(P * window * 1e6 / m_locked),
+               **extra)
+        # acceptance (§11): the fast path buys ≥1.5× modeled ops/s on
+        # qualifying windows — deterministic, asserted everywhere.  The
+        # wall-clock ratio must still favor the fast path on full runs
+        # (same soft-gate rationale as the read tier: the emulation's
+        # wall-clock is dominated by shared trace overhead both paths
+        # pay, and smoke takes too few samples to gate a shared runner).
+        assert m_speed >= 1.5, (
+            f"lock-free {mix} window must be ≥1.5× locked modeled ops/s "
+            f"(got {m_speed:.2f}: {m_locked:.2f}us → {m_fast:.2f}us)")
+        assert smoke or speed > 1.0, (
+            f"lock-free {mix} window must beat locked wall-clock "
+            f"(got {speed:.2f}: {locked_us:.1f}us → {fast_us:.1f}us)")
     return jt

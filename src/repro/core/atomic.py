@@ -69,6 +69,14 @@ class AtomicVar(Channel):
         windowed generalization of :meth:`fetch_add`'s participant-order
         contract, so the B=1 window is bit-for-bit the scalar path.
 
+        This fused-FAA resolution is a family: the single-counter form
+        here, the per-lock multi-counter form
+        (:func:`repro.core.lock.window_fifo_ranks` — ranks and totals per
+        lock stripe), and the kvstore's lock-free window plan (DESIGN.md
+        §11), which folds the same resolution into a wider metadata
+        gather so a commuting window's "lock acquisition" degenerates to
+        pure counter arithmetic with no dedicated collective at all.
+
         amount: () or (B,) added per enabled lane; preds: (B,) bool.
         Returns (new_state, my_old (B,), ack); disabled lanes report the
         pre-round official value, matching the scalar convention.

@@ -62,6 +62,15 @@ def _record(ledger, verb, wire_bytes):
         ledger.record(verb, wire_bytes)
 
 
+def record_fastpath(ledger, name, fast, windows):
+    """Report lock-skipped rounds into the traffic ledger (DESIGN.md §11):
+    ``fast`` windows out of ``windows`` executed were classified commuting
+    and served without any lock/tracker collectives.  Same trace-time
+    gating as :func:`_record` — disabled ledgers cost nothing."""
+    if ledger is not None and ledger.enabled:
+        ledger.record_fastpath(name, fast, windows)
+
+
 def bcast_from(value, owner, axis: str):
     """Broadcast ``value`` from participant ``owner`` to all participants.
 

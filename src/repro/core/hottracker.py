@@ -38,7 +38,16 @@ from .runtime import Manager
 
 
 class HotTrackerState(NamedTuple):
-    heat: jax.Array  # (rows,) float32 — MY decayed read count per global row
+    heat: jax.Array     # (rows,) float32 — MY decayed read count per global row
+    backlog: jax.Array  # () int32 — proposals deferred by the last rebalance()
+    # ``backlog`` surfaces the §10.3 deferral that used to be silent: a
+    # rebalance proposal whose destination free stack is exhausted (or
+    # whose key vanished mid-window) fails its MOVE and is simply not
+    # retired — the heat evidence persists, so the next rebalance() pass
+    # re-proposes it.  The counter makes that visible (stats()["locality"]
+    # ["migration_backlog"]) instead of indistinguishable from "nothing
+    # left to move".  It lives inside the heat leaf on purpose: local
+    # policy, skipped by the replication convergence check (§9.3).
 
 
 class HotTracker(Channel):
@@ -63,13 +72,15 @@ class HotTracker(Channel):
 
     def init_state(self) -> HotTrackerState:
         return HotTrackerState(heat=jnp.zeros((self.P, self.rows),
-                                              jnp.float32))
+                                              jnp.float32),
+                               backlog=jnp.zeros((self.P,), jnp.int32))
 
     @staticmethod
     def empty_state(P: int) -> HotTrackerState:
         """Zero-row state for heat-less composers: keeps the composing
         store's state pytree structure independent of the knob."""
-        return HotTrackerState(heat=jnp.zeros((P, 0), jnp.float32))
+        return HotTrackerState(heat=jnp.zeros((P, 0), jnp.float32),
+                               backlog=jnp.zeros((P,), jnp.int32))
 
     # -- verbs (all local, all batched) ---------------------------------------
     def line_of(self, nodes, slots):

@@ -146,7 +146,7 @@ from .ack import AckKey, join
 from .cache import ReadCache, ReadCacheState, hash_u32
 from .channel import Channel
 from .hottracker import HotTracker, HotTrackerState
-from .lock import TicketLockArray, TicketLockArrayState
+from .lock import TicketLockArray, TicketLockArrayState, window_fifo_ranks
 from .ownedvar import checksum
 from .region import SharedRegion, SharedRegionState
 from .runtime import Manager
@@ -154,6 +154,15 @@ from .sst import SST, SSTState
 
 # op codes (MOVE re-homes a live row — the §10 migration lane)
 NOP, GET, INSERT, UPDATE, DELETE, MOVE = 0, 1, 2, 3, 4, 5
+
+# Test hook for the linearizability harness's seeded mutation test
+# (tests/linearizability): when flipped, the lock-free window plan elects
+# the FIRST same-key UPDATE as the write winner instead of the last —
+# a deliberately broken commutativity rule that violates per-participant
+# program order (lane b+1's update must beat lane b's).  Traces built
+# while the flag is set bake the broken rule in; production code never
+# reads it after trace time.
+_MUTATE_FASTPATH_WINNER = False
 
 # placement policies (DESIGN.md §10.1): who hosts an INSERTed row
 PLACEMENTS = ("local", "hashed", "explicit")
@@ -211,7 +220,7 @@ class KVStore(Channel):
                  index_max_probe: int | None = None,
                  cache_slots: int = 0, coalesce_reads: bool = True,
                  placement: str = "local", track_heat: bool = False,
-                 heat_decay: float = 0.9,
+                 heat_decay: float = 0.9, lockfree: bool = False,
                  reference_impl: bool = False):
         super().__init__(parent, name, mgr)
         self.S = int(slots_per_node)
@@ -225,6 +234,13 @@ class KVStore(Channel):
         # apply — the executable specification, kept hot-swappable so the
         # benchmark suite can measure the work-proportional paths against it.
         self.reference_impl = bool(reference_impl)
+        # lockfree=True makes op_window default to the §11 lock-free
+        # commuting fast path (overridable per call); it needs the
+        # precomputed schedule, so the flat-scan spec store can't carry it.
+        self.lockfree = bool(lockfree)
+        if self.lockfree and self.reference_impl:
+            raise ValueError("lockfree=True requires the scheduled "
+                             "implementation (reference_impl=False)")
         # read tier (DESIGN.md §8): coalesce_reads dedupes duplicate
         # (node, slot) GET lanes before the wire; cache_slots > 0 adds a
         # direct-mapped counter-validated cache of hot remote rows in front
@@ -957,30 +973,119 @@ class KVStore(Channel):
         g_lock, g_tick, g_key, g_op, g_want = (
             g[:, 0], _i2u(g[:, 1]), g[:, 2], g[:, 3], g[:, 4] != 0)
         queued = g_want[None, :] & (g_lock[None, :] == g_lock[:, None])
-        before = queued & (g_tick[None, :] < g_tick[:, None])  # [i,j]: j<i
+        later = queued & (g_tick[None, :] > g_tick[:, None])   # [i,j]: j>i
+        round_all, winner_all = self._schedule_core(g_key, g_op, g_want,
+                                                    queued, later)
+        return (jax.lax.dynamic_slice(round_all, (me * B,), (B,)),
+                jax.lax.dynamic_slice(winner_all, (me * B,), (B,)))
+
+    @staticmethod
+    def _schedule_core(g_key, g_op, g_want, queued, later):
+        """The schedule arithmetic over all N = P·B gathered lanes, shared
+        by the two callers that disagree only on how they know the
+        per-lock service order:
+
+        * :meth:`_service_schedule` compares the issued **tickets** —
+          ``later[i, j] = queued & (ticket_j > ticket_i)``;
+        * the lock-free window plan (§11) never materializes tickets and
+          passes the **(participant, lane) lexicographic order** instead —
+          bit-identical, because tickets on one lock are issued in exactly
+          that order (:func:`repro.core.lock.window_fifo_ranks`).
+
+        ``queued[i, j]`` must be "lane j wants lane i's lock"; ``later``
+        must be a subset of ``queued``.  Returns (round_all (N,) int32 —
+        0 for non-mutating lanes, winner_all (N,) bool — False for an
+        UPDATE whose row write a later same-key same-round UPDATE
+        supersedes).
+        """
+        N = g_key.shape[0]
+        eye = jnp.arange(N)[None, :] == jnp.arange(N)[:, None]
+        at_or_before = queued & ~later
+        before = at_or_before & ~eye
         both_upd = (g_op[:, None] == UPDATE) & (g_op[None, :] == UPDATE)
         # allocating lanes (INSERT, MOVE) behind freeing lanes (DELETE,
         # MOVE) serialize so a full free stack can recycle within a window
         alloc_i = (g_op[:, None] == INSERT) | (g_op[:, None] == MOVE)
         free_j = (g_op[None, :] == DELETE) | (g_op[None, :] == MOVE)
-        conflict = ((g_key[None, :] == g_key[:, None]) & ~both_upd) \
-            | (alloc_i & free_j)
+        same_key = g_key[None, :] == g_key[:, None]
+        conflict = (same_key & ~both_upd) | (alloc_i & free_j)
         bad = jnp.any(before & conflict, axis=1)
-        at_or_before = queued & (g_tick[None, :] <= g_tick[:, None])
         round_all = jnp.where(
             g_want, 1 + jnp.sum((at_or_before & bad[None, :])
                                 .astype(jnp.int32), axis=1), 0)
-        # an UPDATE's row write is superseded when a later-ticket same-key
-        # UPDATE lands in the same round (same round is implied for
-        # co-queued same-key updates unless a barrier splits them — and a
-        # split later round still wins, so checking the round is exact)
+        # an UPDATE's row write is superseded when a later same-key UPDATE
+        # lands in the same round (same round is implied for co-queued
+        # same-key updates unless a barrier splits them — and a split
+        # later round still wins, so checking the round is exact)
         same_round = round_all[None, :] == round_all[:, None]
-        superseded = both_upd & (g_key[None, :] == g_key[:, None]) \
-            & same_round & (g_tick[None, :] > g_tick[:, None]) \
-            & g_want[None, :]
+        superseded = both_upd & same_key & same_round & later
         winner_all = ~jnp.any(superseded, axis=1)
-        return (jax.lax.dynamic_slice(round_all, (me * B,), (B,)),
-                jax.lax.dynamic_slice(winner_all, (me * B,), (B,)))
+        if _MUTATE_FASTPATH_WINNER:
+            # seeded mutation (linearizability harness): FIRST-wins —
+            # breaks same-participant same-key update pairs
+            winner_all = ~jnp.any(both_upd & same_key & same_round & before,
+                                  axis=1)
+        return round_all, winner_all
+
+    # -- the lock-free window plan (DESIGN.md §11) ------------------------------
+    def _window_plan(self, ops, keys, lock_id, want_lock, look0):
+        """ONE (B, 7) lane-metadata all-gather → everything ``op_window``
+        needs to coordinate the window: the fused-FAA lock resolution
+        (ranks + per-lock totals — bit-identical tickets to
+        ``acquire_window`` without its packed gather), the service
+        schedule (bit-identical rounds/winners to ``_service_schedule``
+        without its gather — tickets on one lock are issued in
+        (participant, lane) order, so the plan substitutes that order),
+        the **fast-window classification**, and the §8.3 cache
+        invalidation metadata the locked rounds would have carried on the
+        tracker gather.
+
+        Eligibility (``win_fast``): every lock-wanting lane in the
+        gathered window is an UPDATE.  Those commute — they leave the
+        index, free stacks and slot counters untouched, and the round's
+        batched row write lands them last-(participant, lane)-wins, which
+        IS the per-lock FIFO outcome — so the whole locked service round
+        (tracker gather, wave apply, SST ack push) degenerates to one
+        batched counter-validated row write.  A pure-GET window is the
+        vacuous case: nothing wants a lock, nothing is written.  Computed
+        from the gathered metadata, so every participant classifies
+        identically.  Any INSERT/DELETE/MOVE lane anywhere fails the test
+        and the window falls back to the locked schedule unchanged.
+
+        Returns a dict of per-window coordination arrays (not state).
+        """
+        me = colls.my_id(self.axis)
+        B = ops.shape[0]
+        found0, node0, slot0, _ctr0 = look0
+        # the §8.3 "row mutated" flag: an UPDATE lane overwrites the live
+        # row its index view names — peers must drop cached copies (the
+        # counter does not change on update, so validation alone cannot
+        # catch it)
+        inval = (ops == UPDATE) & found0
+        lane_meta = jnp.stack(
+            [lock_id.astype(jnp.int32), _u2i(keys), ops,
+             want_lock.astype(jnp.int32), node0.astype(jnp.int32),
+             slot0.astype(jnp.int32), inval.astype(jnp.int32)],
+            axis=-1)                                          # (B, 7)
+        g3 = jax.lax.all_gather(lane_meta, self.axis, axis=0)  # (P, B, 7)
+        g = g3.reshape(-1, 7)                                  # (N, 7)
+        g_lock, g_key, g_op, g_want = g[:, 0], g[:, 1], g[:, 2], g[:, 3] != 0
+        rank, totals = window_fifo_ranks(g3[:, :, 0], g3[:, :, 3] != 0,
+                                         lock_id, self.L, me)
+        N = g.shape[0]
+        pos = jnp.arange(N, dtype=jnp.int32)
+        queued = g_want[None, :] & (g_lock[None, :] == g_lock[:, None])
+        later = queued & (pos[None, :] > pos[:, None])
+        round_all, winner_all = self._schedule_core(g_key, g_op, g_want,
+                                                    queued, later)
+        win_fast = ~jnp.any(g_want & (g_op != UPDATE))
+        return dict(
+            rank=rank, totals=totals,
+            round_no=jax.lax.dynamic_slice(round_all, (me * B,), (B,)),
+            write_winner=jax.lax.dynamic_slice(winner_all, (me * B,), (B,)),
+            win_fast=win_fast,
+            any_want=jnp.any(g_want),
+            inv_node=g[:, 4], inv_slot=g[:, 5], inv_flag=g[:, 6] != 0)
 
     # -- one service round over the whole (B,) window ---------------------------------
     def _service_window(self, st: KVStoreState, op, key, value, lock_id,
@@ -1391,7 +1496,7 @@ class KVStore(Channel):
         return jnp.where(ops == MOVE, t, ph)
 
     def op_window(self, st: KVStoreState, ops, keys, values, targets=None,
-                  targets_are_homes=False):
+                  targets_are_homes=False, lockfree=None):
         """Every participant submits a (B,) window of mixed operations; the
         whole window executes in one traced collective round-set.  Service
         rounds run until every mutation in every window completed.  Returns
@@ -1409,10 +1514,25 @@ class KVStore(Channel):
         placement policy entirely: ``targets`` ARE the per-lane homes —
         exported records carry the leader's *resolved* homes, so a
         replica converges whatever its own policy is configured as.
+        ``lockfree`` (default: the store's constructor knob) traces the
+        §11 lock-free commuting fast path: windows whose lock-wanting
+        lanes are all UPDATEs (pure-GET included, vacuously) are
+        classified at schedule-build time from ONE fused metadata gather
+        and served without lock acquisition, tracker or ack collectives —
+        mixed windows fall back to the locked schedule bit-for-bit.  The
+        locked path (``lockfree=False``, every existing caller) remains
+        the pinned executable specification; both paths commit identical
+        state bits for identical windows, which the replication and
+        torture suites pin leaf-by-leaf.
 
         See the module docstring for the intra-window ordering and
-        linearization-point contract.
+        linearization-point contract, and DESIGN.md §11 for the fast
+        path's eligibility rules and counter-validation protocol.
         """
+        lockfree = self.lockfree if lockfree is None else bool(lockfree)
+        if lockfree and self.reference_impl:
+            raise ValueError("lockfree op_window requires the scheduled "
+                             "implementation (reference_impl=False)")
         ops = jnp.asarray(ops, jnp.int32)
         B = ops.shape[0]
         keys = jnp.asarray(keys, jnp.uint32).reshape(B)
@@ -1425,13 +1545,6 @@ class KVStore(Channel):
         lock_id = (keys % jnp.uint32(self.L)).astype(jnp.int32)
         want_lock = (ops == INSERT) | (ops == UPDATE) | (ops == DELETE) \
             | (ops == MOVE)
-        lstate, ticket = self.locks.acquire_window(st.locks, lock_id,
-                                                   want_lock)
-        # every acquired ticket completes within this window, so the
-        # deferred end-of-window release bumps now_serving by exactly the
-        # ticket totals the acquire added (free to recover as a diff)
-        lock_totals = lstate.next_ticket - st.locks.next_ticket
-        st = st._replace(locks=lstate)
 
         # one (B, C) index probe for the whole window; the service loop
         # keeps the per-lane view current incrementally (tracker records
@@ -1440,37 +1553,173 @@ class KVStore(Channel):
             lambda k: self._index_lookup(st, k))(keys)
         look0 = (found0, node0, slot0, ctr0)
 
+        if not lockfree:
+            plan = None
+            lstate, ticket = self.locks.acquire_window(st.locks, lock_id,
+                                                       want_lock)
+        else:
+            # §11: the plan's single gather subsumes the acquire gather
+            # (fused-FAA ranks/totals → bit-identical tickets + counters)
+            # and the schedule gather — and classifies the window.  A
+            # window with no lock-wanting lane ANYWHERE (the pure-GET
+            # serving pattern) is classified by one scalar psum instead
+            # and skips the gather and the O((P·B)²) schedule arithmetic
+            # outright — the skipped plan's outputs are exactly the
+            # defaults the carry holds (zero ranks/totals move no ticket
+            # counter, nothing to invalidate, vacuously fast).
+            any_want = jax.lax.psum(
+                jnp.any(want_lock).astype(jnp.int32), self.axis) > 0
+            N = self.P * B
+
+            def pbody(c):
+                p = self._window_plan(ops, keys, lock_id, want_lock, look0)
+                return (jnp.zeros((), jnp.bool_), p["rank"], p["totals"],
+                        p["round_no"], p["write_winner"], p["win_fast"],
+                        p["inv_node"], p["inv_slot"], p["inv_flag"])
+
+            _t, rank, totals, rno, wwin, wfast, inode, islot, iflag = \
+                jax.lax.while_loop(
+                    lambda c: c[0], pbody,
+                    (any_want, jnp.zeros((B,), jnp.uint32),
+                     jnp.zeros((self.L,), jnp.uint32),
+                     jnp.zeros((B,), jnp.int32),
+                     jnp.zeros((B,), jnp.bool_),
+                     jnp.ones((), jnp.bool_),
+                     jnp.zeros((N,), jnp.int32),
+                     jnp.zeros((N,), jnp.int32),
+                     jnp.zeros((N,), jnp.bool_)))
+            plan = dict(rank=rank, totals=totals, round_no=rno,
+                        write_winner=wwin, win_fast=wfast,
+                        any_want=any_want, inv_node=inode,
+                        inv_slot=islot, inv_flag=iflag)
+        if not lockfree:
+            # every acquired ticket completes within this window, so the
+            # deferred end-of-window release bumps now_serving by exactly
+            # the ticket totals the acquire added (free as a diff)
+            lock_totals = lstate.next_ticket - st.locks.next_ticket
+            st = st._replace(locks=lstate)
+
         # lock-free GETs against pre-window state (linearized at window
         # start), through the read tier; refills land in the state BEFORE
         # the service loop, so this window's own mutations invalidate any
-        # line they touch (§8.3 refill-then-invalidate order).
+        # line they touch (§8.3 refill-then-invalidate order).  GETs never
+        # read lock state, so the lock-free dispatch is free to defer its
+        # counter bumps into the gated mutation half below.
         get_val, get_found, retries, st = self._get_window(
             st, keys, ops == GET, look=look0)
 
         if self.reference_impl:
             round_no, write_winner = None, None
-        else:
+        elif not lockfree:
             # work-proportional schedule, computed once outside the loop
             round_no, write_winner = self._service_schedule(
                 ops, keys, lock_id, ticket, want_lock)
 
-        def cond(c):
-            _st, pending, _succ, _look, _r = c
-            return jax.lax.psum(
-                jnp.any(pending).astype(jnp.int32), self.axis) > 0
+        def _serve_rounds(st_s, pending0, succ0, ticket, round_no,
+                          write_winner):
+            def cond(c):
+                _st, pending, _succ, _look, _r = c
+                return jax.lax.psum(
+                    jnp.any(pending).astype(jnp.int32), self.axis) > 0
 
-        def body(c):
-            st_c, pending, succ, look, r = c
-            serve = None if round_no is None else (round_no == r)
+            def body(c):
+                st_c, pending, succ, look, r = c
+                serve = None if round_no is None else (round_no == r)
+                with self.mgr.no_tracking():
+                    st_c, pending, _held, s_now, look = \
+                        self._service_window(
+                            st_c, ops, keys, values, lock_id, ticket,
+                            pending, look, serve=serve,
+                            write_winner=write_winner, homes=homes)
+                return st_c, pending, succ | s_now, look, r + 1
+
+            return jax.lax.while_loop(
+                cond, body, (st_s, pending0, succ0, look0, jnp.int32(1)))
+
+        if lockfree:
+            win_fast = plan["win_fast"]
+            # a found UPDATE succeeds whether or not its write wins —
+            # same success rule as the locked round
+            do_upd_fast = (ops == UPDATE) & found0 & win_fast
+            has_cache = self.cache is not None
+
+            # the mutation prologue — prepared acquire, §8.3
+            # invalidation and the fast serve — rides one 0/1-iteration
+            # while_loop keyed on the (uniform) any_want scalar: a
+            # pure-GET window skips it all, and the skipped iteration's
+            # outputs are identities (zero ticket totals move no
+            # counter, nothing to invalidate or write).  The carry holds
+            # ONLY the leaves the prologue writes; the fallback service
+            # rounds and the deferred release run outside (both are
+            # no-ops for a skipped window: no pending lanes, release of
+            # zero).
+            def mut_body(c):
+                _todo, locks, cache, rows, _ticket, _tot = c
+                lstate, ticket = self.locks.acquire_window_prepared(
+                    locks, lock_id, want_lock, plan["rank"],
+                    plan["totals"])
+                lock_totals = lstate.next_ticket - locks.next_ticket
+                # §8.3 coherence for fast windows: the locked rounds
+                # piggyback the "row mutated" flag on their tracker
+                # gather; the plan gathered the same (node, slot, flag)
+                # columns, so peers invalidate identically.  A fallback
+                # window's flags are masked here and re-gathered by its
+                # service rounds.
+                if has_cache:
+                    cache = self.cache.invalidate(
+                        cache, plan["inv_node"], plan["inv_slot"],
+                        plan["inv_flag"] & win_fast)
+                # fast serve: commuting UPDATEs are ONE batched counter-
+                # validated one-sided write — value re-encoded with the
+                # slot-reuse counter the index view returned (a stale
+                # view would write a row readers reject; the ticket
+                # counters say the window completed either way).  The
+                # write rides its own 0/1-iteration while_loop keyed on
+                # the (replicated-consistent) classification, so
+                # ineligible windows never execute the collective;
+                # superseded same-key lanes are winner-masked exactly
+                # like the locked round's batched write.
+                row_upd = jax.vmap(
+                    lambda v, c2: self.encode_row(v, c2, True))(values,
+                                                                ctr0)
+
+                def fbody(fc):
+                    _ft, frows = fc
+                    rows2, _ = self.rows_region.write_batch(
+                        frows, node0.astype(jnp.int32),
+                        slot0.astype(jnp.int32), row_upd,
+                        preds=do_upd_fast & plan["write_winner"],
+                        assume_unique=True)
+                    return jnp.zeros((), jnp.bool_), rows2
+
+                _ft, rows = jax.lax.while_loop(
+                    lambda fc: fc[0], fbody, (win_fast, rows))
+                return (jnp.zeros((), jnp.bool_), lstate, cache, rows,
+                        ticket, lock_totals)
+
+            cache_in = st.cache if has_cache else jnp.zeros((), jnp.int32)
             with self.mgr.no_tracking():
-                st_c, pending, _held, s_now, look = self._service_window(
-                    st_c, ops, keys, values, lock_id, ticket, pending, look,
-                    serve=serve, write_winner=write_winner, homes=homes)
-            return st_c, pending, succ | s_now, look, r + 1
+                (_todo, lstate, cache_out, rows_out, ticket,
+                 lock_totals) = jax.lax.while_loop(
+                    lambda c: c[0], mut_body,
+                    (any_want, st.locks, cache_in, st.rows,
+                     jnp.zeros((B,), st.locks.next_ticket.dtype),
+                     jnp.zeros_like(st.locks.next_ticket)))
+            st = st._replace(locks=lstate, rows=rows_out)
+            if has_cache:
+                st = st._replace(cache=cache_out)
+            round_no, write_winner = plan["round_no"], plan["write_winner"]
+            pending0, succ0 = want_lock & ~win_fast, do_upd_fast
+            if self.mgr.traffic.enabled:
+                colls.record_fastpath(
+                    self.mgr.traffic, self.full_name,
+                    win_fast.astype(jnp.float32), 1.0)
+        else:
+            pending0 = want_lock
+            succ0 = jnp.zeros((B,), jnp.bool_)
 
-        st, _pending, succ, _look, _r = jax.lax.while_loop(
-            cond, body, (st, want_lock, jnp.zeros((B,), jnp.bool_), look0,
-                         jnp.int32(1)))
+        st, _pending, succ, _look, _r = _serve_rounds(
+            st, pending0, succ0, ticket, round_no, write_winner)
 
         if not self.reference_impl:
             # deferred batched release: critical-section effects joined
@@ -1639,11 +1888,23 @@ class KVStore(Channel):
                   min_heat: float = 1.0):
         """Propose and execute one migration window: rows whose dominant
         reader is remote move to that reader.  Returns (state, n_moved ()
-        int32 — the cluster-wide count of executed moves)."""
+        int32 — the cluster-wide count of executed moves).
+
+        Proposals that fail to execute (destination free stack exhausted,
+        key vacated mid-window) are **deferred, not dropped**: the heat
+        evidence behind them persists, so the next ``rebalance()`` call
+        re-proposes them.  The cluster-wide count of such deferrals is
+        recorded in ``st.heat.backlog`` (surfaced as
+        ``stats()["locality"]["migration_backlog"]`` by the engine) so a
+        stuck migration — e.g. a perpetually full destination — is
+        observable instead of indistinguishable from convergence."""
         keys, dests, valid = self.rebalance_proposals(st, max_moves,
                                                       min_heat=min_heat)
         st, moved = self.migrate_window(st, keys, dests, preds=valid)
-        return st, jax.lax.psum(jnp.sum(moved.astype(jnp.int32)), self.axis)
+        n_prop = jax.lax.psum(jnp.sum(valid.astype(jnp.int32)), self.axis)
+        n_moved = jax.lax.psum(jnp.sum(moved.astype(jnp.int32)), self.axis)
+        st = st._replace(heat=st.heat._replace(backlog=n_prop - n_moved))
+        return st, n_moved
 
     # -- replication record export hook (DESIGN.md §9.3) ----------------------
     @property

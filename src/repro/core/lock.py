@@ -29,6 +29,40 @@ from .runtime import Manager
 NO_TICKET = jnp.uint32(0xFFFFFFFF)
 
 
+def window_fifo_ranks(lids, gflags, lock_ids, num_locks, me):
+    """Post-gather half of the fused windowed FAA resolution.
+
+    Given the gathered ``(P, B)`` lock ids and request flags of a window
+    (however they reached this participant — the lock stripe's packed
+    gather, or a caller's own wider metadata gather that already carries
+    them, e.g. the kvstore's lock-free window plan in §11), compute
+
+    * ``rank`` (B,) uint32 — for each of MY ``lock_ids`` lanes, the count
+      of flagged same-lock requests that precede it in (participant,
+      window slot) lexicographic order, and
+    * ``totals`` (num_locks,) uint32 — the flagged request count per lock.
+
+    This is the arithmetic contract of a batch of per-lock fetch-and-adds:
+    ``ticket[b] = next_ticket[lock_ids[b]] + rank[b]`` and
+    ``next_ticket += totals`` resolve every lane's FAA in one step (the
+    collective is the NIC serialization point, DESIGN.md §2).  Keeping it
+    a pure function of the gathered arrays is what lets two different
+    gathers produce bit-identical tickets.
+    """
+    lids = lids.astype(jnp.int32)
+    lock_ids = lock_ids.astype(jnp.int32)
+    totals = jnp.zeros((num_locks,), jnp.uint32).at[lids.reshape(-1)].add(
+        gflags.reshape(-1).astype(jnp.uint32), mode="drop")    # (L,)
+    P, B = lids.shape
+    qs = jnp.arange(P)[:, None, None]                     # their id
+    cs = jnp.arange(B)[None, :, None]                     # their slot
+    bs = jnp.arange(B)[None, None, :]                     # my slot
+    same = (lids[:, :, None] == lock_ids[None, None, :]) & gflags[:, :, None]
+    before = (qs < me) | ((qs == me) & (cs < bs))
+    rank = jnp.sum(same & before, axis=(0, 1)).astype(jnp.uint32)  # (B,)
+    return rank, totals
+
+
 class TicketLockState(NamedTuple):
     next_ticket: AtomicVarState
     now_serving: AtomicVarState
@@ -126,21 +160,15 @@ class TicketLockArray(Channel):
             lock_ids | (jnp.asarray(flags, jnp.int32) << 30), self.axis)
         lids = packed & ((1 << 30) - 1)                       # (P, B)
         gflags = (packed >> 30) != 0
-        # per-lock totals as a scatter-add over the P·B requests — XLA-CPU
-        # cost tracks the request count, not the dense (P·B, L) one-hot
-        totals = jnp.zeros((self.L,), jnp.uint32).at[lids.reshape(-1)].add(
-            gflags.reshape(-1).astype(jnp.uint32), mode="drop")    # (L,)
         if not need_rank:
+            # per-lock totals as a scatter-add over the P·B requests —
+            # XLA-CPU cost tracks the request count, not a dense one-hot
+            totals = jnp.zeros((self.L,), jnp.uint32) \
+                .at[lids.reshape(-1)].add(
+                    gflags.reshape(-1).astype(jnp.uint32), mode="drop")
             return None, totals
-        me = colls.my_id(self.axis)
-        P, B = lids.shape
-        qs = jnp.arange(P)[:, None, None]                     # their id
-        cs = jnp.arange(B)[None, :, None]                     # their slot
-        bs = jnp.arange(B)[None, None, :]                     # my slot
-        same = (lids[:, :, None] == lock_ids[None, None, :]) & gflags[:, :, None]
-        before = (qs < me) | ((qs == me) & (cs < bs))
-        rank = jnp.sum(same & before, axis=(0, 1)).astype(jnp.uint32)  # (B,)
-        return rank, totals
+        return window_fifo_ranks(lids, gflags, lock_ids, self.L,
+                                 colls.my_id(self.axis))
 
     def acquire_window(self, state: TicketLockArrayState, lock_ids, want):
         """FAA on next_ticket[lock_ids[b]] for every wanting request.
@@ -148,9 +176,20 @@ class TicketLockArray(Channel):
         with tickets==NO_TICKET where not wanting."""
         want = jnp.asarray(want)
         rank, totals = self._totals_window(lock_ids, want)
+        return self.acquire_window_prepared(state, lock_ids, want, rank,
+                                            totals)
+
+    def acquire_window_prepared(self, state: TicketLockArrayState, lock_ids,
+                                want, rank, totals):
+        """Apply an already-resolved window acquire: ``(rank, totals)`` as
+        :func:`window_fifo_ranks` computes them.  A caller whose own wider
+        metadata gather already carries every lane's (lock, want) — the
+        kvstore's lock-free window plan (DESIGN.md §11) — resolves the
+        ranks itself and lands bit-identical tickets and counters here
+        without paying the stripe's packed gather a second time."""
         ticket = state.next_ticket[lock_ids] + rank
         new = state._replace(next_ticket=state.next_ticket + totals)
-        return new, jnp.where(want, ticket, NO_TICKET)
+        return new, jnp.where(jnp.asarray(want), ticket, NO_TICKET)
 
     def acquire(self, state: TicketLockArrayState, lock_id, want):
         """Single-request form: B=1 window."""

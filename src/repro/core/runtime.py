@@ -130,6 +130,10 @@ class TrafficLedger:
         self.counts: Dict[str, Dict[str, float]] = {}
         # read-tier hit/lookup counters (DESIGN.md §8.2), keyed by channel
         self.cache_counts: Dict[str, Dict[str, float]] = {}
+        # lock-skipped-round counters (DESIGN.md §11), keyed by channel:
+        # windows classified lock-free vs windows that fell back to the
+        # locked schedule
+        self.fastpath_counts: Dict[str, Dict[str, float]] = {}
 
     def enable(self):
         self.enabled = True
@@ -142,6 +146,7 @@ class TrafficLedger:
     def reset(self):
         self.counts = {}
         self.cache_counts = {}
+        self.fastpath_counts = {}
         return self
 
     def record(self, verb: str, wire_bytes):
@@ -171,6 +176,21 @@ class TrafficLedger:
         jax.debug.callback(_cb, jnp.asarray(hits, jnp.float32),
                            jnp.asarray(lookups, jnp.float32))
 
+    def record_fastpath(self, name: str, fast, windows):
+        """Record ``fast`` lock-free-served windows out of ``windows``
+        executed (traced scalars) against channel ``name`` — the §11
+        lock-skipped-round ledger rows.  Same trace-time gating contract
+        as :meth:`record`: callers check ``enabled`` before calling, so
+        disabled ledgers never emit callbacks."""
+        def _cb(f, w, name=name):
+            e = self.fastpath_counts.setdefault(
+                name, {"fast_windows": 0.0, "windows": 0.0})
+            e["fast_windows"] += float(f)
+            e["windows"] += float(w)
+
+        jax.debug.callback(_cb, jnp.asarray(fast, jnp.float32),
+                           jnp.asarray(windows, jnp.float32))
+
     def total_bytes(self) -> float:
         return sum(e["bytes"] for e in self.counts.values())
 
@@ -183,6 +203,16 @@ class TrafficLedger:
         for k, v in sorted(self.cache_counts.items()):
             e = dict(v)
             e["hit_rate"] = (v["hits"] / v["lookups"]) if v["lookups"] else 0.0
+            out[k] = e
+        return out
+
+    def fastpath_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-channel lock-skipped-round counters with derived rates."""
+        out = {}
+        for k, v in sorted(self.fastpath_counts.items()):
+            e = dict(v)
+            e["fast_rate"] = (v["fast_windows"] / v["windows"]) \
+                if v["windows"] else 0.0
             out[k] = e
         return out
 

@@ -392,6 +392,12 @@ class ServingEngine:
                     "local_fraction": (loc_reads / (loc_reads + rem_reads)
                                        if loc_reads + rem_reads else 0.0),
                     "moves": self.loc_counts["moves"],
+                    # §10.3 deferral visibility: proposals the last
+                    # rebalance() could not execute (destination full /
+                    # key vacated) — retried automatically next pass;
+                    # zero while admission placement keeps pages home
+                    "migration_backlog": int(
+                        np.asarray(self._kv_state.heat.backlog)[0]),
                     "modeled_bytes_saved":
                         self.loc_counts["modeled_bytes_saved"]},
                 **rep,

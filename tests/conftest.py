@@ -4,6 +4,18 @@ import jax
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import settings
+except ImportError:                                    # pragma: no cover
+    pass
+else:
+    # CI profile (select with --hypothesis-profile=ci): bounded example
+    # counts for wall-clock predictability, no deadline (jit compiles
+    # dwarf any per-example budget), and print_blob so a failing run
+    # prints the @reproduce_failure seed blob to replay locally.
+    settings.register_profile("ci", max_examples=20, deadline=None,
+                              print_blob=True)
+
 
 @pytest.fixture(scope="session", autouse=True)
 def _seed():

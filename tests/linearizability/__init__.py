@@ -1,0 +1,25 @@
+"""Linearizability torture harness for the SPMD channel substrate.
+
+Three pieces (DESIGN.md §11.3):
+
+* :mod:`linearizability.checker` — sequential specifications (KV map,
+  bounded FIFO queue, broadcast ring) and a Wing–Gong-style
+  linearizability checker over *windowed* concurrent histories, with
+  commutativity pruning via (progress-vector, state) memoization.
+* :mod:`linearizability.recorder` — :class:`HistoryRecorder`, which
+  converts any channel's device-side window results into the checker's
+  history form (one window of per-participant op invocations per
+  collective verb call).
+* :mod:`linearizability.test_torture` — the torture suite: random
+  (P, B, schedule, op-mix) interleavings across
+  KVStore / SharedQueue / Ringbuffer / ReadCache / migration / lock-free
+  paths, checked for zero violations, plus a seeded mutation test that
+  demonstrates the checker catches a deliberately broken commutativity
+  rule.
+"""
+from .checker import (KVSpec, QueueSpec, RingSpec, Op, Violation,
+                      check_history)
+from .recorder import HistoryRecorder
+
+__all__ = ["KVSpec", "QueueSpec", "RingSpec", "Op", "Violation",
+           "check_history", "HistoryRecorder"]

@@ -1,0 +1,321 @@
+"""Sequential specs + a Wing–Gong linearizability checker for windowed
+SPMD histories (DESIGN.md §11.3).
+
+History model
+-------------
+
+A recorded *history* is an ordered list of **windows**; each window is
+the set of operations one collective verb call executed.  The partial
+order the substrate guarantees (and the checker enforces):
+
+* window w completes before window w+1 begins (collective calls in one
+  traced program are totally ordered by the lockstep rounds);
+* within a window, one participant's lanes execute in **lane order**
+  (program order — lane b's ticket precedes lane b+1's on a shared
+  lock);
+* lanes of *different* participants within a window are **concurrent**;
+* read-class ops of specs with ``reads_at_window_start`` (the kvstore's
+  GET contract: lock-free reads linearize at window start) are checked
+  against the window's *pre*-state, before any of the window's
+  mutations.
+
+Checking (Wing & Gong 1993, adapted to the window structure): thread a
+*set* of candidate sequential states across windows.  For each window
+and each candidate pre-state, first validate the read-class ops, then
+run a DFS over the linear extensions of the per-participant mutation
+sequences, applying the spec transition and pruning any branch whose
+recorded result contradicts it.  The DFS memoizes on
+``(progress-vector, state)`` — two interleavings that reach the same
+per-participant positions in the same state are merged, which is
+exactly commutativity pruning: a window of k commuting ops costs
+O(k·states) instead of k! paths.  Every surviving end-state seeds the
+next window; an empty survivor set is a linearizability violation.
+
+The specs are plain-Python models (dicts and tuples) with **ample
+capacity assumed** — torture configurations size their channels so the
+only failures are semantic (insert-existing, update-missing, pop-empty,
+bounded-full), which the specs model exactly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+
+class Op(NamedTuple):
+    """One recorded operation invocation + response.
+
+    pid/lane locate it in the window grid; ``name`` selects the spec
+    transition; ``args``/``result`` are spec-defined tuples (hashable).
+    """
+    pid: int
+    lane: int
+    name: str
+    args: tuple
+    result: tuple
+
+
+class Violation(NamedTuple):
+    window: int          # index of the first window with no linearization
+    ops: tuple           # that window's recorded ops
+    n_pre_states: int    # candidate pre-states that all failed
+    reason: str
+
+    def __str__(self):
+        lines = [f"linearizability violation in window {self.window} "
+                 f"({self.reason}; {self.n_pre_states} candidate "
+                 f"pre-state(s), no valid linear extension):"]
+        lines += [f"  P{o.pid}.lane{o.lane} {o.name}{o.args} "
+                  f"-> {o.result}" for o in self.ops]
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------- KV spec
+class KVSpec:
+    """Sequential map spec for :class:`repro.core.KVStore` windows.
+
+    Op names: INSERT/UPDATE/DELETE/MOVE (mutations, args ``(key, value)``
+    or ``(key,)``; result ``(found,)`` — the success flag) and GET/NOP
+    (read-class, result ``(found, value)``; NOP must report
+    ``found=False``).  MOVE re-homes a row without touching the map
+    value, so its spec transition is the identity with
+    ``found = key present`` — destination capacity is assumed ample.
+    GETs linearize at window start (``reads_at_window_start``), the
+    stronger contract ``op_window`` documents.
+    """
+    reads_at_window_start = True
+    read_ops = ("GET", "NOP")
+
+    def __init__(self, width: int):
+        self.width = int(width)
+        self.zeros = (0,) * self.width
+
+    def init_state(self):
+        return ()                       # frozen: sorted ((key, value), ...)
+
+    def is_read(self, op: Op) -> bool:
+        return op.name in self.read_ops
+
+    def check_read(self, frozen, op: Op) -> bool:
+        if op.name == "NOP":
+            return not op.result[0]
+        d = dict(frozen)
+        key = op.args[0]
+        found, value = op.result
+        if key in d:
+            return bool(found) and tuple(value) == d[key]
+        return not found and tuple(value) == self.zeros
+
+    def apply(self, frozen, op: Op):
+        """Spec transition; returns the successor frozen state, or None
+        when the recorded result contradicts the spec."""
+        d = dict(frozen)
+        key = op.args[0]
+        ok = bool(op.result[0])
+        if op.name == "INSERT":
+            expect = key not in d
+            if ok != expect:
+                return None
+            if ok:
+                d[key] = tuple(op.args[1])
+        elif op.name == "UPDATE":
+            expect = key in d
+            if ok != expect:
+                return None
+            if ok:
+                d[key] = tuple(op.args[1])
+        elif op.name == "DELETE":
+            expect = key in d
+            if ok != expect:
+                return None
+            if ok:
+                del d[key]
+        elif op.name == "MOVE":
+            if ok != (key in d):
+                return None
+        else:
+            raise ValueError(f"unknown KV mutation {op.name!r}")
+        return tuple(sorted(d.items()))
+
+
+# ------------------------------------------------------------ queue spec
+class QueueSpec:
+    """Bounded FIFO spec for :class:`repro.core.SharedQueue` windows.
+
+    Op names: ENQ (args ``(value,)``, result ``(granted,)``) and DEQ
+    (args ``()``, result ``(ok, value)``).  Both are mutations — a DEQ
+    reads *and* advances the head, so it cannot linearize at window
+    start.  An ENQ must be granted iff the queue has space at its
+    linearization point; a DEQ must pop the head iff non-empty, and a
+    failed DEQ must report zeros.
+    """
+    reads_at_window_start = False
+    read_ops = ()
+
+    def __init__(self, capacity: int, width: int):
+        self.capacity = int(capacity)
+        self.width = int(width)
+        self.zeros = (0,) * self.width
+
+    def init_state(self):
+        return ()                       # frozen: (item, item, ...) FIFO
+
+    def is_read(self, op: Op) -> bool:
+        return False
+
+    def check_read(self, frozen, op: Op) -> bool:  # pragma: no cover
+        raise AssertionError("queue spec has no read-class ops")
+
+    def apply(self, frozen, op: Op):
+        items = list(frozen)
+        if op.name == "ENQ":
+            ok = bool(op.result[0])
+            if ok != (len(items) < self.capacity):
+                return None
+            if ok:
+                items.append(tuple(op.args[0]))
+        elif op.name == "DEQ":
+            ok = bool(op.result[0])
+            value = tuple(op.result[1])
+            if ok != (len(items) > 0):
+                return None
+            if ok:
+                if value != items[0]:
+                    return None
+                items.pop(0)
+            elif value != self.zeros:
+                return None
+        else:
+            raise ValueError(f"unknown queue op {op.name!r}")
+        return tuple(items)
+
+
+# ------------------------------------------------------------- ring spec
+class RingSpec:
+    """Broadcast-ring spec for :class:`repro.core.Ringbuffer` windows.
+
+    Op names: PUB (owner only; args ``(msg, msg_len)``, result
+    ``(sent,)``) and RECV (args ``(window,)``, result
+    ``(msgs, lens, got)`` — the drained window).  State is the published
+    sequence plus one cursor per participant; a RECV must deliver
+    exactly the contiguous published prefix at its cursor, and a PUB is
+    granted iff the ring has space over the slowest cursor at its
+    linearization point.
+    """
+    reads_at_window_start = False
+    read_ops = ()
+
+    def __init__(self, capacity: int, width: int, nP: int):
+        self.capacity = int(capacity)
+        self.width = int(width)
+        self.P = int(nP)
+        self.zeros = (0,) * self.width
+
+    def init_state(self):
+        # frozen: (published ((msg, len), ...), cursors (c0, ..., cP-1))
+        return ((), (0,) * self.P)
+
+    def is_read(self, op: Op) -> bool:
+        return False
+
+    def check_read(self, frozen, op: Op) -> bool:  # pragma: no cover
+        raise AssertionError("ring spec has no read-class ops")
+
+    def apply(self, frozen, op: Op):
+        published, cursors = list(frozen[0]), list(frozen[1])
+        if op.name == "PUB":
+            sent = bool(op.result[0])
+            space = self.capacity - (len(published) - min(cursors))
+            if sent != (space > 0):
+                return None
+            if sent:
+                published.append((tuple(op.args[0]), int(op.args[1])))
+        elif op.name == "RECV":
+            window = int(op.args[0])
+            msgs, lens, got = op.result
+            cur = cursors[op.pid]
+            n = min(window, len(published) - cur)
+            if tuple(got) != (True,) * n + (False,) * (window - n):
+                return None
+            for k in range(window):
+                if k < n:
+                    exp_msg, exp_len = published[cur + k]
+                    if tuple(msgs[k]) != exp_msg or lens[k] != exp_len:
+                        return None
+                elif tuple(msgs[k]) != self.zeros or lens[k] != 0:
+                    return None
+            cursors[op.pid] = cur + n
+        else:
+            raise ValueError(f"unknown ring op {op.name!r}")
+        return (tuple(published), tuple(cursors))
+
+
+# ----------------------------------------------------------- the checker
+def _linear_extensions(spec, frozen, seqs: List[List[Op]]):
+    """All end-states reachable by interleaving the per-participant
+    mutation sequences ``seqs`` from ``frozen``, respecting each
+    sequence's internal order and the recorded results.
+
+    Iterative DFS memoized on (progress-vector, state): interleavings of
+    commuting ops converge on the same key and are explored once — the
+    Wing–Gong commutativity pruning that keeps an all-commuting window
+    linear in the op count instead of factorial.
+    """
+    n = len(seqs)
+    lens = tuple(len(s) for s in seqs)
+    results = set()
+    seen = set()
+    start = ((0,) * n, frozen)
+    stack = [start]
+    seen.add(start)
+    while stack:
+        pos, state = stack.pop()
+        if pos == lens:
+            results.add(state)
+            continue
+        for i in range(n):
+            if pos[i] < lens[i]:
+                nxt = spec.apply(state, seqs[i][pos[i]])
+                if nxt is None:
+                    continue
+                node = (pos[:i] + (pos[i] + 1,) + pos[i + 1:], nxt)
+                if node not in seen:
+                    seen.add(node)
+                    stack.append(node)
+    return results
+
+
+def check_history(spec, windows: List[List[Op]],
+                  max_states: int = 4096) -> Optional[Violation]:
+    """Check a recorded windowed history against ``spec``.
+
+    Returns None when some linearization explains every window, else a
+    :class:`Violation` naming the first inexplicable window.
+    ``max_states`` bounds the candidate-state set (a safety valve — the
+    torture configurations stay far below it; blowing the bound raises
+    rather than silently truncating the search).
+    """
+    states = {spec.init_state()}
+    for wi, window in enumerate(windows):
+        reads = [op for op in window if spec.is_read(op)]
+        mut_seqs: Dict[int, List[Op]] = {}
+        for op in sorted((o for o in window if not spec.is_read(o)),
+                         key=lambda o: (o.pid, o.lane)):
+            mut_seqs.setdefault(op.pid, []).append(op)
+        seqs = list(mut_seqs.values())
+        survivors = set()
+        reason = "read-class results match no candidate pre-state"
+        for frozen in states:
+            if not all(spec.check_read(frozen, r) for r in reads):
+                continue
+            reason = "no interleaving of the mutation lanes reproduces " \
+                     "the recorded results"
+            survivors |= _linear_extensions(spec, frozen, seqs)
+        if not survivors:
+            return Violation(window=wi, ops=tuple(window),
+                             n_pre_states=len(states), reason=reason)
+        if len(survivors) > max_states:
+            raise RuntimeError(
+                f"candidate-state set blew past {max_states} at window "
+                f"{wi} — shrink the torture window, don't truncate")
+        states = survivors
+    return None

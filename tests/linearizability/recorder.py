@@ -1,0 +1,141 @@
+"""History recorder — wraps any channel's window ops (DESIGN.md §11.3).
+
+Each ``record_*`` method takes the *inputs* a jitted window step was
+called with plus the *device results* it returned (as returned by
+``mgr.runtime.run`` — leading (P,) participant axis), converts them to
+one window of :class:`linearizability.checker.Op` invocations, and
+appends it to ``self.windows``.  The accumulated history feeds
+:func:`linearizability.checker.check_history` directly.
+
+Wrapping a NEW channel is one method: convert the verb call's
+(inputs, results) to per-lane ``Op(pid, lane, name, args, result)``
+tuples — everything hashable, masked lanes skipped — and append the
+list.  The checker needs nothing else (the partial order comes from the
+window structure itself).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DELETE, GET, INSERT, MOVE, NOP, UPDATE
+
+from .checker import Op
+
+KV_OP_NAMES = {int(NOP): "NOP", int(GET): "GET", int(INSERT): "INSERT",
+               int(UPDATE): "UPDATE", int(DELETE): "DELETE",
+               int(MOVE): "MOVE"}
+
+
+class HistoryRecorder:
+    def __init__(self):
+        self.windows = []
+
+    # -- kvstore ------------------------------------------------------------
+    def record_kv_window(self, ops, keys, values, result):
+        """One ``op_window`` call: ops/keys (P, B), values (P, B, W),
+        ``result`` a KVResult with found (P, B) and value (P, B, W)."""
+        ops = np.asarray(ops)
+        keys = np.asarray(keys)
+        values = np.asarray(values)
+        found = np.asarray(result.found)
+        out_val = np.asarray(result.value)
+        window = []
+        for p in range(ops.shape[0]):
+            for b in range(ops.shape[1]):
+                name = KV_OP_NAMES[int(ops[p, b])]
+                if name in ("GET", "NOP"):
+                    window.append(Op(p, b, name, (int(keys[p, b]),),
+                                     (bool(found[p, b]),
+                                      tuple(int(x) for x in out_val[p, b]))))
+                elif name == "MOVE":
+                    window.append(Op(p, b, name, (int(keys[p, b]),),
+                                     (bool(found[p, b]),)))
+                else:
+                    window.append(Op(
+                        p, b, name,
+                        (int(keys[p, b]),
+                         tuple(int(x) for x in values[p, b])),
+                        (bool(found[p, b]),)))
+        self.windows.append(window)
+
+    def record_kv_move_window(self, keys, dests, preds, moved):
+        """One ``migrate_window`` call: keys/dests/preds (P, B),
+        ``moved`` (P, B) bool."""
+        keys = np.asarray(keys)
+        preds = np.asarray(preds, bool)
+        moved = np.asarray(moved)
+        window = []
+        for p in range(keys.shape[0]):
+            for b in range(keys.shape[1]):
+                if preds[p, b]:
+                    window.append(Op(p, b, "MOVE", (int(keys[p, b]),),
+                                     (bool(moved[p, b]),)))
+        if window:
+            self.windows.append(window)
+
+    # -- shared queue -------------------------------------------------------
+    def record_queue_enqueue(self, values, preds, grant):
+        """One ``enqueue_window`` call: values (P, B, width), preds and
+        grant (P, B)."""
+        values = np.asarray(values)
+        preds = np.asarray(preds, bool)
+        grant = np.asarray(grant)
+        window = []
+        for p in range(preds.shape[0]):
+            for b in range(preds.shape[1]):
+                if preds[p, b]:
+                    window.append(Op(
+                        p, b, "ENQ",
+                        (tuple(int(x) for x in values[p, b]),),
+                        (bool(grant[p, b]),)))
+        if window:
+            self.windows.append(window)
+
+    def record_queue_dequeue(self, preds, values, ok):
+        """One ``dequeue_window`` call: preds (P, B), values
+        (P, B, width), ok (P, B)."""
+        preds = np.asarray(preds, bool)
+        values = np.asarray(values)
+        ok = np.asarray(ok)
+        window = []
+        for p in range(preds.shape[0]):
+            for b in range(preds.shape[1]):
+                if preds[p, b]:
+                    window.append(Op(
+                        p, b, "DEQ", (),
+                        (bool(ok[p, b]),
+                         tuple(int(x) for x in values[p, b]))))
+        if window:
+            self.windows.append(window)
+
+    # -- ringbuffer ---------------------------------------------------------
+    def record_ring_publish(self, owner, msgs, lens, sent):
+        """One ``publish_window`` call: msgs (P, B, width), lens (P, B),
+        sent (P, B).  Only the owner's lanes publish."""
+        msgs = np.asarray(msgs)
+        lens = np.asarray(lens)
+        sent = np.asarray(sent)
+        window = []
+        for b in range(msgs.shape[1]):
+            window.append(Op(
+                int(owner), b, "PUB",
+                (tuple(int(x) for x in msgs[owner, b]),
+                 int(lens[owner, b])),
+                (bool(sent[owner, b]),)))
+        self.windows.append(window)
+
+    def record_ring_recv(self, window_size, msgs, lens, got):
+        """One ``recv_window`` call: msgs (P, window, width), lens and
+        got (P, window) — every participant drains concurrently."""
+        msgs = np.asarray(msgs)
+        lens = np.asarray(lens)
+        got = np.asarray(got)
+        window = []
+        for p in range(msgs.shape[0]):
+            window.append(Op(
+                p, 0, "RECV", (int(window_size),),
+                (tuple(tuple(int(x) for x in msgs[p, k])
+                       for k in range(window_size)),
+                 tuple(int(lens[p, k]) for k in range(window_size)),
+                 tuple(bool(got[p, k]) for k in range(window_size)))))
+        self.windows.append(window)

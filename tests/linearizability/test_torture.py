@@ -1,0 +1,418 @@
+"""Linearizability torture suite (DESIGN.md §11.3).
+
+Generates random (P, B, schedule, op-mix) interleavings, executes them
+on the real channels, records the concurrent histories and checks them
+against the sequential specifications with the Wing–Gong checker:
+
+* KVStore — locked windows, the lock-free commuting fast path (§11),
+  the cached read tier (§8) and the migration path (§10.2), each ≥ 200
+  random windows in the default (CI) run;
+* SharedQueue — windowed enqueue/dequeue under tight capacities;
+* Ringbuffer — windowed publish/drain across all consumers.
+
+``@pytest.mark.torture`` variants run the same generators with longer
+sweeps (nightly-style; excluded from tier-1 by pytest.ini addopts).
+
+The suite also carries the seeded **mutation test**: flipping
+``repro.core.kvstore._MUTATE_FASTPATH_WINNER`` deliberately breaks the
+same-key UPDATE commutativity rule (first-lex winner instead of last),
+and the checker must flag the resulting history — the demonstration
+that the harness has teeth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DELETE, GET, INSERT, MOVE, NOP, UPDATE, KVStore,
+                        Ringbuffer, SharedQueue, make_manager)
+
+from linearizability import (HistoryRecorder, KVSpec, Op, QueueSpec,
+                             RingSpec, check_history)
+
+W = 2                    # kv value width used throughout
+
+
+def _assert_ok(violation, label, seed):
+    assert violation is None, \
+        f"[{label}, seed={seed}]\n{violation}"
+
+
+# ---------------------------------------------------------------- harnesses
+class _KVHarness:
+    """One jitted window step per (P, B, variant), shared across cases."""
+    _cache = {}
+
+    def __new__(cls, nP, B, variant):
+        key = (nP, B, variant)
+        if key not in cls._cache:
+            cls._cache[key] = super().__new__(cls)
+            cls._cache[key]._build(nP, B, variant)
+        return cls._cache[key]
+
+    def _build(self, nP, B, variant):
+        self.P, self.B, self.variant = nP, B, variant
+        self.mgr = make_manager(nP)
+        # ample capacity: the torture key space (≤ 12 keys) can never
+        # exhaust slots or index, so every failure the spec must explain
+        # is semantic (insert-existing / update-missing / ...)
+        kw = dict(slots_per_node=32, value_width=W,
+                  num_locks=8, index_capacity=256)
+        if variant == "cached":
+            kw["cache_slots"] = 16
+        if variant == "lockfree":
+            kw["lockfree"] = True
+        self.kv = KVStore(None, f"tkv_{nP}_{B}_{variant}", self.mgr, **kw)
+        self.step = jax.jit(lambda s, o, k, v: self.mgr.runtime.run(
+            self.kv.op_window, s, o, k, v))
+        self.move = jax.jit(lambda s, k, d: self.mgr.runtime.run(
+            self.kv.migrate_window, s, k, d)) \
+            if variant == "migrating" else None
+
+
+class _QueueHarness:
+    _cache = {}
+
+    def __new__(cls, nP, B, spn):
+        key = (nP, B, spn)
+        if key not in cls._cache:
+            cls._cache[key] = super().__new__(cls)
+            cls._cache[key]._build(nP, B, spn)
+        return cls._cache[key]
+
+    def _build(self, nP, B, spn):
+        self.P, self.B = nP, B
+        self.mgr = make_manager(nP)
+        self.q = SharedQueue(None, f"tq_{nP}_{B}_{spn}", self.mgr,
+                             slots_per_node=spn, width=1)
+        self.enq = jax.jit(lambda s, v, p: self.mgr.runtime.run(
+            self.q.enqueue_window, s, v, p))
+        self.deq = jax.jit(lambda s, p: self.mgr.runtime.run(
+            self.q.dequeue_window, s, p))
+
+
+class _RingHarness:
+    _cache = {}
+
+    def __new__(cls, nP, B, cap, recv_w):
+        key = (nP, B, cap, recv_w)
+        if key not in cls._cache:
+            cls._cache[key] = super().__new__(cls)
+            cls._cache[key]._build(nP, B, cap, recv_w)
+        return cls._cache[key]
+
+    def _build(self, nP, B, cap, recv_w):
+        self.P, self.B, self.recv_w = nP, B, recv_w
+        self.mgr = make_manager(nP)
+        self.rb = Ringbuffer(None, f"trb_{nP}_{B}_{cap}", self.mgr,
+                             owner=0, capacity=cap, width=W)
+        self.pub = jax.jit(lambda s, m, l: self.mgr.runtime.run(
+            self.rb.publish_window, s, m, l))
+        self.recv = jax.jit(lambda s: self.mgr.runtime.run(
+            lambda st: self.rb.recv_window(st, recv_w), s))
+
+
+# ----------------------------------------------------------- kv generators
+def run_kv_history(h: _KVHarness, rng: np.random.Generator, n_windows: int,
+                   key_space: int = 8):
+    """Execute ``n_windows`` random windows on harness ``h``, recording
+    the history.  The op mix is itself randomized per history (sometimes
+    UPDATE-heavy → lock-free fast windows, sometimes GET-only, sometimes
+    churn-heavy), so schedules range from all-commuting to conflict
+    chains.  Returns the recorder (``len(windows) ≥ n_windows``)."""
+    rec = HistoryRecorder()
+    st = h.kv.init_state()
+    mixes = [
+        # NOP   GET  INSERT UPDATE DELETE
+        [0.10, 0.25, 0.25, 0.25, 0.15],      # balanced churn
+        [0.05, 0.15, 0.10, 0.65, 0.05],      # update-heavy (fast windows)
+        [0.10, 0.80, 0.00, 0.10, 0.00],      # read-heavy (pure-GET windows)
+        [0.05, 0.10, 0.45, 0.10, 0.30],      # insert/delete churn
+    ]
+    codes = np.asarray([NOP, GET, INSERT, UPDATE, DELETE], np.int32)
+    mix = mixes[int(rng.integers(len(mixes)))]
+    for _w in range(n_windows):
+        ops = rng.choice(codes, size=(h.P, h.B), p=mix)
+        keys = rng.integers(1, key_space + 1,
+                            size=(h.P, h.B)).astype(np.uint32)
+        vals = rng.integers(-99, 100, size=(h.P, h.B, W)).astype(np.int32)
+        st, res = h.step(st, jnp.asarray(ops), jnp.asarray(keys),
+                         jnp.asarray(vals))
+        rec.record_kv_window(ops, keys, vals, res)
+        if h.move is not None and rng.random() < 0.5:
+            mk = rng.integers(1, key_space + 1,
+                              size=(h.P, 1)).astype(np.uint32)
+            md = rng.integers(0, h.P, size=(h.P, 1)).astype(np.int32)
+            st, moved = h.move(st, jnp.asarray(mk), jnp.asarray(md))
+            rec.record_kv_move_window(
+                mk, md, np.ones((h.P, 1), bool), moved)
+    return rec
+
+
+def sweep_kv(variant, configs, histories, n_windows, min_windows,
+             seed0=0, key_space=8):
+    total = 0
+    for nP, B in configs:
+        h = _KVHarness(nP, B, variant)
+        for i in range(histories):
+            seed = seed0 + i
+            rng = np.random.default_rng(seed)
+            rec = run_kv_history(h, rng, n_windows, key_space=key_space)
+            _assert_ok(check_history(KVSpec(W), rec.windows),
+                       f"kv/{variant} P={nP} B={B}", seed)
+            total += len(rec.windows)
+    assert total >= min_windows, (total, min_windows)
+
+
+# -------------------------------------------------------------- kv channels
+def test_torture_kvstore_locked():
+    sweep_kv("locked", [(2, 2), (4, 2)], histories=7, n_windows=15,
+             min_windows=200)
+
+
+def test_torture_kvstore_lockfree():
+    sweep_kv("lockfree", [(4, 2)], histories=14, n_windows=15,
+             min_windows=200, seed0=100)
+
+
+def test_torture_readcache():
+    sweep_kv("cached", [(2, 2)], histories=14, n_windows=15,
+             min_windows=200, seed0=200)
+
+
+def test_torture_migration():
+    # op windows + interleaved MOVE windows; the recorder counts both
+    sweep_kv("migrating", [(2, 2)], histories=10, n_windows=14,
+             min_windows=200, seed0=300)
+
+
+@pytest.mark.torture
+def test_torture_kvstore_long():
+    sweep_kv("locked", [(2, 2), (4, 2)], histories=25, n_windows=30,
+             min_windows=1500, seed0=1000, key_space=12)
+    sweep_kv("lockfree", [(4, 2)], histories=25, n_windows=30,
+             min_windows=750, seed0=2000, key_space=12)
+    sweep_kv("cached", [(2, 2)], histories=25, n_windows=30,
+             min_windows=750, seed0=3000, key_space=12)
+    sweep_kv("migrating", [(2, 2)], histories=20, n_windows=25,
+             min_windows=500, seed0=4000, key_space=12)
+
+
+# ------------------------------------------------------------ shared queue
+def run_queue_history(h: _QueueHarness, rng, n_rounds):
+    rec = HistoryRecorder()
+    st = h.q.init_state()
+    counter = 1
+    for _r in range(n_rounds):
+        ew = rng.random(size=(h.P, h.B)) < 0.6
+        vals = np.arange(counter, counter + h.P * h.B,
+                         dtype=np.int32).reshape(h.P, h.B, 1)
+        counter += h.P * h.B
+        st, grant = h.enq(st, jnp.asarray(vals), jnp.asarray(ew))
+        rec.record_queue_enqueue(vals, ew, grant)
+        dw = rng.random(size=(h.P, h.B)) < 0.6
+        st, dvals, ok = h.deq(st, jnp.asarray(dw))
+        rec.record_queue_dequeue(dw, dvals, ok)
+    return rec
+
+
+def sweep_queue(configs, histories, n_rounds, min_windows, seed0=0):
+    total = 0
+    for nP, B, spn in configs:
+        h = _QueueHarness(nP, B, spn)
+        for i in range(histories):
+            seed = seed0 + i
+            rng = np.random.default_rng(seed)
+            rec = run_queue_history(h, rng, n_rounds)
+            _assert_ok(
+                check_history(QueueSpec(h.q.capacity, 1), rec.windows),
+                f"queue P={nP} B={B} spn={spn}", seed)
+            total += len(rec.windows)
+    assert total >= min_windows, (total, min_windows)
+
+
+def test_torture_queue():
+    # spn=1 keeps the queue tight (capacity = P): flow-control rejections
+    # and empty pops are routine, not edge cases
+    sweep_queue([(4, 2, 1), (2, 2, 2)], histories=6, n_rounds=10,
+                min_windows=200, seed0=500)
+
+
+@pytest.mark.torture
+def test_torture_queue_long():
+    sweep_queue([(4, 2, 1), (2, 2, 2), (4, 1, 2)], histories=15,
+                n_rounds=25, min_windows=2000, seed0=5000)
+
+
+# -------------------------------------------------------------- ringbuffer
+def run_ring_history(h: _RingHarness, rng, n_rounds):
+    rec = HistoryRecorder()
+    st = h.rb.init_state()
+    counter = 1
+    for _r in range(n_rounds):
+        if rng.random() < 0.6:
+            msgs = np.arange(counter, counter + h.B * W,
+                             dtype=np.int32).reshape(h.B, W)
+            counter += h.B * W
+            lens = rng.integers(1, W + 1, size=(h.B,)).astype(np.int32)
+            st, sent, _ack = h.pub(
+                st, jnp.broadcast_to(jnp.asarray(msgs), (h.P, h.B, W)),
+                jnp.broadcast_to(jnp.asarray(lens), (h.P, h.B)))
+            rec.record_ring_publish(
+                0, np.broadcast_to(msgs, (h.P, h.B, W)),
+                np.broadcast_to(lens, (h.P, h.B)), sent)
+        else:
+            st, msgs, lens, got = h.recv(st)
+            rec.record_ring_recv(h.recv_w, msgs, lens, got)
+    return rec
+
+
+def sweep_ring(configs, histories, n_rounds, min_windows, seed0=0):
+    total = 0
+    for nP, B, cap, recv_w in configs:
+        h = _RingHarness(nP, B, cap, recv_w)
+        for i in range(histories):
+            seed = seed0 + i
+            rng = np.random.default_rng(seed)
+            rec = run_ring_history(h, rng, n_rounds)
+            _assert_ok(
+                check_history(RingSpec(cap, W, nP), rec.windows),
+                f"ring P={nP} B={B} cap={cap}", seed)
+            total += len(rec.windows)
+    assert total >= min_windows, (total, min_windows)
+
+
+def test_torture_ringbuffer():
+    # cap=4 with B=2 publishes keeps flow control live (a publish window
+    # can outrun the slowest cursor and lose its grant suffix... which
+    # the prefix-grant contract forbids mid-window — the spec checks it)
+    sweep_ring([(4, 2, 6, 3), (2, 2, 4, 2)], histories=9, n_rounds=12,
+               min_windows=200, seed0=700)
+
+
+@pytest.mark.torture
+def test_torture_ringbuffer_long():
+    sweep_ring([(4, 2, 6, 3), (2, 2, 4, 2), (4, 1, 8, 4)], histories=20,
+               n_rounds=30, min_windows=1500, seed0=7000)
+
+
+# ---------------------------------------------------- checker self-tests
+def _kv_op(p, b, name, key, val=None, found=True, got=None):
+    if name in ("GET", "NOP"):
+        return Op(p, b, name, (key,), (found, got or (0,) * W))
+    if name == "MOVE":
+        return Op(p, b, name, (key,), (found,))
+    return Op(p, b, name, (key, val), (found,))
+
+
+def test_checker_accepts_valid_history():
+    hist = [
+        [_kv_op(0, 0, "INSERT", 1, (7, 7)), _kv_op(1, 0, "GET", 1,
+                                                   found=False)],
+        [_kv_op(0, 0, "UPDATE", 1, (8, 8)),
+         _kv_op(1, 0, "UPDATE", 1, (9, 9))],
+        [_kv_op(0, 0, "GET", 1, found=True, got=(8, 8))],
+    ]
+    assert check_history(KVSpec(W), hist) is None
+    hist[2] = [_kv_op(0, 0, "GET", 1, found=True, got=(9, 9))]
+    assert check_history(KVSpec(W), hist) is None
+
+
+def test_checker_rejects_stale_read_and_lost_update():
+    # a GET observing a value no linearization produced
+    hist = [
+        [_kv_op(0, 0, "INSERT", 1, (7, 7))],
+        [_kv_op(0, 0, "UPDATE", 1, (8, 8))],
+        [_kv_op(0, 0, "GET", 1, found=True, got=(7, 7))],
+    ]
+    v = check_history(KVSpec(W), hist)
+    assert v is not None and v.window == 2
+    # same-participant program order: lane 1 must supersede lane 0
+    hist2 = [
+        [_kv_op(0, 0, "INSERT", 1, (7, 7))],
+        [_kv_op(0, 0, "UPDATE", 1, (8, 8)),
+         _kv_op(0, 1, "UPDATE", 1, (9, 9))],
+        [_kv_op(0, 0, "GET", 1, found=True, got=(8, 8))],
+    ]
+    v = check_history(KVSpec(W), hist2)
+    assert v is not None and v.window == 2, \
+        "program order within a participant must be enforced"
+
+
+def test_checker_rejects_queue_duplication_and_reorder():
+    spec = QueueSpec(capacity=8, width=1)
+    enq = [Op(0, 0, "ENQ", ((1,),), (True,)),
+           Op(0, 1, "ENQ", ((2,),), (True,))]
+    dup = [enq, [Op(0, 0, "DEQ", (), (True, (1,))),
+                 Op(1, 0, "DEQ", (), (True, (1,)))]]
+    assert check_history(spec, dup) is not None
+    fifo = [enq, [Op(0, 0, "DEQ", (), (True, (2,)))]]
+    assert check_history(spec, fifo) is not None       # 2 before 1: reorder
+    ok = [enq, [Op(0, 0, "DEQ", (), (True, (1,))),
+                Op(1, 0, "DEQ", (), (True, (2,)))]]
+    assert check_history(spec, ok) is None
+
+
+def test_checker_rejects_forged_ring_delivery():
+    spec = RingSpec(capacity=8, width=W, nP=2)
+    hist = [
+        [Op(0, 0, "PUB", ((5, 6), 2), (True,))],
+        [Op(1, 0, "RECV", (1,), (((5, 7),), (2,), (True,)))],  # wrong word
+    ]
+    assert check_history(spec, hist) is not None
+    hist[1] = [Op(1, 0, "RECV", (1,), (((5, 6),), (2,), (True,)))]
+    assert check_history(spec, hist) is None
+
+
+# ------------------------------------------------------- seeded mutation
+def test_mutation_broken_commutativity_is_caught():
+    """Seeded mutation test: flip the fast path's winner rule to
+    first-lex (``_MUTATE_FASTPATH_WINNER``) and the torture harness must
+    catch it — a same-participant same-key UPDATE pair now resolves
+    against program order, and the checker flags the follow-up GET.
+    This is the demonstration that the harness detects a broken
+    commutativity rule, not just crashes."""
+    from repro.core import kvstore as kvstore_mod
+    assert not kvstore_mod._MUTATE_FASTPATH_WINNER
+    kvstore_mod._MUTATE_FASTPATH_WINNER = True
+    try:
+        # fresh manager + store + jit: the flag is trace-time
+        mgr = make_manager(2)
+        kv = KVStore(None, "tkv_mut", mgr, slots_per_node=8,
+                     value_width=W, num_locks=4, index_capacity=64,
+                     lockfree=True)
+        step = jax.jit(lambda s, o, k, v: mgr.runtime.run(
+            kv.op_window, s, o, k, v))
+        rec = HistoryRecorder()
+        st = kv.init_state()
+
+        def run(ops, keys, vals):
+            nonlocal st
+            ops = np.asarray(ops, np.int32)
+            keys = np.asarray(keys, np.uint32)
+            vals = np.asarray(vals, np.int32)
+            st, res = step(st, jnp.asarray(ops), jnp.asarray(keys),
+                           jnp.asarray(vals))
+            rec.record_kv_window(ops, keys, vals, res)
+
+        zeros = np.zeros((2, 2, W), np.int32)
+        run([[INSERT, NOP], [NOP, NOP]],
+            [[1, 1], [1, 1]],
+            np.full((2, 2, W), 7, np.int32))
+        # the commuting fast window: participant 0 updates key 1 twice —
+        # program order says lane 1's value must win
+        vals = np.zeros((2, 2, W), np.int32)
+        vals[0, 0] = 11
+        vals[0, 1] = 22
+        run([[UPDATE, UPDATE], [NOP, NOP]],
+            [[1, 1], [1, 1]], vals)
+        run([[GET, NOP], [GET, NOP]],
+            [[1, 1], [1, 1]], zeros)
+        v = check_history(KVSpec(W), rec.windows)
+        assert v is not None, \
+            "checker failed to catch the broken commutativity rule"
+        assert v.window == 2, str(v)
+    finally:
+        kvstore_mod._MUTATE_FASTPATH_WINNER = False

@@ -615,6 +615,76 @@ class TestHotTrackerAndRebalance:
         assert bool(jnp.all(ff[0]))
         assert total == 0.0, "rebalanced hot rows must read locally"
 
+    def test_destination_full_migrations_defer_and_retry(self):
+        """Regression (§10.3 silent deferral): a rebalance proposal whose
+        destination free stack is exhausted used to fail its MOVE
+        indistinguishably from "nothing left to move".  Now the deferral
+        is counted in ``st.heat.backlog`` (cluster-wide, surfaced by the
+        engine as stats()["locality"]["migration_backlog"]) — and because
+        the heat evidence persists, the deferred proposal retries and
+        executes on the next ``rebalance()`` once the destination frees
+        space."""
+        m2 = make_manager(P)
+        kv = KVStore(None, "loc_backlog", m2, slots_per_node=2,
+                     value_width=W, num_locks=8, index_capacity=64,
+                     track_heat=True)
+        step = jax.jit(lambda st, o, k, v_: m2.runtime.run(
+            kv.op_window, st, o, k, v_))
+        getb = jax.jit(lambda st, k, p: m2.runtime.run(
+            lambda s, kk, pp: kv.get_batch(s, kk, pred=pp), st, k, p))
+        reb = jax.jit(lambda st: m2.runtime.run(
+            lambda s: kv.rebalance(s, P), st))
+
+        def backlog(st):
+            return int(np.asarray(st.heat.backlog)[0])
+
+        st = kv.init_state()
+        # node 0 completely full (both its slots), nodes 1/2 hold the
+        # keys participant 0 will hammer
+        w = [[(INSERT, 1, v(1), 0), (INSERT, 2, v(2), 0)],
+             [(INSERT, 11, v(11), 0), NOPR],
+             [(INSERT, 12, v(12), 0), NOPR],
+             [NOPR, NOPR]]
+        op, key, val, _t = arrs(w)
+        st, res = step(st, op, key, val)
+        assert bool(np.asarray(res.found)[0, 0]) \
+            and bool(np.asarray(res.found)[0, 1])
+        assert backlog(st) == 0
+        # participant 0 becomes the dominant reader of keys 11 and 12
+        rk = jnp.broadcast_to(jnp.asarray([11, 12], jnp.uint32), (P, 2))
+        pred = jnp.zeros((P, 2), bool).at[0].set(True)
+        for _ in range(4):
+            st, _vv, ff = getb(st, rk, pred)
+            assert bool(jnp.all(ff[0]))
+        # both proposals target node 0 — destination full, both deferred
+        st, n1 = reb(st)
+        assert int(np.asarray(n1)[0]) == 0
+        assert backlog(st) == 2, "deferred proposals must be counted"
+        locs = key_locations(st)
+        assert locs[11][0] == 1 and locs[12][0] == 2
+        # free ONE destination slot → exactly one deferral retries
+        op = jnp.asarray([[DELETE, NOP]] + [[NOP, NOP]] * (P - 1),
+                         jnp.int32)
+        st, res = step(st, op, jnp.full((P, 2), 1, jnp.uint32),
+                       jnp.zeros((P, 2, W), jnp.int32))
+        assert bool(np.asarray(res.found)[0, 0])
+        st, n2 = reb(st)
+        assert int(np.asarray(n2)[0]) == 1, \
+            "a deferred proposal must retry once space frees"
+        assert backlog(st) == 1
+        # free the second slot → the last deferral drains, backlog zero
+        op = jnp.asarray([[DELETE, NOP]] + [[NOP, NOP]] * (P - 1),
+                         jnp.int32)
+        st, res = step(st, op, jnp.full((P, 2), 2, jnp.uint32),
+                       jnp.zeros((P, 2, W), jnp.int32))
+        assert bool(np.asarray(res.found)[0, 0])
+        st, n3 = reb(st)
+        assert int(np.asarray(n3)[0]) == 1
+        assert backlog(st) == 0
+        locs = key_locations(st)
+        assert locs[11][0] == 0 and locs[12][0] == 0, \
+            "retried proposals must land at the dominant reader"
+
     def test_rebalance_requires_heat_tracking(self):
         with pytest.raises(ValueError, match="track_heat"):
             mgr.runtime.run(lambda s: kv_plain.rebalance(s, 4),

@@ -20,6 +20,10 @@ Invariants checked:
   on every interleaved GET/UPDATE/DELETE window.
 * atomic_var FAA: tickets are a permutation (mutual exclusion of tickets).
 * checksum: detects any single-lane corruption; deterministic.
+* lock-free fast path (§11): a lockfree twin store returns bit-identical
+  results AND bit-identical state leaves to the locked spec on every
+  random window, and the recorded concurrent history passes the
+  tests/linearizability Wing–Gong checker.
 
 Requires ``hypothesis`` (requirements-dev.txt); skips cleanly without it.
 """
@@ -565,6 +569,59 @@ def test_migration_transparent_to_interleaved_ops(rounds):
         mk = jnp.asarray([[m[0]] for m in moves], jnp.uint32)
         md = jnp.asarray([[m[1]] for m in moves], jnp.int32)
         st_a, _moved = _mig_move(st_a, mk, md)
+
+
+# ---------------------------------------------- lock-free fast path (§11)
+_lf_mgr = make_manager(P)
+_lf_kw = dict(slots_per_node=8, value_width=2, num_locks=8,
+              index_capacity=64)
+_lf_locked = KVStore(None, "plf_locked", _lf_mgr, **_lf_kw)
+_lf_fast = KVStore(None, "plf_fast", _lf_mgr, lockfree=True, **_lf_kw)
+
+
+@jax.jit
+def _lf_step(lst, fst, op, key, val):
+    def prog(lst, fst, op, key, val):
+        lst, ra = _lf_locked.op_window(lst, op, key, val)
+        fst, rb = _lf_fast.op_window(fst, op, key, val)
+        return lst, fst, ra, rb
+    return _lf_mgr.runtime.run(prog, lst, fst, op, key, val)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(
+    st.lists(st.lists(op_strategy, min_size=2, max_size=2),
+             min_size=P, max_size=P),
+    min_size=1, max_size=4))
+def test_lockfree_windows_bitwise_equal_locked_and_linearizable(batches):
+    """The §11 pinning property: on every random window history, the
+    lock-free store (commuting windows served without lock acquisition,
+    mixed windows falling back) commits bit-identical state leaves and
+    result lanes to the locked executable spec — and the recorded
+    concurrent history passes the torture harness's linearizability
+    checker."""
+    from linearizability import HistoryRecorder, KVSpec, check_history
+    lst, fst = _lf_locked.init_state(), _lf_fast.init_state()
+    rec = HistoryRecorder()
+    for rnd, lanes in enumerate(batches):
+        op = jnp.asarray([[o for o, _k in lane] for lane in lanes],
+                         jnp.int32)
+        key = jnp.asarray([[k for _o, k in lane] for lane in lanes],
+                          jnp.uint32)
+        val = jnp.asarray([[kvmod.v(k, rnd * 2 + b)
+                            for b, (_o, k) in enumerate(lane)]
+                           for lane in lanes], jnp.int32)
+        lst, fst, ra, rb = _lf_step(lst, fst, op, key, val)
+        for la, lb in zip(ra, rb):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=f"window {rnd}")
+        diverged = diverging_leaves(lst, fst)
+        assert not diverged, \
+            f"lockfree diverged from locked spec on {diverged} " \
+            f"after window {rnd}"
+        rec.record_kv_window(op, key, val, rb)
+    violation = check_history(KVSpec(2), rec.windows)
+    assert violation is None, str(violation)
 
 
 # ------------------------------------------------------------------ FAA tickets

@@ -44,6 +44,19 @@ def lead_append_sync(lst, fst, gst, op, key, val):
 
 
 @jax.jit
+def lead_lockfree_append_sync(lst, fst, gst, op, key, val):
+    """Leader serves the window through the §11 lock-free fast path;
+    the follower replays the exported records through the locked
+    executable spec (``log.sync`` → ``op_window`` default path)."""
+    def prog(lst, fst, gst, op, key, val):
+        lst, res = leader.op_window(lst, op, key, val, lockfree=True)
+        gst, ok = log.append(gst, op, key, val)
+        gst, fst, applied = log.sync(gst, follower, fst, max_entries=1)
+        return lst, fst, gst, res, ok, applied
+    return mgr.runtime.run(prog, lst, fst, gst, op, key, val)
+
+
+@jax.jit
 def append_only(lst, gst, op, key, val):
     def prog(lst, gst, op, key, val):
         lst, _res = leader.op_window(lst, op, key, val)
@@ -114,6 +127,49 @@ class TestReplicatedLog:
             assert np.all(np.asarray(ok)), "append must land (ring sized)"
             np.testing.assert_array_equal(np.asarray(applied), [1] * P)
             assert_converged(lst, fst)
+        lag = np.asarray(mgr.runtime.run(log.lag, gst))
+        np.testing.assert_array_equal(lag, [0] * P)
+
+    def test_lockfree_window_replays_bitwise_through_locked_spec(self):
+        """§11 replication invariant: a leader that serves a commuting
+        (all-UPDATE) window through the lock-free fast path exports the
+        same records and commits the same state bits as the locked spec
+        — so a follower replaying through the LOCKED path converges
+        bitwise on every leaf, lock counters included (``locks`` is not
+        in the diverging_leaves skip-list)."""
+        lst, fst, gst = states()
+        seed = window([(INSERT, 1, (10, 11)), (INSERT, 5, (50, 51))],
+                      [(INSERT, 2, (20, 21)), NL],
+                      [NL, (INSERT, 3, (30, 31))],
+                      [(INSERT, 4, (40, 41)), NL])
+        # mixed window through the lock-free step → falls back to the
+        # locked schedule (win_fast=False), still bit-identical
+        lst, fst, gst, res, ok, _applied = lead_lockfree_append_sync(
+            lst, fst, gst, *seed)
+        assert np.all(np.asarray(ok))
+        assert_converged(lst, fst)
+        rounds = [
+            # commuting fast window: all lock-wanting lanes UPDATE,
+            # including a cross-participant same-key pair (keys 1, 3)
+            window([(UPDATE, 1, (12, 13)), (UPDATE, 5, (52, 53))],
+                   [(UPDATE, 2, (22, 23)), (GET, 1, (0, 0))],
+                   [(GET, 3, (0, 0)), (UPDATE, 3, (32, 33))],
+                   [(UPDATE, 1, (14, 15)), NL]),
+            # pure-GET window: vacuously fast, zero mutations to replay
+            window([(GET, 1, (0, 0)), (GET, 5, (0, 0))],
+                   [(GET, 2, (0, 0)), NL],
+                   [(GET, 3, (0, 0)), (GET, 4, (0, 0))],
+                   [NL, (GET, 1, (0, 0))]),
+        ]
+        for op, key, val in rounds:
+            lst, fst, gst, res, ok, _applied = lead_lockfree_append_sync(
+                lst, fst, gst, op, key, val)
+            assert np.all(np.asarray(ok)), "append must land (ring sized)"
+            assert_converged(lst, fst)
+        # the same-key UPDATE race resolved last-(participant, lane)-wins
+        # on BOTH sides: the replayed follower serves the winning value
+        got = np.asarray(res.value)
+        np.testing.assert_array_equal(got[3, 1], [14, 15])
         lag = np.asarray(mgr.runtime.run(log.lag, gst))
         np.testing.assert_array_equal(lag, [0] * P)
 

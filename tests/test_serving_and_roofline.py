@@ -29,6 +29,10 @@ class TestServingEngine:
         assert stats["kv_ops"][INSERT] == stats["kv_ops"][DELETE]
         assert stats["kv_ops"][GET] >= 4
         assert "modeled_wire_bytes" in stats
+        # §10.3 deferral visibility: admission-time explicit placement
+        # never runs a rebalance, so the backlog must read zero (the
+        # counter itself is exercised in test_locality.py)
+        assert stats["locality"]["migration_backlog"] == 0
 
     def test_generate_with_replicated_page_table(self):
         """replicas= mode (DESIGN.md §9.3): every mutation window is

@@ -1,0 +1,277 @@
+"""Failover benchmark (DESIGN.md §12): epoch-fenced leader promotion on
+the replication tier.
+
+The scenario is the one the §12 protocol exists for, end to end:
+
+1. steady state — mixed mutation windows through the leader kvstore,
+   each ``append``-ed to the ReplicatedLog and ``sync``-ed by two
+   follower stores (lag 0 every window);
+2. the last pre-crash window is **acked but unsynced**: the leader's
+   publish succeeded (the client saw ok) but no follower drained it —
+   the exact window a naive failover loses;
+3. the leader dies mid-window (a ``FaultPlan`` kill); a follower is
+   **promoted** — one SST epoch/cursor gather elects the highest applied
+   cursor (rank tie-break), a fence write moves every live participant
+   to epoch+1, and the winner re-owns the ring and re-publishes the
+   unacked suffix from its own cached slots;
+4. followers catch up (bounded: the suffix is at most the ring capacity,
+   so recovery is ≤ capacity sync windows);
+5. the in-flight window is retried through the new leader
+   (``append_with_retry`` — the client-redirect path);
+6. a **zombie publish** from the dead leader lands in the ring at the
+   stale epoch (one-sided writes ask no permission) and every live
+   follower fences it at delivery — consumed, never applied, counted;
+7. more windows flow through the new leader.
+
+Asserted invariants (the ISSUE-7 acceptance bar; they gate smoke runs
+too — they are correctness, not load-sensitive wall time):
+
+* **zero acked-window loss** — every window whose append returned ok is
+  bitwise-present in both followers: ``diverging_leaves(leader, f) == []``
+  for every follower after recovery (the leader store applied exactly
+  the acked windows);
+* the zombie entry is fenced by every live follower and shows up in the
+  log's ``fenced`` counter and the traffic ledger's fenced table;
+* recovery is bounded: catch-up syncs ≤ ring capacity;
+* exactly one failover, epoch 0 → 1, zero dropped appends.
+
+Reported rows (``BENCH_failover.json``): steady-state append+sync
+latency, promotion wall clock (compile excluded) and its modeled
+collective-round count, catch-up window count, and the retried window's
+latency through the new leader.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DELETE, INSERT, NOP, UPDATE, KVStore,
+                        ReplicatedLog, make_manager)
+from repro.core.replog import diverging_leaves
+from repro.distributed.fault import FaultPlan
+
+from .common import BenchJson, Csv
+
+P = 4
+CAPACITY = 4
+# promotion cost in collective round-sets, static in the §12.2 trace:
+# ptable gather push + fence-write push + the one-round suffix re-publish
+PROMOTE_ROUNDS = 3
+
+
+def _setup(window, keyspace, n_followers=2):
+    mgr = make_manager(P)
+    kw = dict(slots_per_node=keyspace // P + 4, value_width=2,
+              num_locks=max(64, P * window), index_capacity=4 * keyspace)
+    leader = KVStore(None, "bfo_lead", mgr, **kw)
+    followers = [KVStore(None, f"bfo_foll{i}", mgr, **kw)
+                 for i in range(n_followers)]
+    log = ReplicatedLog(None, "bfo_log", mgr, store=leader,
+                        window=window, capacity=CAPACITY)
+
+    def step(lst, fsts, gst, op, key, val, alive):
+        """One serving window: apply on the leader store, publish,
+        drain at every live follower (dead participants neither publish
+        nor consume — full lane masking, unlike the engine's
+        role-only-crash stance)."""
+        me = mgr.runtime.my_id()
+        lst, _res = leader.op_window(lst, op, key, val)
+        gst, ok = log.append(gst, op, key, val, pred=alive[gst.ring.owner])
+        gst, fsts, applied = log.sync(gst, followers, fsts,
+                                      max_entries=1, pred=alive[me])
+        return lst, fsts, gst, ok, applied
+
+    def append_only(lst, gst, op, key, val, alive):
+        lst, _res = leader.op_window(lst, op, key, val)
+        gst, ok = log.append(gst, op, key, val, pred=alive[gst.ring.owner])
+        return lst, gst, ok
+
+    def retry_step(lst, fsts, gst, op, key, val, alive):
+        """The client-redirect path: the retried in-flight window goes
+        through whoever owns the ring now."""
+        lst, _res = leader.op_window(lst, op, key, val)
+        gst, fsts, ok, applied = log.append_with_retry(
+            gst, op, key, val, followers, fsts,
+            max_attempts=2, pred=alive[gst.ring.owner])
+        return lst, fsts, gst, ok, applied
+
+    def sync_only(gst, fsts, alive):
+        me = mgr.runtime.my_id()
+        gst, fsts, applied = log.sync(gst, followers, fsts,
+                                      max_entries=1, pred=alive[me])
+        return gst, fsts, applied, log.lag(gst)
+
+    def zombie(gst, op, key, val):
+        return log.zombie_publish(gst, op, key, val, zombie=0,
+                                  stale_epoch=0)
+
+    jit = lambda f: jax.jit(lambda *a: mgr.runtime.run(f, *a))  # noqa: E731
+    return (mgr, leader, followers, log, jit(step), jit(append_only),
+            jit(retry_step), jit(sync_only), jit(zombie),
+            jax.jit(lambda gst, alive: mgr.runtime.run(log.promote,
+                                                       gst, alive)))
+
+
+def _windows(rng, window, keyspace, n_rounds):
+    """Mutation schedules with participant 0's lanes always NOP: under
+    full lane masking a dead participant's slice of a pre-crash entry
+    would otherwise have no live submitter at replay (the engine avoids
+    this differently — its windows are broadcast to every lane)."""
+    spans = []
+    live = np.zeros(keyspace + 1, bool)
+    for r in range(n_rounds):
+        keys = rng.choice(np.arange(1, keyspace + 1, dtype=np.uint32),
+                          size=P * window, replace=False)
+        ops = np.empty(P * window, np.int32)
+        for i, k in enumerate(keys):
+            if not live[k]:
+                ops[i], live[k] = INSERT, True
+            elif rng.random() < 0.3:
+                ops[i], live[k] = DELETE, False
+            else:
+                ops[i] = UPDATE
+        vals = np.stack([keys.astype(np.int32) * 3 + r,
+                         np.full(P * window, r, np.int32)], axis=-1)
+        op = ops.reshape(P, window)
+        op[0, :] = NOP
+        spans.append((jnp.asarray(op),
+                      jnp.asarray(keys.reshape(P, window)),
+                      jnp.asarray(vals.reshape(P, window, 2))))
+    return spans
+
+
+def _stack_alive(alive):
+    return jnp.broadcast_to(jnp.asarray(alive, bool), (P, P))
+
+
+def run(csv: Csv, rounds: int = 8, jt: BenchJson | None = None,
+        smoke: bool = False):
+    jt = jt if jt is not None else BenchJson()
+    window = 4 if smoke else 8
+    keyspace = 64 if smoke else 256
+    n_pre = 3 if smoke else max(4, rounds // 2)
+    n_post = 2 if smoke else max(3, rounds // 2)
+
+    (mgr, leader, followers, log, jstep, japp, jretry, jsync, jzombie,
+     jpromote) = _setup(window, keyspace)
+    mgr.traffic.enable().reset()
+
+    rng = np.random.default_rng(7)
+    spans = _windows(rng, window, keyspace, n_pre + 2 + n_post)
+    plan = FaultPlan(kills={0: n_pre + 1})   # die before window n_pre+1
+    alive = plan.alive_mask(P, 0)
+
+    lst = leader.init_state()
+    fsts = tuple(f.init_state() for f in followers)
+    gst = log.init_state()
+
+    # ---- 1. steady state: append + sync every window ---------------------
+    steady = []
+    for w in range(n_pre):
+        t0 = time.perf_counter()
+        lst, fsts, gst, ok, _n = jstep(lst, fsts, gst, *spans[w],
+                                       _stack_alive(alive))
+        jax.block_until_ready(jax.tree.leaves(gst))
+        steady.append(time.perf_counter() - t0)
+        assert bool(np.asarray(ok)[0]), f"steady window {w} must publish"
+    steady_us = float(np.median(steady[1:])) * 1e6   # drop compile sample
+    acked = n_pre
+
+    # ---- 2. acked-but-unsynced window (the naive-failover casualty) ------
+    lst, gst, ok = japp(lst, gst, *spans[n_pre], _stack_alive(alive))
+    assert bool(np.asarray(ok)[0]), "the pre-crash window must be acked"
+    acked += 1
+
+    # ---- 3. leader dies; promotion ---------------------------------------
+    alive = plan.alive_mask(P, n_pre + 1)
+    assert not alive[0] and alive[1:].all()
+    promote_c = jpromote.lower(gst, _stack_alive(alive)).compile()
+    t0 = time.perf_counter()
+    gst, winner = promote_c(gst, _stack_alive(alive))
+    jax.block_until_ready(jax.tree.leaves(gst))
+    promote_us = (time.perf_counter() - t0) * 1e6
+    winner = int(np.asarray(winner)[0])
+    assert winner == 1, ("equal cursors: lowest live rank must win, got "
+                         f"{winner}")
+
+    # ---- 4. bounded catch-up: drain the re-published suffix --------------
+    catchup = 0
+    while True:
+        gst, fsts, _n, lag = jsync(gst, fsts, _stack_alive(alive))
+        catchup += 1
+        if int(np.asarray(lag)[0]) == 0:
+            break
+        assert catchup <= CAPACITY, \
+            "recovery must be bounded by the ring capacity"
+    for i, fst in enumerate(fsts):
+        assert diverging_leaves(jax.tree.map(np.asarray, lst),
+                                jax.tree.map(np.asarray, fst)) == [], \
+            f"follower {i} lost acked windows across the failover"
+
+    # ---- 5. the in-flight window retries through the new leader ----------
+    retry_c = jretry.lower(lst, fsts, gst, *spans[n_pre + 1],
+                           _stack_alive(alive)).compile()
+    t0 = time.perf_counter()
+    lst, fsts, gst, ok, _n = retry_c(lst, fsts, gst, *spans[n_pre + 1],
+                                     _stack_alive(alive))
+    jax.block_until_ready(jax.tree.leaves(gst))
+    retry_us = (time.perf_counter() - t0) * 1e6
+    assert bool(np.asarray(ok)[0]), "redirected window must publish"
+    acked += 1
+
+    # ---- 6. zombie publish from the dead leader is fenced ----------------
+    zop = np.full((P, window), NOP, np.int32)
+    zkey = np.ones((P, window), np.uint32)
+    zval = np.full((P, window, 2), -777, np.int32)    # sentinel poison
+    zop[1, 0], zkey[1, 0] = UPDATE, np.asarray(spans[0][1])[1, 0]
+    gst, landed = jzombie(gst, jnp.asarray(zop), jnp.asarray(zkey),
+                          jnp.asarray(zval))
+    assert bool(np.asarray(landed)[0]), \
+        "one-sided zombie write must land in the ring (fencing is at " \
+        "delivery, not at the wire)"
+    gst, fsts, applied, _lag = jsync(gst, fsts, _stack_alive(alive))
+    assert int(np.asarray(applied)[0]) == 0, "fenced entry must not apply"
+    fenced = int(np.asarray(gst.fenced)[0])
+    assert fenced >= 1, "the zombie entry must be counted as fenced"
+    ledger_fenced = sum(mgr.traffic.fenced_summary().values())
+    assert ledger_fenced >= 1, \
+        "the traffic ledger must count the fenced delivery"
+
+    # ---- 7. steady state under the new epoch -----------------------------
+    for w in range(n_pre + 2, n_pre + 2 + n_post):
+        lst, fsts, gst, ok, _n = jstep(lst, fsts, gst, *spans[w],
+                                       _stack_alive(alive))
+        assert bool(np.asarray(ok)[0]), f"post-failover window {w} publish"
+        acked += 1
+
+    # ---- final invariants -------------------------------------------------
+    lag = int(np.asarray(mgr.runtime.run(log.lag, gst))[0])
+    assert lag == 0, f"post-recovery lag must be zero (got {lag})"
+    for i, fst in enumerate(fsts):
+        assert diverging_leaves(jax.tree.map(np.asarray, lst),
+                                jax.tree.map(np.asarray, fst)) == [], \
+            f"follower {i} diverged after {acked} acked windows + failover"
+    stats = dict(published=int(np.asarray(gst.published)[0]),
+                 dropped=int(np.asarray(gst.dropped)[0]),
+                 failovers=int(np.asarray(gst.failovers)[0]),
+                 fenced=fenced,
+                 epoch=int(np.asarray(gst.ptable.cached)[0, :, 0].max()))
+    assert stats["published"] == acked and stats["dropped"] == 0
+    assert stats["failovers"] == 1 and stats["epoch"] == 1
+    mgr.traffic.disable().reset()
+
+    csv.add(f"failover_steady_p{P}_w{window}", steady_us,
+            f"acked={acked};lag={lag}")
+    csv.add(f"failover_promote_p{P}_w{window}", promote_us,
+            f"rounds={PROMOTE_ROUNDS};catchup_windows={catchup}")
+    csv.add(f"failover_retry_p{P}_w{window}", retry_us,
+            f"epoch={stats['epoch']};fenced={fenced}")
+    jt.add("failover", "steady", steady_us, ops=P * window, **stats)
+    jt.add("failover", "promote", promote_us, rounds=PROMOTE_ROUNDS,
+           catchup_windows=catchup, winner=winner)
+    jt.add("failover", "retry", retry_us, fenced=fenced,
+           ledger_fenced=int(ledger_fenced))
+    return jt

@@ -75,7 +75,7 @@ def _ring_jobs(P, window):
 
     def win_round(st, msgs, lens):
         st, _s, _a = rb.publish_window(st, msgs, lens)
-        st, _m, _l, _g = rb.recv_window(st, window)
+        st, _m, _l, _g, _f = rb.recv_window(st, window)
         return st
 
     def scalar_round(st, msgs, lens):

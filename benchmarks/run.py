@@ -31,7 +31,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: barrier,lock,kvstore,stream,"
-                         "locality,power,roofline")
+                         "locality,failover,power,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny configs for CI smoke runs")
     ap.add_argument("--json-dir", default=os.path.dirname(
@@ -76,6 +76,13 @@ def main() -> None:
         bench_locality.run(csv, rounds=2 if args.smoke else 8, jt=jt,
                            smoke=args.smoke)
         path = jt.dump(os.path.join(args.json_dir, "BENCH_locality.json"))
+        print(f"# wrote {path} ({len(jt.rows)} rows)", file=sys.stderr)
+    if enabled("failover"):
+        from . import bench_failover
+        jt = BenchJson()
+        bench_failover.run(csv, rounds=2 if args.smoke else 8, jt=jt,
+                           smoke=args.smoke)
+        path = jt.dump(os.path.join(args.json_dir, "BENCH_failover.json"))
         print(f"# wrote {path} ({len(jt.rows)} rows)", file=sys.stderr)
     if enabled("power"):
         from . import bench_power

@@ -11,13 +11,22 @@ a **replicated log** built from shared-memory-style primitives —
   ``(P·B, record_width)`` mutation records the window's service rounds
   already put on the wire (``KVStore.export_window_records``);
 * the ringbuffer's embedded SST of read cursors doubles as the
-  replication-progress table — ``lag()`` is head minus the slowest
+  replication-progress table — ``lag()`` is head minus the slowest live
   cursor, and ring reuse *is* commit acknowledgement;
 * followers drain entries with one bulk checksum-validated read per sync
   (``Ringbuffer.recv_window``) and replay them through the kvstore's
   existing vectorized apply machinery
   (``KVStore.replay_window_records`` → ``op_window``), so a follower
-  replica's state converges **bitwise** to the leader's.
+  replica's state converges **bitwise** to the leader's;
+* a second SST — the **ptable** (promotion table, one ``[epoch, cursor]``
+  register per participant) — makes the log survive the leader's death
+  (DESIGN.md §12): every entry is stamped with the leader's epoch,
+  followers fence entries from stale epochs at delivery, and
+  :meth:`promote` elects a replacement (highest applied cursor wins,
+  lowest rank breaks ties) from ONE gather of that table.  This is the
+  Aguilera et al. observation operationalized: with state in shared
+  memory, fencing a deposed leader is a table write plus a local
+  comparison — no message-passing consensus round.
 
 Convergence argument (DESIGN.md §9.3): ``op_window`` is a pure
 deterministic function of (state, ops, keys, values); GET/NOP lanes
@@ -27,12 +36,15 @@ everything else masked to NOP.  Two identically-configured stores that
 start from ``init_state()`` and apply the same window sequence are
 therefore bit-for-bit equal on every state leaf (the read tier's private
 cache aside, which is local policy, not replicated data) — the property
-the test/bench suites check leaf-by-leaf.
+the test/bench suites check leaf-by-leaf.  §12.3 extends the argument
+across failovers: promotion re-publishes the unacked suffix unchanged and
+fencing only drops entries that were never deliverable, so the follower's
+applied sequence is still exactly the leader-commit order.
 
 In the SPMD adaptation every participant hosts a lane of *both* the
 leader store and each follower store; "leader" names the ring-owning
-participant whose publish linearizes the log, exactly as the paper's
-single-writer ringbuffer prescribes.
+participant whose publish linearizes the log — initially the constructor's
+``leader``, after a crash whoever :meth:`promote` elected.
 """
 from __future__ import annotations
 
@@ -46,6 +58,9 @@ from .channel import Channel
 from .kvstore import KVStore, KVStoreState
 from .ringbuffer import Ringbuffer, RingbufferState
 from .runtime import Manager
+from .sst import SST, SSTState
+
+_U32_MAX = jnp.uint32(0xFFFFFFFF)
 
 
 def diverging_leaves(a: KVStoreState, b: KVStoreState,
@@ -70,8 +85,15 @@ def diverging_leaves(a: KVStoreState, b: KVStoreState,
 
 class ReplicatedLogState(NamedTuple):
     ring: RingbufferState
+    ptable: SSTState      # per-participant [accepted_epoch, applied_cursor]
     published: jax.Array  # () uint32 — entries appended to the log
     dropped: jax.Array    # () uint32 — appends rejected by flow control
+    fenced: jax.Array     # () uint32 — stale-epoch entries rejected on sync
+    fenced_writes: jax.Array  # () uint32 — publishes suppressed by the
+    #                         # leader-side fence check (deposed leader)
+    failovers: jax.Array  # () uint32 — promotions executed
+    retries: jax.Array    # () uint32 — re-append attempts taken by
+    #                     # append_with_retry after a drop
 
 
 class ReplicatedLog(Channel):
@@ -83,7 +105,8 @@ class ReplicatedLog(Channel):
               follower (sizing guidance in DESIGN.md §9.4 — syncing after
               every append needs only 2; batching syncs needs the sync
               period plus slack);
-    leader:   the ring-owning participant (default 0).
+    leader:   the initial ring-owning participant (default 0; after a
+              crash, whoever :meth:`promote` elects).
     """
 
     def __init__(self, parent, name: str, mgr: Manager, *, store: KVStore,
@@ -97,11 +120,27 @@ class ReplicatedLog(Channel):
         self.ring = Ringbuffer(self, "log", mgr, owner=self.leader,
                                capacity=int(capacity),
                                width=self.entry_width, dtype=jnp.int32)
+        # the §12 fence/promotion table: one [epoch, cursor] register per
+        # participant.  Epochs fence zombie leaders; cursors elect the
+        # most-caught-up replacement — both from ONE push_broadcast.
+        self.ptable = SST(self, "ptable", mgr, shape=(2,), dtype=jnp.uint32)
 
     def init_state(self) -> ReplicatedLogState:
         z = jnp.zeros((self.P,), jnp.uint32)
         return ReplicatedLogState(ring=self.ring.init_state(),
-                                  published=z, dropped=z)
+                                  ptable=self.ptable.init_state(),
+                                  published=z, dropped=z, fenced=z,
+                                  fenced_writes=z, failovers=z, retries=z)
+
+    # -- epoch/leadership accessors (§12.1) ------------------------------------
+    def epoch(self, st: ReplicatedLogState):
+        """The cluster epoch: max accepted epoch across the cached fence
+        table (a deposed participant's stale row never lowers it)."""
+        return jnp.max(self.ptable.rows(st.ptable)[:, 0])
+
+    def current_leader(self, st: ReplicatedLogState):
+        """The ring-owning participant (client-redirect target)."""
+        return st.ring.owner
 
     # -- leader side -----------------------------------------------------------
     def append(self, st: ReplicatedLogState, ops, keys, values,
@@ -115,17 +154,33 @@ class ReplicatedLog(Channel):
         handed ``op_window``); the records are gathered to the full
         (P·B, record_width) block — the all-gather the window's service
         rounds pay anyway — and the leader broadcasts the block as ONE
-        ring entry.  The entry's ``lens`` metadata carries the live
-        mutation-record count, but the entry itself (and hence the
-        modeled wire bytes the ring's ledger records) is the fixed
-        P·B·record_width slot: replication cost is per published
-        *window*, not per live record (§9.4 — why variable-B callers pad
-        to one log shape instead of building per-shape logs).  Returns
-        (state, ok):
-        ``ok`` is False everywhere when the ring had no space (slowest
-        follower more than ``capacity`` windows behind); the drop is
-        counted and the caller retries after a sync.
+        ring entry, stamped with its accepted epoch.  The entry's ``lens``
+        metadata carries the live mutation-record count, but the entry
+        itself (and hence the modeled wire bytes the ring's ledger
+        records) is the fixed P·B·record_width slot: replication cost is
+        per published *window*, not per live record (§9.4 — why
+        variable-B callers pad to one log shape instead of building
+        per-shape logs).
+
+        Leader-side fence (§12.1): before publishing, the leader checks
+        its cached fence table — if any row already carries a higher
+        epoch, it has been deposed and the publish is suppressed locally
+        (counted in ``fenced_writes``).  This is the cheap half of the
+        fence: a deposed leader that has *seen* the table never publishes;
+        one that has not (a zombie behind a partition) is caught by the
+        followers' delivery-side epoch check instead.
+
+        Returns (state, ok): ``ok`` is False everywhere when the ring had
+        no space (slowest live follower more than ``capacity`` windows
+        behind) or the publish was fence-suppressed; the drop is counted
+        and the caller retries after a sync
+        (:meth:`append_with_retry` packages the loop).
         """
+        me = colls.my_id(self.axis)
+        rows = self.ptable.rows(st.ptable)
+        my_epoch = rows[me, 0]
+        deposed = jnp.max(rows[:, 0]) > my_epoch
+        do = jnp.asarray(pred) & ~deposed
         recs = self.store.export_window_records(ops, keys, values,
                                                 targets=targets)
         block = jax.lax.all_gather(recs, self.axis, axis=0)   # (P, B, rw)
@@ -133,20 +188,96 @@ class ReplicatedLog(Channel):
         ring, sent, _ack = self.ring.publish_window(
             st.ring, block.reshape(1, self.entry_width),
             jnp.reshape(n_live, (1,)),
-            preds=jnp.reshape(jnp.asarray(pred), (1,)))
+            preds=jnp.reshape(do, (1,)), epoch=my_epoch)
         # publish grants at the owner only; everyone learns the outcome
+        is_owner = me == st.ring.owner
         ok = jax.lax.psum(sent[0].astype(jnp.int32), self.axis) > 0
-        tried = jax.lax.psum(
-            (jnp.asarray(pred) & (colls.my_id(self.axis) == self.leader))
-            .astype(jnp.int32), self.axis) > 0
+        tried = jax.lax.psum((do & is_owner).astype(jnp.int32),
+                             self.axis) > 0
+        fenced_w = jax.lax.psum(
+            (jnp.asarray(pred) & deposed & is_owner).astype(jnp.int32),
+            self.axis) > 0
         return st._replace(
             ring=ring,
             published=st.published + ok.astype(jnp.uint32),
-            dropped=st.dropped + (tried & ~ok).astype(jnp.uint32)), ok
+            dropped=st.dropped + (tried & ~ok).astype(jnp.uint32),
+            fenced_writes=st.fenced_writes + fenced_w.astype(jnp.uint32)), ok
+
+    def append_with_retry(self, st: ReplicatedLogState, ops, keys, values,
+                          followers, follower_states, targets=None,
+                          max_attempts: int = 3, pred=True):
+        """:meth:`append` with the §9.3 retry protocol built in: each
+        attempt that finds the ring full is followed by one :meth:`sync`
+        (the *backoff*: draining an entry advances the slowest live
+        consumer, which is the only thing that frees space — sleeping
+        would not), then re-appends.  Bounded: ``max_attempts`` appends
+        and syncs total, so a wedged follower costs a known number of
+        round-sets, never a livelock.  Re-append attempts after the first
+        are counted in ``retries``; drops are already counted by
+        :meth:`append` per failed attempt.
+
+        Because the trace is static, every attempt's round-set is always
+        issued — a success on attempt 0 makes the remaining appends
+        pred=False no-ops (their collectives still run).  Callers size
+        ``max_attempts`` to their drop tolerance, not generously.
+
+        Returns (state, follower_states, ok, applied): ``applied`` totals
+        the entries replayed by the built-in syncs (a success path always
+        drains what it published — zero steady-state lag, like the
+        engine's append-then-sync).
+        """
+        single = isinstance(followers, KVStore)
+        fls = [followers] if single else list(followers)
+        fsts = [follower_states] if single else list(follower_states)
+        pred = jnp.asarray(pred)
+        done = jnp.zeros((), jnp.bool_)
+        applied = jnp.zeros((), jnp.int32)
+        for i in range(int(max_attempts)):
+            pending = pred & ~done
+            if i:
+                st = st._replace(
+                    retries=st.retries + pending.astype(jnp.uint32))
+            st, ok = self.append(st, ops, keys, values, targets=targets,
+                                 pred=pending)
+            done = done | ok
+            # fls is always a sequence here, so sync returns a tuple
+            st, out, n = self.sync(st, fls, fsts, max_entries=1)
+            fsts = list(out)
+            applied = applied + n
+        return st, (fsts[0] if single else tuple(fsts)), done, applied
+
+    def zombie_publish(self, st: ReplicatedLogState, ops, keys, values,
+                       *, zombie, stale_epoch, targets=None):
+        """Emulate the §12 threat: a deposed leader's partition-delayed
+        publish landing AFTER promotion.  One-sided writes ask no
+        permission — a zombie that still believes it owns the ring CAN
+        land bytes in every consumer's cached slots (that is precisely
+        why message-passing systems need leases); what protects the log
+        is the *delivery-side* fence: the entry is stamped
+        ``stale_epoch``, and every follower whose accepted epoch has
+        moved on consumes-and-drops it (counted in ``fenced`` and the
+        ledger's fenced table).
+
+        The entry still occupies a ring slot and advances head — the
+        emulation's serialization of the zombie/leader race; the §9.2
+        seq/checksum protocol is what arbitrates true slot races on real
+        hardware.  Test/bench hook; returns (state, landed).
+        """
+        recs = self.store.export_window_records(ops, keys, values,
+                                                targets=targets)
+        block = jax.lax.all_gather(recs, self.axis, axis=0)
+        n_live = jnp.sum(block[..., 0] != 0).astype(jnp.int32)
+        ring_z = st.ring._replace(owner=jnp.asarray(zombie, jnp.int32))
+        ring_z, sent, _ack = self.ring.publish_window(
+            ring_z, block.reshape(1, self.entry_width),
+            jnp.reshape(n_live, (1,)), epoch=jnp.asarray(stale_epoch,
+                                                         jnp.uint32))
+        landed = jax.lax.psum(sent[0].astype(jnp.int32), self.axis) > 0
+        return st._replace(ring=ring_z._replace(owner=st.ring.owner)), landed
 
     # -- follower side ---------------------------------------------------------
     def sync(self, st: ReplicatedLogState, followers, follower_states,
-             max_entries: int = 1):
+             max_entries: int = 1, pred=True):
         """Drain up to ``max_entries`` log entries and replay each into
         every follower store, in log order.
 
@@ -155,15 +286,23 @@ class ReplicatedLog(Channel):
         state or sequence.  One ``recv_window`` serves the whole sync
         (single bulk validated read + single cursor ack); each drained
         entry replays through ``replay_window_records`` with absent
-        entries masked to the identity.  Returns (state, follower_states,
-        applied ()) with ``applied`` the number of entries replayed.
+        entries masked to the identity.  Entries stamped with an epoch
+        older than my accepted epoch are **fenced** (§12.1): consumed —
+        the cursor passes them so the log never jams — but not replayed,
+        and counted in ``fenced`` (the count is pmax-uniform across
+        participants so any lane reports the cluster total).  ``pred``
+        masks crashed consumers (their cursor freezes; :meth:`promote`
+        removes them from flow control).  Returns (state,
+        follower_states, applied ()) with ``applied`` the number of
+        entries replayed.
         """
         single = isinstance(followers, KVStore)
         fls: Sequence[KVStore] = [followers] if single else list(followers)
         fsts = [follower_states] if single else list(follower_states)
         me = colls.my_id(self.axis)
-        ring, entries, _lens, got = self.ring.recv_window(
-            st.ring, max_entries)
+        my_epoch = self.ptable.rows(st.ptable)[me, 0]
+        ring, entries, _lens, got, fenced = self.ring.recv_window(
+            st.ring, max_entries, pred=pred, expect_epoch=my_epoch)
         for k in range(max_entries):
             block = entries[k].reshape(self.P, self.window, self.rec_width)
             mine = block[me]                        # my (B, rw) lane slice
@@ -171,16 +310,96 @@ class ReplicatedLog(Channel):
                 fsts[i], _res = fl.replay_window_records(
                     fsts[i], mine, pred=got[k])
         applied = jnp.sum(got.astype(jnp.int32))
+        n_fenced = jax.lax.pmax(jnp.sum(fenced.astype(jnp.uint32)),
+                                self.axis)
         out_states = fsts[0] if single else tuple(fsts)
-        return st._replace(ring=ring), out_states, applied
+        return st._replace(ring=ring, fenced=st.fenced + n_fenced), \
+            out_states, applied
+
+    # -- failover (DESIGN.md §12.2) --------------------------------------------
+    def promote(self, st: ReplicatedLogState, alive):
+        """Elect and install a replacement leader after a crash.
+
+        ``alive``: (P,) bool — the crashed participants (at least the old
+        leader) are False; the caller's failure detector (the bench's
+        ``FaultPlan``, the engine's fault hook, a collective timeout in
+        production) decides membership.
+
+        The whole agreement is ONE ptable gather plus one fence write —
+        the Aguilera et al. point that a shared state table turns leader
+        election into local arithmetic:
+
+        1. every live participant refreshes its ``[epoch, cursor]`` row
+           and pushes (``push_broadcast`` = the epoch/cursor gather);
+        2. everyone computes, locally and identically: the winner =
+           highest applied cursor among the living, lowest rank breaking
+           ties (the most-caught-up replica loses no acked entries); the
+           new epoch = max live epoch + 1;
+        3. every live participant *accepts* the new epoch — a second row
+           push.  This is the fence: from here, entries stamped with an
+           older epoch are dead on delivery, and a deposed leader that
+           reads the table suppresses its own publishes;
+        4. the winner re-owns the ring (:meth:`Ringbuffer.re_own`) at the
+           slowest live cursor with every slot poisoned, and re-publishes
+           the **unacked suffix** — entries in [slowest live cursor,
+           head) — from its own cached slots, re-stamped at the new
+           epoch.  Every acked (``append`` → ok) entry is in that range
+           (ring reuse requires all live cursors past a slot), and the
+           ring broadcast already cached its payload at the winner, so
+           zero acked entries are lost — §12.3.  Entries whose old stamp
+           was *already* stale (zombie residue from an even older epoch)
+           keep their stale stamp and stay fenced; re-stamping them would
+           launder a zombie write into the new epoch.
+
+        Returns (state, winner) — ``winner`` the promoted participant id
+        (the client-redirect target), identical on every lane.
+        """
+        me = colls.my_id(self.axis)
+        alive = jnp.asarray(alive).reshape(self.P)
+        # 1. the epoch/cursor gather
+        my_epoch = self.ptable.rows(st.ptable)[me, 0]
+        my_cursor = self.ring.acks.rows(st.ring.acks)[me]
+        pt = self.ptable.store_mine(st.ptable,
+                                    jnp.stack([my_epoch, my_cursor]),
+                                    pred=alive[me])
+        pt, _ack = self.ptable.push_broadcast(pt)
+        rows = self.ptable.rows(pt)
+        epochs_g, cursors_g = rows[:, 0], rows[:, 1]
+        # 2. local, identical election
+        best = jnp.max(jnp.where(alive, cursors_g, jnp.uint32(0)))
+        winner = jnp.argmax(alive & (cursors_g == best)).astype(jnp.int32)
+        cur_epoch = jnp.max(jnp.where(alive, epochs_g, jnp.uint32(0)))
+        new_epoch = cur_epoch + jnp.uint32(1)
+        # 3. the fence write: live participants accept the new epoch
+        pt = self.ptable.store_mine(pt, jnp.stack([new_epoch, my_cursor]),
+                                    pred=alive[me])
+        pt, _ack = self.ptable.push_broadcast(pt)
+        # 4. ring takeover + unacked-suffix re-publish from the winner's cache
+        old = st.ring
+        min_live = jnp.min(jnp.where(alive,
+                                     self.ring.acks.rows(old.acks),
+                                     _U32_MAX))
+        suffix = old.head - min_live                   # uint32, ≤ capacity
+        ring = self.ring.re_own(old, winner, alive, head=min_live)
+        cap = self.ring.capacity
+        k = jnp.arange(cap, dtype=jnp.uint32)
+        seqs = min_live + k
+        slots = (seqs % jnp.uint32(cap)).astype(jnp.int32)
+        lane_ep = jnp.where(old.epoch[slots] == cur_epoch, new_epoch,
+                            old.epoch[slots])
+        ring, _sent, _ack = self.ring.publish_window(
+            ring, old.payload[slots], old.length[slots],
+            preds=k < suffix, epoch=lane_ep)
+        return st._replace(
+            ring=ring, ptable=pt,
+            failovers=st.failovers + jnp.uint32(1)), winner
 
     # -- progress --------------------------------------------------------------
     def lag(self, st: ReplicatedLogState):
-        """Entries the slowest follower is behind the leader's log head
-        (the ring's SST cursors ARE the replication-progress table)."""
-        return (st.ring.head
-                - jnp.min(self.ring.acks.rows(st.ring.acks))).astype(
-                    jnp.int32)
+        """Entries the slowest *live* follower is behind the leader's log
+        head (the ring's SST cursors ARE the replication-progress table;
+        crashed participants' frozen cursors are masked out)."""
+        return (st.ring.head - self.ring.min_ack(st.ring)).astype(jnp.int32)
 
     def entry_nbytes(self) -> int:
         """Wire bytes of one full log entry (the ring's slot size)."""

@@ -2,24 +2,39 @@
 
 An array of slots owned by a single *producer*, cached at every consumer,
 with a custom atomicity mechanism for mixed-size messages: each slot carries
-(seq, len, checksum) alongside the payload, so consumers can detect torn or
-stale slots.  Consumers acknowledge consumption through an SST of read
-cursors, which the producer consults for buffer reuse (slots are reusable
-once every consumer's cursor has passed them).
+(seq, len, epoch, checksum) alongside the payload, so consumers can detect
+torn, stale or **fenced** slots.  Consumers acknowledge consumption through
+an SST of read cursors, which the producer consults for buffer reuse (slots
+are reusable once every *live* consumer's cursor has passed them).
 
-Slot checksums cover the payload **and** the (seq, len) metadata
-(:meth:`Ringbuffer._slot_csum`): a torn or corrupted length/sequence word
-can never present as a checksum-valid message — the §5.1.1 atomicity
+Slot checksums cover the payload **and** the (seq, len, epoch) metadata
+(:meth:`Ringbuffer._slot_csum`): a torn or corrupted length/sequence/epoch
+word can never present as a checksum-valid message — the §5.1.1 atomicity
 contract extended to the mixed-size slot format.  (The seed checksummed
 the payload alone, so a corrupt ``len`` delivered a "valid" message of the
 wrong size; the streaming-tier fuzz properties pinned this down.)
+
+Failure model (DESIGN.md §12)
+-----------------------------
+
+Ownership is **state**, not construction: ``RingbufferState.owner`` names
+the producer and may change at runtime (:meth:`re_own` — the failover
+takeover), and ``RingbufferState.alive`` masks crashed participants out of
+the flow-control minimum so a dead consumer's frozen cursor cannot wedge
+the ring.  Every slot is stamped with the producer's **epoch**; consumers
+that pass ``expect_epoch`` to the receive verbs treat a checksum-valid slot
+from a stale epoch as *fenced*: consumed (the cursor advances past it) but
+never delivered — the one-sided-fencing move of Aguilera et al. ("The
+Impact of RDMA on Agreement"): because the slot metadata lives in shared
+memory, rejecting a zombie writer is a local comparison, not a round of
+consensus messages.
 
 Windowed streaming rounds (DESIGN.md §9.2)
 ------------------------------------------
 
 :meth:`publish_window` broadcasts up to B messages in ONE round-set (flow
 control grants a rank-prefix of the enabled lanes against the slowest
-consumer's window; modeled wire bytes scale with the slots actually
+live consumer's window; modeled wire bytes scale with the slots actually
 moved); :meth:`recv_window` drains up to B messages with one bulk
 checksum-validated read of the cached slots and a **single SST cursor ack
 for the whole window** — where B scalar ``recv_one`` calls pay B cursor
@@ -40,29 +55,36 @@ from .ownedvar import checksum
 from .runtime import Manager
 from .sst import SST, SSTState
 
+# sentinel for "never written" seq words and dead-consumer cursor masking
+_U32_MAX = jnp.uint32(0xFFFFFFFF)
+
 
 class RingbufferState(NamedTuple):
     payload: jax.Array  # (capacity, width) message words (cached everywhere)
     seq: jax.Array      # (capacity,) uint32 slot sequence numbers
     length: jax.Array   # (capacity,) int32 message lengths (words)
+    epoch: jax.Array    # (capacity,) uint32 producer epoch stamps
     csum: jax.Array     # (capacity,) uint32 payload+metadata checksums
     head: jax.Array     # () uint32 producer cursor (cached everywhere)
+    owner: jax.Array    # () int32 current producer (changes at failover)
+    alive: jax.Array    # (P,) bool crashed participants masked out of
+    #                   # flow control (updated by re_own)
     acks: SSTState      # per-consumer read cursors
 
 
 class Ringbuffer(Channel):
-    """One-to-many broadcast ring owned by participant ``owner``."""
+    """One-to-many broadcast ring initially owned by participant ``owner``."""
 
     def __init__(self, parent, name: str, mgr: Manager, *, owner: int,
                  capacity: int, width: int, dtype=jnp.int32):
         super().__init__(parent, name, mgr)
-        self.owner = int(owner)
+        self.owner = int(owner)          # initial owner; state is authoritative
         self.capacity = int(capacity)
         self.width = int(width)
         self.dtype = dtype
         self.acks = SST(self, "acks", mgr, shape=(), dtype=jnp.uint32)
         self.declare_region("slots", (capacity, width), dtype)
-        self.slot_nbytes = (width * jnp.dtype(dtype).itemsize) + 12
+        self.slot_nbytes = (width * jnp.dtype(dtype).itemsize) + 16
 
     def init_state(self) -> RingbufferState:
         P = self.P
@@ -70,18 +92,22 @@ class Ringbuffer(Channel):
             payload=jnp.zeros((P, self.capacity, self.width), self.dtype),
             seq=jnp.full((P, self.capacity), 0xFFFFFFFF, jnp.uint32),
             length=jnp.zeros((P, self.capacity), jnp.int32),
+            epoch=jnp.zeros((P, self.capacity), jnp.uint32),
             csum=jnp.zeros((P, self.capacity), jnp.uint32),
             head=jnp.zeros((P,), jnp.uint32),
+            owner=jnp.full((P,), self.owner, jnp.int32),
+            alive=jnp.ones((P, P), jnp.bool_),
             acks=self.acks.init_state())
 
     # -- slot integrity ---------------------------------------------------------
-    def _slot_csum(self, msg, seq, length):
-        """Checksum of one slot's payload AND metadata (seq, len).
+    def _slot_csum(self, msg, seq, length, epoch):
+        """Checksum of one slot's payload AND metadata (seq, len, epoch).
 
         Covering the metadata is load-bearing: a consumer validates
-        ``seq == cursor`` separately (staleness), but ``len`` has no
-        independent check — only the checksum stands between a torn
-        length word and a mis-sized "valid" delivery.
+        ``seq == cursor`` (staleness) and ``epoch`` (fencing) separately,
+        but ``len`` has no independent check — only the checksum stands
+        between a torn length word and a mis-sized "valid" delivery, and
+        a torn epoch word must not let a fenced slot masquerade as live.
         """
         payload = jnp.asarray(msg, self.dtype).reshape(self.width)
         if payload.dtype == jnp.uint32:
@@ -92,25 +118,37 @@ class Ringbuffer(Channel):
         meta = jnp.stack([
             jnp.asarray(seq, jnp.uint32),
             jax.lax.bitcast_convert_type(
-                jnp.asarray(length, jnp.int32), jnp.uint32)])
+                jnp.asarray(length, jnp.int32), jnp.uint32),
+            jnp.asarray(epoch, jnp.uint32)])
         return checksum(jnp.concatenate([lanes, meta]))
 
-    # -- producer ------------------------------------------------------------
-    def can_send(self, state: RingbufferState):
-        """Space check: head may lead the slowest consumer by < capacity."""
-        min_ack = jnp.min(self.acks.rows(state.acks))
-        return (state.head - min_ack) < jnp.uint32(self.capacity)
+    # -- flow control -----------------------------------------------------------
+    def min_ack(self, state: RingbufferState):
+        """Slowest LIVE consumer's cursor — crashed participants (masked
+        in ``state.alive``) are excluded, so a dead node's frozen cursor
+        never wedges slot reuse (the §12 liveness requirement)."""
+        cursors = self.acks.rows(state.acks)
+        return jnp.min(jnp.where(state.alive, cursors, _U32_MAX))
 
-    def send(self, state: RingbufferState, msg, msg_len, pred=True):
+    def can_send(self, state: RingbufferState):
+        """Space check: head may lead the slowest live consumer by
+        < capacity."""
+        return (state.head - self.min_ack(state)) < jnp.uint32(self.capacity)
+
+    # -- producer ------------------------------------------------------------
+    def send(self, state: RingbufferState, msg, msg_len, pred=True,
+             epoch=None):
         """Producer broadcasts ``msg`` ((width,) padded, ``msg_len`` valid
-        words).  Returns (state, sent, ack).  ``sent`` is False when the
-        caller is not the owner, pred is False, or the ring is full.
-        The scalar reference path; :meth:`publish_window` is the windowed
-        production verb (one round-set for B messages)."""
+        words), stamped with ``epoch`` (default 0 — epoch-less rings are
+        the pre-§12 behavior).  Returns (state, sent, ack).  ``sent`` is
+        False when the caller is not the current owner, pred is False, or
+        the ring is full.  The scalar reference path; :meth:`publish_window`
+        is the windowed production verb (one round-set for B messages)."""
         me = colls.my_id(self.axis)
-        is_owner = me == self.owner
+        is_owner = me == state.owner
         do = jnp.asarray(pred) & is_owner & self.can_send(state)
         msg = jnp.asarray(msg, self.dtype).reshape(self.width)
+        ep = jnp.asarray(0 if epoch is None else epoch, jnp.uint32)
         slot = (state.head % jnp.uint32(self.capacity)).astype(jnp.int32)
 
         # owner writes its authoritative copy, then pushes slot + head.
@@ -118,39 +156,45 @@ class Ringbuffer(Channel):
         seq_v = jnp.where(do, state.head, state.seq[slot])
         len_v = jnp.where(do, jnp.asarray(msg_len, jnp.int32),
                           state.length[slot])
-        csum_v = jnp.where(do, self._slot_csum(msg, state.head, msg_len),
+        ep_v = jnp.where(do, ep, state.epoch[slot])
+        csum_v = jnp.where(do,
+                           self._slot_csum(msg, state.head, msg_len, ep),
                            state.csum[slot])
         head_v = jnp.where(do, state.head + jnp.uint32(1), state.head)
 
         # one-sided push from owner to all consumers (masked all-reduce).
         sent_any = jax.lax.psum(do.astype(jnp.int32), self.axis) > 0
-        payload_row = colls.bcast_from(payload_row, self.owner, self.axis)
-        seq_v = colls.bcast_from(seq_v, self.owner, self.axis)
-        len_v = colls.bcast_from(len_v, self.owner, self.axis)
-        csum_v = colls.bcast_from(csum_v, self.owner, self.axis)
-        head_b = colls.bcast_from(head_v, self.owner, self.axis)
-        slot_b = colls.bcast_from(slot, self.owner, self.axis)
+        payload_row = colls.bcast_from(payload_row, state.owner, self.axis)
+        seq_v = colls.bcast_from(seq_v, state.owner, self.axis)
+        len_v = colls.bcast_from(len_v, state.owner, self.axis)
+        ep_v = colls.bcast_from(ep_v, state.owner, self.axis)
+        csum_v = colls.bcast_from(csum_v, state.owner, self.axis)
+        head_b = colls.bcast_from(head_v, state.owner, self.axis)
+        slot_b = colls.bcast_from(slot, state.owner, self.axis)
 
         new = state._replace(
             payload=state.payload.at[slot_b].set(payload_row),
             seq=state.seq.at[slot_b].set(seq_v),
             length=state.length.at[slot_b].set(len_v),
+            epoch=state.epoch.at[slot_b].set(ep_v),
             csum=state.csum.at[slot_b].set(csum_v),
             head=head_b)
         ack = make_ack((payload_row, head_b), "bcast", self.full_name,
                        ALL_PEERS, self.slot_nbytes)
         return new, do & sent_any, self.mgr.track(ack)
 
-    def publish_window(self, state: RingbufferState, msgs, lens, preds=None):
+    def publish_window(self, state: RingbufferState, msgs, lens, preds=None,
+                       epoch=None):
         """Owner broadcasts up to B messages in ONE collective round-set.
 
         msgs: (B, width) dtype; lens: (B,) int32; preds: (B,) bool lane
-        mask (default all enabled).  Returns (state, sent (B,), ack):
+        mask (default all enabled); epoch: scalar or (B,) uint32 producer
+        epoch stamps (default 0).  Returns (state, sent (B,), ack):
         ``sent[b]`` is True (at the owner) iff lane b's message landed —
         flow control grants the longest rank-prefix of enabled lanes that
-        fits the slowest consumer's window, so a nearly-full ring rejects
-        a *suffix* of the window (retry next round-set), mirroring the
-        queue's flow-control ranking.  Non-owners' lanes never send.
+        fits the slowest live consumer's window, so a nearly-full ring
+        rejects a *suffix* of the window (retry next round-set), mirroring
+        the queue's flow-control ranking.  Non-owners' lanes never send.
 
         Modeled wire bytes (traffic ledger, verb ``<name>.publish``)
         scale with the slots actually moved: 2·slot_bytes per granted
@@ -162,30 +206,32 @@ class Ringbuffer(Channel):
         if preds is None:
             preds = jnp.ones((B,), jnp.bool_)
         me = colls.my_id(self.axis)
-        is_owner = me == self.owner
+        is_owner = me == state.owner
         want = jnp.asarray(preds) & is_owner
         lens = jnp.asarray(lens, jnp.int32).reshape(B)
-        min_ack = jnp.min(self.acks.rows(state.acks))
-        space = jnp.int32(self.capacity) - (state.head - min_ack).astype(
-            jnp.int32)
+        eps = jnp.broadcast_to(
+            jnp.asarray(0 if epoch is None else epoch, jnp.uint32), (B,))
+        space = jnp.int32(self.capacity) \
+            - (state.head - self.min_ack(state)).astype(jnp.int32)
         w = want.astype(jnp.int32)
         rank = jnp.cumsum(w) - w                    # owner-local lane rank
         grant = want & (rank < space)
         seqs = state.head + rank.astype(jnp.uint32)
         slots = (seqs % jnp.uint32(self.capacity)).astype(jnp.int32)
-        csums = jax.vmap(self._slot_csum)(msgs, seqs, lens)
+        csums = jax.vmap(self._slot_csum)(msgs, seqs, lens, eps)
         n_moved = jnp.sum(grant.astype(jnp.uint32))
         head_v = state.head + n_moved
 
         # one push from the owner: the whole window's slots + new head.
         sent_any = jax.lax.psum(grant.astype(jnp.int32), self.axis) > 0
-        msgs_b = colls.bcast_from(msgs, self.owner, self.axis)
-        seqs_b = colls.bcast_from(seqs, self.owner, self.axis)
-        lens_b = colls.bcast_from(lens, self.owner, self.axis)
-        csums_b = colls.bcast_from(csums, self.owner, self.axis)
-        head_b = colls.bcast_from(head_v, self.owner, self.axis)
-        slots_b = colls.bcast_from(slots, self.owner, self.axis)
-        grant_b = colls.bcast_from(grant, self.owner, self.axis)
+        msgs_b = colls.bcast_from(msgs, state.owner, self.axis)
+        seqs_b = colls.bcast_from(seqs, state.owner, self.axis)
+        lens_b = colls.bcast_from(lens, state.owner, self.axis)
+        eps_b = colls.bcast_from(eps, state.owner, self.axis)
+        csums_b = colls.bcast_from(csums, state.owner, self.axis)
+        head_b = colls.bcast_from(head_v, state.owner, self.axis)
+        slots_b = colls.bcast_from(slots, state.owner, self.axis)
+        grant_b = colls.bcast_from(grant, state.owner, self.axis)
 
         # granted lanes land in one scatter; rejected lanes are dropped
         row = jnp.where(grant_b, slots_b, self.capacity)
@@ -193,6 +239,7 @@ class Ringbuffer(Channel):
             payload=state.payload.at[row].set(msgs_b, mode="drop"),
             seq=state.seq.at[row].set(seqs_b, mode="drop"),
             length=state.length.at[row].set(lens_b, mode="drop"),
+            epoch=state.epoch.at[row].set(eps_b, mode="drop"),
             csum=state.csum.at[row].set(csums_b, mode="drop"),
             head=head_b)
         if self.mgr.traffic.enabled:
@@ -205,12 +252,35 @@ class Ringbuffer(Channel):
                        ALL_PEERS, self.slot_nbytes * B)
         return new, grant & sent_any, self.mgr.track(ack)
 
+    # -- failover takeover (DESIGN.md §12.2) ----------------------------------
+    def re_own(self, state: RingbufferState, new_owner, alive, head):
+        """``new_owner`` claims the ring at cursor ``head`` and the
+        crashed participants in ``~alive`` leave the flow-control set.
+
+        Every slot's seq is poisoned (the never-written sentinel), so
+        nothing published by the previous owner can validate until the
+        new owner re-publishes it — the takeover is a clean cut: the new
+        owner re-stamps and re-broadcasts the unacked suffix from its
+        cached copy (the caller's job; :meth:`ReplicatedLog.promote`
+        does exactly this), and any in-flight slot write from the old
+        owner that lands afterwards hits a poisoned seq or a stale epoch.
+        Consumer cursors are preserved — cursors are absolute, so a
+        follower that had applied k entries resumes at entry k.
+        """
+        return state._replace(
+            seq=jnp.full((self.capacity,), 0xFFFFFFFF, jnp.uint32),
+            epoch=jnp.zeros((self.capacity,), jnp.uint32),
+            csum=jnp.zeros((self.capacity,), jnp.uint32),
+            head=jnp.asarray(head, jnp.uint32),
+            owner=jnp.asarray(new_owner, jnp.int32),
+            alive=jnp.asarray(alive).reshape(self.P))
+
     # -- consumer -------------------------------------------------------------
     def recv_one(self, state: RingbufferState, pred=True):
         """Consume the next unread message if available (and ``pred``).
 
         Returns (state, msg, msg_len, got).  Validates seq (staleness) and
-        checksum (tearing; the checksum also covers seq+len — see
+        checksum (tearing; the checksum also covers seq+len+epoch — see
         :meth:`_slot_csum`); a failed validation returns got=False without
         advancing the cursor (the retry is the next call).  The advanced
         cursor is acknowledged through the SST (push) so the producer can
@@ -223,9 +293,18 @@ class Ringbuffer(Channel):
         have = jnp.asarray(pred) & (my_ack < state.head)
         slot = (my_ack % jnp.uint32(self.capacity)).astype(jnp.int32)
         msg = state.payload[slot]
-        ok = (state.seq[slot] == my_ack) \
-            & (self._slot_csum(msg, state.seq[slot], state.length[slot])
-               == state.csum[slot])
+        seq_ok = state.seq[slot] == my_ack
+        ok = seq_ok & (self._slot_csum(msg, state.seq[slot],
+                                       state.length[slot],
+                                       state.epoch[slot])
+                       == state.csum[slot])
+        if self.mgr.traffic.enabled:
+            # §12 satellite: checksum failures are a counted event, not a
+            # silent re-read (seq mismatches are expected staleness and
+            # are NOT corruption)
+            self.mgr.traffic.record_corrupt(
+                self.full_name,
+                (have & seq_ok & ~ok).astype(jnp.float32))
         got = have & ok
         new_ack = jnp.where(got, my_ack + jnp.uint32(1), my_ack)
         acks = self.acks.store_mine(state.acks, new_ack)
@@ -235,18 +314,31 @@ class Ringbuffer(Channel):
         msg_len = jnp.where(got, state.length[slot], 0)
         return new, msg, msg_len, got
 
-    def recv_window(self, state: RingbufferState, window: int, pred=True):
+    def recv_window(self, state: RingbufferState, window: int, pred=True,
+                    expect_epoch=None):
         """Drain up to ``window`` messages in ONE round-set.
 
         Returns (state, msgs (window, width), lens (window,),
-        got (window,)).  One bulk checksum-validated read of the cached
-        slots serves the whole window, and the advanced cursor is
-        acknowledged with a **single** SST push — the windowed analogue of
-        ``window`` scalar :meth:`recv_one` calls (which pay one cursor
-        broadcast each).  ``got`` is a contiguous prefix: the cursor
-        stalls at the first slot that fails validation (stale seq or
+        got (window,), fenced (window,)).  One bulk checksum-validated
+        read of the cached slots serves the whole window, and the
+        advanced cursor is acknowledged with a **single** SST push — the
+        windowed analogue of ``window`` scalar :meth:`recv_one` calls
+        (which pay one cursor broadcast each).
+
+        Epoch fencing (DESIGN.md §12.1): with ``expect_epoch`` given, a
+        checksum-valid slot stamped with an *older* epoch is **fenced**:
+        ``fenced[k]`` is True, the message is withheld (zeros, got=False)
+        and the cursor advances past it — a zombie producer's delayed
+        write is consumed-but-dropped, never applied and never a wedge.
+        Fenced lanes are counted in the traffic ledger
+        (``record_fenced``); ``expect_epoch=None`` (the default) disables
+        the filter and ``fenced`` is all-False.
+
+        Delivery/consumption is a contiguous prefix: the cursor stalls at
+        the first slot that fails *integrity* validation (stale seq or
         checksum mismatch) and retries from there next call, exactly like
-        the scalar path.  Masked/empty lanes return zeros.
+        the scalar path; fenced slots do not stall (they are valid, just
+        dead).  Masked/empty lanes return zeros.
         """
         me = colls.my_id(self.axis)
         my_ack = self.acks.rows(state.acks)[me]
@@ -254,18 +346,35 @@ class Ringbuffer(Channel):
         seqs = my_ack + k
         slots = (seqs % jnp.uint32(self.capacity)).astype(jnp.int32)
         rows = state.payload[slots]                       # (window, width)
-        valid = (state.seq[slots] == seqs) \
+        seq_ok = state.seq[slots] == seqs
+        valid = seq_ok \
             & (jax.vmap(self._slot_csum)(rows, state.seq[slots],
-                                         state.length[slots])
+                                         state.length[slots],
+                                         state.epoch[slots])
                == state.csum[slots])
         avail = state.head - my_ack                       # uint32, ≥ 0
         good = jnp.asarray(pred) & (k < avail) & valid
-        # contiguous prefix: a lane delivers iff no earlier lane failed
+        if self.mgr.traffic.enabled:
+            self.mgr.traffic.record_corrupt(
+                self.full_name,
+                jnp.sum((jnp.asarray(pred) & (k < avail) & seq_ok & ~valid)
+                        .astype(jnp.float32)))
+        # contiguous prefix: a lane is consumed iff no earlier lane failed
         bad = (~good).astype(jnp.int32)
-        got = good & ((jnp.cumsum(bad) - bad) == 0)
-        n_got = jnp.sum(got.astype(jnp.uint32))
+        consumed = good & ((jnp.cumsum(bad) - bad) == 0)
+        if expect_epoch is None:
+            fenced = jnp.zeros((window,), jnp.bool_)
+        else:
+            fenced = consumed & (state.epoch[slots]
+                                 < jnp.asarray(expect_epoch, jnp.uint32))
+            if self.mgr.traffic.enabled:
+                self.mgr.traffic.record_fenced(
+                    self.full_name,
+                    jnp.sum(fenced.astype(jnp.float32)))
+        got = consumed & ~fenced
+        n_consumed = jnp.sum(consumed.astype(jnp.uint32))
         msgs = jnp.where(got[:, None], rows, jnp.zeros_like(rows))
         lens = jnp.where(got, state.length[slots], 0)
-        acks = self.acks.store_mine(state.acks, my_ack + n_got)
+        acks = self.acks.store_mine(state.acks, my_ack + n_consumed)
         acks, _a = self.acks.push_broadcast(acks)
-        return state._replace(acks=acks), msgs, lens, got
+        return state._replace(acks=acks), msgs, lens, got, fenced

@@ -134,6 +134,11 @@ class TrafficLedger:
         # windows classified lock-free vs windows that fell back to the
         # locked schedule
         self.fastpath_counts: Dict[str, Dict[str, float]] = {}
+        # integrity/fencing event counters (DESIGN.md §12), keyed by
+        # channel: slots that failed checksum validation on receive, and
+        # stale-epoch entries rejected by the failover fence
+        self.corrupt_counts: Dict[str, float] = {}
+        self.fenced_counts: Dict[str, float] = {}
 
     def enable(self):
         self.enabled = True
@@ -147,6 +152,8 @@ class TrafficLedger:
         self.counts = {}
         self.cache_counts = {}
         self.fastpath_counts = {}
+        self.corrupt_counts = {}
+        self.fenced_counts = {}
         return self
 
     def record(self, verb: str, wire_bytes):
@@ -191,6 +198,31 @@ class TrafficLedger:
         jax.debug.callback(_cb, jnp.asarray(fast, jnp.float32),
                            jnp.asarray(windows, jnp.float32))
 
+    def record_corrupt(self, name: str, count):
+        """Record ``count`` checksum-validation failures (a traced scalar)
+        against channel ``name`` — a receive found a slot whose seq
+        matched the cursor but whose checksum did not (torn/corrupted
+        data, DESIGN.md §12): the re-read that used to happen silently is
+        now a counted event.  Same trace-time gating contract as
+        :meth:`record`: callers check ``enabled`` before calling, so
+        disabled ledgers never emit callbacks."""
+        def _cb(n, name=name):
+            self.corrupt_counts[name] = \
+                self.corrupt_counts.get(name, 0.0) + float(n)
+
+        jax.debug.callback(_cb, jnp.asarray(count, jnp.float32))
+
+    def record_fenced(self, name: str, count):
+        """Record ``count`` stale-epoch entries rejected by the failover
+        fence (DESIGN.md §12.1) against channel ``name`` — a zombie
+        writer's delayed publish was consumed-but-dropped.  Same
+        trace-time gating contract as :meth:`record`."""
+        def _cb(n, name=name):
+            self.fenced_counts[name] = \
+                self.fenced_counts.get(name, 0.0) + float(n)
+
+        jax.debug.callback(_cb, jnp.asarray(count, jnp.float32))
+
     def total_bytes(self) -> float:
         return sum(e["bytes"] for e in self.counts.values())
 
@@ -215,6 +247,14 @@ class TrafficLedger:
                 if v["windows"] else 0.0
             out[k] = e
         return out
+
+    def corrupt_summary(self) -> Dict[str, float]:
+        """Per-channel checksum-validation-failure counts (§12)."""
+        return dict(sorted(self.corrupt_counts.items()))
+
+    def fenced_summary(self) -> Dict[str, float]:
+        """Per-channel stale-epoch fenced-entry counts (§12.1)."""
+        return dict(sorted(self.fenced_counts.items()))
 
 
 class _TraceCtx(threading.local):

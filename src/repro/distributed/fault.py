@@ -34,6 +34,54 @@ class DeviceFailure(RuntimeError):
         self.failed_slice = failed_slice
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Channel-layer crash schedule: which participant dies at which
+    mutation window (DESIGN.md §12).
+
+    ``kills`` maps participant id → the window index *before* which it
+    crashes (it never serves that window: its publishes are suppressed,
+    its consumer cursor freezes, and failover removes it from flow
+    control).  A plan is immutable and reusable — running the same plan
+    twice yields the same schedule (the ``run_elastic`` dict-mutation
+    regression is exactly the bug this type exists to prevent).
+
+    The training tier composes through :meth:`device_failures`: the same
+    plan that kills a replication-log participant can drive
+    ``run_elastic``'s ``inject_failure_at`` hook, so one fault schedule
+    exercises both recovery paths (re-mesh + restore there, epoch-fenced
+    promotion here).
+    """
+    kills: "dict[int, int]" = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "kills",
+                           {int(p): int(w) for p, w in self.kills.items()})
+
+    def dead_at(self, window: int) -> set:
+        """Participants already crashed while window ``window`` is served
+        (kill window ≤ ``window``)."""
+        return {p for p, w in self.kills.items() if w <= window}
+
+    def alive_mask(self, P: int, window: int) -> np.ndarray:
+        """(P,) bool — False for every participant whose kill window is
+        ≤ ``window`` (it is dead while window ``window`` is served)."""
+        dead = self.dead_at(window)
+        return np.asarray([p not in dead for p in range(P)], bool)
+
+    def newly_dead(self, window: int) -> list:
+        """Participants whose crash lands exactly before ``window`` —
+        the failure-detector edge the caller reacts to (promote, etc.)."""
+        return sorted(p for p, w in self.kills.items() if w == window)
+
+    def device_failures(self) -> dict:
+        """An ``inject_failure_at``-shaped dict for :func:`run_elastic`
+        (step → True), composing the channel-layer plan with the training
+        tier's :class:`DeviceFailure` recovery path.  A fresh dict per
+        call — callers may consume it destructively."""
+        return {int(w): True for w in self.kills.values()}
+
+
 @dataclasses.dataclass
 class ElasticMeshSpec:
     """Allowed degraded configurations, largest first.
@@ -67,6 +115,11 @@ def run_elastic(spec: ElasticMeshSpec, build: Callable, ckpt,
     """
     level = 0
     history: List[tuple] = []
+    # consume a private copy: the schedule is drained destructively below
+    # (pop marks a failure delivered), and mutating the CALLER's dict made
+    # fault plans single-use — the second run of a reused plan injected
+    # nothing and silently tested the happy path.
+    inject_failure_at = dict(inject_failure_at or {})
     mesh = spec.mesh_for(level)
     state, step_fn, shard_fn = build(mesh)
     start = 0

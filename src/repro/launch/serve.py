@@ -38,13 +38,25 @@ def main(argv=None):
     ap.add_argument("--replicas", type=int, default=0,
                     help="follower page-table replicas fed by the "
                          "ReplicatedLog channel (DESIGN.md §9.3)")
+    ap.add_argument("--kill-leader-at", type=int, default=None,
+                    metavar="WINDOW",
+                    help="crash the replication-log leader before mutation "
+                         "window WINDOW (DESIGN.md §12: a follower is "
+                         "promoted via the epoch-fenced SST protocol and "
+                         "serving continues; requires --replicas >= 1)")
     args = ap.parse_args(argv)
+
+    fault_plan = None
+    if args.kill_leader_at is not None:
+        from repro.distributed.fault import FaultPlan
+        fault_plan = FaultPlan(kills={0: args.kill_leader_at})
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.replace(dtype=args.dtype)
     engine = ServingEngine(cfg, max_batch=args.max_batch,
                            max_seq=args.prompt_len + args.gen_len,
-                           replicas=args.replicas)
+                           replicas=args.replicas,
+                           fault_plan=fault_plan)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -66,6 +78,14 @@ def main(argv=None):
               f"diverged_leaves={diverged}")
         assert not any(diverged), \
             "follower page tables must converge bitwise to the leader"
+        if args.kill_leader_at is not None:
+            print(f"[serve] failover: leader={rep['leader']} "
+                  f"epoch={rep['epoch']} failovers={rep['failovers']} "
+                  f"retries={rep['retries']} dropped={rep['dropped']}")
+            assert rep["failovers"] >= 1 and rep["leader"] != 0, \
+                "the kill must have promoted a follower"
+            assert rep["dropped"] == 0, \
+                "failover must not drop acked mutation windows"
 
 
 if __name__ == "__main__":

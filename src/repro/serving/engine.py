@@ -56,6 +56,7 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..core import DELETE, GET, INSERT, NOP, KVStore, ReplicatedLog, \
     SharedQueue, make_manager
+from ..distributed.fault import FaultPlan
 from ..models import build_model
 
 # wire bytes of one page-table row read (modeled, §2.1: 2·|row| per
@@ -69,11 +70,17 @@ MAX_WINDOW = 32     # max KV ops per participant per collective round-set
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, max_batch: int = 4,
-                 max_seq: int = 256, replicas: int = 0):
+                 max_seq: int = 256, replicas: int = 0,
+                 fault_plan: FaultPlan | None = None):
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.replicas = int(replicas)
+        if fault_plan is not None and not self.replicas:
+            raise ValueError("fault_plan requires replicas >= 1: a leader "
+                             "crash without a replicated page table loses "
+                             "the serving state it would fail over to")
+        self.fault_plan = fault_plan
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(0))
         # --- channels
@@ -125,16 +132,29 @@ class ServingEngine:
             self._rep_states = tuple(t.init_state()
                                      for t in self.replica_tables)
 
-            def _rep(log_st, f_sts, op, key, val, tgt):
-                log_st, ok = self.page_log.append(log_st, op, key, val,
-                                                  targets=tgt)
-                log_st, f_sts, applied = self.page_log.sync(
-                    log_st, self.replica_tables, f_sts, max_entries=1)
+            def _rep(log_st, f_sts, op, key, val, tgt, alive):
+                # §12 client protocol: the append is predicated on the
+                # CURRENT owner being alive (state-driven redirect — after
+                # a promotion the same trace publishes through the new
+                # leader), with one bounded retry+drain if the ring is
+                # full.  The engine's crash model kills the log-leader
+                # *role*; the vmap lanes are simulation hosts and their
+                # memory stays one-sided-addressable (the RDMA stance —
+                # bench_failover exercises full lane masking).
+                lead_ok = alive[log_st.ring.owner]
+                log_st, f_sts, ok, applied = self.page_log.append_with_retry(
+                    log_st, op, key, val, self.replica_tables, f_sts,
+                    targets=tgt, max_attempts=2, pred=lead_ok)
                 return log_st, f_sts, ok, applied, self.page_log.lag(log_st)
 
             self._rep_step = jax.jit(lambda *a: self.mgr.runtime.run(
                 _rep, *a))
+            self._promote_step = jax.jit(
+                lambda log_st, alive: self.mgr.runtime.run(
+                    self.page_log.promote, log_st, alive))
             self.rep_counts = collections.Counter()
+            self._alive = np.ones(P_NODES, bool)
+            self._log_leader = self.page_log.leader
         self._kv_step = jax.jit(
             lambda st, op, key, val, tgt: self.mgr.runtime.run(
                 lambda s, o, k, v, t: self.pages.op_window(s, o, k, v,
@@ -159,6 +179,12 @@ class ServingEngine:
         self.loc_counts = collections.Counter()
         self._page_home: Dict[int, tuple] = {}
         self._saved_keys: set = set()
+
+    def _alive_stacked(self):
+        """The (P, P) stacked liveness mask the vmap binding expects:
+        every simulation lane sees the full (P,) alive vector."""
+        return jnp.broadcast_to(jnp.asarray(self._alive),
+                                (P_NODES, P_NODES))
 
     # -- channel helpers (windowed round-sets over the P simulated nodes) ---
     def _kv_ops(self, ops: List[tuple]):
@@ -197,6 +223,20 @@ class ServingEngine:
                 self._kv_state, jnp.asarray(op), jnp.asarray(key),
                 jnp.asarray(val), jnp.asarray(tgt))
             if self.replicas and any(c[0] != NOP for c in chunk):
+                # §12 failure detection + client redirect: consult the
+                # fault plan at each mutation-window index; when the
+                # log leader is among the newly dead, promote a follower
+                # (one jitted SST gather + fence + suffix re-publish)
+                # and redirect subsequent appends to the winner before
+                # publishing this window.
+                w_idx = self.rep_counts["windows"]
+                if self.fault_plan is not None:
+                    for p in self.fault_plan.newly_dead(w_idx):
+                        self._alive[p] = False
+                    if not self._alive[self._log_leader]:
+                        self._log_state, winner = self._promote_step(
+                            self._log_state, self._alive_stacked())
+                        self._log_leader = int(np.asarray(winner)[0])
                 # publish the mutation window to the replication log and
                 # sync every follower replica (one jit dispatch; windows
                 # are padded to the log's fixed MAX_WINDOW entry shape —
@@ -210,7 +250,9 @@ class ServingEngine:
                 (self._log_state, self._rep_states, ok, applied,
                  lag) = self._rep_step(
                     self._log_state, self._rep_states, jnp.asarray(pw),
-                    jnp.asarray(pk), jnp.asarray(pv), jnp.asarray(pt))
+                    jnp.asarray(pk), jnp.asarray(pv), jnp.asarray(pt),
+                    self._alive_stacked())
+                self.rep_counts["windows"] += 1
                 self.rep_counts["published"] += int(np.asarray(ok)[0])
                 self.rep_counts["dropped"] += 1 - int(np.asarray(ok)[0])
                 self.rep_counts["applied"] += int(np.asarray(applied)[0])
@@ -375,9 +417,21 @@ class ServingEngine:
     def stats(self):
         rep = {}
         if self.replicas:
+            # the §12 counters live in the log state (psum/pmax-uniform
+            # across lanes, so lane 0 reports the cluster totals); the
+            # epoch is the max accepted row of the promotion table
+            st = self._log_state
             rep = {"replication": dict(self.rep_counts)
                    | {"replicas": self.replicas,
-                      "diverged_leaves": self.replica_divergence()}}
+                      "diverged_leaves": self.replica_divergence(),
+                      "leader": self._log_leader,
+                      "epoch": int(np.asarray(st.ptable.cached)[0, :, 0]
+                                   .max()),
+                      "failovers": int(np.asarray(st.failovers)[0]),
+                      "retries": int(np.asarray(st.retries)[0]),
+                      "fenced": int(np.asarray(st.fenced)[0]),
+                      "fenced_writes": int(np.asarray(st.fenced_writes)[0]),
+                      "alive": self._alive.tolist()}}
         loc_reads = self.loc_counts["local_reads"]
         rem_reads = self.loc_counts["remote_reads"]
         return {"kv_ops": {k: v for k, v in self.op_counts.items()},

@@ -264,7 +264,7 @@ def run_ring_history(h: _RingHarness, rng, n_rounds):
                 0, np.broadcast_to(msgs, (h.P, h.B, W)),
                 np.broadcast_to(lens, (h.P, h.B)), sent)
         else:
-            st, msgs, lens, got = h.recv(st)
+            st, msgs, lens, got, _f = h.recv(st)
             rec.record_ring_recv(h.recv_w, msgs, lens, got)
     return rec
 

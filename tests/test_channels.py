@@ -641,7 +641,7 @@ class TestRingbufferWindows:
         def step(st, msgs, lens, preds):
             def prog(st, msgs, lens, preds):
                 st, sent, _ = rb.publish_window(st, msgs, lens, preds)
-                st, m, l, got = rb.recv_window(st, self.B)
+                st, m, l, got, _f = rb.recv_window(st, self.B)
                 return st, sent, m, l, got
             return mgr.runtime.run(prog, st, msgs, lens, preds)
         return step
@@ -681,7 +681,7 @@ class TestRingbufferWindows:
         @jax.jit
         def drain(st):
             def prog(st):
-                st, m, l, got = rb.recv_window(st, self.B)
+                st, m, l, got, _f = rb.recv_window(st, self.B)
                 return st, got
             return mgr.runtime.run(prog, st)
 
@@ -713,7 +713,7 @@ class TestRingbufferWindows:
                 st, sent, _ = rb.publish_window(
                     st, msg[None, :], jnp.reshape(ln, (1,)),
                     jnp.reshape(pred, (1,)))
-                st, m, l, got = rb.recv_window(st, 1)
+                st, m, l, got, _f = rb.recv_window(st, 1)
                 return st, sent[0], m[0], l[0], got[0]
             return mgr.runtime.run(prog, st, msg, ln, pred)
 
@@ -767,13 +767,55 @@ class TestRingbufferWindows:
             buf = np.asarray(getattr(st, field)).copy()
             corrupt = st._replace(**{field: jnp.asarray(
                 buf + np.asarray(delta, buf.dtype))})
-            _st2, _m, _l, got = drain(corrupt)
+            _st2, _m, _l, got, _f = drain(corrupt)
             assert not np.any(np.asarray(got)), \
                 f"corrupted {field} must never deliver"
         # uncorrupted state still drains everything
-        _st3, m, _l, got = drain(st)
+        _st3, m, _l, got, _f = drain(st)
         assert np.all(np.asarray(got))
         np.testing.assert_array_equal(np.asarray(m), msgs)
+
+    def test_checksum_failure_lands_in_traffic_ledger(self):
+        """§12 satellite: validation failures are observable, not just
+        silently stalled — a corrupted slot increments the per-channel
+        ``corrupt`` ledger counter, while ordinary staleness (slots past
+        ``head``, never-written seq words) counts nothing.  Ledger
+        gating is trace-time, so traffic is enabled *before* the jitted
+        drain is built."""
+        mgr, rb, st = self._mk("ledger")
+        mgr.traffic.enable().reset()
+
+        @jax.jit
+        def pub(st, msgs, lens):
+            return mgr.runtime.run(
+                lambda s, m, l: rb.publish_window(s, m, l)[0],
+                st, msgs, lens)
+
+        @jax.jit
+        def drain(st):
+            return mgr.runtime.run(lambda s: rb.recv_window(s, self.B), st)
+
+        try:
+            msgs = self._msgs(0)
+            lens = np.full((P, self.B), 2, np.int32)
+            st = pub(st, jnp.asarray(msgs), jnp.asarray(lens))
+            # clean drain: everything validates, nothing is counted
+            _st2, _m, _l, got, _f = drain(st)
+            assert np.all(np.asarray(got))
+            assert mgr.traffic.corrupt_summary().get(
+                rb.full_name, 0.0) == 0.0
+            # flip one payload word in consumer 1's cached copy only
+            buf = np.asarray(st.payload).copy()
+            buf[1, 0, 0] ^= 0x5A
+            _st3, _m, _l, got, _f = drain(
+                st._replace(payload=jnp.asarray(buf)))
+            got = np.asarray(got)
+            assert not got[1].any(), "corrupt head slot stalls consumer 1"
+            assert got[0].all() and got[2:].all(), \
+                "other consumers' cached copies are untouched"
+            assert mgr.traffic.corrupt_summary()[rb.full_name] == 1.0
+        finally:
+            mgr.traffic.disable()
 
     def test_recv_one_pred_masks_consumption(self):
         """Pred-handling regression (DESIGN.md §9.1): a masked consumer

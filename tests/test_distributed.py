@@ -148,3 +148,41 @@ def test_elastic_remesh_recovers_from_failure(tmp_path):
         assert steps[-1] == 4, history
         print("ELASTIC_OK", history)
     """)
+
+
+def test_run_elastic_does_not_consume_callers_failure_plan():
+    """Regression (DESIGN.md §12): ``run_elastic`` drained the caller's
+    ``inject_failure_at`` dict with ``pop``, so the second run of a reused
+    fault plan injected nothing and silently tested the happy path.  The
+    same plan must now drive identical failure schedules on every run."""
+    import jax.numpy as jnp
+
+    from repro.distributed.fault import ElasticMeshSpec, run_elastic
+
+    spec = ElasticMeshSpec(shapes=[(1, 1), (1, 1)],
+                           axis_names=("data", "model"))
+
+    class NoCkpt:
+        def latest_step(self):
+            return None
+
+    def build(mesh):
+        state = {"x": jnp.zeros(())}
+
+        def step_fn(state, batch):
+            return {"x": state["x"] + batch}, None
+
+        return state, step_fn, lambda mesh: None
+
+    plan = {1: True}
+    histories = []
+    for _run in range(2):
+        _state, history = run_elastic(
+            spec, build, NoCkpt(), total_steps=3,
+            get_batch=lambda step: 1.0, inject_failure_at=plan,
+            log=lambda *_a, **_k: None)
+        histories.append(history)
+    assert plan == {1: True}, "caller's plan must not be mutated"
+    # both runs hit the injected failure at step 1 and replayed from 0
+    # on the degraded mesh — identical schedules, not happy-path drift
+    assert histories[0] == histories[1] == [(0, 0), (0, 1), (1, 1), (2, 1)]

@@ -1,0 +1,365 @@
+"""Epoch-fenced leader failover (DESIGN.md §12).
+
+The replication tier's survival story, unit-by-unit:
+
+* **promotion** — one SST epoch/cursor gather elects the replacement:
+  highest applied cursor among the living wins, lowest rank breaks ties;
+  the winner re-owns the ring at the slowest live cursor and re-publishes
+  the unacked suffix, so every acked window survives the crash;
+* **fencing** — a zombie leader's delayed publish lands in the ring
+  (one-sided writes ask no permission) but every live follower drops it
+  at delivery and counts it; the *mutation twin* disables the fence and
+  proves the same test detects the corruption — the fence is
+  load-bearing, not decorative (the PR-6 torture-harness idiom);
+* **bounded retry** — ``append_with_retry`` drains-and-retries a full
+  ring a bounded number of times, counting retries and drops;
+* **crash injection** — a ``FaultPlan`` kills the leader mid-window
+  (after its publish was acked, before any follower drained it): zero
+  acked-window loss end-to-end, plus a ``torture``-marked kill-point
+  sweep;
+* **engine failover** — ``ServingEngine(fault_plan=…)`` redirects the
+  page-table log to the promoted leader mid-serve and finishes with
+  bitwise-converged replicas.
+
+Windows route real mutations through participants 1..P-1 only (lane 0
+stays NOP): under full lane masking a dead participant's slice of a
+pre-crash entry would otherwise have no live submitter at replay.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DELETE, INSERT, NOP, UPDATE, KVStore,
+                        ReplicatedLog, make_manager)
+from repro.core.replog import diverging_leaves
+from repro.distributed.fault import FaultPlan
+
+P = 4
+B = 2
+CAP = 4
+
+mgr = make_manager(P)
+_kw = dict(slots_per_node=6, value_width=2, num_locks=8, index_capacity=64)
+leader = KVStore(None, "fo_leader", mgr, **_kw)
+follower = KVStore(None, "fo_follower", mgr, **_kw)
+log = ReplicatedLog(None, "fo_log", mgr, store=leader, window=B,
+                    capacity=CAP)
+
+NL = (NOP, 1, (0, 0))
+
+
+def window(*lanes):
+    op = jnp.asarray([[o[0] for o in ln] for ln in lanes], jnp.int32)
+    key = jnp.asarray([[o[1] for o in ln] for ln in lanes], jnp.uint32)
+    val = jnp.asarray([[o[2] for o in ln] for ln in lanes], jnp.int32)
+    return op, key, val
+
+
+def wmut(*triples):
+    """A window with lane 0 NOP and ``triples`` spread over lanes 1..3."""
+    lanes = [[NL] * B for _ in range(P)]
+    for i, t in enumerate(triples):
+        lanes[1 + i % (P - 1)][i // (P - 1)] = t
+    return window(*lanes)
+
+
+def alive_stacked(mask):
+    return jnp.broadcast_to(jnp.asarray(mask, bool), (P, P))
+
+
+def states():
+    return leader.init_state(), follower.init_state(), log.init_state()
+
+
+@jax.jit
+def step(lst, fst, gst, op, key, val, alive):
+    """Serving window under full lane masking: leader-store apply +
+    append through the current owner + live-follower sync."""
+    def prog(lst, fst, gst, op, key, val, alive):
+        me = mgr.runtime.my_id()
+        lst, _res = leader.op_window(lst, op, key, val)
+        gst, ok = log.append(gst, op, key, val, pred=alive[gst.ring.owner])
+        gst, fst, applied = log.sync(gst, follower, fst, max_entries=1,
+                                     pred=alive[me])
+        return lst, fst, gst, ok, applied
+    return mgr.runtime.run(prog, lst, fst, gst, op, key, val, alive)
+
+
+@jax.jit
+def append_live(lst, gst, op, key, val, alive):
+    def prog(lst, gst, op, key, val, alive):
+        lst, _res = leader.op_window(lst, op, key, val)
+        gst, ok = log.append(gst, op, key, val, pred=alive[gst.ring.owner])
+        return lst, gst, ok
+    return mgr.runtime.run(prog, lst, gst, op, key, val, alive)
+
+
+@jax.jit
+def sync_mask(gst, fst, mask):
+    """One sync with a per-participant consume mask ((P,) bool — each
+    lane sees its own scalar), used both to freeze dead consumers and to
+    build cursor asymmetry for the election tests."""
+    def prog(gst, fst, mask):
+        gst, fst, applied = log.sync(gst, follower, fst, max_entries=1,
+                                     pred=mask)
+        return gst, fst, applied, log.lag(gst)
+    return mgr.runtime.run(prog, gst, fst, mask)
+
+
+@jax.jit
+def promote_j(gst, alive):
+    return mgr.runtime.run(log.promote, gst, alive)
+
+
+@jax.jit
+def retry_j(lst, fst, gst, op, key, val, alive):
+    def prog(lst, fst, gst, op, key, val, alive):
+        lst, _res = leader.op_window(lst, op, key, val)
+        gst, fst, ok, applied = log.append_with_retry(
+            gst, op, key, val, follower, fst, max_attempts=2,
+            pred=alive[gst.ring.owner])
+        return lst, fst, gst, ok, applied
+    return mgr.runtime.run(prog, lst, fst, gst, op, key, val, alive)
+
+
+@jax.jit
+def zombie_j(gst, op, key, val):
+    def prog(gst, op, key, val):
+        return log.zombie_publish(gst, op, key, val, zombie=0,
+                                  stale_epoch=0)
+    return mgr.runtime.run(prog, gst, op, key, val)
+
+
+def assert_converged(lst, fst, what="leader/follower"):
+    diverged = diverging_leaves(jax.tree.map(np.asarray, lst),
+                                jax.tree.map(np.asarray, fst))
+    assert not diverged, f"{what} diverged on leaves {diverged}"
+
+
+ALL = np.ones(P, bool)
+W0 = wmut((INSERT, 1, (10, 11)), (INSERT, 2, (20, 21)),
+          (INSERT, 3, (30, 31)))
+W1 = wmut((UPDATE, 1, (12, 13)), (INSERT, 4, (40, 41)),
+          (DELETE, 2, (0, 0)))
+W2 = wmut((UPDATE, 3, (32, 33)), (INSERT, 5, (50, 51)))
+W3 = wmut((UPDATE, 4, (42, 43)), (DELETE, 5, (0, 0)))
+
+
+class TestPromotion:
+    def test_equal_cursors_tie_break_to_lowest_live_rank(self):
+        lst, fst, gst = states()
+        lst, fst, gst, ok, _n = step(lst, fst, gst, *W0,
+                                     alive_stacked(ALL))
+        assert bool(np.asarray(ok)[0])
+        alive = np.asarray([False, True, True, True])
+        gst, winner = promote_j(gst, alive_stacked(alive))
+        assert np.asarray(winner).tolist() == [1] * P, \
+            "equal cursors: lowest live rank must win"
+        assert int(np.asarray(gst.failovers)[0]) == 1
+        assert int(np.asarray(gst.ptable.cached)[0, :, 0].max()) == 1
+        # the log keeps serving through the new owner — client redirect
+        # is state-driven, not code-driven
+        lst, fst, gst, ok, _n = step(lst, fst, gst, *W1,
+                                     alive_stacked(alive))
+        assert bool(np.asarray(ok)[0]), "append through the new leader"
+        assert_converged(lst, fst)
+        assert int(np.asarray(mgr.runtime.run(log.lag, gst))[0]) == 0
+
+    def test_highest_applied_cursor_wins(self):
+        """Two acked entries, followers at staggered cursors: the
+        most-caught-up live participant must be promoted (it alone
+        holds every acked entry applied), and the re-published suffix
+        catches the laggard up with zero acked loss."""
+        lst, fst, gst = states()
+        for w in (W0, W1):
+            lst, gst, ok = append_live(lst, gst, *w, alive_stacked(ALL))
+            assert bool(np.asarray(ok)[0])
+        # participants 0, 2, 3 drain both entries; participant 1 only one
+        m023 = jnp.asarray([True, False, True, True])
+        m1 = jnp.asarray([False, True, False, False])
+        for m in (m023, m023, m1):
+            gst, fst, _n, _lag = sync_mask(gst, fst, m)
+        cursors = np.asarray(gst.ring.acks.cached)[0]
+        np.testing.assert_array_equal(cursors, [2, 1, 2, 2])
+        alive = np.asarray([False, True, True, True])
+        gst, winner = promote_j(gst, alive_stacked(alive))
+        assert np.asarray(winner).tolist() == [2] * P, \
+            "highest applied cursor among the living must win"
+        # catch-up: the laggard drains the re-published suffix
+        while int(np.asarray(mgr.runtime.run(log.lag, gst))[0]):
+            gst, fst, _n, _lag = sync_mask(gst, fst, jnp.asarray(alive))
+        assert_converged(lst, fst)
+
+
+class TestZombieFence:
+    def _promoted(self):
+        lst, fst, gst = states()
+        lst, fst, gst, _ok, _n = step(lst, fst, gst, *W0,
+                                      alive_stacked(ALL))
+        alive = np.asarray([False, True, True, True])
+        gst, _w = promote_j(gst, alive_stacked(alive))
+        return lst, fst, gst, alive
+
+    def _zombie_window(self):
+        """A window the dead epoch-0 leader would publish: INSERT of a
+        key the real history never creates, with poison values."""
+        return wmut((INSERT, 99, (-7, -7)))
+
+    def test_zombie_publish_is_fenced_and_counted(self):
+        lst, fst, gst, alive = self._promoted()
+        gst, landed = zombie_j(gst, *self._zombie_window())
+        assert bool(np.asarray(landed)[0]), \
+            "the one-sided zombie write must land (fencing is at delivery)"
+        gst, fst, applied, lag = sync_mask(gst, fst, jnp.asarray(alive))
+        assert int(np.asarray(applied)[1]) == 0, \
+            "a fenced entry is consumed but never applied"
+        assert int(np.asarray(lag)[1]) == 0, \
+            "the fenced entry must not wedge the cursor"
+        assert int(np.asarray(gst.fenced)[0]) == 1
+        assert_converged(lst, fst)
+        # the poisoned key never reached either side's index
+        assert not np.any(np.asarray(fst.idx)[..., 1] == 99)
+
+    def test_fence_is_load_bearing_mutation_twin(self):
+        """Disable the fence (reset every participant's accepted epoch
+        to the zombie's) and replay the SAME scenario: the zombie entry
+        must now corrupt the follower — proving the previous test's
+        assertions would catch a broken fence, not vacuously pass."""
+        lst, fst, gst, alive = self._promoted()
+        gst, _landed = zombie_j(gst, *self._zombie_window())
+        cached = np.asarray(gst.ptable.cached).copy()
+        cached[:, :, 0] = 0                      # accepted epoch → 0
+        gst_off = gst._replace(
+            ptable=gst.ptable._replace(cached=jnp.asarray(cached)))
+        _gst2, fst_off, applied, _lag = sync_mask(gst_off, fst,
+                                                  jnp.asarray(alive))
+        assert int(np.asarray(applied)[1]) == 1, \
+            "with the fence off the zombie entry applies"
+        diverged = diverging_leaves(jax.tree.map(np.asarray, lst),
+                                    jax.tree.map(np.asarray, fst_off))
+        assert diverged, ("an unfenced zombie write must corrupt the "
+                          "follower — otherwise the fence test is vacuous")
+
+
+class TestAppendWithRetry:
+    def test_drop_then_recover(self):
+        """Fill the ring, keep appending: the first attempt drops
+        (counted), the built-in drain frees a slot, the retry lands —
+        the §9.3 retry protocol as one bounded verb."""
+        lst, fst, gst = states()
+        wins = [wmut((INSERT, 10 + k, (k, k))) for k in range(5)]
+        for w in wins[:CAP]:                     # fill all 4 slots
+            lst, gst, ok = append_live(lst, gst, *w, alive_stacked(ALL))
+            assert bool(np.asarray(ok)[0])
+        lst, fst, gst, ok, applied = retry_j(lst, fst, gst, *wins[CAP],
+                                             alive_stacked(ALL))
+        assert bool(np.asarray(ok)[0]), "retry must land after the drain"
+        assert int(np.asarray(applied)[0]) == 2, \
+            "both built-in syncs drain backlog entries"
+        assert int(np.asarray(gst.retries)[0]) == 1
+        assert int(np.asarray(gst.dropped)[0]) == 1
+        assert int(np.asarray(gst.published)[0]) == 5
+        while int(np.asarray(mgr.runtime.run(log.lag, gst))[0]):
+            gst, fst, _n, _lag = sync_mask(gst, fst, jnp.asarray(ALL))
+        assert_converged(lst, fst)
+
+
+class TestCrashInjection:
+    def _run(self, plan: FaultPlan, wins):
+        """Drive windows through the log under ``plan``: promote when
+        the owner dies, redirect-and-retry every window, sync the
+        follower — the engine's client loop in miniature."""
+        lst, fst, gst = states()
+        alive = np.ones(P, bool)
+        owner = 0
+        failovers = 0
+        for w_idx, w in enumerate(wins):
+            for p in plan.newly_dead(w_idx):
+                alive[p] = False
+            if not alive[owner]:
+                gst, winner = promote_j(gst, alive_stacked(alive))
+                owner = int(np.asarray(winner)[0])
+                failovers += 1
+                while int(np.asarray(mgr.runtime.run(log.lag, gst))[0]):
+                    gst, fst, _n, _l = sync_mask(gst, fst,
+                                                 jnp.asarray(alive))
+            lst, fst, gst, ok, _n = retry_j(lst, fst, gst, *w,
+                                            alive_stacked(alive))
+            assert bool(np.asarray(ok)[1]), f"window {w_idx} must publish"
+        while int(np.asarray(mgr.runtime.run(log.lag, gst))[0]):
+            gst, fst, _n, _l = sync_mask(gst, fst, jnp.asarray(alive))
+        return lst, fst, gst, owner, failovers
+
+    def test_mid_window_kill_loses_no_acked_window(self):
+        """The bench_failover scenario at unit scale: the last pre-crash
+        window is acked but unsynced; the promotion's suffix re-publish
+        must deliver it."""
+        lst, fst, gst = states()
+        lst, fst, gst, ok, _n = step(lst, fst, gst, *W0,
+                                     alive_stacked(ALL))
+        # acked, no follower drained it — the naive-failover casualty
+        lst, gst, ok = append_live(lst, gst, *W1, alive_stacked(ALL))
+        assert bool(np.asarray(ok)[0])
+        alive = np.asarray([False, True, True, True])
+        gst, winner = promote_j(gst, alive_stacked(alive))
+        catchup = 0
+        while int(np.asarray(mgr.runtime.run(log.lag, gst))[0]):
+            gst, fst, _n, _l = sync_mask(gst, fst, jnp.asarray(alive))
+            catchup += 1
+            assert catchup <= CAP, "recovery bounded by ring capacity"
+        assert_converged(lst, fst)
+        assert int(np.asarray(gst.dropped)[0]) == 0
+
+    def test_fault_plan_drives_promotion(self):
+        wins = [W0, W1, W2, W3]
+        lst, fst, gst, owner, failovers = self._run(
+            FaultPlan(kills={0: 2}), wins)
+        assert (owner, failovers) == (1, 1)
+        assert int(np.asarray(gst.published)[0]) == len(wins)
+        assert int(np.asarray(gst.dropped)[0]) == 0
+        assert_converged(lst, fst)
+
+    @pytest.mark.torture
+    def test_kill_point_sweep(self):
+        """Leader death before every window index in turn — the §12
+        protocol must lose nothing wherever the crash lands."""
+        wins = [W0, W1, W2, W3]
+        for kill_at in range(len(wins) + 1):
+            plan = FaultPlan(kills={0: kill_at})
+            lst, fst, gst, owner, failovers = self._run(plan, wins)
+            assert failovers == (1 if kill_at < len(wins) else 0), \
+                f"kill@{kill_at}"
+            assert int(np.asarray(gst.published)[0]) == len(wins)
+            assert int(np.asarray(gst.dropped)[0]) == 0
+            assert_converged(lst, fst, what=f"kill@{kill_at}")
+
+
+class TestEngineFailover:
+    def test_generate_survives_leader_kill(self):
+        """ServingEngine(fault_plan=…): the page-table log's leader dies
+        mid-serve; the engine promotes, redirects, and finishes with
+        bitwise-converged replicas and zero dropped windows."""
+        from repro.configs import get_smoke_config
+        from repro.serving.engine import ServingEngine
+        cfg = get_smoke_config("llama3.2-3b").replace(dtype="float32")
+        eng = ServingEngine(cfg, max_batch=2, max_seq=32, replicas=2,
+                            fault_plan=FaultPlan(kills={0: 1}))
+        rng = np.random.default_rng(1)
+        prompts = [rng.integers(1, cfg.vocab, size=(8,)).astype(np.int32)
+                   for _ in range(2)]
+        outs = eng.generate(prompts, gen_len=2)
+        assert len(outs) == 2 and all(len(o) == 2 for o in outs)
+        rep = eng.stats()["replication"]
+        assert rep["failovers"] == 1 and rep["epoch"] == 1
+        assert rep["leader"] != 0 and rep["alive"][0] is False
+        assert rep["dropped"] == 0 and rep["lag"] == 0
+        assert rep["diverged_leaves"] == [0, 0], \
+            "replicas must survive the failover bitwise-converged"
+
+    def test_fault_plan_requires_replicas(self):
+        from repro.configs import get_smoke_config
+        from repro.serving.engine import ServingEngine
+        cfg = get_smoke_config("llama3.2-3b").replace(dtype="float32")
+        with pytest.raises(ValueError, match="replicas"):
+            ServingEngine(cfg, fault_plan=FaultPlan(kills={0: 0}))

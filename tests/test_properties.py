@@ -417,7 +417,7 @@ def check_ringbuffer_corruption(victim, field, slot, word, delta):
         buf[victim, slot] += np.asarray(delta, buf.dtype)
     changed = not np.array_equal(buf, np.asarray(getattr(st, field)))
     st = st._replace(**{field: jnp.asarray(buf)})
-    _st2, m, l, got = _rb_drain(st)
+    _st2, m, l, got, _f = _rb_drain(st)
     m, l, got = np.asarray(m), np.asarray(l), np.asarray(got)
     for p in range(P):
         for k in range(4):

@@ -81,6 +81,14 @@ def sync_many(gst, fst, n=2):
     return mgr.runtime.run(prog, gst, fst)
 
 
+@jax.jit
+def sync_one(gst, fst):
+    def prog(gst, fst):
+        gst, fst, applied = log.sync(gst, follower, fst, max_entries=1)
+        return gst, fst, applied
+    return mgr.runtime.run(prog, gst, fst)
+
+
 def states():
     return leader.init_state(), follower.init_state(), log.init_state()
 
@@ -238,6 +246,31 @@ class TestReplicatedLog:
         assert np.all(np.asarray(ok)), "append retry lands after the drain"
         gst, fst, applied = sync_many(gst, fst)
         np.testing.assert_array_equal(np.asarray(applied), [1] * P)
+        assert_converged(lst, fst)
+
+    def test_partial_sync_lag_counts_down_and_converges_late(self):
+        """§12 satellite: ``lag()`` telemetry under partial sync — a
+        follower that drained only k of the n acked entries reports lag
+        n−k, is *detectably* diverged from the leader (the progress gap
+        is real state, not just a counter), and converges bitwise once
+        the remaining entries drain."""
+        lst, fst, gst = states()
+        wins = [window([(INSERT, k, (int(k) * 7, int(k))), NL],
+                       [NL, (UPDATE, 1, (9, 9)) if k == 2 else NL],
+                       [NL, NL], [NL, NL]) for k in (1, 2)]
+        for op, key, val in wins:                # n = 2 acked entries
+            lst, gst, ok = append_only(lst, gst, op, key, val)
+            assert bool(np.asarray(ok)[0])
+        assert np.asarray(mgr.runtime.run(log.lag, gst))[0] == 2
+        gst, fst, applied = sync_one(gst, fst)   # k = 1 of n = 2
+        np.testing.assert_array_equal(np.asarray(applied), [1] * P)
+        assert np.asarray(mgr.runtime.run(log.lag, gst))[0] == 1
+        assert diverging_leaves(jax.tree.map(np.asarray, lst),
+                                jax.tree.map(np.asarray, fst)), \
+            "one undrained entry must leave a detectable divergence"
+        gst, fst, applied = sync_one(gst, fst)   # the remaining entry
+        np.testing.assert_array_equal(np.asarray(applied), [1] * P)
+        assert np.asarray(mgr.runtime.run(log.lag, gst))[0] == 0
         assert_converged(lst, fst)
 
     def test_multiple_followers_one_drain(self):

@@ -48,8 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DELETE, INSERT, NOP, UPDATE, KVStore,
-                        ReplicatedLog, make_manager)
+from repro.core import (DELETE, INSERT, NOP, UPDATE, FailureDetector,
+                        KVStore, ReplicatedLog, make_manager)
 from repro.core.replog import diverging_leaves
 from repro.distributed.fault import FaultPlan
 
@@ -60,6 +60,9 @@ CAPACITY = 4
 # promotion cost in collective round-sets, static in the §12.2 trace:
 # ptable gather push + fence-write push + the one-round suffix re-publish
 PROMOTE_ROUNDS = 3
+# §13.1 detection latency is deterministic: exactly this many stalled
+# heartbeat windows after the victim's last bump
+DETECT_THRESHOLD = 2
 
 
 def _setup(window, keyspace, n_followers=2):
@@ -71,6 +74,8 @@ def _setup(window, keyspace, n_followers=2):
                  for i in range(n_followers)]
     log = ReplicatedLog(None, "bfo_log", mgr, store=leader,
                         window=window, capacity=CAPACITY)
+    det = FailureDetector(None, "bfo_det", mgr,
+                          threshold=DETECT_THRESHOLD)
 
     def step(lst, fsts, gst, op, key, val, alive):
         """One serving window: apply on the leader store, publish,
@@ -91,11 +96,14 @@ def _setup(window, keyspace, n_followers=2):
 
     def retry_step(lst, fsts, gst, op, key, val, alive):
         """The client-redirect path: the retried in-flight window goes
-        through whoever owns the ring now."""
+        through whoever owns the ring now.  ``sync_pred`` carries the
+        physical mask so the dead participant's cursor genuinely
+        freezes instead of being dragged along by the built-in drains."""
+        me = mgr.runtime.my_id()
         lst, _res = leader.op_window(lst, op, key, val)
         gst, fsts, ok, applied = log.append_with_retry(
-            gst, op, key, val, followers, fsts,
-            max_attempts=2, pred=alive[gst.ring.owner])
+            gst, op, key, val, followers, fsts, max_attempts=2,
+            pred=alive[gst.ring.owner], sync_pred=alive[me])
         return lst, fsts, gst, ok, applied
 
     def sync_only(gst, fsts, alive):
@@ -108,11 +116,24 @@ def _setup(window, keyspace, n_followers=2):
         return log.zombie_publish(gst, op, key, val, zombie=0,
                                   stale_epoch=0)
 
+    def hb_detect(gst, dst, alive):
+        """One §13.1 liveness window: bump-then-observe; the verdict is
+        the detector's, not the fault plan's."""
+        me = mgr.runtime.my_id()
+        return log.heartbeat_and_detect(gst, dst, det, pred=alive[me])
+
+    def rejoin_one(gst, rst, lst, fsts, node):
+        """One §13.3 snapshot-transfer window for revived ``node``."""
+        return log.rejoin_step(gst, rst, lst, followers, fsts, node)
+
     jit = lambda f: jax.jit(lambda *a: mgr.runtime.run(f, *a))  # noqa: E731
-    return (mgr, leader, followers, log, jit(step), jit(append_only),
+    return (mgr, leader, followers, log, det, jit(step), jit(append_only),
             jit(retry_step), jit(sync_only), jit(zombie),
             jax.jit(lambda gst, alive: mgr.runtime.run(log.promote,
-                                                       gst, alive)))
+                                                       gst, alive)),
+            jit(hb_detect), jit(log.promote_gather), jit(log.promote_fence),
+            jit(rejoin_one),
+            jit(lambda gst, node: log.needs_snapshot(gst, node)))
 
 
 def _windows(rng, window, keyspace, n_rounds):
@@ -155,8 +176,9 @@ def run(csv: Csv, rounds: int = 8, jt: BenchJson | None = None,
     n_pre = 3 if smoke else max(4, rounds // 2)
     n_post = 2 if smoke else max(3, rounds // 2)
 
-    (mgr, leader, followers, log, jstep, japp, jretry, jsync, jzombie,
-     jpromote) = _setup(window, keyspace)
+    (mgr, leader, followers, log, det, jstep, japp, jretry, jsync, jzombie,
+     jpromote, jhb, jgather, jfence, jrejoin, jneed) = _setup(window,
+                                                             keyspace)
     mgr.traffic.enable().reset()
 
     rng = np.random.default_rng(7)
@@ -185,9 +207,29 @@ def run(csv: Csv, rounds: int = 8, jt: BenchJson | None = None,
     assert bool(np.asarray(ok)[0]), "the pre-crash window must be acked"
     acked += 1
 
-    # ---- 3. leader dies; promotion ---------------------------------------
+    # ---- 3a. detection: the kill only SILENCES the victim (§13.1) --------
+    # one baseline liveness window latches every heartbeat, then node 0's
+    # counter stalls and the detector reaches the verdict in exactly
+    # DETECT_THRESHOLD observation windows — the detection-latency row
+    dst = det.init_state()
+    gst, dst, verdict = jhb(gst, dst, _stack_alive(alive))   # compiles
     alive = plan.alive_mask(P, n_pre + 1)
     assert not alive[0] and alive[1:].all()
+    detect_windows = 0
+    t0 = time.perf_counter()
+    while bool(np.asarray(verdict)[0][0]):
+        gst, dst, verdict = jhb(gst, dst, _stack_alive(alive))
+        detect_windows += 1
+        assert detect_windows <= 2 * DETECT_THRESHOLD, \
+            "detection latency must be exactly the threshold"
+    jax.block_until_ready(jax.tree.leaves(dst))
+    detect_us = (time.perf_counter() - t0) * 1e6
+    assert detect_windows == DETECT_THRESHOLD
+    v = np.asarray(verdict)[0]
+    assert not v[0] and v[1:].all(), \
+        "the detector's verdict must match the injected kill"
+
+    # ---- 3. leader dies; promotion (driven by the verdict) ---------------
     promote_c = jpromote.lower(gst, _stack_alive(alive)).compile()
     t0 = time.perf_counter()
     gst, winner = promote_c(gst, _stack_alive(alive))
@@ -247,7 +289,7 @@ def run(csv: Csv, rounds: int = 8, jt: BenchJson | None = None,
         assert bool(np.asarray(ok)[0]), f"post-failover window {w} publish"
         acked += 1
 
-    # ---- final invariants -------------------------------------------------
+    # ---- mid-point invariants (first failover complete) ------------------
     lag = int(np.asarray(mgr.runtime.run(log.lag, gst))[0])
     assert lag == 0, f"post-recovery lag must be zero (got {lag})"
     for i, fst in enumerate(fsts):
@@ -261,17 +303,95 @@ def run(csv: Csv, rounds: int = 8, jt: BenchJson | None = None,
                  epoch=int(np.asarray(gst.ptable.cached)[0, :, 0].max()))
     assert stats["published"] == acked and stats["dropped"] == 0
     assert stats["failovers"] == 1 and stats["epoch"] == 1
+
+    # ---- 8. cascade: the NEW leader dies mid-promotion (§13.2) -----------
+    # one more acked-but-unsynced window, mutations on lane 3 only (the
+    # sole survivor of the cascade must be its only live submitter), then
+    # leader 1 dies; promotion #2 gets through gather+fence and its
+    # winner dies too; promotion #3 restarts from the durable fence heads
+    cop = np.full((P, window), NOP, np.int32)
+    ckey = np.ones((P, window), np.uint32)
+    cop[3, :] = UPDATE
+    ckey[3, :] = np.asarray(spans[0][1])[1, :]
+    cval = np.stack([np.full((P, window), 901, np.int32),
+                     np.full((P, window), 902, np.int32)], axis=-1)
+    cspan = (jnp.asarray(cop), jnp.asarray(ckey), jnp.asarray(cval))
+    lst, gst, ok = japp(lst, gst, *cspan, _stack_alive(alive))
+    assert bool(np.asarray(ok)[0]), "the pre-cascade window must be acked"
+    acked += 1
+    a2 = np.asarray([False, False, True, True])
+    gst = jgather(gst, _stack_alive(a2))
+    gst = jfence(gst, _stack_alive(a2))      # would-be winner dies here
+    alive = np.asarray([False, False, False, True])
+    t0 = time.perf_counter()
+    gst, cwinner = promote_c(gst, _stack_alive(alive))
+    jax.block_until_ready(jax.tree.leaves(gst))
+    cascade_us = (time.perf_counter() - t0) * 1e6
+    cwinner = int(np.asarray(cwinner)[0])
+    assert cwinner == 3, f"cascade must elect the sole survivor, got " \
+        f"{cwinner}"
+    catchup2 = 0
+    while True:
+        gst, fsts, _n, lag2 = jsync(gst, fsts, _stack_alive(alive))
+        catchup2 += 1
+        if int(np.asarray(lag2)[0]) == 0:
+            break
+        assert catchup2 <= CAPACITY, "cascade recovery bounded by ring"
+    for i, fst in enumerate(fsts):
+        assert diverging_leaves(jax.tree.map(np.asarray, lst),
+                                jax.tree.map(np.asarray, fst)) == [], \
+            f"follower {i} lost acked windows across the cascade"
+    cascade_epoch = int(np.asarray(gst.ptable.cached)[0, :, 0].max())
+    assert cascade_epoch == 3, "fence#2 burned epoch 2; promote#3 fences 3"
+    assert int(np.asarray(gst.failovers)[0]) == 2
+    assert int(np.asarray(gst.dropped)[0]) == 0, \
+        "the cascade must lose zero acked windows"
+
+    # ---- 9. rejoin: node 0 revives far behind the ring (§13.3) -----------
+    node0 = jnp.zeros((P,), jnp.int32)
+    assert bool(np.asarray(jneed(gst, node0))[0]), \
+        "the cursor gap must exceed ring capacity → snapshot path"
+    rst = log.rejoin_init()
+    rejoin_c = jrejoin.lower(gst, rst, lst, fsts, node0).compile()
+    chunks = 0
+    t0 = time.perf_counter()
+    while not bool(np.asarray(rst.done)[0]):
+        gst, rst, fsts = rejoin_c(gst, rst, lst, fsts, node0)
+        chunks += 1
+        assert chunks <= 4 * log._snap_chunks()[1], "rejoin must terminate"
+    jax.block_until_ready(jax.tree.leaves(gst))
+    rejoin_us = (time.perf_counter() - t0) * 1e6
+    restarts = int(np.asarray(rst.restarts)[0])
+    assert restarts == 0, "an uninterrupted transfer must not restart"
+    assert bool(np.asarray(gst.ring.alive)[0, 0]), \
+        "rejoin must return node 0 to ring flow control"
+    for i, fst in enumerate(fsts):
+        assert diverging_leaves(jax.tree.map(np.asarray, lst),
+                                jax.tree.map(np.asarray, fst)) == [], \
+            f"follower {i} diverged after the snapshot rejoin"
     mgr.traffic.disable().reset()
 
     csv.add(f"failover_steady_p{P}_w{window}", steady_us,
             f"acked={acked};lag={lag}")
+    csv.add(f"failover_detect_p{P}_w{window}", detect_us,
+            f"windows={detect_windows};threshold={DETECT_THRESHOLD}")
     csv.add(f"failover_promote_p{P}_w{window}", promote_us,
             f"rounds={PROMOTE_ROUNDS};catchup_windows={catchup}")
     csv.add(f"failover_retry_p{P}_w{window}", retry_us,
             f"epoch={stats['epoch']};fenced={fenced}")
+    csv.add(f"failover_cascade_p{P}_w{window}", cascade_us,
+            f"winner={cwinner};epoch={cascade_epoch}")
+    csv.add(f"failover_rejoin_p{P}_w{window}", rejoin_us,
+            f"chunks={chunks};restarts={restarts}")
     jt.add("failover", "steady", steady_us, ops=P * window, **stats)
+    jt.add("failover", "detect", detect_us, windows=detect_windows,
+           threshold=DETECT_THRESHOLD)
     jt.add("failover", "promote", promote_us, rounds=PROMOTE_ROUNDS,
            catchup_windows=catchup, winner=winner)
     jt.add("failover", "retry", retry_us, fenced=fenced,
            ledger_fenced=int(ledger_fenced))
+    jt.add("failover", "cascade", cascade_us, winner=cwinner,
+           epoch=cascade_epoch, catchup_windows=catchup2)
+    jt.add("failover", "rejoin", rejoin_us, chunks=chunks,
+           restarts=restarts, snapshot_words=log.snapshot_words())
     return jt

@@ -8,13 +8,15 @@ Public surface:
                    :class:`SST`, :class:`Barrier`, :class:`TicketLock`,
                    :class:`TicketLockArray`, :class:`Ringbuffer`,
                    :class:`SharedQueue`, :class:`KVStore`, :class:`ReadCache`,
-                   :class:`HotTracker`, :class:`ReplicatedLog`
+                   :class:`HotTracker`, :class:`ReplicatedLog`,
+                   :class:`FailureDetector`
 """
 from .ack import ALL_PEERS, AckKey, FenceScope, OpDesc, join, make_ack
 from .atomic import AtomicVar, AtomicVarState
 from .barrier import Barrier, BarrierState
 from .cache import ReadCache, ReadCacheState
 from .channel import Channel
+from .detector import FailureDetector, FailureDetectorState
 from .hottracker import HotTracker, HotTrackerState
 from .kvstore import (DELETE, GET, INSERT, MOVE, NOP, PLACEMENTS, UPDATE,
                       KVResult, KVStore, KVStoreState)
@@ -23,7 +25,8 @@ from .lock import (NO_TICKET, TicketLock, TicketLockArray,
 from .ownedvar import OwnedVar, OwnedVarState, checksum
 from .queue import SharedQueue, SharedQueueState
 from .region import SharedRegion, SharedRegionState
-from .replog import ReplicatedLog, ReplicatedLogState
+from .replog import (MAX_EPOCHS, RETRY_STAGES, RejoinState, ReplicatedLog,
+                     ReplicatedLogState, diverging_leaves)
 from .ringbuffer import Ringbuffer, RingbufferState
 from .runtime import Manager, Runtime, make_manager
 from .sst import SST, SSTState
@@ -35,8 +38,9 @@ __all__ = [
     "HotTracker", "HotTrackerState", "KVResult", "KVStore",
     "KVStoreState", "NO_TICKET", "TicketLock", "TicketLockArray",
     "TicketLockArrayState", "TicketLockState", "OwnedVar", "OwnedVarState",
-    "checksum", "ReadCache", "ReadCacheState", "ReplicatedLog",
-    "ReplicatedLogState", "SharedQueue",
+    "checksum", "ReadCache", "ReadCacheState", "FailureDetector",
+    "FailureDetectorState", "MAX_EPOCHS", "RETRY_STAGES", "RejoinState",
+    "ReplicatedLog", "ReplicatedLogState", "diverging_leaves", "SharedQueue",
     "SharedQueueState", "SharedRegion",
     "SharedRegionState", "Ringbuffer", "RingbufferState", "Manager",
     "Runtime", "make_manager", "SST", "SSTState",

@@ -1,0 +1,137 @@
+"""FailureDetector — SST-heartbeat failure detection (DESIGN.md §13.1).
+
+LOCO keeps channel state in shared network memory, so liveness can be
+*observed* instead of negotiated: every participant bumps a heartbeat
+counter in a gathered SST row once per window (the ReplicatedLog's
+``ptable`` grew a third column for exactly this), and every peer watches
+the gathered copies.  A counter that fails to move for ``threshold``
+consecutive observation windows marks its owner dead.  This is the
+φ-accrual/timeout detector collapsed to the windowed SPMD substrate:
+"time" is the window clock, which every lane shares by construction, so
+the detector needs no wall clocks and is fully deterministic — the same
+schedule always detects on the same window.
+
+SPMD-uniformity is the load-bearing property (§13.1): the verdict feeds
+leader election and ring eviction, which are *local identical arithmetic*
+on every lane — a split verdict would elect two leaders.  ``observe``
+therefore folds the per-lane miss counters through a ``pmax`` over the
+participant axis before comparing against the threshold: even if a lane
+somehow observed a different heartbeat table (it cannot under the
+emulation, where the table is a gathered SST — the pmax is cheap
+insurance and the documented contract), every live lane reaches the
+identical verdict on the identical window.
+
+Deadness is **sticky**: once declared dead, a participant stays dead to
+the detector until :meth:`readmit` — called by the rejoin protocol after
+the snapshot transfer installs a consistent state (§13.3).  A node that
+was *declared* dead but is physically alive (a false positive beyond the
+threshold) must rejoin like any crashed node: its ring cursor was evicted
+from flow control, so silently flipping it back alive would re-admit a
+consumer whose cursor may be arbitrarily stale.  A slow-but-alive node
+that resumes bumping *before* the threshold is never declared dead and
+needs nothing (the false-positive window the tests pin).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .channel import Channel
+from .runtime import Manager
+
+_U32_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+class FailureDetectorState(NamedTuple):
+    last_hb: jax.Array   # (P,) uint32 — last observed heartbeat per peer
+    missed: jax.Array    # (P,) uint32 — consecutive windows without a bump
+    alive: jax.Array     # (P,) bool — current (sticky) verdict
+    detected_at: jax.Array  # (P,) uint32 — window clock value at which each
+    #                       # peer was declared dead (detection-latency
+    #                       # reporting; 0xFFFFFFFF = never)
+    windows: jax.Array   # () uint32 — observation-window clock
+
+
+class FailureDetector(Channel):
+    """Declares a peer dead after ``threshold`` missed heartbeat windows.
+
+    threshold: consecutive observation windows a peer's heartbeat counter
+    may stand still before the peer is declared dead.  Detection latency
+    is therefore exactly ``threshold`` windows after the last bump — the
+    deterministic analogue of a timeout, sized against the longest stall
+    a live participant can legitimately suffer (a slow node that bumps
+    at least once every ``threshold`` windows is never suspected).
+    """
+
+    def __init__(self, parent, name: str, mgr: Manager, *,
+                 threshold: int = 2):
+        super().__init__(parent, name, mgr)
+        if threshold < 1:
+            raise ValueError("detector threshold must be >= 1")
+        self.threshold = int(threshold)
+
+    def init_state(self) -> FailureDetectorState:
+        P = self.P
+        return FailureDetectorState(
+            last_hb=jnp.zeros((P, P), jnp.uint32),
+            missed=jnp.zeros((P, P), jnp.uint32),
+            alive=jnp.ones((P, P), jnp.bool_),
+            detected_at=jnp.full((P, P), 0xFFFFFFFF, jnp.uint32),
+            windows=jnp.zeros((P,), jnp.uint32))
+
+    # -- observation -----------------------------------------------------------
+    def observe(self, st: FailureDetectorState, heartbeats):
+        """Fold one window's gathered heartbeat column into the verdict.
+
+        heartbeats: (P,) uint32 — the gathered heartbeat counters (e.g.
+        ``ptable`` column 2).  A peer whose counter moved since the last
+        observation resets its miss count; one that stood still accrues a
+        miss.  Returns (state, alive (P,) bool) with ``alive`` the sticky
+        SPMD-uniform verdict (pmax-folded miss counters, so every lane
+        compares the identical maximum against the threshold).
+
+        Call cadence defines the clock: one ``observe`` per mutation
+        window (the engine's placement) makes ``threshold`` a window
+        count.  The caller must bump-then-observe within a window —
+        observing first would count the bump-in-flight as a miss.
+        """
+        hb = jnp.asarray(heartbeats, jnp.uint32).reshape(self.P)
+        bumped = hb != st.last_hb
+        missed = jnp.where(bumped, jnp.uint32(0),
+                           st.missed + jnp.uint32(1))
+        # SPMD-uniformity: fold miss counters across lanes so the verdict
+        # is identical everywhere (§13.1) — under the vmap emulation the
+        # gathered table is already identical, so this pmax is the
+        # documented contract more than a correction.
+        missed = jax.lax.pmax(missed, self.axis)
+        suspected = missed >= jnp.uint32(self.threshold)
+        alive = st.alive & ~suspected          # sticky: dead stays dead
+        newly_dead = st.alive & ~alive
+        windows = st.windows + jnp.uint32(1)
+        detected_at = jnp.where(newly_dead, windows, st.detected_at)
+        return FailureDetectorState(last_hb=hb, missed=missed, alive=alive,
+                                    detected_at=detected_at,
+                                    windows=windows), alive
+
+    # -- membership changes ----------------------------------------------------
+    def readmit(self, st: FailureDetectorState, node):
+        """Re-admit ``node`` after a completed rejoin (§13.3): verdict
+        flips back to alive with a clean miss count.  ``last_hb`` for the
+        node is left as observed — its next bump (the rejoin protocol
+        refreshes the heartbeat row during install) reads as fresh.
+        Deadness is sticky precisely so that THIS is the only way back in.
+        """
+        node = jnp.asarray(node, jnp.int32)
+        return st._replace(
+            alive=st.alive.at[node].set(True),
+            missed=st.missed.at[node].set(jnp.uint32(0)),
+            detected_at=st.detected_at.at[node].set(_U32_MAX))
+
+    # -- reporting -------------------------------------------------------------
+    def detection_latency(self, st: FailureDetectorState, node):
+        """Observation windows from clock zero to the verdict on ``node``
+        (0xFFFFFFFF if never declared dead).  Host-side reporting helper;
+        callers subtract the kill window they injected."""
+        return st.detected_at[jnp.asarray(node, jnp.int32)]

@@ -1839,7 +1839,7 @@ class KVStore(Channel):
         return st, jnp.stack(moved)
 
     def rebalance_proposals(self, st: KVStoreState, max_moves: int,
-                            min_heat: float = 1.0):
+                            min_heat: float = 1.0, with_alts: bool = False):
         """Propose up to ``max_moves`` MOVEs for rows whose **dominant
         reader is remote** (§10.3), from the HotTracker's decayed
         counters.  Requires ``track_heat=True``.
@@ -1853,7 +1853,14 @@ class KVStore(Channel):
         so the returned per-participant lanes partition the list.
 
         Returns (keys (B,), dests (B,), valid (B,)) with
-        B = ceil(max_moves / P); invalid lanes are padding.
+        B = ceil(max_moves / P); invalid lanes are padding.  With
+        ``with_alts=True`` additionally returns (alts (B,), alt_valid
+        (B,)): the **second-hottest** reader of each proposed row, for
+        the §10.3 backlog spill — a proposal whose dominant destination
+        is full retries there instead of deferring.  ``alt_valid`` gates
+        the spill on the alternative actually improving locality
+        (alt heat ≥ ``min_heat``, strictly above the current home's, and
+        a different node than the current home).
         """
         if self.hot is None:
             raise ValueError("rebalance needs a heat-tracked store "
@@ -1882,7 +1889,21 @@ class KVStore(Channel):
         # rounds past it
         lane_ok = (me + jnp.arange(B, dtype=jnp.int32) * self.P) \
             < min(int(max_moves), M)
-        return (keys_all[sel], dests_all[sel], valid_all[sel] & lane_ok)
+        if not with_alts:
+            return (keys_all[sel], dests_all[sel], valid_all[sel] & lane_ok)
+        # second-hottest reader per line: mask out the dominant reader's
+        # row and re-take the argmax (same replicated arithmetic, so
+        # every participant derives the identical alternates)
+        g_wo = jnp.where(jnp.arange(self.P)[:, None] == dom[None, :],
+                         -jnp.inf, g)
+        alt = jnp.argmax(g_wo, axis=0).astype(jnp.int32)
+        alt_heat = jnp.max(g_wo, axis=0)
+        alts_all = alt[lid[top_pos]]
+        altv_all = ((alt_heat[lid[top_pos]] >= min_heat)
+                    & (alt_heat[lid[top_pos]] > home_heat[top_pos])
+                    & (alts_all != node[top_pos]))
+        return (keys_all[sel], dests_all[sel], valid_all[sel] & lane_ok,
+                alts_all[sel], altv_all[sel])
 
     def rebalance(self, st: KVStoreState, max_moves: int,
                   min_heat: float = 1.0):
@@ -1891,18 +1912,27 @@ class KVStore(Channel):
         int32 — the cluster-wide count of executed moves).
 
         Proposals that fail to execute (destination free stack exhausted,
-        key vacated mid-window) are **deferred, not dropped**: the heat
-        evidence behind them persists, so the next ``rebalance()`` call
-        re-proposes them.  The cluster-wide count of such deferrals is
-        recorded in ``st.heat.backlog`` (surfaced as
+        key vacated mid-window) first **spill to the second-hottest
+        reader** (§10.3 backlog spill): when that alternative also
+        improves locality (see :meth:`rebalance_proposals`'s
+        ``alt_valid``) the row moves there in a second migration window
+        instead of waiting for the full destination to free space.  What
+        still fails is **deferred, not dropped**: the heat evidence
+        behind it persists, so the next ``rebalance()`` call re-proposes
+        it.  The cluster-wide count of such deferrals is recorded in
+        ``st.heat.backlog`` (surfaced as
         ``stats()["locality"]["migration_backlog"]`` by the engine) so a
         stuck migration — e.g. a perpetually full destination — is
         observable instead of indistinguishable from convergence."""
-        keys, dests, valid = self.rebalance_proposals(st, max_moves,
-                                                      min_heat=min_heat)
+        keys, dests, valid, alts, altv = self.rebalance_proposals(
+            st, max_moves, min_heat=min_heat, with_alts=True)
         st, moved = self.migrate_window(st, keys, dests, preds=valid)
+        spill = valid & ~moved & altv
+        st, spilled = self.migrate_window(st, keys, alts, preds=spill)
         n_prop = jax.lax.psum(jnp.sum(valid.astype(jnp.int32)), self.axis)
-        n_moved = jax.lax.psum(jnp.sum(moved.astype(jnp.int32)), self.axis)
+        n_moved = (jax.lax.psum(jnp.sum(moved.astype(jnp.int32)), self.axis)
+                   + jax.lax.psum(jnp.sum(spilled.astype(jnp.int32)),
+                                  self.axis))
         st = st._replace(heat=st.heat._replace(backlog=n_prop - n_moved))
         return st, n_moved
 

@@ -18,15 +18,36 @@ a **replicated log** built from shared-memory-style primitives —
   existing vectorized apply machinery
   (``KVStore.replay_window_records`` → ``op_window``), so a follower
   replica's state converges **bitwise** to the leader's;
-* a second SST — the **ptable** (promotion table, one ``[epoch, cursor]``
-  register per participant) — makes the log survive the leader's death
-  (DESIGN.md §12): every entry is stamped with the leader's epoch,
-  followers fence entries from stale epochs at delivery, and
-  :meth:`promote` elects a replacement (highest applied cursor wins,
-  lowest rank breaks ties) from ONE gather of that table.  This is the
-  Aguilera et al. observation operationalized: with state in shared
-  memory, fencing a deposed leader is a table write plus a local
-  comparison — no message-passing consensus round.
+* a second SST — the **ptable** (promotion table, one
+  ``[epoch, cursor, heartbeat]`` register per participant) — makes the
+  log survive the leader's death (DESIGN.md §12/§13): every entry is
+  stamped with the leader's epoch, followers fence entries from stale
+  epochs at delivery, and :meth:`promote` elects a replacement (highest
+  applied cursor wins, lowest rank breaks ties) from ONE gather of that
+  table.  This is the Aguilera et al. observation operationalized: with
+  state in shared memory, fencing a deposed leader is a table write plus
+  a local comparison — no message-passing consensus round.  The third
+  column is the **heartbeat** counter (§13.1): :meth:`heartbeat` bumps
+  it every window and a :class:`~repro.core.detector.FailureDetector`
+  watching the gathered column replaces injected failure edges with real
+  detection (:meth:`heartbeat_and_detect` packages the pair and evicts
+  detected-dead consumers from ring flow control).
+
+Self-healing extensions (DESIGN.md §13):
+
+* :meth:`promote` is now **restartable**: it composes
+  :meth:`promote_gather` → :meth:`promote_fence` →
+  :meth:`promote_republish`, the fence durably records the log head per
+  epoch (``fence_heads``), and the re-publish re-stamps exactly the
+  slots the fence-head rule proves legitimate — so a crash at any step
+  boundary (including the winner dying mid-promotion) is recovered by
+  simply running :meth:`promote` again at epoch+2 (§13.2);
+* a revived participant whose cursor gap exceeds ring capacity rejoins
+  by **snapshot transfer** (:meth:`rejoin_step`): the leader's store is
+  flattened leaf-by-leaf into a word stream and pulled through chunked,
+  checksum-validated, epoch-and-version-stamped ``remote_read_batch``
+  windows, then the node switches to ring-tail replay (§13.3);
+  :meth:`readmit` is the cheap path when the gap still fits the ring.
 
 Convergence argument (DESIGN.md §9.3): ``op_window`` is a pure
 deterministic function of (state, ops, keys, values); GET/NOP lanes
@@ -56,27 +77,53 @@ import jax.numpy as jnp
 from . import colls
 from .channel import Channel
 from .kvstore import KVStore, KVStoreState
+from .ownedvar import checksum
 from .ringbuffer import Ringbuffer, RingbufferState
 from .runtime import Manager
 from .sst import SST, SSTState
 
 _U32_MAX = jnp.uint32(0xFFFFFFFF)
 
+# Epoch ceiling for the durable fence-head table (§13.2).  Each failover
+# consumes one epoch, so this bounds the number of promotions a single
+# log LIFETIME can record exactly — far above any torture sweep; beyond
+# it the last row is reused (a documented soft limit, not silent UB).
+MAX_EPOCHS = 32
+
+# Attempt-indexed retry histogram width (§13 satellite): successes on
+# attempt i land in bucket min(i, RETRY_STAGES-1).
+RETRY_STAGES = 8
+
+# KVStoreState fields that are local policy, not replicated data — the
+# §9.3 skip-list shared by the convergence check and the §13.3 snapshot.
+_LOCAL_POLICY_FIELDS = ("cache", "heat")
+
 
 def diverging_leaves(a: KVStoreState, b: KVStoreState,
-                     skip: Sequence[str] = ("cache", "heat")):
+                     skip: Sequence[str] = _LOCAL_POLICY_FIELDS,
+                     lanes=None):
     """Names of the KVStoreState fields on which two states differ bitwise
     — the convergence check of the §9.3 argument, shared by the serving
     engine, the benchmarks and the test suites so the skip-list (the read
     ``cache`` and the ``heat`` tracker are local policy, not replicated
     data) lives in ONE place.  Returns [] iff the states are leaf-for-leaf
     equal outside ``skip``.
+
+    ``lanes`` (optional (P,) bool) restricts the comparison to the given
+    participant lanes of the stacked states: a **dead** process's replica
+    copy legitimately goes stale (its sync is masked — §13 failure
+    model), so convergence while a node is down is asserted over the
+    live lanes only; after rejoin the full-lane check applies again.
     """
     out = []
     for name, la, lb in zip(a._fields, a, b):
         if name in skip:
             continue
         for xa, xb in zip(jax.tree.leaves(la), jax.tree.leaves(lb)):
+            if lanes is not None:
+                sel = jnp.asarray(lanes, bool)
+                xa = xa[sel]
+                xb = xb[sel]
             if not bool(jnp.all(xa == xb)):
                 out.append(name)
                 break
@@ -85,7 +132,8 @@ def diverging_leaves(a: KVStoreState, b: KVStoreState,
 
 class ReplicatedLogState(NamedTuple):
     ring: RingbufferState
-    ptable: SSTState      # per-participant [accepted_epoch, applied_cursor]
+    ptable: SSTState      # per-participant [accepted_epoch, applied_cursor,
+    #                     # heartbeat] (§12.1 fence/election + §13.1 liveness)
     published: jax.Array  # () uint32 — entries appended to the log
     dropped: jax.Array    # () uint32 — appends rejected by flow control
     fenced: jax.Array     # () uint32 — stale-epoch entries rejected on sync
@@ -94,6 +142,32 @@ class ReplicatedLogState(NamedTuple):
     failovers: jax.Array  # () uint32 — promotions executed
     retries: jax.Array    # () uint32 — re-append attempts taken by
     #                     # append_with_retry after a drop
+    retries_by_attempt: jax.Array  # (RETRY_STAGES,) uint32 — appends that
+    #                              # SUCCEEDED on attempt i (§13 satellite:
+    #                              # the backoff schedule's visible shape)
+    fence_heads: jax.Array  # (MAX_EPOCHS,) uint32 — log head recorded by
+    #                       # promote_fence when each epoch was fenced;
+    #                       # 0xFFFFFFFF = epoch not yet fenced.  The §13.2
+    #                       # durable cursor that makes promotion
+    #                       # restartable: slot stamped e is legitimate iff
+    #                       # seq < fence_heads[e+1].
+
+
+class RejoinState(NamedTuple):
+    """Progress of one §13.3 snapshot transfer (caller-held, one per
+    revived node; see :meth:`ReplicatedLog.rejoin_init`)."""
+    staged: jax.Array       # (n_chunks * chunk,) uint32 — validated chunk
+    #                       # words; padded to whole chunks so every
+    #                       # dynamic_update_slice lands in bounds (the
+    #                       # image occupies the first ``total_words``)
+    cursor: jax.Array       # () int32 — next chunk index to pull
+    active: jax.Array       # () bool — a transfer is staged
+    base_cursor: jax.Array  # () uint32 — leader applied cursor the
+    #                       # snapshot is consistent with (its version)
+    base_epoch: jax.Array   # () uint32 — cluster epoch at staging time
+    restarts: jax.Array     # () uint32 — stagings abandoned because the
+    #                       # version or epoch moved mid-transfer
+    done: jax.Array         # () bool — transfer complete and installed
 
 
 class ReplicatedLog(Channel):
@@ -110,27 +184,34 @@ class ReplicatedLog(Channel):
     """
 
     def __init__(self, parent, name: str, mgr: Manager, *, store: KVStore,
-                 window: int, capacity: int = 4, leader: int = 0):
+                 window: int, capacity: int = 4, leader: int = 0,
+                 rejoin_chunk: int = 256):
         super().__init__(parent, name, mgr)
         self.store = store
         self.window = int(window)
         self.leader = int(leader)
+        self.rejoin_chunk = int(rejoin_chunk)
         self.rec_width = store.record_width
         self.entry_width = self.P * self.window * self.rec_width
         self.ring = Ringbuffer(self, "log", mgr, owner=self.leader,
                                capacity=int(capacity),
                                width=self.entry_width, dtype=jnp.int32)
-        # the §12 fence/promotion table: one [epoch, cursor] register per
-        # participant.  Epochs fence zombie leaders; cursors elect the
-        # most-caught-up replacement — both from ONE push_broadcast.
-        self.ptable = SST(self, "ptable", mgr, shape=(2,), dtype=jnp.uint32)
+        # the §12 fence/promotion table: one [epoch, cursor, heartbeat]
+        # register per participant.  Epochs fence zombie leaders; cursors
+        # elect the most-caught-up replacement; heartbeats feed the §13.1
+        # failure detector — all from ONE push_broadcast.
+        self.ptable = SST(self, "ptable", mgr, shape=(3,), dtype=jnp.uint32)
 
     def init_state(self) -> ReplicatedLogState:
         z = jnp.zeros((self.P,), jnp.uint32)
-        return ReplicatedLogState(ring=self.ring.init_state(),
-                                  ptable=self.ptable.init_state(),
-                                  published=z, dropped=z, fenced=z,
-                                  fenced_writes=z, failovers=z, retries=z)
+        return ReplicatedLogState(
+            ring=self.ring.init_state(),
+            ptable=self.ptable.init_state(),
+            published=z, dropped=z, fenced=z,
+            fenced_writes=z, failovers=z, retries=z,
+            retries_by_attempt=jnp.zeros((self.P, RETRY_STAGES), jnp.uint32),
+            fence_heads=jnp.full((self.P, MAX_EPOCHS), 0xFFFFFFFF,
+                                 jnp.uint32))
 
     # -- epoch/leadership accessors (§12.1) ------------------------------------
     def epoch(self, st: ReplicatedLogState):
@@ -141,6 +222,71 @@ class ReplicatedLog(Channel):
     def current_leader(self, st: ReplicatedLogState):
         """The ring-owning participant (client-redirect target)."""
         return st.ring.owner
+
+    # -- liveness (DESIGN.md §13.1) --------------------------------------------
+    def heartbeat(self, st: ReplicatedLogState, pred=True):
+        """Bump my ptable heartbeat counter and push the row.
+
+        ``pred`` is the *physical* liveness injection (a FaultPlan mask in
+        tests, real process liveness in production): a dead participant's
+        row simply stops moving — its last pushed value keeps being
+        observed, which is exactly what the failure detector counts as a
+        miss.  The push refreshes the applied-cursor column too, so
+        heartbeat windows double as replication-progress reports (the
+        election reads fresher cursors for free).
+        """
+        me = colls.my_id(self.axis)
+        rows = self.ptable.rows(st.ptable)
+        my_cursor = self.ring.acks.rows(st.ring.acks)[me]
+        my_row = jnp.stack([rows[me, 0], my_cursor,
+                            rows[me, 2] + jnp.uint32(1)])
+        pt = self.ptable.store_mine(st.ptable, my_row, pred=pred)
+        pt, _ack = self.ptable.push_broadcast(pt)
+        return st._replace(ptable=pt)
+
+    def heartbeat_and_detect(self, st: ReplicatedLogState, det_st, detector,
+                             pred=True):
+        """One liveness window: bump-then-observe (§13.1).
+
+        ``detector``: a :class:`~repro.core.detector.FailureDetector`;
+        ``det_st`` its state; ``pred`` the physical-liveness injection for
+        MY heartbeat.  Feeds the gathered heartbeat column to the detector
+        and **evicts** detected-dead participants from ring flow control
+        (``ring.alive``) so a wedged consumer's frozen cursor frees the
+        ring the moment it is declared dead — the follower-death half of
+        self-healing; leader death additionally needs :meth:`promote`,
+        which the caller triggers off the returned verdict.  Returns
+        (state, detector_state, alive (P,) bool) with ``alive`` the
+        sticky SPMD-uniform verdict.
+        """
+        st = self.heartbeat(st, pred=pred)
+        det_st, alive = detector.observe(
+            det_st, self.ptable.rows(st.ptable)[:, 2])
+        ring = st.ring._replace(alive=st.ring.alive & alive)
+        return st._replace(ring=ring), det_st, alive
+
+    def readmit(self, st: ReplicatedLogState, node):
+        """Re-admit revived ``node`` whose gap still fits the ring
+        (§13.3's cheap path; :meth:`needs_snapshot` decides).
+
+        Restores flow-control membership and refreshes the node's fence
+        row to the cluster epoch with a fresh heartbeat — a stale
+        accepted epoch would let zombie residue stamped between the old
+        and new epochs slip past its delivery fence.  Its preserved
+        absolute cursor then drives ordinary ring-tail replay
+        (:meth:`sync`).  The caller also re-admits it at the detector
+        (:meth:`FailureDetector.readmit`).
+        """
+        me = colls.my_id(self.axis)
+        node = jnp.asarray(node, jnp.int32)
+        rows = self.ptable.rows(st.ptable)
+        my_cursor = self.ring.acks.rows(st.ring.acks)[me]
+        my_row = jnp.stack([self.epoch(st), my_cursor,
+                            rows[me, 2] + jnp.uint32(1)])
+        pt = self.ptable.store_mine(st.ptable, my_row, pred=me == node)
+        pt, _ack = self.ptable.push_broadcast(pt)
+        ring = st.ring._replace(alive=st.ring.alive.at[node].set(True))
+        return st._replace(ring=ring, ptable=pt)
 
     # -- leader side -----------------------------------------------------------
     def append(self, st: ReplicatedLogState, ops, keys, values,
@@ -205,26 +351,42 @@ class ReplicatedLog(Channel):
 
     def append_with_retry(self, st: ReplicatedLogState, ops, keys, values,
                           followers, follower_states, targets=None,
-                          max_attempts: int = 3, pred=True):
-        """:meth:`append` with the §9.3 retry protocol built in: each
-        attempt that finds the ring full is followed by one :meth:`sync`
-        (the *backoff*: draining an entry advances the slowest live
-        consumer, which is the only thing that frees space — sleeping
-        would not), then re-appends.  Bounded: ``max_attempts`` appends
-        and syncs total, so a wedged follower costs a known number of
-        round-sets, never a livelock.  Re-append attempts after the first
-        are counted in ``retries``; drops are already counted by
-        :meth:`append` per failed attempt.
+                          max_attempts: int = 3, pred=True, sync_pred=True):
+        """:meth:`append` with the §9.3 retry protocol built in, paced by
+        a **deterministic bounded exponential backoff** (§13 satellite):
+        a failed attempt i is followed by ``min(2**i, capacity)``
+        :meth:`sync` windows before re-appending — the backoff unit is a
+        *drain window*, not a wall clock (draining advances the slowest
+        live consumer, which is the only thing that frees ring space;
+        sleeping would not), and the schedule is attempt-indexed so the
+        same trace always paces identically.  The cap at ``capacity`` is
+        exact: one backoff stage can never usefully drain more entries
+        than the ring holds.  A final drain sync follows the last attempt
+        so a success path always drains what it published — zero
+        steady-state lag, like the engine's append-then-sync.  Bounded:
+        ``max_attempts`` appends and ``Σ min(2**i, cap) + 1`` syncs
+        total, so a wedged follower costs a known number of round-sets,
+        never a livelock.
+
+        Accounting: re-append attempts after the first are counted in
+        ``retries``; drops are already counted by :meth:`append` per
+        failed attempt; the attempt index on which an append finally
+        *succeeded* is histogrammed in ``retries_by_attempt`` (surfaced
+        by the engine as ``stats()["replication"]["retries_by_attempt"]``
+        — bucket 0 is the uncontended fast path).
 
         Because the trace is static, every attempt's round-set is always
         issued — a success on attempt 0 makes the remaining appends
         pred=False no-ops (their collectives still run).  Callers size
         ``max_attempts`` to their drop tolerance, not generously.
 
+        ``sync_pred`` masks the built-in syncs' consumers (per
+        :meth:`sync`): pass the physical-liveness mask so a crashed
+        participant's cursor genuinely freezes instead of being dragged
+        along by a live lane's retry loop.
+
         Returns (state, follower_states, ok, applied): ``applied`` totals
-        the entries replayed by the built-in syncs (a success path always
-        drains what it published — zero steady-state lag, like the
-        engine's append-then-sync).
+        the entries replayed by the built-in syncs.
         """
         single = isinstance(followers, KVStore)
         fls = [followers] if single else list(followers)
@@ -239,11 +401,21 @@ class ReplicatedLog(Channel):
                     retries=st.retries + pending.astype(jnp.uint32))
             st, ok = self.append(st, ops, keys, values, targets=targets,
                                  pred=pending)
+            stage = min(i, RETRY_STAGES - 1)
+            st = st._replace(
+                retries_by_attempt=st.retries_by_attempt.at[stage].add(
+                    (ok & pending).astype(jnp.uint32)))
             done = done | ok
-            # fls is always a sequence here, so sync returns a tuple
-            st, out, n = self.sync(st, fls, fsts, max_entries=1)
-            fsts = list(out)
-            applied = applied + n
+            if i < int(max_attempts) - 1:
+                # fls is always a sequence here, so sync returns a tuple
+                for _ in range(min(2 ** i, self.ring.capacity)):
+                    st, out, n = self.sync(st, fls, fsts, max_entries=1,
+                                           pred=sync_pred)
+                    fsts = list(out)
+                    applied = applied + n
+        st, out, n = self.sync(st, fls, fsts, max_entries=1, pred=sync_pred)
+        fsts = list(out)
+        applied = applied + n
         return st, (fsts[0] if single else tuple(fsts)), done, applied
 
     def zombie_publish(self, st: ReplicatedLogState, ops, keys, values,
@@ -316,83 +488,421 @@ class ReplicatedLog(Channel):
         return st._replace(ring=ring, fenced=st.fenced + n_fenced), \
             out_states, applied
 
-    # -- failover (DESIGN.md §12.2) --------------------------------------------
-    def promote(self, st: ReplicatedLogState, alive):
-        """Elect and install a replacement leader after a crash.
-
-        ``alive``: (P,) bool — the crashed participants (at least the old
-        leader) are False; the caller's failure detector (the bench's
-        ``FaultPlan``, the engine's fault hook, a collective timeout in
-        production) decides membership.
-
-        The whole agreement is ONE ptable gather plus one fence write —
-        the Aguilera et al. point that a shared state table turns leader
-        election into local arithmetic:
-
-        1. every live participant refreshes its ``[epoch, cursor]`` row
-           and pushes (``push_broadcast`` = the epoch/cursor gather);
-        2. everyone computes, locally and identically: the winner =
-           highest applied cursor among the living, lowest rank breaking
-           ties (the most-caught-up replica loses no acked entries); the
-           new epoch = max live epoch + 1;
-        3. every live participant *accepts* the new epoch — a second row
-           push.  This is the fence: from here, entries stamped with an
-           older epoch are dead on delivery, and a deposed leader that
-           reads the table suppresses its own publishes;
-        4. the winner re-owns the ring (:meth:`Ringbuffer.re_own`) at the
-           slowest live cursor with every slot poisoned, and re-publishes
-           the **unacked suffix** — entries in [slowest live cursor,
-           head) — from its own cached slots, re-stamped at the new
-           epoch.  Every acked (``append`` → ok) entry is in that range
-           (ring reuse requires all live cursors past a slot), and the
-           ring broadcast already cached its payload at the winner, so
-           zero acked entries are lost — §12.3.  Entries whose old stamp
-           was *already* stale (zombie residue from an even older epoch)
-           keep their stale stamp and stay fenced; re-stamping them would
-           launder a zombie write into the new epoch.
-
-        Returns (state, winner) — ``winner`` the promoted participant id
-        (the client-redirect target), identical on every lane.
-        """
-        me = colls.my_id(self.axis)
-        alive = jnp.asarray(alive).reshape(self.P)
-        # 1. the epoch/cursor gather
-        my_epoch = self.ptable.rows(st.ptable)[me, 0]
-        my_cursor = self.ring.acks.rows(st.ring.acks)[me]
-        pt = self.ptable.store_mine(st.ptable,
-                                    jnp.stack([my_epoch, my_cursor]),
-                                    pred=alive[me])
-        pt, _ack = self.ptable.push_broadcast(pt)
-        rows = self.ptable.rows(pt)
+    # -- failover (DESIGN.md §12.2, restartable per §13.2) ---------------------
+    def _election(self, st: ReplicatedLogState, alive):
+        """Local, identical election arithmetic from the cached ptable:
+        (winner, cur_epoch) — winner = highest applied cursor among the
+        living, lowest rank breaking ties; cur_epoch = max live accepted
+        epoch.  Pure function of gathered state, so re-running it at any
+        promotion step yields the same answer on every lane (the §13.2
+        idempotence the restart leans on)."""
+        rows = self.ptable.rows(st.ptable)
         epochs_g, cursors_g = rows[:, 0], rows[:, 1]
-        # 2. local, identical election
         best = jnp.max(jnp.where(alive, cursors_g, jnp.uint32(0)))
         winner = jnp.argmax(alive & (cursors_g == best)).astype(jnp.int32)
         cur_epoch = jnp.max(jnp.where(alive, epochs_g, jnp.uint32(0)))
-        new_epoch = cur_epoch + jnp.uint32(1)
-        # 3. the fence write: live participants accept the new epoch
-        pt = self.ptable.store_mine(pt, jnp.stack([new_epoch, my_cursor]),
-                                    pred=alive[me])
+        return winner, cur_epoch
+
+    def _true_head(self, st: ReplicatedLogState):
+        """The log's high-water mark, robust to a crashed re-publish.
+
+        ``ring.head`` is rewound to the slowest live cursor by
+        :meth:`Ringbuffer.re_own` and only re-advances as the re-publish
+        grants slots — a winner that dies mid-re-publish leaves head
+        *below* the real end of the log.  The fence heads recover it:
+        every fence durably recorded the head at its epoch boundary, and
+        no acked entry can lie beyond the latest of (current head, max
+        recorded fence head), because appends only run between fences
+        (§13.2).
+        """
+        recorded = jnp.max(jnp.where(st.fence_heads != _U32_MAX,
+                                     st.fence_heads, jnp.uint32(0)))
+        return jnp.maximum(st.ring.head, recorded)
+
+    def promote_gather(self, st: ReplicatedLogState, alive):
+        """Promotion step 1: every live participant refreshes its
+        ``[epoch, cursor, heartbeat]`` row and pushes — the election's
+        input gather.  Idempotent: re-running refreshes again."""
+        me = colls.my_id(self.axis)
+        alive = jnp.asarray(alive).reshape(self.P)
+        rows = self.ptable.rows(st.ptable)
+        my_cursor = self.ring.acks.rows(st.ring.acks)[me]
+        pt = self.ptable.store_mine(
+            st.ptable, jnp.stack([rows[me, 0], my_cursor, rows[me, 2]]),
+            pred=alive[me])
         pt, _ack = self.ptable.push_broadcast(pt)
-        # 4. ring takeover + unacked-suffix re-publish from the winner's cache
+        return st._replace(ptable=pt)
+
+    def promote_fence(self, st: ReplicatedLogState, alive):
+        """Promotion step 2: fence-write the new epoch *before* any ring
+        mutation (the §13.2 ordering that makes promotion crash-safe).
+
+        Everyone elects locally and identically (:meth:`_election`), then
+        every live participant accepts ``cur_epoch + 1`` — from here,
+        entries stamped with an older epoch are dead on delivery and a
+        deposed leader that reads the table suppresses its own publishes.
+        The fence also durably records the log head for the new epoch in
+        ``fence_heads``: the cursor from which a re-publish (this one or
+        a restarted one at a later epoch) proves which cached slots are
+        legitimate (see :meth:`promote_republish`).  A crash after this
+        step loses nothing: the epoch is burned, the head is recorded,
+        and the next :meth:`promote` observes both through the gather.
+        """
+        me = colls.my_id(self.axis)
+        alive = jnp.asarray(alive).reshape(self.P)
+        _winner, cur_epoch = self._election(st, alive)
+        new_epoch = cur_epoch + jnp.uint32(1)
+        fh_idx = jnp.minimum(new_epoch,
+                             jnp.uint32(MAX_EPOCHS - 1)).astype(jnp.int32)
+        fence_heads = st.fence_heads.at[fh_idx].set(self._true_head(st))
+        rows = self.ptable.rows(st.ptable)
+        my_cursor = self.ring.acks.rows(st.ring.acks)[me]
+        pt = self.ptable.store_mine(
+            st.ptable, jnp.stack([new_epoch, my_cursor, rows[me, 2]]),
+            pred=alive[me])
+        pt, _ack = self.ptable.push_broadcast(pt)
+        return st._replace(ptable=pt, fence_heads=fence_heads)
+
+    def promote_republish(self, st: ReplicatedLogState, alive, limit=None):
+        """Promotion step 3: ring takeover + unacked-suffix re-publish
+        from the winner's cache.  Restartable (§13.2).
+
+        The winner re-owns the ring (:meth:`Ringbuffer.re_own` — seq
+        poisoned, csum zeroed, **epoch stamps preserved**) at the slowest
+        live cursor and re-publishes the unacked suffix
+        [slowest live cursor, true head) from its own cached slots.
+        Every acked (``append`` → ok) entry is in that range (ring reuse
+        requires all live cursors past a slot) and the ring broadcast
+        already cached its payload at the winner, so zero acked entries
+        are lost — §12.3.
+
+        Which slots get re-stamped to the new epoch is decided by the
+        **fence-head rule**: a cached slot stamped ``e`` is legitimate
+        iff ``seq < fence_heads[e + 1]`` — entries published under reign
+        e land before e+1's fence head by construction, and entries
+        re-stamped to e by promotion e were already below e's own fence
+        head; a zombie write at stale epoch e lands at a seq **at or
+        past** e+1's fence head (head had already moved when its epoch
+        was burned), fails the rule, keeps its stale stamp and stays
+        fenced — re-stamping it would launder a zombie write into the
+        new epoch.  Because the rule reads only *durable* per-epoch
+        state (fence_heads + preserved slot stamps), it gives the same
+        answer when a restarted promotion at epoch+2 replays a suffix
+        containing a half-finished epoch+1 re-publish: epoch+1 stamps
+        and untouched older-but-legitimate stamps both re-stamp, zombie
+        residue still does not.
+
+        ``limit`` (torture hook): re-publish only the first ``limit``
+        suffix lanes — emulating the winner dying mid-re-publish.  A
+        subsequent full :meth:`promote` restarts the re-publish from the
+        durable cursors and converges.
+
+        Returns (state, winner) — ``winner`` identical on every lane.
+        """
+        alive = jnp.asarray(alive).reshape(self.P)
+        winner, cur_epoch = self._election(st, alive)
+        # after the fence, the max live accepted epoch IS the new epoch
+        new_epoch = cur_epoch
         old = st.ring
+        true_head = self._true_head(st)
         min_live = jnp.min(jnp.where(alive,
                                      self.ring.acks.rows(old.acks),
                                      _U32_MAX))
-        suffix = old.head - min_live                   # uint32, ≤ capacity
+        suffix = true_head - min_live                  # uint32, ≤ capacity
         ring = self.ring.re_own(old, winner, alive, head=min_live)
         cap = self.ring.capacity
         k = jnp.arange(cap, dtype=jnp.uint32)
         seqs = min_live + k
         slots = (seqs % jnp.uint32(cap)).astype(jnp.int32)
-        lane_ep = jnp.where(old.epoch[slots] == cur_epoch, new_epoch,
-                            old.epoch[slots])
+        stamps = old.epoch[slots]
+        fh_next = st.fence_heads[jnp.minimum(
+            stamps + jnp.uint32(1),
+            jnp.uint32(MAX_EPOCHS - 1)).astype(jnp.int32)]
+        legit = seqs < fh_next
+        lane_ep = jnp.where(legit, new_epoch, stamps)
+        preds = k < suffix
+        if limit is not None:
+            preds = preds & (k < jnp.asarray(limit, jnp.uint32))
         ring, _sent, _ack = self.ring.publish_window(
             ring, old.payload[slots], old.length[slots],
-            preds=k < suffix, epoch=lane_ep)
+            preds=preds, epoch=lane_ep)
         return st._replace(
-            ring=ring, ptable=pt,
-            failovers=st.failovers + jnp.uint32(1)), winner
+            ring=ring, failovers=st.failovers + jnp.uint32(1)), winner
+
+    def promote(self, st: ReplicatedLogState, alive):
+        """Elect and install a replacement leader after a crash.
+
+        ``alive``: (P,) bool — the crashed participants (at least the old
+        leader) are False; the caller's failure detector (the §13.1
+        heartbeat detector in the engine, a ``FaultPlan`` in the bench)
+        decides membership.
+
+        Composes the three restartable steps — :meth:`promote_gather` →
+        :meth:`promote_fence` → :meth:`promote_republish` — still ONE
+        ptable gather plus one fence write plus the takeover round: the
+        Aguilera et al. point that a shared state table turns leader
+        election into local arithmetic.  §13.2's crash-safety argument:
+        a kill at any step boundary (or of the winner mid-re-publish via
+        the ``limit`` hook) is recovered by running :meth:`promote`
+        again with the additionally-crashed participants removed — the
+        fresh gather observes the burned epoch, fences epoch+2, and the
+        fence-head rule re-stamps exactly the legitimate suffix.
+
+        Returns (state, winner) — ``winner`` the promoted participant id
+        (the client-redirect target), identical on every lane.
+        """
+        alive = jnp.asarray(alive).reshape(self.P)
+        st = self.promote_gather(st, alive)
+        st = self.promote_fence(st, alive)
+        return self.promote_republish(st, alive)
+
+    # -- follower rejoin (DESIGN.md §13.3) -------------------------------------
+    def _snap_leaf_words(self, leaf):
+        """One state leaf as flat uint32 words (bit-pattern preserving)."""
+        flat = leaf.reshape(-1)
+        if flat.dtype == jnp.bool_:
+            return flat.astype(jnp.uint32)
+        if flat.dtype == jnp.uint32:
+            return flat
+        if jnp.issubdtype(flat.dtype, jnp.floating):
+            return jax.lax.bitcast_convert_type(flat.astype(jnp.float32),
+                                                jnp.uint32)
+        return jax.lax.bitcast_convert_type(flat.astype(jnp.int32),
+                                            jnp.uint32)
+
+    def _snap_words_leaf(self, words, like):
+        """Inverse of :meth:`_snap_leaf_words` for a leaf shaped ``like``."""
+        if like.dtype == jnp.bool_:
+            return (words != 0).reshape(like.shape)
+        if like.dtype == jnp.uint32:
+            return words.reshape(like.shape)
+        if jnp.issubdtype(like.dtype, jnp.floating):
+            return jax.lax.bitcast_convert_type(
+                words, jnp.float32).astype(like.dtype).reshape(like.shape)
+        return jax.lax.bitcast_convert_type(
+            words, jnp.int32).astype(like.dtype).reshape(like.shape)
+
+    def _snap_flatten(self, fstate: KVStoreState):
+        """Flatten a follower state's *replicated* leaves (the §9.3
+        skip-list excludes local policy: cache, heat) into one uint32
+        word stream with static per-leaf offsets — the §13.3 snapshot
+        wire format."""
+        words = []
+        for name, field in zip(fstate._fields, fstate):
+            if name in _LOCAL_POLICY_FIELDS:
+                continue
+            for leaf in jax.tree.leaves(field):
+                words.append(self._snap_leaf_words(leaf))
+        return (jnp.concatenate(words) if words
+                else jnp.zeros((0,), jnp.uint32))
+
+    def _snap_unflatten(self, fstate: KVStoreState, words):
+        """Rebuild ``fstate`` with its replicated leaves replaced from the
+        word stream (local-policy fields pass through untouched)."""
+        new_fields = []
+        off = 0
+        for name, field in zip(fstate._fields, fstate):
+            if name in _LOCAL_POLICY_FIELDS:
+                new_fields.append(field)
+                continue
+            leaves, treedef = jax.tree.flatten(field)
+            out = []
+            for leaf in leaves:
+                n = int(leaf.size)
+                out.append(self._snap_words_leaf(words[off:off + n], leaf))
+                off += n
+            new_fields.append(jax.tree.unflatten(treedef, out))
+        return type(fstate)(*new_fields)
+
+    def snapshot_words(self) -> int:
+        """Static per-follower word count of the §13.3 snapshot stream."""
+        spec = jax.eval_shape(self.store.init_state)
+        n = 0
+        for name, field in zip(spec._fields, spec):
+            if name in _LOCAL_POLICY_FIELDS:
+                continue
+            for leaf in jax.tree.leaves(field):
+                sz = 1
+                for d in leaf.shape[1:]:     # drop the stacked P axis
+                    sz *= int(d)
+                n += sz
+        return n
+
+    def _snap_chunks(self):
+        """(total_words, n_chunks) of one snapshot stream."""
+        total = max(self.snapshot_words(), 1)
+        n_chunks = -(-total // self.rejoin_chunk)
+        return total, n_chunks
+
+    def needs_snapshot(self, st: ReplicatedLogState, node):
+        """True iff revived ``node``'s cursor gap exceeds ring capacity —
+        the slots it would replay have been reused, so ring-tail replay
+        cannot catch it up and §13.3's snapshot transfer is required."""
+        gap = st.ring.head - self.ring.acks.rows(st.ring.acks)[
+            jnp.asarray(node, jnp.int32)]
+        return gap > jnp.uint32(self.ring.capacity)
+
+    def rejoin_init(self) -> RejoinState:
+        """Fresh (stacked) transfer-progress state for one rejoining
+        node's snapshot."""
+        P = self.P
+        _total, n_chunks = self._snap_chunks()
+        z32 = jnp.zeros((P,), jnp.uint32)
+        # Pad the staging buffer to whole chunks: dynamic_update_slice
+        # clamps out-of-bounds starts, so an exact-`total` buffer would
+        # silently shift the final chunk backwards over the image tail.
+        padded = n_chunks * self.rejoin_chunk
+        return RejoinState(staged=jnp.zeros((P, padded), jnp.uint32),
+                           cursor=jnp.zeros((P,), jnp.int32),
+                           active=jnp.zeros((P,), jnp.bool_),
+                           base_cursor=z32, base_epoch=z32, restarts=z32,
+                           done=jnp.zeros((P,), jnp.bool_))
+
+    def rejoin_step(self, st: ReplicatedLogState, rst: RejoinState,
+                    leader_state: KVStoreState, followers, follower_states,
+                    node):
+        """One §13.3 snapshot-transfer window; call until ``rst.done``.
+
+        The snapshot *source* is the authoritative leader store
+        (``leader_state``): by the §9.3 convergence contract every
+        caught-up replica equals it bitwise on the replicated leaves, so
+        ONE image — the rejoining node's lane of the leader store —
+        repairs that lane of *every* follower replica.  In the SPMD
+        emulation that lane lives in the revived node's own (surviving)
+        network memory, so the chunk reads are self-target region reads
+        (modeled at local cost per the §2.3 locality rule); the
+        *consistency stamps* — the log head the image is consistent with
+        (its **version**) and the cluster **epoch** — are read from the
+        current leader, the serialization authority.  On a deployment
+        with per-node replica placement the identical loop reads remote
+        regions and the ledger bills the bytes; the protocol — chunking,
+        validation, resumability — is the same.
+
+        Revived ``node`` pulls one ``rejoin_chunk``-word chunk of the
+        flattened image through ``remote_read_batch``, alongside three
+        stamp words: the chunk's checksum, the version and the epoch.  A
+        chunk is accepted iff its checksum validates AND both stamps
+        equal the values staged when the transfer began; a stamp
+        mismatch restarts the staging from chunk 0 against the fresh
+        (version, epoch) — which is exactly what makes the transfer
+        **resumable across a leader death**: the promotion bumps the
+        epoch, every in-flight chunk is rejected, and the same
+        ``rejoin_step`` loop re-stages against the new leader (the stamp
+        read always targets ``st.ring.owner``).  A checksum failure
+        (torn read) retries the same chunk.  A racing mutation window
+        advances the head and restarts staging the same way — the
+        concurrent-mutation race the tests pin; transfers complete in
+        any mutation-free stretch of ``n_chunks`` windows.
+
+        Precondition: the caller has no un-acked mutation windows in
+        flight (the engine flushes its pending buffer first) — the
+        leader image must be consistent with log position ``head``, not
+        ahead of it, or the ring-tail replay after install would
+        double-apply.
+
+        When the final chunk validates, the install is fused into the
+        same round (no window for a mutation to slip between validation
+        and install): the staged image is written into the rejoining
+        lane of every follower state, the node's ring cursor is restored
+        to the snapshot version, its ptable row is refreshed to the
+        snapshot epoch with a fresh heartbeat, and it re-enters ring
+        flow control — from there ordinary :meth:`sync` ring-tail replay
+        covers everything published after the snapshot version.  The
+        caller re-admits the node at its detector.
+
+        Returns (state, rejoin_state, follower_states).
+        """
+        single = isinstance(followers, KVStore)
+        fls: Sequence[KVStore] = [followers] if single else list(followers)
+        fsts = [follower_states] if single else list(follower_states)
+        me = colls.my_id(self.axis)
+        node = jnp.asarray(node, jnp.int32)
+        chunk = self.rejoin_chunk
+        total, n_chunks = self._snap_chunks()
+        padded_total = n_chunks * chunk
+
+        # every lane lays out its serve buffer from ITS lane of the
+        # authoritative store: [image words | per-chunk csums | version |
+        # epoch] — the rejoiner reads its own lane's rows (+ the
+        # leader's stamp rows) out of it
+        words = self._snap_flatten(leader_state)
+        padded = jnp.zeros((padded_total,), jnp.uint32).at[:total].set(words)
+        csums = jax.vmap(checksum)(padded.reshape(n_chunks, chunk))
+        src = jnp.concatenate([
+            padded, csums,
+            jnp.stack([st.ring.head, self.epoch(st)])])
+
+        # stage (or re-stage) against the current version/epoch
+        leader = st.ring.owner
+        version = st.ring.head
+        cur_epoch = self.epoch(st)
+        fresh = ~rst.active
+        base_cursor = jnp.where(fresh, version, rst.base_cursor)
+        base_epoch = jnp.where(fresh, cur_epoch, rst.base_epoch)
+        c = jnp.where(fresh, 0, rst.cursor)
+
+        # one chunked window: the rejoiner reads chunk c + stamps, then
+        # shares what it saw (uniform progress state)
+        idx = jnp.concatenate([
+            c * chunk + jnp.arange(chunk, dtype=jnp.int32),
+            jnp.stack([jnp.int32(padded_total) + c,
+                       jnp.int32(padded_total + n_chunks),
+                       jnp.int32(padded_total + n_chunks + 1)])])
+        tgt = jnp.concatenate([
+            jnp.broadcast_to(node, (chunk + 1,)),
+            jnp.broadcast_to(leader, (2,))]).astype(jnp.int32)
+        got = colls.remote_read_batch(
+            src, tgt, idx, self.axis,
+            preds=jnp.broadcast_to(me == node, (chunk + 3,)),
+            ledger=self.mgr.traffic, verb=f"{self.full_name}.rejoin")
+        got = colls.bcast_from(got, node, self.axis)
+        data, r_csum = got[:chunk], got[chunk]
+        r_version, r_epoch = got[chunk + 1], got[chunk + 2]
+
+        stamps_ok = (r_version == base_cursor) & (r_epoch == base_epoch)
+        csum_ok = checksum(data) == r_csum
+        if self.mgr.traffic.enabled:
+            self.mgr.traffic.record_corrupt(
+                f"{self.full_name}.rejoin",
+                (stamps_ok & ~csum_ok).astype(jnp.float32))
+        advance = stamps_ok & csum_ok & ~rst.done
+        restart = ~stamps_ok & ~fresh & ~rst.done
+
+        staged = jax.lax.dynamic_update_slice(
+            rst.staged, jnp.where(advance, data, jax.lax.dynamic_slice(
+                rst.staged, (c * chunk,), (chunk,))), (c * chunk,))
+        c_next = jnp.where(restart, 0, c + advance.astype(jnp.int32))
+        done_now = advance & (c + 1 == n_chunks)
+
+        # fused install on the finishing round (§13.3): follower leaves,
+        # ring cursor, fence row + heartbeat, flow-control membership
+        install = done_now & (me == node)
+        for i in range(len(fls)):
+            new_fst = self._snap_unflatten(fsts[i], staged[:total])
+            fsts[i] = jax.tree.map(
+                lambda nw, ol: jnp.where(install, nw, ol), new_fst, fsts[i])
+        acks = self.ring.acks.store_mine(st.ring.acks, base_cursor,
+                                         pred=install)
+        acks, _ack = self.ring.acks.push_broadcast(acks)
+        rows = self.ptable.rows(st.ptable)
+        my_row = jnp.stack([base_epoch, base_cursor,
+                            rows[me, 2] + jnp.uint32(1)])
+        pt = self.ptable.store_mine(st.ptable, my_row, pred=install)
+        pt, _ack = self.ptable.push_broadcast(pt)
+        ring_alive = jnp.where(done_now,
+                               st.ring.alive.at[node].set(True),
+                               st.ring.alive)
+        st = st._replace(ring=st.ring._replace(acks=acks, alive=ring_alive),
+                         ptable=pt)
+        rst = RejoinState(
+            staged=staged,
+            cursor=c_next,
+            active=(rst.active | ~rst.done) & ~done_now,
+            base_cursor=jnp.where(restart, version, base_cursor),
+            base_epoch=jnp.where(restart, cur_epoch, base_epoch),
+            restarts=rst.restarts + restart.astype(jnp.uint32),
+            done=rst.done | done_now)
+        return st, rst, (fsts[0] if single else tuple(fsts))
 
     # -- progress --------------------------------------------------------------
     def lag(self, st: ReplicatedLogState):

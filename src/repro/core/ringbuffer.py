@@ -257,19 +257,27 @@ class Ringbuffer(Channel):
         """``new_owner`` claims the ring at cursor ``head`` and the
         crashed participants in ``~alive`` leave the flow-control set.
 
-        Every slot's seq is poisoned (the never-written sentinel), so
-        nothing published by the previous owner can validate until the
-        new owner re-publishes it — the takeover is a clean cut: the new
-        owner re-stamps and re-broadcasts the unacked suffix from its
-        cached copy (the caller's job; :meth:`ReplicatedLog.promote`
-        does exactly this), and any in-flight slot write from the old
-        owner that lands afterwards hits a poisoned seq or a stale epoch.
-        Consumer cursors are preserved — cursors are absolute, so a
-        follower that had applied k entries resumes at entry k.
+        Every slot's seq is poisoned (the never-written sentinel) and its
+        checksum zeroed, so nothing published by the previous owner can
+        validate until the new owner re-publishes it — the takeover is a
+        clean cut: the new owner re-stamps and re-broadcasts the unacked
+        suffix from its cached copy (the caller's job;
+        :meth:`ReplicatedLog.promote` does exactly this), and any
+        in-flight slot write from the old owner that lands afterwards
+        hits a poisoned seq or a stale epoch.  The **epoch stamps are
+        preserved**: they are the only durable record of which reign
+        published each cached payload, and a promotion that restarts
+        after a mid-takeover crash needs them to separate legitimate
+        entries from zombie residue (the fence-head rule, DESIGN.md §13.2
+        — zeroing them here would launder every stale slot into "epoch
+        0" and make the restarted re-publish unfenceable).  Poisoned
+        seq + zeroed csum alone already guarantee no stale slot
+        validates.  Consumer cursors are preserved — cursors are
+        absolute, so a follower that had applied k entries resumes at
+        entry k.
         """
         return state._replace(
             seq=jnp.full((self.capacity,), 0xFFFFFFFF, jnp.uint32),
-            epoch=jnp.zeros((self.capacity,), jnp.uint32),
             csum=jnp.zeros((self.capacity,), jnp.uint32),
             head=jnp.asarray(head, jnp.uint32),
             owner=jnp.asarray(new_owner, jnp.int32),

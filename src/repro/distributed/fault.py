@@ -36,15 +36,21 @@ class DeviceFailure(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
-    """Channel-layer crash schedule: which participant dies at which
-    mutation window (DESIGN.md §12).
+    """Channel-layer crash schedule: which participant dies (and possibly
+    revives) at which mutation window (DESIGN.md §12, §13).
 
     ``kills`` maps participant id → the window index *before* which it
     crashes (it never serves that window: its publishes are suppressed,
-    its consumer cursor freezes, and failover removes it from flow
-    control).  A plan is immutable and reusable — running the same plan
-    twice yields the same schedule (the ``run_elastic`` dict-mutation
-    regression is exactly the bug this type exists to prevent).
+    its consumer cursor freezes, **and its heartbeats stop** — since
+    PR 8 the plan is purely an *injection* mechanism: it silences the
+    victim, and the :class:`~repro.core.FailureDetector` discovers the
+    death from the stalled heartbeat column rather than being told).
+    ``revives`` maps participant id → the window at which it comes back
+    (the process restarts with empty local state; the rejoin protocol
+    in DESIGN.md §13.3 decides snapshot-vs-replay).  A plan is immutable
+    and reusable — running the same plan twice yields the same schedule
+    (the ``run_elastic`` dict-mutation regression is exactly the bug
+    this type exists to prevent).
 
     The training tier composes through :meth:`device_failures`: the same
     plan that kills a replication-log participant can drive
@@ -53,26 +59,46 @@ class FaultPlan:
     promotion here).
     """
     kills: "dict[int, int]" = dataclasses.field(default_factory=dict)
+    revives: "dict[int, int]" = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         object.__setattr__(self, "kills",
                            {int(p): int(w) for p, w in self.kills.items()})
+        object.__setattr__(self, "revives",
+                           {int(p): int(w) for p, w in self.revives.items()})
+        for p, w in self.revives.items():
+            if p not in self.kills:
+                raise ValueError(f"revive for never-killed participant {p}")
+            if w <= self.kills[p]:
+                raise ValueError(
+                    f"participant {p} revives at window {w} but dies at "
+                    f"{self.kills[p]} — revive must come after the kill")
 
     def dead_at(self, window: int) -> set:
-        """Participants already crashed while window ``window`` is served
-        (kill window ≤ ``window``)."""
-        return {p for p, w in self.kills.items() if w <= window}
+        """Participants crashed while window ``window`` is served: kill
+        window ≤ ``window`` and not (yet) revived."""
+        return {p for p, w in self.kills.items()
+                if w <= window and not (
+                    p in self.revives and self.revives[p] <= window)}
 
     def alive_mask(self, P: int, window: int) -> np.ndarray:
-        """(P,) bool — False for every participant whose kill window is
-        ≤ ``window`` (it is dead while window ``window`` is served)."""
+        """(P,) bool — False for every participant dead while window
+        ``window`` is served (killed at ≤ ``window``, revived later if
+        ever)."""
         dead = self.dead_at(window)
         return np.asarray([p not in dead for p in range(P)], bool)
 
     def newly_dead(self, window: int) -> list:
         """Participants whose crash lands exactly before ``window`` —
-        the failure-detector edge the caller reacts to (promote, etc.)."""
+        the injection edge (their heartbeats stop here; the detector
+        notices ``threshold`` windows later)."""
         return sorted(p for p, w in self.kills.items() if w == window)
+
+    def newly_alive(self, window: int) -> list:
+        """Participants whose revival lands exactly at ``window`` — the
+        rejoin edge the serving tier reacts to (snapshot transfer or
+        ring-tail replay, then detector readmission)."""
+        return sorted(p for p, w in self.revives.items() if w == window)
 
     def device_failures(self) -> dict:
         """An ``inject_failure_at``-shaped dict for :func:`run_elastic`

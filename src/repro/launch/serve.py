@@ -41,22 +41,39 @@ def main(argv=None):
     ap.add_argument("--kill-leader-at", type=int, default=None,
                     metavar="WINDOW",
                     help="crash the replication-log leader before mutation "
-                         "window WINDOW (DESIGN.md §12: a follower is "
-                         "promoted via the epoch-fenced SST protocol and "
-                         "serving continues; requires --replicas >= 1)")
+                         "window WINDOW (DESIGN.md §13: its heartbeats "
+                         "stop; the SST failure detector reaches the death "
+                         "verdict within --detect-threshold windows and "
+                         "promotes a follower via the epoch-fenced SST "
+                         "protocol — no injected promote; requires "
+                         "--replicas >= 1)")
+    ap.add_argument("--revive-at", type=int, default=None, metavar="WINDOW",
+                    help="revive the killed leader at mutation window "
+                         "WINDOW (DESIGN.md §13.3: it rejoins via snapshot "
+                         "transfer when its cursor gap exceeds the ring, "
+                         "ring-tail replay otherwise; requires "
+                         "--kill-leader-at)")
+    ap.add_argument("--detect-threshold", type=int, default=2,
+                    help="consecutive missed heartbeat windows before the "
+                         "detector declares a participant dead (§13.1)")
     args = ap.parse_args(argv)
 
     fault_plan = None
     if args.kill_leader_at is not None:
         from repro.distributed.fault import FaultPlan
-        fault_plan = FaultPlan(kills={0: args.kill_leader_at})
+        revives = ({0: args.revive_at} if args.revive_at is not None else {})
+        fault_plan = FaultPlan(kills={0: args.kill_leader_at},
+                               revives=revives)
+    elif args.revive_at is not None:
+        raise SystemExit("--revive-at requires --kill-leader-at")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.replace(dtype=args.dtype)
     engine = ServingEngine(cfg, max_batch=args.max_batch,
                            max_seq=args.prompt_len + args.gen_len,
                            replicas=args.replicas,
-                           fault_plan=fault_plan)
+                           fault_plan=fault_plan,
+                           detect_threshold=args.detect_threshold)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -79,13 +96,33 @@ def main(argv=None):
         assert not any(diverged), \
             "follower page tables must converge bitwise to the leader"
         if args.kill_leader_at is not None:
+            det = rep["detector"]
             print(f"[serve] failover: leader={rep['leader']} "
                   f"epoch={rep['epoch']} failovers={rep['failovers']} "
-                  f"retries={rep['retries']} dropped={rep['dropped']}")
+                  f"retries={rep['retries']} dropped={rep['dropped']} "
+                  f"detected_at={det['detected_at']} "
+                  f"(threshold {det['threshold']})")
+            assert rep.get("detected_failovers", 0) >= 1, \
+                "the detector (not an injected promote) must have " \
+                "driven the failover"
             assert rep["failovers"] >= 1 and rep["leader"] != 0, \
                 "the kill must have promoted a follower"
             assert rep["dropped"] == 0, \
                 "failover must not drop acked mutation windows"
+            assert 0 in det["detections"], \
+                "the heartbeat detector must have reached a verdict on " \
+                "the killed leader"
+            if args.revive_at is not None:
+                rejoins = (rep.get("rejoins_snapshot", 0)
+                           + rep.get("rejoins_replay", 0))
+                print(f"[serve] rejoin: snapshot={rep.get('rejoins_snapshot', 0)} "
+                      f"replay={rep.get('rejoins_replay', 0)} "
+                      f"chunks={rep.get('rejoin_chunks', 0)} "
+                      f"restarts={rep.get('rejoin_restarts', 0)} "
+                      f"alive={rep['alive']}")
+                assert rejoins >= 1, "the revived node must have rejoined"
+                assert rep["alive"][0] is True and det["alive"][0] is True, \
+                    "the revived node must be back in the membership"
 
 
 if __name__ == "__main__":

@@ -54,8 +54,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..core import DELETE, GET, INSERT, NOP, KVStore, ReplicatedLog, \
-    SharedQueue, make_manager
+from ..core import DELETE, GET, INSERT, NOP, FailureDetector, KVStore, \
+    ReplicatedLog, SharedQueue, make_manager
 from ..distributed.fault import FaultPlan
 from ..models import build_model
 
@@ -71,7 +71,8 @@ MAX_WINDOW = 32     # max KV ops per participant per collective round-set
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, max_batch: int = 4,
                  max_seq: int = 256, replicas: int = 0,
-                 fault_plan: FaultPlan | None = None):
+                 fault_plan: FaultPlan | None = None,
+                 detect_threshold: int = 2):
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_seq = max_seq
@@ -81,6 +82,7 @@ class ServingEngine:
                              "crash without a replicated page table loses "
                              "the serving state it would fail over to")
         self.fault_plan = fault_plan
+        self.detect_threshold = int(detect_threshold)
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(0))
         # --- channels
@@ -118,9 +120,14 @@ class ServingEngine:
         # leader's, which replica_divergence() checks on demand.  The
         # engine syncs after every append, so capacity 2 never drops.
         if self.replicas:
-            self.page_log = ReplicatedLog(None, "pagelog", self.mgr,
-                                          store=self.pages,
-                                          window=MAX_WINDOW, capacity=2)
+            # ring capacity covers the detection gap: up to
+            # ``detect_threshold`` mutation windows can land while the
+            # leader is dead-but-undetected (they are buffered host-side
+            # and flushed after promotion), plus one in-flight window.
+            self.page_log = ReplicatedLog(
+                None, "pagelog", self.mgr, store=self.pages,
+                window=MAX_WINDOW,
+                capacity=max(2, self.detect_threshold + 1))
             self.replica_tables = [
                 KVStore(None, f"pagetable_replica{i}", self.mgr,
                         slots_per_node=pages_per_node, value_width=2,
@@ -131,20 +138,32 @@ class ServingEngine:
             self._log_state = self.page_log.init_state()
             self._rep_states = tuple(t.init_state()
                                      for t in self.replica_tables)
+            # §13.1 failure detection: the engine no longer *tells* the
+            # log who died — the FaultPlan merely silences the victim's
+            # heartbeats (and fails its RPCs), and this detector reaches
+            # the death verdict from the stalled ptable heartbeat column.
+            self.detector = FailureDetector(None, "pagedetector", self.mgr,
+                                            threshold=self.detect_threshold)
+            self._det_state = self.detector.init_state()
 
             def _rep(log_st, f_sts, op, key, val, tgt, alive):
                 # §12 client protocol: the append is predicated on the
                 # CURRENT owner being alive (state-driven redirect — after
                 # a promotion the same trace publishes through the new
-                # leader), with one bounded retry+drain if the ring is
-                # full.  The engine's crash model kills the log-leader
-                # *role*; the vmap lanes are simulation hosts and their
-                # memory stays one-sided-addressable (the RDMA stance —
-                # bench_failover exercises full lane masking).
+                # leader), with the §13 bounded-backoff retry if the ring
+                # is full.  ``alive`` here is the *physical* mask (the
+                # injection): a dead owner makes the append RPC fail,
+                # which the engine observes as ok=False and buffers; the
+                # failover DECISION comes only from the detector.  Dead
+                # lanes also stop draining their replica copies
+                # (sync_pred), so a revived node has real catching-up to
+                # do — the §13.3 rejoin path.
+                me = jax.lax.axis_index("nodes")
                 lead_ok = alive[log_st.ring.owner]
                 log_st, f_sts, ok, applied = self.page_log.append_with_retry(
                     log_st, op, key, val, self.replica_tables, f_sts,
-                    targets=tgt, max_attempts=2, pred=lead_ok)
+                    targets=tgt, max_attempts=2, pred=lead_ok,
+                    sync_pred=alive[me])
                 return log_st, f_sts, ok, applied, self.page_log.lag(log_st)
 
             self._rep_step = jax.jit(lambda *a: self.mgr.runtime.run(
@@ -152,9 +171,39 @@ class ServingEngine:
             self._promote_step = jax.jit(
                 lambda log_st, alive: self.mgr.runtime.run(
                     self.page_log.promote, log_st, alive))
+
+            def _hb(log_st, det_st, alive):
+                # bump-then-observe within the window (§13.1 contract);
+                # pred masks the physically dead — that IS the injection
+                me = jax.lax.axis_index("nodes")
+                return self.page_log.heartbeat_and_detect(
+                    log_st, det_st, self.detector, pred=alive[me])
+
+            self._hb_step = jax.jit(lambda *a: self.mgr.runtime.run(
+                _hb, *a))
+            self._needs_snap = jax.jit(
+                lambda log_st, node: self.mgr.runtime.run(
+                    self.page_log.needs_snapshot, log_st, node))
+            self._readmit_step = jax.jit(
+                lambda log_st, node: self.mgr.runtime.run(
+                    self.page_log.readmit, log_st, node))
+            self._rejoin_step = jax.jit(
+                lambda log_st, rst, lead_st, f_sts, node:
+                self.mgr.runtime.run(
+                    lambda ls, rs, lst, fs, nd: self.page_log.rejoin_step(
+                        ls, rs, lst, self.replica_tables, fs, nd),
+                    log_st, rst, lead_st, f_sts, node))
+            self._det_readmit = jax.jit(
+                lambda det_st, node: jax.vmap(
+                    lambda d: self.detector.readmit(d, node))(det_st))
             self.rep_counts = collections.Counter()
-            self._alive = np.ones(P_NODES, bool)
+            self._alive = np.ones(P_NODES, bool)       # physical (plan)
+            self._det_alive = np.ones(P_NODES, bool)   # detector verdict
             self._log_leader = self.page_log.leader
+            self._pending: List[tuple] = []            # unpublished windows
+            # node → detector window clock at the death verdict (host
+            # record; survives the readmit that clears detected_at)
+            self._detections: Dict[int, int] = {}
         self._kv_step = jax.jit(
             lambda st, op, key, val, tgt: self.mgr.runtime.run(
                 lambda s, o, k, v, t: self.pages.op_window(s, o, k, v,
@@ -186,6 +235,68 @@ class ServingEngine:
         return jnp.broadcast_to(jnp.asarray(self._alive),
                                 (P_NODES, P_NODES))
 
+    # -- §13 self-healing replication helpers -------------------------------
+    def _publish_window(self, pw, pk, pv, pt):
+        """Append one padded mutation window to the log.  A failed append
+        (dead-but-undetected owner, or ring full past the backoff) is
+        **buffered**, not dropped: the leader page table already applied
+        it, so losing it would permanently diverge the followers.  The
+        buffer flushes in order right after the next promotion."""
+        (self._log_state, self._rep_states, ok, applied,
+         lag) = self._rep_step(
+            self._log_state, self._rep_states, jnp.asarray(pw),
+            jnp.asarray(pk), jnp.asarray(pv), jnp.asarray(pt),
+            self._alive_stacked())
+        ok = bool(np.asarray(ok)[0])
+        if ok:
+            self.rep_counts["published"] += 1
+            self.rep_counts["applied"] += int(np.asarray(applied)[0])
+            self.rep_counts["wire_bytes"] += self.page_log.entry_nbytes()
+        else:
+            self._pending.append((pw, pk, pv, pt))
+            self.rep_counts["buffered"] += 1
+        self.rep_counts["lag"] = int(np.asarray(lag)[0])
+        return ok
+
+    def _flush_pending(self):
+        """Re-publish the windows buffered during a detection gap, in
+        submission order, through the (new) leader."""
+        pending, self._pending = self._pending, []
+        for win in pending:
+            if self._publish_window(*win):
+                self.rep_counts["flushed"] += 1
+
+    def _handle_revive(self, p: int):
+        """§13.3 rejoin: the fault plan revives participant ``p`` (its
+        process restarts; its replica lane and ring cursor are stale).
+        If the cursor gap exceeds ring capacity the slots it would replay
+        were reused — snapshot-transfer the leader image chunk by chunk —
+        otherwise a plain readmission suffices and ring-tail replay
+        catches it up.  Either way the detector readmits LAST, so the
+        node only rejoins flow control with a consistent state."""
+        self._alive[p] = True
+        self._flush_pending()   # image version must match the log head
+        node = jnp.full((P_NODES,), p, jnp.int32)  # per-lane for runtime.run
+        if bool(np.asarray(self._needs_snap(self._log_state, node))[0]):
+            rst = self.page_log.rejoin_init()
+            chunks = 0
+            while not bool(np.asarray(rst.done)[0]):
+                self._log_state, rst, f_sts = self._rejoin_step(
+                    self._log_state, rst, self._kv_state,
+                    self._rep_states, node)
+                self._rep_states = tuple(f_sts)
+                chunks += 1
+            self.rep_counts["rejoin_chunks"] += chunks
+            self.rep_counts["rejoin_restarts"] += int(
+                np.asarray(rst.restarts)[0])
+            self.rep_counts["rejoins_snapshot"] += 1
+        else:
+            self._log_state = self._readmit_step(self._log_state, node)
+            self.rep_counts["rejoins_replay"] += 1
+        self._det_state = self._det_readmit(self._det_state,
+                                            jnp.asarray(p, jnp.int32))
+        self._det_alive[p] = True
+
     # -- channel helpers (windowed round-sets over the P simulated nodes) ---
     def _kv_ops(self, ops: List[tuple]):
         """ops: list of (op_code, key, (v0, v1), home); executed as (P, B)
@@ -206,37 +317,69 @@ class ServingEngine:
         results = []
         for start in range(0, len(ops), P_NODES * MAX_WINDOW):
             chunk = ops[start:start + P_NODES * MAX_WINDOW]
-            w = -(-len(chunk) // P_NODES)
+            mutating = any(c[0] != NOP for c in chunk)
+            if self.replicas and mutating and self.fault_plan is not None:
+                # apply the fault plan's *injections* before routing:
+                # kills silence the victim's heartbeats and fail its
+                # RPCs; revives restart the process and run the §13.3
+                # rejoin path.  Detection itself stays with the detector.
+                w_idx = self.rep_counts["windows"]
+                for p in self.fault_plan.newly_dead(w_idx):
+                    self._alive[p] = False
+                for p in self.fault_plan.newly_alive(w_idx):
+                    self._handle_revive(p)
+            # client-side routing: ops go to LIVE participants only (a
+            # dead process accepts no requests) — a dead lane's window
+            # slice stays NOP, which is also what makes the follower
+            # replay well-defined: each lane replays its own slice, and
+            # a masked dead lane's slice would have no live submitter.
+            live = (np.where(self._alive)[0]
+                    if self.replicas and self.fault_plan is not None
+                    else np.arange(P_NODES))
+            nl = len(live)
+            w = -(-len(chunk) // nl)
             w = 1 << (w - 1).bit_length()        # pad window to power of two
-            n = P_NODES * w
-            chunk = chunk + [(NOP, 1, (0, 0), 0)] * (n - len(chunk))
-            # (n,) submission order → (P, B) participant-major windows
-            op = np.asarray([c[0] for c in chunk],
-                            np.int32).reshape(w, P_NODES).T
-            key = np.asarray([c[1] for c in chunk],
-                             np.uint32).reshape(w, P_NODES).T
-            val = np.asarray([c[2] for c in chunk],
-                             np.int32).reshape(w, P_NODES, 2).transpose(1, 0, 2)
-            tgt = np.asarray([c[3] for c in chunk],
-                             np.int32).reshape(w, P_NODES).T
+            n = nl * w
+            chunkp = chunk + [(NOP, 1, (0, 0), 0)] * (n - len(chunk))
+            # (n,) submission order → (nl, w) live-participant-major
+            # windows, scattered into the (P, w) layout (dead lanes NOP)
+            op = np.full((P_NODES, w), NOP, np.int32)
+            key = np.ones((P_NODES, w), np.uint32)
+            val = np.zeros((P_NODES, w, 2), np.int32)
+            tgt = np.zeros((P_NODES, w), np.int32)
+            op[live] = np.asarray([c[0] for c in chunkp],
+                                  np.int32).reshape(w, nl).T
+            key[live] = np.asarray([c[1] for c in chunkp],
+                                   np.uint32).reshape(w, nl).T
+            val[live] = np.asarray([c[2] for c in chunkp],
+                                   np.int32).reshape(w, nl, 2).transpose(1, 0, 2)
+            tgt[live] = np.asarray([c[3] for c in chunkp],
+                                   np.int32).reshape(w, nl).T
             self._kv_state, res = self._kv_step(
                 self._kv_state, jnp.asarray(op), jnp.asarray(key),
                 jnp.asarray(val), jnp.asarray(tgt))
-            if self.replicas and any(c[0] != NOP for c in chunk):
-                # §12 failure detection + client redirect: consult the
-                # fault plan at each mutation-window index; when the
-                # log leader is among the newly dead, promote a follower
-                # (one jitted SST gather + fence + suffix re-publish)
-                # and redirect subsequent appends to the winner before
-                # publishing this window.
-                w_idx = self.rep_counts["windows"]
-                if self.fault_plan is not None:
-                    for p in self.fault_plan.newly_dead(w_idx):
-                        self._alive[p] = False
-                    if not self._alive[self._log_leader]:
-                        self._log_state, winner = self._promote_step(
-                            self._log_state, self._alive_stacked())
-                        self._log_leader = int(np.asarray(winner)[0])
+            if self.replicas and mutating:
+                # §13 self-healing window protocol: (1) heartbeat +
+                # observe — the DETECTOR, not the plan, decides who is
+                # dead, (2) when the verdict covers the current leader,
+                # promote among verdict-alive nodes and flush the windows
+                # buffered during the detection gap, (3) publish this
+                # window.
+                self._log_state, self._det_state, verdict = self._hb_step(
+                    self._log_state, self._det_state, self._alive_stacked())
+                new_verdict = np.asarray(verdict)[0].copy()
+                clock = int(np.asarray(self._det_state.windows)[0])
+                for p in np.where(self._det_alive & ~new_verdict)[0]:
+                    self._detections[int(p)] = clock
+                self._det_alive = new_verdict
+                if not self._det_alive[self._log_leader]:
+                    self._log_state, winner = self._promote_step(
+                        self._log_state, jnp.broadcast_to(
+                            jnp.asarray(self._det_alive),
+                            (P_NODES, P_NODES)))
+                    self._log_leader = int(np.asarray(winner)[0])
+                    self.rep_counts["detected_failovers"] += 1
+                    self._flush_pending()
                 # publish the mutation window to the replication log and
                 # sync every follower replica (one jit dispatch; windows
                 # are padded to the log's fixed MAX_WINDOW entry shape —
@@ -247,30 +390,24 @@ class ServingEngine:
                 pt = np.zeros((P_NODES, MAX_WINDOW), np.int32)
                 pw[:, :w], pk[:, :w], pv[:, :w] = op, key, val
                 pt[:, :w] = tgt
-                (self._log_state, self._rep_states, ok, applied,
-                 lag) = self._rep_step(
-                    self._log_state, self._rep_states, jnp.asarray(pw),
-                    jnp.asarray(pk), jnp.asarray(pv), jnp.asarray(pt),
-                    self._alive_stacked())
                 self.rep_counts["windows"] += 1
-                self.rep_counts["published"] += int(np.asarray(ok)[0])
-                self.rep_counts["dropped"] += 1 - int(np.asarray(ok)[0])
-                self.rep_counts["applied"] += int(np.asarray(applied)[0])
-                self.rep_counts["lag"] = int(np.asarray(lag)[0])
-                self.rep_counts["wire_bytes"] += (
-                    self.page_log.entry_nbytes() * int(np.asarray(ok)[0]))
+                self._publish_window(pw, pk, pv, pt)
             for c in chunk:
                 self.op_counts[c[0]] += 1
-            found = np.asarray(res.found).T.reshape(n)
-            value = np.asarray(res.value).transpose(1, 0, 2).reshape(n, -1)
+            # results gather back by the live-lane routing: submission
+            # j executed on (participant live[j % nl], window slot j // nl)
+            found_pw = np.asarray(res.found)
+            value_pw = np.asarray(res.value)
+            found = found_pw[live].T.reshape(n)
+            value = value_pw[live].transpose(1, 0, 2).reshape(n, -1)
             # locality bookkeeping from the RESULT lanes: a failed INSERT
             # (full home stack / index overflow) placed nothing and must
             # not register a home, or stats()["locality"] would count
             # phantom local reads.  The writer-local home would have been
-            # the submitting participant (j % P) — kept for bytes-saved.
+            # the submitting participant — kept for bytes-saved.
             for j, c in enumerate(chunk):
                 if c[0] == INSERT and found[j]:
-                    self._page_home[c[1]] = (c[3], j % P_NODES)
+                    self._page_home[c[1]] = (c[3], int(live[j % nl]))
                     self._saved_keys.discard(c[1])
                 elif c[0] == DELETE:
                     self._page_home.pop(c[1], None)
@@ -408,10 +545,14 @@ class ServingEngine:
         """Per-replica count of state fields differing from the leader's
         page table (``repro.core.replog.diverging_leaves`` — the read
         ``cache`` leaf is excluded there as local serving policy, not
-        replicated data).  All-zero ⇔ every follower is bitwise-converged
+        replicated data), compared over the **live** lanes: a dead
+        process's copy goes legitimately stale until the §13.3 rejoin
+        re-installs it (after which the node is live again and back in
+        the comparison).  All-zero ⇔ every follower is bitwise-converged
         with the leader."""
         from ..core.replog import diverging_leaves
-        return [len(diverging_leaves(self._kv_state, f_st))
+        lanes = self._alive if self.fault_plan is not None else None
+        return [len(diverging_leaves(self._kv_state, f_st, lanes=lanes))
                 for f_st in self._rep_states]
 
     def stats(self):
@@ -421,6 +562,7 @@ class ServingEngine:
             # across lanes, so lane 0 reports the cluster totals); the
             # epoch is the max accepted row of the promotion table
             st = self._log_state
+            det = self._det_state
             rep = {"replication": dict(self.rep_counts)
                    | {"replicas": self.replicas,
                       "diverged_leaves": self.replica_divergence(),
@@ -429,9 +571,29 @@ class ServingEngine:
                                    .max()),
                       "failovers": int(np.asarray(st.failovers)[0]),
                       "retries": int(np.asarray(st.retries)[0]),
+                      # §13 backoff histogram: retries_by_attempt[i] =
+                      # appends that landed on attempt i
+                      "retries_by_attempt": np.asarray(
+                          st.retries_by_attempt)[0].tolist(),
                       "fenced": int(np.asarray(st.fenced)[0]),
                       "fenced_writes": int(np.asarray(st.fenced_writes)[0]),
-                      "alive": self._alive.tolist()}}
+                      # windows never delivered to followers: buffered
+                      # windows still awaiting a flush (zero once the
+                      # post-promotion flush ran — "zero acked-window
+                      # loss" is exactly this staying empty at the end)
+                      "dropped": len(self._pending),
+                      "alive": self._alive.tolist(),
+                      # §13.1 detector verdict (lane 0 = cluster view)
+                      "detector": {
+                          "threshold": self.detect_threshold,
+                          "alive": np.asarray(det.alive)[0].tolist(),
+                          "windows": int(np.asarray(det.windows)[0]),
+                          "detected_at": [
+                              None if v == 0xFFFFFFFF else int(v)
+                              for v in np.asarray(det.detected_at)[0]],
+                          # host record of every death verdict (node →
+                          # window clock), kept across readmissions
+                          "detections": dict(self._detections)}}}
         loc_reads = self.loc_counts["local_reads"]
         rem_reads = self.loc_counts["remote_reads"]
         return {"kv_ops": {k: v for k, v in self.op_counts.items()},

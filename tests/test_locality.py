@@ -685,6 +685,54 @@ class TestHotTrackerAndRebalance:
         assert locs[11][0] == 0 and locs[12][0] == 0, \
             "retried proposals must land at the dominant reader"
 
+    def test_destination_full_spills_to_second_hottest_reader(self):
+        """§10.3 backlog spill: a proposal whose dominant destination is
+        full no longer just defers — when the SECOND-hottest reader also
+        improves locality (heat ≥ min_heat and above the current home's)
+        the row moves there in the same ``rebalance()`` call, and the
+        backlog drains immediately instead of waiting for the full
+        destination to free space."""
+        m2 = make_manager(P)
+        kv = KVStore(None, "loc_spill", m2, slots_per_node=2,
+                     value_width=W, num_locks=8, index_capacity=64,
+                     track_heat=True)
+        step = jax.jit(lambda st, o, k, v_: m2.runtime.run(
+            kv.op_window, st, o, k, v_))
+        getb = jax.jit(lambda st, k, p: m2.runtime.run(
+            lambda s, kk, pp: kv.get_batch(s, kk, pred=pp), st, k, p))
+        reb = jax.jit(lambda st: m2.runtime.run(
+            lambda s: kv.rebalance(s, P), st))
+        st = kv.init_state()
+        # node 0 completely full; key 11 homed (writer-local) at node 2
+        w = [[(INSERT, 1, v(1), 0), (INSERT, 2, v(2), 0)],
+             [NOPR, NOPR],
+             [(INSERT, 11, v(11), 0), NOPR],
+             [NOPR, NOPR]]
+        op, key, val, _t = arrs(w)
+        st, res = step(st, op, key, val)
+        assert bool(np.asarray(res.found)[2, 0])
+        assert key_locations(st)[11][0] == 2
+        # participant 0 dominates reads of key 11, participant 1 is the
+        # clear runner-up; the home node (2) never reads it
+        rk = jnp.broadcast_to(jnp.asarray([11, 11], jnp.uint32), (P, 2))
+        p0 = jnp.zeros((P, 2), bool).at[0].set(True)
+        p1 = jnp.zeros((P, 2), bool).at[1].set(True)
+        for _ in range(4):
+            st, _vv, ff = getb(st, rk, p0)
+            assert bool(jnp.all(ff[0]))
+        for _ in range(2):
+            st, _vv, ff = getb(st, rk, p1)
+            assert bool(jnp.all(ff[1]))
+        # dominant destination (node 0) is full → the proposal spills to
+        # node 1 (second-hottest, has free slots) within ONE rebalance
+        st, n1 = reb(st)
+        assert int(np.asarray(n1)[0]) == 1, \
+            "the spill must execute the blocked proposal"
+        assert int(np.asarray(st.heat.backlog)[0]) == 0, \
+            "a spilled proposal is not backlog"
+        assert key_locations(st)[11][0] == 1, \
+            "the row must land at the second-hottest reader"
+
     def test_rebalance_requires_heat_tracking(self):
         with pytest.raises(ValueError, match="track_heat"):
             mgr.runtime.run(lambda s: kv_plain.rebalance(s, 4),

@@ -1,0 +1,610 @@
+"""Self-healing replication (DESIGN.md §13): heartbeat failure
+detection, crash-safe cascading promotion, and follower rejoin.
+
+Checked here:
+
+* **detector semantics** (§13.1) — threshold edge, the false-positive
+  window (a slow node that resumes bumping under the threshold is never
+  suspected), sticky deadness with :meth:`readmit` as the only way
+  back, SPMD-uniform verdicts, detection-latency bookkeeping;
+* **heartbeat-driven detection at the log level** — a ``FaultPlan``
+  only *silences* the victim; ``heartbeat_and_detect`` reaches the
+  verdict from the stalled ptable heartbeat column and evicts the dead
+  cursor from ring flow control;
+* **cascading promotion** (§13.2) — the winner of promotion #1 dies at
+  every step boundary (after gather, after fence, mid-re-publish via
+  the ``limit`` hook); a fresh :meth:`promote` restarts from the
+  durable fence heads and cursors with zero acked-window loss and
+  bitwise convergence (double AND triple cascades, swept under
+  ``torture``);
+* **rejoin** (§13.3) — ``needs_snapshot`` decides snapshot-vs-replay;
+  the chunked transfer converges bitwise; a racing mutation window and
+  a leader death mid-transfer each restart the staging (resumability)
+  and still converge; a fuzz sweep interleaves interruptions at varying
+  rounds under ``torture``;
+* **bounded backoff** (§13 satellite) — drop-then-recover at each
+  ``max_attempts`` stage with the success-attempt histogram
+  (``retries_by_attempt``) asserted exactly.
+
+Mutations route through lanes that stay alive for the scenario (the
+``test_failover`` masking discipline): a dead participant's slice of a
+log entry would have no live submitter at replay.  Windows driven while
+the current owner is already dead are all-NOP — the engine buffers such
+windows rather than applying them leader-side unreplicated.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (INSERT, NOP, UPDATE, FailureDetector, KVStore,
+                        ReplicatedLog, make_manager)
+from repro.core.replog import diverging_leaves
+from repro.distributed.fault import FaultPlan
+
+P = 4
+B = 2
+CAP = 4
+THRESH = 2
+
+mgr = make_manager(P)
+_kw = dict(slots_per_node=6, value_width=2, num_locks=8, index_capacity=64)
+leader = KVStore(None, "sh_leader", mgr, **_kw)
+follower = KVStore(None, "sh_follower", mgr, **_kw)
+log = ReplicatedLog(None, "sh_log", mgr, store=leader, window=B,
+                    capacity=CAP, rejoin_chunk=32)
+det = FailureDetector(None, "sh_det", mgr, threshold=THRESH)
+
+NL = (NOP, 1, (0, 0))
+ALL = np.ones(P, bool)
+
+
+def window(*lanes):
+    op = jnp.asarray([[o[0] for o in ln] for ln in lanes], jnp.int32)
+    key = jnp.asarray([[o[1] for o in ln] for ln in lanes], jnp.uint32)
+    val = jnp.asarray([[o[2] for o in ln] for ln in lanes], jnp.int32)
+    return op, key, val
+
+
+WNOP = window(*[[NL] * B for _ in range(P)])
+
+
+def wmut(*triples, dead=(0,)):
+    """A window with ``dead`` lanes all-NOP and ``triples`` spread over
+    the remaining lanes (live-submitter replay discipline)."""
+    live = [p for p in range(P) if p not in dead]
+    lanes = [[NL] * B for _ in range(P)]
+    for i, t in enumerate(triples):
+        lanes[live[i % len(live)]][i // len(live)] = t
+    return window(*lanes)
+
+
+def mkw(i, dead=(0,)):
+    """Deterministic mutation window ``i`` routed around ``dead`` lanes."""
+    k = 1 + (i % 5)
+    return wmut((INSERT if i < 5 else UPDATE, k, (10 * k + i, i)),
+                (UPDATE if i >= 5 else INSERT, k + 5, (20 * k, i)),
+                dead=dead)
+
+
+def alive_stacked(mask):
+    return jnp.broadcast_to(jnp.asarray(mask, bool), (P, P))
+
+
+def states():
+    return (leader.init_state(), follower.init_state(), log.init_state(),
+            det.init_state())
+
+
+@jax.jit
+def hb_step(lst, fst, gst, dst, op, key, val, alive):
+    """One serving window under the §13 protocol: leader apply +
+    heartbeat/observe + append through the current owner + live-lane
+    sync.  ``alive`` is the PHYSICAL liveness injection; the verdict
+    comes back from the detector."""
+    def prog(lst, fst, gst, dst, op, key, val, alive):
+        me = mgr.runtime.my_id()
+        lst, _res = leader.op_window(lst, op, key, val)
+        gst, dst, verdict = log.heartbeat_and_detect(gst, dst, det,
+                                                     pred=alive[me])
+        gst, fst, ok, applied = log.append_with_retry(
+            gst, op, key, val, follower, fst, max_attempts=2,
+            pred=alive[gst.ring.owner], sync_pred=alive[me])
+        return lst, fst, gst, dst, verdict, ok, applied
+    return mgr.runtime.run(prog, lst, fst, gst, dst, op, key, val, alive)
+
+
+@jax.jit
+def append_ns(lst, gst, op, key, val, alive):
+    """Append WITHOUT the built-in drains — builds the unacked suffix
+    the cascade tests re-publish."""
+    def prog(lst, gst, op, key, val, alive):
+        lst, _res = leader.op_window(lst, op, key, val)
+        gst, ok = log.append(gst, op, key, val, pred=alive[gst.ring.owner])
+        return lst, gst, ok
+    return mgr.runtime.run(prog, lst, gst, op, key, val, alive)
+
+
+@jax.jit
+def sync_mask(gst, fst, mask):
+    def prog(gst, fst, mask):
+        gst, fst, applied = log.sync(gst, follower, fst, max_entries=1,
+                                     pred=mask)
+        return gst, fst, applied, log.lag(gst)
+    return mgr.runtime.run(prog, gst, fst, mask)
+
+
+@jax.jit
+def observe_j(dst, hb):
+    return mgr.runtime.run(lambda d, h: det.observe(d, h), dst, hb)
+
+
+@jax.jit
+def promote_j(gst, alive):
+    return mgr.runtime.run(log.promote, gst, alive)
+
+
+@jax.jit
+def gather_j(gst, alive):
+    return mgr.runtime.run(log.promote_gather, gst, alive)
+
+
+@jax.jit
+def fence_j(gst, alive):
+    return mgr.runtime.run(log.promote_fence, gst, alive)
+
+
+_REPUB = {}
+
+
+def repub_j(limit):
+    if limit not in _REPUB:
+        _REPUB[limit] = jax.jit(lambda gst, alive: mgr.runtime.run(
+            lambda g, a: log.promote_republish(g, a, limit=limit),
+            gst, alive))
+    return _REPUB[limit]
+
+
+@jax.jit
+def rejoin_j(gst, rst, lst, fst, node):
+    def prog(gst, rst, lst, fst, node):
+        return log.rejoin_step(gst, rst, lst, follower, fst, node)
+    return mgr.runtime.run(prog, gst, rst, lst, fst, node)
+
+
+def lane_arg(p):
+    """Per-lane broadcast of a scalar node id (runtime.run vmaps args)."""
+    return jnp.full((P,), p, jnp.int32)
+
+
+def lag_of(gst):
+    return int(np.asarray(mgr.runtime.run(log.lag, gst))[0])
+
+
+def assert_converged(lst, fst, lanes=None, what="leader/follower"):
+    diverged = diverging_leaves(jax.tree.map(np.asarray, lst),
+                                jax.tree.map(np.asarray, fst), lanes=lanes)
+    assert not diverged, f"{what} diverged on leaves {diverged}"
+
+
+def drive(n, lst, fst, gst, dst, alive, dead=(0,), start=0):
+    """``n`` mutation windows under physical mask ``alive``, ops routed
+    around ``dead``; returns final states + last verdict."""
+    verdict = None
+    for i in range(start, start + n):
+        lst, fst, gst, dst, verdict, _ok, _n = hb_step(
+            lst, fst, gst, dst, *mkw(i, dead=dead), alive_stacked(alive))
+    return lst, fst, gst, dst, verdict
+
+
+class TestDetectorSemantics:
+    def hb_table(self, col):
+        """Stacked (P, P) gathered heartbeat column (all lanes agree)."""
+        return jnp.broadcast_to(jnp.asarray(col, jnp.uint32), (P, P))
+
+    def test_threshold_edge_and_detection_latency(self):
+        dst = det.init_state()
+        hb = np.zeros(P, np.uint32)
+        hb += 1                               # window 1: everyone bumps
+        dst, alive = observe_j(dst, self.hb_table(hb))
+        assert np.asarray(alive)[0].all()
+        hb[[0, 1, 3]] += 1                    # node 2 stalls
+        dst, alive = observe_j(dst, self.hb_table(hb))
+        assert np.asarray(alive)[0].all(), "one miss is below threshold"
+        hb[[0, 1, 3]] += 1                    # second consecutive miss
+        dst, alive = observe_j(dst, self.hb_table(hb))
+        a = np.asarray(alive)[0]
+        assert not a[2] and a[[0, 1, 3]].all()
+        assert np.all(np.asarray(alive) == a), \
+            "the verdict must be SPMD-uniform"
+        lat = mgr.runtime.run(lambda d: det.detection_latency(d, 2), dst)
+        assert int(np.asarray(lat)[0]) == 3, \
+            "declared dead on observation window 3 (last bump at 1 + 2)"
+
+    def test_false_positive_window_resume_under_threshold(self):
+        """A slow-but-alive node that resumes bumping after threshold-1
+        missed windows is never suspected."""
+        dst = det.init_state()
+        hb = np.zeros(P, np.uint32)
+        for _ in range(2):
+            hb += 1
+            dst, alive = observe_j(dst, self.hb_table(hb))
+        hb[[0, 2, 3]] += 1      # node 1 stalls threshold-1 windows...
+        dst, alive = observe_j(dst, self.hb_table(hb))
+        assert np.asarray(alive)[0].all()
+        hb += 1                 # ...then resumes: miss count resets
+        dst, alive = observe_j(dst, self.hb_table(hb))
+        assert np.asarray(alive)[0].all()
+        assert int(np.asarray(dst.missed)[0, 1]) == 0
+        for _ in range(3):
+            hb += 1
+            dst, alive = observe_j(dst, self.hb_table(hb))
+        assert np.asarray(alive)[0].all()
+
+    def test_dead_is_sticky_until_readmit(self):
+        dst = det.init_state()
+        hb = np.zeros(P, np.uint32)
+        hb += 1
+        dst, _ = observe_j(dst, self.hb_table(hb))
+        for _ in range(THRESH):
+            hb[[1, 2, 3]] += 1
+            dst, alive = observe_j(dst, self.hb_table(hb))
+        assert not np.asarray(alive)[0][0]
+        for _ in range(3):      # resumed bumps do NOT readmit
+            hb += 1
+            dst, alive = observe_j(dst, self.hb_table(hb))
+        assert not np.asarray(alive)[0][0], "a declared-dead node must " \
+            "rejoin explicitly, not drift back in"
+        dst = mgr.runtime.run(lambda d: det.readmit(d, 0), dst)
+        assert np.asarray(dst.alive)[0].all()
+        assert int(np.asarray(dst.missed)[0, 0]) == 0
+        assert int(np.asarray(dst.detected_at)[0, 0]) == 0xFFFFFFFF
+
+    def test_threshold_validation(self):
+        with pytest.raises(ValueError, match="threshold"):
+            FailureDetector(None, "sh_det_bad", mgr, threshold=0)
+
+
+class TestHeartbeatDetection:
+    def test_stalled_heartbeats_reach_verdict_and_evict(self):
+        """FaultPlan only *silences* node 0; the detector discovers the
+        death from the stalled ptable heartbeat column within THRESH
+        windows and evicts the dead cursor from ring flow control."""
+        lst, fst, gst, dst = states()
+        plan = FaultPlan(kills={0: 2})
+        alive = ALL.copy()
+        verdicts = []
+        for w in range(2 + THRESH):
+            for p in plan.newly_dead(w):
+                alive[p] = False
+            # once the owner is dead, windows are all-NOP until the
+            # promotion (the engine buffers them; appends through a dead
+            # owner are pred-masked and would strand leader-side state)
+            wnd = mkw(w) if alive[0] else WNOP
+            lst, fst, gst, dst, verdict, _ok, _n = hb_step(
+                lst, fst, gst, dst, *wnd, alive_stacked(alive))
+            verdicts.append(np.asarray(verdict)[0].copy())
+        assert verdicts[1].all(), "pre-kill windows must stay clean"
+        assert verdicts[1 + THRESH - 1].all(), \
+            "the verdict lands exactly at the threshold, not before"
+        assert not verdicts[1 + THRESH][0], \
+            "THRESH stalled windows must produce the death verdict"
+        assert not bool(np.asarray(gst.ring.alive)[0, 0]), \
+            "the verdict must evict the dead cursor from flow control"
+        # verdict → promotion → serving continues, converged on live lanes
+        v = verdicts[-1]
+        gst, winner = promote_j(gst, alive_stacked(v))
+        assert int(np.asarray(winner)[0]) != 0
+        lst, fst, gst, dst, _verdict = drive(3, lst, fst, gst, dst, v,
+                                             start=10)
+        while lag_of(gst):
+            gst, fst, _n, _l = sync_mask(gst, fst, jnp.asarray(v))
+        assert_converged(lst, fst, lanes=v)
+        assert int(np.asarray(gst.dropped)[0]) == 0
+
+
+class TestCascadingPromotion:
+    def _seed(self):
+        lst, fst, gst, dst = states()
+        lst, fst, gst, dst, _v = drive(3, lst, fst, gst, dst, ALL,
+                                       dead=())
+        return lst, fst, gst, dst
+
+    def _suffix(self, lst, gst, dead):
+        """Two acked-but-undrained windows whose mutations live only on
+        lanes surviving the whole cascade."""
+        for i in (3, 4):
+            lst, gst, ok = append_ns(lst, gst, *mkw(i, dead=dead),
+                                     alive_stacked(ALL))
+            assert bool(np.asarray(ok)[0])
+        return lst, gst
+
+    def _finish(self, lst, fst, gst, dst, alive, start):
+        """Post-cascade serving + drain, then convergence on live lanes
+        and the zero-acked-loss check."""
+        dead = tuple(int(p) for p in np.where(~alive)[0])
+        lst, fst, gst, dst, _v = drive(3, lst, fst, gst, dst, alive,
+                                       dead=dead, start=start)
+        while lag_of(gst):
+            gst, fst, _n, _l = sync_mask(gst, fst, jnp.asarray(alive))
+        assert_converged(lst, fst, lanes=alive)
+        assert int(np.asarray(gst.dropped)[0]) == 0, \
+            "cascading promotion must lose zero acked windows"
+
+    def test_winner_dies_after_fence_second_promote_recovers(self):
+        """Kill between fence and re-publish: epoch+1 is burned but the
+        ring was never taken over; promote #2 observes the half-finished
+        epoch through the gather, fences epoch+2 and re-publishes."""
+        lst, fst, gst, dst = self._seed()
+        a1 = np.asarray([False, True, True, True])
+        gst = gather_j(gst, alive_stacked(a1))
+        gst = fence_j(gst, alive_stacked(a1))          # winner dies here
+        a2 = np.asarray([False, False, True, True])
+        gst, winner = promote_j(gst, alive_stacked(a2))
+        assert int(np.asarray(winner)[0]) == 2
+        assert int(np.asarray(mgr.runtime.run(log.epoch, gst))[0]) == 2, \
+            "the burned epoch+1 must be observed, not reused"
+        self._finish(lst, fst, gst, dst, a2, start=20)
+
+    def test_winner_dies_mid_republish_limit_hook(self):
+        """Kill mid-re-publish (limit=1 of a 2-entry suffix): the fence
+        heads recover the true log end and promote #2 restarts the
+        re-publish from the durable cursors."""
+        lst, fst, gst, dst = self._seed()
+        lst, gst = self._suffix(lst, gst, dead=(0, 1))
+        a1 = np.asarray([False, True, True, True])
+        gst = gather_j(gst, alive_stacked(a1))
+        gst = fence_j(gst, alive_stacked(a1))
+        gst, _w1 = repub_j(1)(gst, alive_stacked(a1))  # dies mid-suffix
+        a2 = np.asarray([False, False, True, True])
+        gst, winner = promote_j(gst, alive_stacked(a2))
+        assert int(np.asarray(winner)[0]) == 2
+        self._finish(lst, fst, gst, dst, a2, start=20)
+
+    def test_simultaneous_leader_and_follower_kill(self):
+        """Leader 0 and follower 2 die in the same window; the detector
+        reaches the joint verdict and ONE promotion among the remaining
+        live pair keeps serving, converged."""
+        lst, fst, gst, dst = self._seed()
+        alive = np.asarray([False, True, False, True])
+        verdict = None
+        for _w in range(THRESH):
+            lst, fst, gst, dst, verdict, _ok, _n = hb_step(
+                lst, fst, gst, dst, *WNOP, alive_stacked(alive))
+        v = np.asarray(verdict)[0]
+        assert not v[0] and not v[2] and v[1] and v[3], \
+            "both deaths must land in the same verdict window"
+        gst, winner = promote_j(gst, alive_stacked(v))
+        assert int(np.asarray(winner)[0]) == 1
+        self._finish(lst, fst, gst, dst, alive, start=30)
+
+    @pytest.mark.torture
+    def test_cascade_kill_point_sweep(self):
+        """Double and triple cascades with the next kill at every
+        promotion step boundary — after gather, after fence, and at each
+        re-publish lane via the ``limit`` hook.  Zero acked-window loss
+        and bitwise convergence everywhere."""
+        def steps_upto(gst, alive, boundary):
+            gst = gather_j(gst, alive_stacked(alive))
+            if boundary == "gather":
+                return gst
+            gst = fence_j(gst, alive_stacked(alive))
+            if boundary == "fence":
+                return gst
+            gst, _w = repub_j(int(boundary))(gst, alive_stacked(alive))
+            return gst
+
+        a1 = np.asarray([False, True, True, True])
+        a2 = np.asarray([False, False, True, True])
+        a3 = np.asarray([False, False, False, True])
+        for boundary in ["gather", "fence", 0, 1, 2]:
+            # double cascade: 0 dies, then winner 1 dies at `boundary`
+            lst, fst, gst, dst = self._seed()
+            lst, gst = self._suffix(lst, gst, dead=(0, 1))
+            gst = steps_upto(gst, a1, boundary)
+            gst, winner = promote_j(gst, alive_stacked(a2))
+            assert int(np.asarray(winner)[0]) == 2, f"double @{boundary}"
+            self._finish(lst, fst, gst, dst, a2, start=40)
+
+            # triple cascade: winner 2 also dies at `boundary`
+            lst, fst, gst, dst = self._seed()
+            lst, gst = self._suffix(lst, gst, dead=(0, 1, 2))
+            gst = steps_upto(gst, a1, boundary)
+            gst = steps_upto(gst, a2, boundary)
+            gst, winner = promote_j(gst, alive_stacked(a3))
+            assert int(np.asarray(winner)[0]) == 3, f"triple @{boundary}"
+            self._finish(lst, fst, gst, dst, a3, start=50)
+
+
+class TestRejoin:
+    def _kill_and_outrun(self, n_post=CAP + 2):
+        """Kill node 0, promote via the detector verdict, then outrun its
+        frozen cursor by more than ring capacity."""
+        lst, fst, gst, dst = states()
+        lst, fst, gst, dst, _v = drive(3, lst, fst, gst, dst, ALL,
+                                       dead=())
+        alive = np.asarray([False, True, True, True])
+        verdict = None
+        for _w in range(THRESH):
+            lst, fst, gst, dst, verdict, _ok, _n = hb_step(
+                lst, fst, gst, dst, *WNOP, alive_stacked(alive))
+        v = np.asarray(verdict)[0]
+        gst, _winner = promote_j(gst, alive_stacked(v))
+        lst, fst, gst, dst, _v = drive(n_post, lst, fst, gst, dst, alive,
+                                       start=20)
+        return lst, fst, gst, dst, alive
+
+    def _run_rejoin(self, gst, lst, fst, node=0, between=None):
+        rst = log.rejoin_init()
+        rounds = 0
+        while not bool(np.asarray(rst.done)[0]):
+            gst, rst, fst = rejoin_j(gst, rst, lst, fst, lane_arg(node))
+            rounds += 1
+            if between is not None:
+                gst, lst, fst = between(rounds, gst, lst, fst)
+            assert rounds < 96, "rejoin must terminate"
+        return gst, rst, lst, fst, rounds
+
+    def test_needs_snapshot_decision(self):
+        lst, fst, gst, dst, _alive = self._kill_and_outrun()
+        need = mgr.runtime.run(lambda s: log.needs_snapshot(s, 0), gst)
+        assert bool(np.asarray(need)[0]), \
+            "a cursor gap beyond ring capacity requires the snapshot path"
+        lst2, fst2, gst2, dst2 = states()
+        lst2, fst2, gst2, dst2, _v = drive(2, lst2, fst2, gst2, dst2, ALL,
+                                           dead=())
+        need2 = mgr.runtime.run(lambda s: log.needs_snapshot(s, 0), gst2)
+        assert not bool(np.asarray(need2)[0]), \
+            "a within-capacity gap replays from the ring tail"
+
+    def test_snapshot_rejoin_converges_bitwise(self):
+        lst, fst, gst, dst, _alive = self._kill_and_outrun()
+        gst, rst, lst, fst, _rounds = self._run_rejoin(gst, lst, fst)
+        assert int(np.asarray(rst.restarts)[0]) == 0, \
+            "an uninterrupted transfer must not restart"
+        assert_converged(lst, fst, what="post-rejoin")       # ALL lanes
+        assert bool(np.asarray(gst.ring.alive)[0, 0]), \
+            "rejoin must return the node to ring flow control"
+        # the revived node serves again: full-membership convergence
+        dst = mgr.runtime.run(lambda d: det.readmit(d, 0), dst)
+        lst, fst, gst, dst, verdict = drive(3, lst, fst, gst, dst, ALL,
+                                            dead=(), start=30)
+        assert np.asarray(verdict)[0].all()
+        while lag_of(gst):
+            gst, fst, _n, _l = sync_mask(gst, fst, jnp.asarray(ALL))
+        assert_converged(lst, fst, what="post-rejoin serving")
+
+    def test_rejoin_racing_mutation_restarts_then_converges(self):
+        """A mutation window mid-transfer moves the leader's head: the
+        version stamp no longer matches, the staging restarts against
+        the new base (resumability), and the rejoin still converges."""
+        lst, fst, gst, dst, alive = self._kill_and_outrun()
+        raced = {"n": 0}
+
+        def racing(rounds, gst, lst, fst):
+            if rounds == 2:
+                out = hb_step(lst, fst, gst, dst, *mkw(40),
+                              alive_stacked(alive))
+                raced["n"] += 1
+                return out[2], out[0], out[1]
+            return gst, lst, fst
+
+        gst, rst, lst, fst, _rounds = self._run_rejoin(gst, lst, fst,
+                                                       between=racing)
+        assert raced["n"] == 1
+        assert int(np.asarray(rst.restarts)[0]) >= 1, \
+            "the moved version stamp must restart the staging"
+        assert_converged(lst, fst, what="post-race rejoin")
+
+    def test_leader_death_mid_transfer_resumes_against_new_leader(self):
+        """The cluster leader dies mid-transfer; promotion bumps the
+        epoch, the stamp mismatch restarts the staging against the new
+        leader, and the transfer completes."""
+        lst, fst, gst, dst, _alive = self._kill_and_outrun()
+        promoted = {"n": 0}
+
+        def kill_leader(rounds, gst, lst, fst):
+            if rounds == 2:
+                a = np.asarray([False, False, True, True])
+                gst, w = promote_j(gst, alive_stacked(a))
+                assert int(np.asarray(w)[0]) == 2
+                promoted["n"] += 1
+            return gst, lst, fst
+
+        gst, rst, lst, fst, _rounds = self._run_rejoin(
+            gst, lst, fst, between=kill_leader)
+        assert promoted["n"] == 1
+        assert int(np.asarray(rst.restarts)[0]) >= 1, \
+            "the epoch bump must restart the staging"
+        assert_converged(lst, fst, what="post-failover rejoin")
+
+    @pytest.mark.torture
+    def test_rejoin_fuzz_interruptions(self):
+        """Fuzz the transfer: deterministic schedules interleave racing
+        mutation windows at varying rounds; every schedule restarts at
+        least once and still converges bitwise."""
+        rng = np.random.default_rng(7)
+        for trial in range(4):
+            lst, fst, gst, dst, alive = self._kill_and_outrun()
+            race_at = int(rng.integers(1, 4))
+
+            def interrupt(rounds, gst, lst, fst, at=race_at):
+                if rounds == at:
+                    out = hb_step(lst, fst, gst, dst, *mkw(60 + rounds),
+                                  alive_stacked(alive))
+                    return out[2], out[0], out[1]
+                return gst, lst, fst
+
+            gst, rst, lst, fst, _r = self._run_rejoin(gst, lst, fst,
+                                                      between=interrupt)
+            assert int(np.asarray(rst.restarts)[0]) >= 1, f"trial {trial}"
+            assert_converged(lst, fst, what=f"fuzz trial {trial}")
+
+
+class TestBoundedBackoff:
+    def test_backoff_histogram_fast_path(self):
+        """Uncontended appends land on attempt 0 — bucket 0 only."""
+        lst, fst, gst, dst = states()
+        lst, fst, gst, dst, _v = drive(3, lst, fst, gst, dst, ALL,
+                                       dead=())
+        hist = np.asarray(gst.retries_by_attempt)[0]
+        assert hist[0] == 3 and hist[1:].sum() == 0
+
+    @pytest.mark.parametrize("max_attempts", [1, 2, 3])
+    def test_drop_then_recover_at_each_backoff_stage(self, max_attempts):
+        """A wedged consumer defeats every attempt of the schedule (the
+        window drops, once per attempt); the wedge lifts and re-appending
+        the SAME window lands on attempt 1 after one backoff drain —
+        drop-then-recover, with the histogram asserted exactly."""
+        retry_j = _make_retry(max_attempts)
+        kv_l, kv_f, gst, _dst = states()
+        # wedge: lane 3 sync-masked (its cursor freezes) but ring-alive,
+        # so flow control still counts it — the ring fills at CAP
+        wedged = np.asarray([True, True, True, False])
+        for i in range(CAP):
+            kv_l, kv_f, gst, ok, _n = retry_j(
+                kv_l, kv_f, gst, *mkw(i, dead=(3,)), alive_stacked(wedged))
+            assert bool(np.asarray(ok)[0])
+        # ring full, wedge holds: every attempt fails, one drop each
+        kv_l, kv_f, gst, ok, _n = retry_j(
+            kv_l, kv_f, gst, *mkw(CAP, dead=(3,)), alive_stacked(wedged))
+        assert not bool(np.asarray(ok)[0])
+        assert int(np.asarray(gst.dropped)[0]) == max_attempts
+        assert int(np.asarray(gst.retries)[0]) == max_attempts - 1
+        hist = np.asarray(gst.retries_by_attempt)[0]
+        assert hist[0] == CAP and hist[1:].sum() == 0, \
+            "failed schedules must not inflate the success histogram"
+        # recover: lift the wedge and re-append the dropped window —
+        # attempt 0 still sees the ring full, the first backoff drain
+        # frees one slot, attempt 1 lands
+        kv_l, kv_f, gst, ok, _n = retry_j(
+            kv_l, kv_f, gst, *mkw(CAP, dead=(3,)), alive_stacked(ALL))
+        hist = np.asarray(gst.retries_by_attempt)[0]
+        if max_attempts == 1:
+            assert not bool(np.asarray(ok)[0]), \
+                "no retry budget → the still-full ring drops again"
+            assert hist[1:].sum() == 0
+        else:
+            assert bool(np.asarray(ok)[0])
+            assert hist[1] == 1, "recovery lands on attempt 1"
+            assert int(np.asarray(gst.retries)[0]) == max_attempts
+
+
+_RETRY = {}
+
+
+def _make_retry(n):
+    if n not in _RETRY:
+        @jax.jit
+        def f(lst, fst, gst, op, key, val, alive):
+            def prog(lst, fst, gst, op, key, val, alive):
+                me = mgr.runtime.my_id()
+                lst, _res = leader.op_window(lst, op, key, val)
+                gst, fst, ok, applied = log.append_with_retry(
+                    gst, op, key, val, follower, fst, max_attempts=n,
+                    pred=alive[gst.ring.owner], sync_pred=alive[me])
+                return lst, fst, gst, ok, applied
+            return mgr.runtime.run(prog, lst, fst, gst, op, key, val,
+                                   alive)
+        _RETRY[n] = f
+    return _RETRY[n]

@@ -1,0 +1,194 @@
+"""Backend crossover sweep (DESIGN.md §14): one-sided vs active-message.
+
+"RDMA vs. RPC for Implementing Distributed Data Structures" (PAPERS.md)
+argues neither protocol dominates; this benchmark reproduces that
+crossover on the LOCO channel stack with the §14 swappable backends.
+Every cell runs the SAME hashed-placement kvstore window workload
+through both backends — execution is bitwise-identical (asserted) — and
+prices the two wire contracts from the TrafficLedger:
+
+* **one-sided** reads coalesce duplicate rows (2·|row|·unique) and
+  writes push raw rows (|row|·lane), but the placed-path allocation
+  grant costs a 2-round trip per allocating window;
+* **active-message** ships an (hdr+|row|) RPC per lane — no coalescing,
+  a header tax on every op — but responses are direct sends and the
+  allocation decision rides the op, so allocating windows save 2 rounds.
+
+Sweep axes: value width (|row| vs header), key distribution (zipf skew
+feeds the coalescer), read ratio (write header tax vs read coalescing
+vs allocation rounds).  Expected geometry, asserted at the end of the
+sweep on the modeled counters:
+
+* one-sided wins WIRE BYTES on skewed/coalescible reads and on every
+  write-heavy cell (header tax);
+* active-message wins WIRE BYTES on wide uniform reads
+  (hdr+|row| < 2·|row| once |row| > hdr and duplicates are rare);
+* active-message wins ROUNDS (and modeled cost) on allocating cells
+  (the §10 alloc fold: 0 vs 2 rounds per allocating window);
+* each backend wins ≥ 1 cell on modeled cost — the crossover is real.
+
+Rows land in ``BENCH_crossover.json`` (per cell × backend: wall us,
+modeled bytes/rounds/cost) plus a ``winners`` summary row.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DELETE, GET, INSERT, NOP, UPDATE, KVStore,
+                        make_manager)
+
+from .common import (BenchJson, Csv, LINK_BW_GBS, LINK_LAT_US, uniform_keys,
+                     zipf_keys)
+
+P = 4
+B = 8                       # window lanes per participant
+BACKENDS = ("onesided", "active_message")
+EPS = 1e-9
+
+
+class _Cell:
+    """One (backend, value_width) kvstore harness — ledger enabled before
+    the jit so the trace carries the recording callbacks; shared across
+    the (distribution, read-ratio) cells."""
+
+    def __init__(self, backend, vw, keyspace):
+        self.backend, self.vw = backend, vw
+        self.mgr = make_manager(P, backend=backend)
+        self.mgr.traffic.enable()
+        self.kv = KVStore(None, f"xkv_{backend}_w{vw}", self.mgr,
+                          slots_per_node=keyspace, value_width=vw,
+                          num_locks=32, index_capacity=4 * keyspace,
+                          placement="hashed")
+        self.step = jax.jit(lambda s, o, k, v: self.mgr.runtime.run(
+            self.kv.op_window, s, o, k, v))
+
+    def prefill(self, keyspace):
+        """Insert keys 1..keyspace (NOP-padded windows), ledger reset
+        after so measurement starts clean."""
+        st = self.kv.init_state()
+        keys = np.arange(1, keyspace + 1, dtype=np.uint32)
+        for lo in range(0, keyspace, P * B):
+            chunk = keys[lo:lo + P * B]
+            op = np.full((P * B,), NOP, np.int32)
+            kk = np.ones((P * B,), np.uint32)
+            op[:len(chunk)] = INSERT
+            kk[:len(chunk)] = chunk
+            vv = np.repeat(kk.astype(np.int32)[:, None], self.vw, axis=1)
+            st, _ = self.step(st, jnp.asarray(op.reshape(P, B)),
+                              jnp.asarray(kk.reshape(P, B)),
+                              jnp.asarray(vv.reshape(P, B, self.vw)))
+        jax.block_until_ready(st)
+        jax.effects_barrier()
+        self.mgr.traffic.reset()
+        return st
+
+    def measure(self, st, windows):
+        """Drive the scripted windows; returns (results, bytes, rounds,
+        wall_us_per_window)."""
+        self.mgr.traffic.reset()
+        outs = []
+        t0 = time.perf_counter()
+        for op, key, val in windows:
+            st, res = self.step(st, op, key, val)
+            outs.append(res)
+        jax.block_until_ready(outs)
+        wall_us = (time.perf_counter() - t0) * 1e6 / len(windows)
+        jax.effects_barrier()
+        return (jax.tree.map(np.asarray, outs),
+                self.mgr.traffic.total_bytes(),
+                self.mgr.traffic.total_rounds(), wall_us)
+
+
+def _gen_windows(rng, vw, dist, read_ratio, keyspace, n_windows):
+    """Scripted (op, key, val) windows: GET with prob ``read_ratio``,
+    else INSERT/UPDATE/DELETE churn (inserts keep the §10 allocation
+    path hot; deletes free slots so inserts can land)."""
+    muts = np.asarray([INSERT, UPDATE, DELETE], np.int32)
+    windows = []
+    for _w in range(n_windows):
+        if dist == "zipf":
+            keys = zipf_keys(rng, P * B, keyspace, theta=1.3)
+        else:
+            keys = uniform_keys(rng, P * B, keyspace)
+        is_get = rng.random(P * B) < read_ratio
+        op = np.where(is_get, GET,
+                      rng.choice(muts, size=P * B, p=[0.4, 0.4, 0.2]))
+        val = np.repeat(keys.astype(np.int32)[:, None] * 3 + 1, vw, axis=1)
+        windows.append((jnp.asarray(op.reshape(P, B).astype(np.int32)),
+                        jnp.asarray(keys.reshape(P, B)),
+                        jnp.asarray(val.reshape(P, B, vw))))
+    return windows
+
+
+def _model_us(wire_bytes, rounds):
+    return rounds * LINK_LAT_US + wire_bytes / (LINK_BW_GBS * 1e3)
+
+
+def run(csv: Csv, rounds: int = 6, jt: BenchJson | None = None,
+        smoke: bool = False):
+    jt = jt if jt is not None else BenchJson()
+    keyspace = 32 if smoke else 64
+    n_windows = 2 if smoke else rounds
+    harness = {(bk, vw): _Cell(bk, vw, keyspace)
+               for bk in BACKENDS for vw in (1, 8)}
+    wins = {"bytes": {bk: 0 for bk in BACKENDS},
+            "rounds": {bk: 0 for bk in BACKENDS},
+            "cost": {bk: 0 for bk in BACKENDS}}
+    for vw in (1, 8):
+        for dist in ("uniform", "zipf"):
+            for rr in (0.0, 0.5, 1.0):
+                cell = f"W{vw}/{dist}/r{int(rr * 100)}"
+                seed = hash((vw, dist, rr)) % 2 ** 31
+                windows = _gen_windows(np.random.default_rng(seed), vw,
+                                       dist, rr, keyspace, n_windows)
+                got = {}
+                for bk in BACKENDS:
+                    h = harness[(bk, vw)]
+                    st = h.prefill(keyspace)
+                    got[bk] = h.measure(st, windows)
+                # conformance: the cell's results are backend-invariant
+                la = jax.tree.leaves(got["onesided"][0])
+                lb = jax.tree.leaves(got["active_message"][0])
+                for x, y in zip(la, lb):
+                    np.testing.assert_array_equal(
+                        x, y, err_msg=f"backends diverged on {cell}")
+                metrics = {bk: {"bytes": got[bk][1], "rounds": got[bk][2],
+                                "cost": _model_us(got[bk][1], got[bk][2])}
+                           for bk in BACKENDS}
+                for m in ("bytes", "rounds", "cost"):
+                    a = metrics["onesided"][m]
+                    b = metrics["active_message"][m]
+                    if a < b - EPS:
+                        wins[m]["onesided"] += 1
+                    elif b < a - EPS:
+                        wins[m]["active_message"] += 1
+                for bk in BACKENDS:
+                    mb, mr = metrics[bk]["bytes"], metrics[bk]["rounds"]
+                    mc, wall = metrics[bk]["cost"], got[bk][3]
+                    csv.add(f"crossover_{cell}_{bk}", wall,
+                            f"bytes={mb:.0f} rounds={mr:.0f} "
+                            f"model={mc:.2f}us")
+                    jt.add("crossover", f"{cell}/{bk}", wall,
+                           value_width=vw, distribution=dist,
+                           read_ratio=rr, backend=bk,
+                           modeled_wire_bytes=float(mb),
+                           modeled_rounds=float(mr),
+                           modeled_cost_us=float(mc))
+    jt.add("crossover", "winners", 0.0,
+           **{f"{m}_{bk}": wins[m][bk]
+              for m in ("bytes", "rounds", "cost") for bk in BACKENDS})
+    # the crossover must be real — each protocol wins somewhere, on the
+    # modeled counters themselves (not wall noise)
+    assert wins["bytes"]["onesided"] >= 1, wins
+    assert wins["bytes"]["active_message"] >= 1, wins
+    assert wins["rounds"]["active_message"] >= 1, wins
+    assert wins["rounds"]["onesided"] == 0, \
+        ("one-sided should never win rounds: it pays the allocation "
+         "round-trip the active-message protocol folds into the op", wins)
+    assert wins["cost"]["onesided"] >= 1, wins
+    assert wins["cost"]["active_message"] >= 1, wins
+    return jt

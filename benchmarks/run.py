@@ -8,6 +8,8 @@
                            ReplicatedLog append+sync latency/lag/bytes
   §10      bench_locality  skewed-reader placement: wire bytes before/after
                            rebalance(), migration transparency + replication
+  §14      bench_crossover one-sided vs active-message backend crossover:
+                           modeled bytes/rounds/cost × width × skew × mix
   Fig. 7   bench_power     DC/DC control-loop stability vs period
   §Roofline bench_roofline dry-run-derived roofline table (reads reports/)
 
@@ -31,7 +33,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: barrier,lock,kvstore,stream,"
-                         "locality,failover,power,roofline")
+                         "locality,failover,crossover,power,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny configs for CI smoke runs")
     ap.add_argument("--json-dir", default=os.path.dirname(
@@ -83,6 +85,13 @@ def main() -> None:
         bench_failover.run(csv, rounds=2 if args.smoke else 8, jt=jt,
                            smoke=args.smoke)
         path = jt.dump(os.path.join(args.json_dir, "BENCH_failover.json"))
+        print(f"# wrote {path} ({len(jt.rows)} rows)", file=sys.stderr)
+    if enabled("crossover"):
+        from . import bench_crossover
+        jt = BenchJson()
+        bench_crossover.run(csv, rounds=2 if args.smoke else 6, jt=jt,
+                            smoke=args.smoke)
+        path = jt.dump(os.path.join(args.json_dir, "BENCH_crossover.json"))
         print(f"# wrote {path} ({len(jt.rows)} rows)", file=sys.stderr)
     if enabled("power"):
         from . import bench_power

@@ -1,0 +1,250 @@
+"""Swappable execution backends for the one-sided verb layer (DESIGN.md §14).
+
+LOCO exposes memory complexity so the programmer can pick the right
+protocol per object, and "RDMA vs. RPC for Implementing Distributed Data
+Structures" (PAPERS.md) shows neither one-sided verbs nor RPC-style
+function shipping wins everywhere.  A :class:`CollsBackend` packages one
+protocol contract behind the verb signatures of :mod:`repro.core.colls`,
+so every channel (region, kvstore, queue, ringbuffer, cache, replog) and
+the serving engine take a ``backend=`` knob instead of hard-wiring the
+one-sided binding:
+
+* ``onesided`` — the reference backend: the existing vmap/shard_map
+  one-sided verbs, with their coalescing read tier and per-lane locality
+  discounts.  Reads cost a request round plus a data round of
+  2·|row|·unique bytes; writes push |row| bytes per remote lane.
+
+* ``active_message`` — RPC-style function shipping: each window's ops
+  ride the *request* gather to the home node as (header, payload)
+  descriptors, the home applies them locally, and results return on the
+  window's existing response scatter.  On the emulation substrate both
+  protocols are realized by the same gather/serve/scatter collectives —
+  ``_serve_scatter`` *is* "request gather → home apply → result
+  scatter" — so the active-message backend reuses the one-sided
+  execution math bitwise and swaps only the modeled wire contract:
+  every op descriptor pays an :data:`AM_HDR_BYTES` header and ships
+  un-coalesced (the home sees each RPC), but responses are direct sends
+  (1·|row|, not 2·|row|) and the placed-path allocation decision ships
+  *with* the op — the home allocates as part of applying, so the
+  grant round-trip costs zero extra rounds (``alloc_rounds``).
+
+Both backends record modeled wire bytes AND collective round counts into
+the :class:`~repro.core.runtime.TrafficLedger`, which is what
+``benchmarks/bench_crossover.py`` sweeps to find the crossover.  This
+interface is also the seam the ROADMAP's Pallas DMA-kernel backend plugs
+into: a third subclass that lowers the same verb contract to explicit
+remote-DMA kernels instead of XLA collectives.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import colls
+
+#: Modeled bytes of one active-message op descriptor: verb tag, target,
+#: index and length/flags words — the fixed RPC header every shipped op
+#: pays regardless of payload width.
+AM_HDR_BYTES = 16
+
+
+class CollsBackend:
+    """Protocol contract for the one-sided verb layer.
+
+    Subclasses bind the four data verbs (scalar/batched read and write)
+    plus the per-channel cost hooks.  Execution must be bitwise-identical
+    across backends — the conformance suite (tests/test_backends.py)
+    pins that — only the modeled wire bytes and round counts may differ.
+    """
+
+    name = "abstract"
+    #: rounds the placed-path slot-allocation round-trip costs on top of
+    #: the schedule gather (kvstore §10; 0 when the decision ships with
+    #: the op, as in active-message function shipping).
+    alloc_rounds = 2.0
+
+    # -- data verbs ---------------------------------------------------------
+    def read(self, local_buf, target, index, axis, pred=True,
+             ledger=None, verb="remote_read"):
+        raise NotImplementedError
+
+    def read_batch(self, local_buf, targets, indices, axis, preds=None,
+                   ledger=None, verb="remote_read_batch", coalesce=True):
+        raise NotImplementedError
+
+    def write(self, local_buf, target, index, value, axis, pred=True,
+              ledger=None, verb="remote_write"):
+        raise NotImplementedError
+
+    def write_batch(self, local_buf, targets, indices, values, axis,
+                    preds=None, assume_unique=False, ledger=None,
+                    verb="remote_write_batch"):
+        raise NotImplementedError
+
+    # -- cost hooks ---------------------------------------------------------
+    def record_publish(self, ledger, verb, slot_nbytes, n_moved, axis):
+        """Ledger model of a ringbuffer publish of ``n_moved`` slots."""
+        raise NotImplementedError
+
+    def row_read_bytes(self, row_nbytes: int) -> float:
+        """Modeled wire bytes of one remote row read (the serving
+        engine's per-page cost constant)."""
+        raise NotImplementedError
+
+
+class OneSidedBackend(CollsBackend):
+    """The reference backend: LOCO's one-sided verbs as realized today.
+
+    Delegates straight to :mod:`repro.core.colls`, whose verbs record
+    their own byte model (coalesced reads = 2·|row|·unique, locality
+    discounts) and round counts (reads 2, writes 1)."""
+
+    name = "onesided"
+    alloc_rounds = 2.0
+
+    def read(self, local_buf, target, index, axis, pred=True,
+             ledger=None, verb="remote_read"):
+        return colls.remote_read(local_buf, target, index, axis, pred=pred,
+                                 ledger=ledger, verb=verb)
+
+    def read_batch(self, local_buf, targets, indices, axis, preds=None,
+                   ledger=None, verb="remote_read_batch", coalesce=True):
+        return colls.remote_read_batch(local_buf, targets, indices, axis,
+                                       preds=preds, ledger=ledger, verb=verb,
+                                       coalesce=coalesce)
+
+    def write(self, local_buf, target, index, value, axis, pred=True,
+              ledger=None, verb="remote_write"):
+        return colls.remote_write(local_buf, target, index, value, axis,
+                                  pred=pred, ledger=ledger, verb=verb)
+
+    def write_batch(self, local_buf, targets, indices, values, axis,
+                    preds=None, assume_unique=False, ledger=None,
+                    verb="remote_write_batch"):
+        return colls.remote_write_batch(local_buf, targets, indices, values,
+                                        axis, preds=preds,
+                                        assume_unique=assume_unique,
+                                        ledger=ledger, verb=verb)
+
+    def record_publish(self, ledger, verb, slot_nbytes, n_moved, axis):
+        # one-sided: the owner pushes each slot, consumers validate by
+        # counter read-back — 2·|slot| per moved slot, one round.
+        colls._record(ledger, verb, 2.0 * slot_nbytes
+                      * jnp.asarray(n_moved, jnp.float32))
+        colls.record_rounds(ledger, verb, 1.0, axis)
+
+    def row_read_bytes(self, row_nbytes: int) -> float:
+        return 2.0 * row_nbytes
+
+
+class ActiveMessageBackend(CollsBackend):
+    """RPC-style function shipping over the same window machinery.
+
+    Ops execute through the identical gather/serve/scatter collectives as
+    the one-sided backend (``ledger=None`` on the delegated call — the
+    one-sided byte model must not fire), then this class records the
+    active-message wire contract:
+
+    * every enabled remote op ships an (:data:`AM_HDR_BYTES` + |row|)
+      descriptor to its home — NO coalescing: the home node sees each
+      RPC, so read bytes scale with lane count, not unique rows;
+    * read responses are direct 1·|row| sends folded into the header+row
+      request cost above (total (hdr+row)·lanes vs one-sided
+      2·row·unique), over the same 2 rounds (request, response);
+    * write completions piggyback on the window's existing ack round —
+      1 round, (hdr+row)·lanes;
+    * the placed-path allocation decision ships with the op: the home
+      allocates while applying, so ``alloc_rounds`` is 0 (the one-sided
+      backend pays a 2-round grant round-trip).
+    """
+
+    name = "active_message"
+    alloc_rounds = 0.0
+
+    def _op_bytes(self, local_buf, n_remote):
+        return float(AM_HDR_BYTES + colls._item_nbytes(local_buf)) \
+            * jnp.asarray(n_remote, jnp.float32)
+
+    def read(self, local_buf, target, index, axis, pred=True,
+             ledger=None, verb="remote_read"):
+        out = colls.remote_read(local_buf, target, index, axis, pred=pred,
+                                ledger=None, verb=verb)
+        me = colls.my_id(axis)
+        remote = jnp.asarray(pred) & (jnp.asarray(target, jnp.int32) != me)
+        colls._record(ledger, verb, self._op_bytes(local_buf, remote))
+        colls.record_rounds(ledger, verb, 2.0, axis)
+        return out
+
+    def read_batch(self, local_buf, targets, indices, axis, preds=None,
+                   ledger=None, verb="remote_read_batch", coalesce=True):
+        out = colls.remote_read_batch(local_buf, targets, indices, axis,
+                                      preds=preds, ledger=None, verb=verb,
+                                      coalesce=coalesce)
+        me = colls.my_id(axis)
+        if preds is None:
+            preds = jnp.ones(targets.shape[:1], jnp.bool_)
+        remote = jnp.asarray(preds) & (targets.astype(jnp.int32) != me)
+        colls._record(ledger, verb,
+                      self._op_bytes(local_buf, jnp.sum(remote)))
+        colls.record_rounds(ledger, verb, 2.0, axis)
+        return out
+
+    def write(self, local_buf, target, index, value, axis, pred=True,
+              ledger=None, verb="remote_write"):
+        buf = colls.remote_write(local_buf, target, index, value, axis,
+                                 pred=pred, ledger=None, verb=verb)
+        me = colls.my_id(axis)
+        remote = jnp.asarray(pred) & (jnp.asarray(target, jnp.int32) != me)
+        colls._record(ledger, verb, self._op_bytes(local_buf, remote))
+        colls.record_rounds(ledger, verb, 1.0, axis)
+        return buf
+
+    def write_batch(self, local_buf, targets, indices, values, axis,
+                    preds=None, assume_unique=False, ledger=None,
+                    verb="remote_write_batch"):
+        buf = colls.remote_write_batch(local_buf, targets, indices, values,
+                                       axis, preds=preds,
+                                       assume_unique=assume_unique,
+                                       ledger=None, verb=verb)
+        me = colls.my_id(axis)
+        if preds is None:
+            preds = jnp.ones(targets.shape[:1], jnp.bool_)
+        remote = jnp.asarray(preds) & (targets.astype(jnp.int32) != me)
+        colls._record(ledger, verb,
+                      self._op_bytes(local_buf, jnp.sum(remote)))
+        colls.record_rounds(ledger, verb, 1.0, axis)
+        return buf
+
+    def record_publish(self, ledger, verb, slot_nbytes, n_moved, axis):
+        # active message: the owner ships one (hdr + slot) message per
+        # moved slot; delivery is the apply, no counter read-back.
+        colls._record(ledger, verb, float(AM_HDR_BYTES + slot_nbytes)
+                      * jnp.asarray(n_moved, jnp.float32))
+        colls.record_rounds(ledger, verb, 1.0, axis)
+
+    def row_read_bytes(self, row_nbytes: int) -> float:
+        return float(AM_HDR_BYTES + row_nbytes)
+
+
+#: Singleton registry — backends are stateless, one instance each.
+BACKENDS = {
+    "onesided": OneSidedBackend(),
+    "active_message": ActiveMessageBackend(),
+}
+
+
+def get_backend(spec=None, default=None):
+    """Resolve a backend knob: a name from :data:`BACKENDS`, an instance
+    (passed through), or ``None`` → ``default`` (itself resolved; the
+    final fallback is the one-sided reference backend)."""
+    if spec is None:
+        if default is None:
+            return BACKENDS["onesided"]
+        return get_backend(default)
+    if isinstance(spec, CollsBackend):
+        return spec
+    try:
+        return BACKENDS[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown colls backend {spec!r}; available: "
+            f"{sorted(BACKENDS)}") from None

@@ -70,8 +70,13 @@ class ReadCache(Channel):
     """
 
     def __init__(self, parent, name: str, mgr: Manager, *, lines: int,
-                 row_width: int, backing_slots: int):
+                 row_width: int, backing_slots: int, backend=None):
         super().__init__(parent, name, mgr)
+        from .backends import get_backend
+        # the cache itself is collective-free; the knob names the backend
+        # its *composer* fills miss lines through (DESIGN.md §14), kept
+        # here so a cache can be introspected like every other channel
+        self.backend = get_backend(backend, default=mgr.backend)
         self.N = int(lines)
         self.RW = int(row_width)
         self.backing_slots = int(backing_slots)

@@ -62,6 +62,18 @@ def _record(ledger, verb, wire_bytes):
         ledger.record(verb, wire_bytes)
 
 
+def record_rounds(ledger, verb, rounds, axis: str):
+    """Report modeled collective *rounds* into the traffic ledger
+    (DESIGN.md §14).  A round is cluster-wide, but the per-participant
+    trace fires one callback per participant — so only participant 0
+    contributes a non-zero count, keeping the ledger total exact.  Same
+    trace-time gating as :func:`_record`."""
+    if ledger is not None and ledger.enabled:
+        me = my_id(axis)
+        ledger.record_rounds(
+            verb, jnp.where(me == 0, jnp.float32(rounds), jnp.float32(0.0)))
+
+
 def record_fastpath(ledger, name, fast, windows):
     """Report lock-skipped rounds into the traffic ledger (DESIGN.md §11):
     ``fast`` windows out of ``windows`` executed were classified commuting
@@ -172,6 +184,7 @@ def remote_read(local_buf, target, index, axis: str, pred=True,
     out = jnp.where(pred, out, jnp.zeros_like(out))
     _record(ledger, verb,
             2.0 * _item_nbytes(local_buf) * remote.astype(jnp.float32))
+    record_rounds(ledger, verb, 2.0, axis)
     return out
 
 
@@ -242,6 +255,7 @@ def remote_read_batch(local_buf, targets, indices, axis: str, preds=None,
     out = jnp.where(preds.reshape(lane), out, jnp.zeros_like(out))
     _record(ledger, verb, 2.0 * _item_nbytes(local_buf)
             * jnp.sum(remote_lane.astype(jnp.float32)))
+    record_rounds(ledger, verb, 2.0, axis)
     return out  # (R, *item)
 
 
@@ -299,6 +313,7 @@ def remote_read_coalesced(local_buf, targets, indices, axis: str, preds=None,
     out = jnp.where(preds.reshape(lane), out, jnp.zeros_like(out))
     _record(ledger, verb, 2.0 * _item_nbytes(local_buf)
             * jnp.sum(leader.astype(jnp.float32)))
+    record_rounds(ledger, verb, 2.0, axis)
     return out  # (R, *item)
 
 
@@ -342,6 +357,7 @@ def remote_write(local_buf, target, index, value, axis: str,
         buf = apply_one(buf, (tgts[w], idxs[w], vals[w], ens[w]))
     _record(ledger, verb, float(_item_nbytes(local_buf))
             * (pred & (target != me)).astype(jnp.float32))
+    record_rounds(ledger, verb, 1.0, axis)
     return buf
 
 
@@ -398,4 +414,5 @@ def remote_write_batch(local_buf, targets, indices, values, axis: str,
     row = jnp.where(win, flat_i, local_buf.shape[0])
     _record(ledger, verb, float(_item_nbytes(local_buf))
             * jnp.sum((preds & (targets != me)).astype(jnp.float32)))
+    record_rounds(ledger, verb, 1.0, axis)
     return local_buf.at[row].set(flat_v, mode="drop")

@@ -143,6 +143,7 @@ import jax.numpy as jnp
 
 from . import colls
 from .ack import AckKey, join
+from .backends import get_backend
 from .cache import ReadCache, ReadCacheState, hash_u32
 from .channel import Channel
 from .hottracker import HotTracker, HotTrackerState
@@ -221,8 +222,12 @@ class KVStore(Channel):
                  cache_slots: int = 0, coalesce_reads: bool = True,
                  placement: str = "local", track_heat: bool = False,
                  heat_decay: float = 0.9, lockfree: bool = False,
-                 reference_impl: bool = False):
+                 reference_impl: bool = False, backend=None):
         super().__init__(parent, name, mgr)
+        # execution protocol of the data verbs (DESIGN.md §14); defaults
+        # to the manager's backend.  Threaded into the rows region so the
+        # windowed read/write paths and the scalar spec agree.
+        self.backend = get_backend(backend, default=mgr.backend)
         self.S = int(slots_per_node)
         self.W = int(value_width)
         self.L = int(num_locks)
@@ -248,8 +253,8 @@ class KVStore(Channel):
         # (the uncached path survives as _get_window_reference).
         self.coalesce_reads = bool(coalesce_reads)
         self.cache = ReadCache(self, "readcache", mgr, lines=cache_slots,
-                               row_width=self.W + 3,
-                               backing_slots=self.S) if cache_slots else None
+                               row_width=self.W + 3, backing_slots=self.S,
+                               backend=self.backend) if cache_slots else None
         # explicit locality tier (DESIGN.md §10): placement picks the home
         # node of every INSERT; track_heat feeds the HotTracker channel
         # from the GET paths so rebalance() can propose MOVEs for rows
@@ -263,7 +268,8 @@ class KVStore(Channel):
         self.locks = TicketLockArray(self, "locks", mgr, num_locks=self.L)
         self.rows_region = SharedRegion(self, "data", mgr, slots=self.S,
                                         item_shape=(self.W + 3,),
-                                        dtype=jnp.int32)
+                                        dtype=jnp.int32,
+                                        backend=self.backend)
         self.acks = SST(self, "tracker_acks", mgr, shape=(), dtype=jnp.uint32)
         # the local index is private memory, not a network region, but we
         # account for it in the ledger like the paper's process heap.
@@ -382,7 +388,7 @@ class KVStore(Channel):
             # locality tier: only live GET lanes ride the wire, and a lane
             # addressing my own node is served from local memory (zero
             # modeled wire bytes in the traffic ledger).
-            row = colls.remote_read(st.rows.buf, node, slot, self.axis,
+            row = self.backend.read(st.rows.buf, node, slot, self.axis,
                                     pred=pred & found_idx,
                                     ledger=self.mgr.traffic,
                                     verb=f"{self.full_name}.get")
@@ -468,7 +474,7 @@ class KVStore(Channel):
             # locality tier: dead lanes (disabled / key absent) and
             # self-targeted lanes are masked out of the wire tensors; self
             # lanes come from local memory at zero modeled wire bytes.
-            rows = colls.remote_read_batch(
+            rows = self.backend.read_batch(
                 st.rows.buf, node.astype(jnp.int32),
                 slot.astype(jnp.int32), self.axis,
                 preds=pred & found_idx, ledger=self.mgr.traffic,
@@ -533,7 +539,7 @@ class KVStore(Channel):
         miss = live & ~hit
 
         def read_all(_):
-            rows = colls.remote_read_batch(
+            rows = self.backend.read_batch(
                 st.rows.buf, node, slot, self.axis,
                 preds=miss, ledger=self.mgr.traffic,
                 verb=f"{self.full_name}.get_batch",
@@ -960,7 +966,11 @@ class KVStore(Channel):
 
         Returns (round_no (B,) int32 — 0 for non-mutating lanes,
         write_winner (B,) bool — False for an UPDATE whose row write is
-        superseded by a later-ticket same-key UPDATE in the same round).
+        superseded by a later-ticket same-key UPDATE in the same round,
+        any_alloc () bool — whether ANY gathered lane allocates a slot
+        (INSERT/MOVE); uniform across participants, so the placed
+        service rounds can skip the allocation round-trip outright for
+        no-allocation windows — the request is folded into this gather).
         """
         me = colls.my_id(self.axis)
         B = op.shape[0]
@@ -976,8 +986,10 @@ class KVStore(Channel):
         later = queued & (g_tick[None, :] > g_tick[:, None])   # [i,j]: j>i
         round_all, winner_all = self._schedule_core(g_key, g_op, g_want,
                                                     queued, later)
+        any_alloc = jnp.any(g_want & ((g_op == INSERT) | (g_op == MOVE)))
         return (jax.lax.dynamic_slice(round_all, (me * B,), (B,)),
-                jax.lax.dynamic_slice(winner_all, (me * B,), (B,)))
+                jax.lax.dynamic_slice(winner_all, (me * B,), (B,)),
+                any_alloc)
 
     @staticmethod
     def _schedule_core(g_key, g_op, g_want, queued, later):
@@ -1085,12 +1097,13 @@ class KVStore(Channel):
             write_winner=jax.lax.dynamic_slice(winner_all, (me * B,), (B,)),
             win_fast=win_fast,
             any_want=jnp.any(g_want),
+            any_alloc=jnp.any(g_want & ((g_op == INSERT) | (g_op == MOVE))),
             inv_node=g[:, 4], inv_slot=g[:, 5], inv_flag=g[:, 6] != 0)
 
     # -- one service round over the whole (B,) window ---------------------------------
     def _service_window(self, st: KVStoreState, op, key, value, lock_id,
                         ticket, pending, look, serve=None,
-                        write_winner=None, homes=None):
+                        write_winner=None, homes=None, any_alloc=None):
         """Vectorized :meth:`_service_round`: every window slot whose lock
         this participant currently holds executes in this round.
 
@@ -1129,7 +1142,7 @@ class KVStore(Channel):
         if homes is not None:
             return self._service_window_placed(
                 st, op, key, value, lock_id, ticket, pending, look, homes,
-                serve=serve, write_winner=write_winner)
+                serve=serve, write_winner=write_winner, any_alloc=any_alloc)
         me = colls.my_id(self.axis)
         B = op.shape[0]
         if serve is None:
@@ -1265,7 +1278,8 @@ class KVStore(Channel):
     # -- the placed service round (explicit locality tier, DESIGN.md §10) -------
     def _service_window_placed(self, st: KVStoreState, op, key, value,
                                lock_id, ticket, pending, look, homes,
-                               serve=None, write_winner=None):
+                               serve=None, write_winner=None,
+                               any_alloc=None):
         """One service round under explicit placement: the generalization
         of :meth:`_service_window` in which INSERT slots are allocated at
         the lane's *home* node and MOVE lanes re-home live rows.
@@ -1322,40 +1336,73 @@ class KVStore(Channel):
         do_move = is_move & (homes != node)
         move_noop = is_move & (homes == node)
 
-        # ---- MOVE phase 0: read the row at the old home.  The lane holds
-        # the key's ticket lock, so no concurrent writer exists and one
-        # validated read suffices (the §10.2 protocol).
-        moved = colls.remote_read_batch(
-            st.rows.buf, node, slot, self.axis, preds=do_move,
-            ledger=self.mgr.traffic, verb=f"{self.full_name}.move_read",
-            coalesce=False)[:, :self.W]
-
-        # ---- allocation at the home nodes (request gather + grant psum)
+        # ---- MOVE phase 0 + allocation at the home nodes.  The MOVE
+        # pre-read (the lane holds the key's ticket lock, so one validated
+        # read suffices — the §10.2 protocol) and the allocation
+        # round-trip — one (P·B, 2) request gather (want, home) and one
+        # (P·B, 3) grant psum (ok, slot, ctr) — only matter to lanes that
+        # allocate (INSERT/MOVE).  The allocation *request* is folded into
+        # the schedule gather (§14): callers pass ``any_alloc``, computed
+        # from the lane metadata every participant already gathered, and a
+        # window with no allocating lane anywhere skips both collectives
+        # via the 0-iteration while_loop — a placed UPDATE/DELETE window
+        # keeps the writer-local fast path's round shape.  The skipped
+        # carry is the identity: no grants, no slot-counter or free-stack
+        # movement, all-False aok (and the gated ledger callback never
+        # fires, so reclaimed rounds are observable).  ``any_alloc=None``
+        # (the scalar spec path) keeps the unconditional round-trip.
         alloc_want = do_ins | do_move
-        req = jnp.stack([alloc_want.astype(jnp.int32), homes], axis=-1)
-        reqs = jax.lax.all_gather(req, self.axis, axis=0).reshape(-1, 2)
-        g_want = reqs[:, 0] != 0
-        mine = g_want & (reqs[:, 1] == me)
-        mn = mine.astype(jnp.int32)
-        rank = jnp.cumsum(mn) - mn
-        grant = mine & (rank < st.free_top)
-        a_slot = st.free_stack[
-            jnp.clip(st.free_top - 1 - rank, 0, self.S - 1)]
-        a_ctr = st.slot_ctr[a_slot] + jnp.uint32(1)
-        ctr_row = jnp.where(grant, a_slot, self.S)
-        st = st._replace(
-            slot_ctr=st.slot_ctr.at[ctr_row].set(a_ctr, mode="drop"),
-            free_top=st.free_top - jnp.sum(grant.astype(jnp.int32)))
-        tbl = jnp.where(
-            grant[:, None],
-            jnp.stack([jnp.ones_like(a_slot), a_slot, _u2i(a_ctr)],
-                      axis=-1),
-            jnp.zeros((reqs.shape[0], 3), jnp.int32))
-        tbl = jax.lax.psum(tbl, self.axis)
-        my_tbl = jax.lax.dynamic_slice(tbl, (me * B, 0), (B, 3))
-        aok = my_tbl[:, 0] != 0
-        my_slot = my_tbl[:, 1]
-        new_ctr = _i2u(my_tbl[:, 2])
+
+        def _alloc_body(slot_ctr, free_top):
+            moved = self.backend.read_batch(
+                st.rows.buf, node, slot, self.axis, preds=do_move,
+                ledger=self.mgr.traffic,
+                verb=f"{self.full_name}.move_read",
+                coalesce=False)[:, :self.W]
+            req = jnp.stack([alloc_want.astype(jnp.int32), homes], axis=-1)
+            reqs = jax.lax.all_gather(req, self.axis, axis=0).reshape(-1, 2)
+            g_want = reqs[:, 0] != 0
+            mine = g_want & (reqs[:, 1] == me)
+            mn = mine.astype(jnp.int32)
+            rank = jnp.cumsum(mn) - mn
+            grant = mine & (rank < free_top)
+            a_slot = st.free_stack[
+                jnp.clip(free_top - 1 - rank, 0, self.S - 1)]
+            a_ctr = slot_ctr[a_slot] + jnp.uint32(1)
+            ctr_row = jnp.where(grant, a_slot, self.S)
+            slot_ctr = slot_ctr.at[ctr_row].set(a_ctr, mode="drop")
+            free_top = free_top - jnp.sum(grant.astype(jnp.int32))
+            tbl = jnp.where(
+                grant[:, None],
+                jnp.stack([jnp.ones_like(a_slot), a_slot, _u2i(a_ctr)],
+                          axis=-1),
+                jnp.zeros((reqs.shape[0], 3), jnp.int32))
+            tbl = jax.lax.psum(tbl, self.axis)
+            my_tbl = jax.lax.dynamic_slice(tbl, (me * B, 0), (B, 3))
+            colls.record_rounds(
+                self.mgr.traffic, f"{self.full_name}.alloc",
+                self.backend.alloc_rounds, self.axis)
+            return (moved, slot_ctr, free_top, grant, a_slot,
+                    my_tbl[:, 0] != 0, my_tbl[:, 1], _i2u(my_tbl[:, 2]))
+
+        if any_alloc is None:
+            (moved, slot_ctr, free_top, grant, a_slot, aok, my_slot,
+             new_ctr) = _alloc_body(st.slot_ctr, st.free_top)
+        else:
+            N = self.P * B
+
+            def abody(c):
+                return (jnp.zeros((), jnp.bool_),) + _alloc_body(c[2], c[3])
+
+            (_t, moved, slot_ctr, free_top, grant, a_slot, aok, my_slot,
+             new_ctr) = jax.lax.while_loop(
+                lambda c: c[0], abody,
+                (any_alloc, jnp.zeros((B, self.W), jnp.int32),
+                 st.slot_ctr, st.free_top,
+                 jnp.zeros((N,), jnp.bool_), jnp.zeros((N,), jnp.int32),
+                 jnp.zeros((B,), jnp.bool_), jnp.zeros((B,), jnp.int32),
+                 jnp.zeros((B,), jnp.uint32)))
+        st = st._replace(slot_ctr=slot_ctr, free_top=free_top)
         do_ins = do_ins & aok
         do_move = do_move & aok
         placed = do_ins | do_move
@@ -1575,23 +1622,25 @@ class KVStore(Channel):
                 p = self._window_plan(ops, keys, lock_id, want_lock, look0)
                 return (jnp.zeros((), jnp.bool_), p["rank"], p["totals"],
                         p["round_no"], p["write_winner"], p["win_fast"],
+                        p["any_alloc"],
                         p["inv_node"], p["inv_slot"], p["inv_flag"])
 
-            _t, rank, totals, rno, wwin, wfast, inode, islot, iflag = \
-                jax.lax.while_loop(
+            (_t, rank, totals, rno, wwin, wfast, aalloc, inode, islot,
+             iflag) = jax.lax.while_loop(
                     lambda c: c[0], pbody,
                     (any_want, jnp.zeros((B,), jnp.uint32),
                      jnp.zeros((self.L,), jnp.uint32),
                      jnp.zeros((B,), jnp.int32),
                      jnp.zeros((B,), jnp.bool_),
                      jnp.ones((), jnp.bool_),
+                     jnp.zeros((), jnp.bool_),
                      jnp.zeros((N,), jnp.int32),
                      jnp.zeros((N,), jnp.int32),
                      jnp.zeros((N,), jnp.bool_)))
             plan = dict(rank=rank, totals=totals, round_no=rno,
                         write_winner=wwin, win_fast=wfast,
-                        any_want=any_want, inv_node=inode,
-                        inv_slot=islot, inv_flag=iflag)
+                        any_want=any_want, any_alloc=aalloc,
+                        inv_node=inode, inv_slot=islot, inv_flag=iflag)
         if not lockfree:
             # every acquired ticket completes within this window, so the
             # deferred end-of-window release bumps now_serving by exactly
@@ -1609,14 +1658,16 @@ class KVStore(Channel):
             st, keys, ops == GET, look=look0)
 
         if self.reference_impl:
-            round_no, write_winner = None, None
+            round_no, write_winner, any_alloc = None, None, None
         elif not lockfree:
             # work-proportional schedule, computed once outside the loop
-            round_no, write_winner = self._service_schedule(
+            # (the placed path's allocation request rides this gather as
+            # the uniform ``any_alloc`` flag, §14)
+            round_no, write_winner, any_alloc = self._service_schedule(
                 ops, keys, lock_id, ticket, want_lock)
 
         def _serve_rounds(st_s, pending0, succ0, ticket, round_no,
-                          write_winner):
+                          write_winner, any_alloc):
             def cond(c):
                 _st, pending, _succ, _look, _r = c
                 return jax.lax.psum(
@@ -1630,7 +1681,8 @@ class KVStore(Channel):
                         self._service_window(
                             st_c, ops, keys, values, lock_id, ticket,
                             pending, look, serve=serve,
-                            write_winner=write_winner, homes=homes)
+                            write_winner=write_winner, homes=homes,
+                            any_alloc=any_alloc)
                 return st_c, pending, succ | s_now, look, r + 1
 
             return jax.lax.while_loop(
@@ -1709,6 +1761,7 @@ class KVStore(Channel):
             if has_cache:
                 st = st._replace(cache=cache_out)
             round_no, write_winner = plan["round_no"], plan["write_winner"]
+            any_alloc = plan["any_alloc"]
             pending0, succ0 = want_lock & ~win_fast, do_upd_fast
             if self.mgr.traffic.enabled:
                 colls.record_fastpath(
@@ -1719,7 +1772,7 @@ class KVStore(Channel):
             succ0 = jnp.zeros((B,), jnp.bool_)
 
         st, _pending, succ, _look, _r = _serve_rounds(
-            st, pending0, succ0, ticket, round_no, write_winner)
+            st, pending0, succ0, ticket, round_no, write_winner, any_alloc)
 
         if not self.reference_impl:
             # deferred batched release: critical-section effects joined

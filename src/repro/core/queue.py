@@ -61,7 +61,8 @@ class SharedQueueState(NamedTuple):
 
 class SharedQueue(Channel):
     def __init__(self, parent, name: str, mgr: Manager, *,
-                 slots_per_node: int, width: int = 1, dtype=jnp.int32):
+                 slots_per_node: int, width: int = 1, dtype=jnp.int32,
+                 backend=None):
         super().__init__(parent, name, mgr)
         self.slots_per_node = int(slots_per_node)
         self.width = int(width)
@@ -70,9 +71,13 @@ class SharedQueue(Channel):
         self.head = AtomicVar(self, "head", mgr, host=0, dtype=jnp.uint32)
         self.tail = AtomicVar(self, "tail", mgr, host=0, dtype=jnp.uint32)
         # row layout: [seq (stored via bitcast in dtype lane), payload...]
+        # the entries region carries the store's data protocol (§14); the
+        # head/tail registers stay on the control plane either way
         self.region = SharedRegion(self, "entries", mgr,
                                    slots=self.slots_per_node,
-                                   item_shape=(1 + self.width,), dtype=dtype)
+                                   item_shape=(1 + self.width,), dtype=dtype,
+                                   backend=backend)
+        self.backend = self.region.backend
 
     def _to_lane(self, seq_u32):
         """Bit-preserving encode of a uint32 seq into a payload-dtype lane."""

@@ -12,8 +12,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import colls
 from .ack import ALL_PEERS, AckKey, make_ack
+from .backends import get_backend
 from .channel import Channel
 from .runtime import Manager
 
@@ -26,11 +26,15 @@ class SharedRegion(Channel):
     """Symmetric per-participant buffer of ``slots`` rows of ``item_shape``."""
 
     def __init__(self, parent, name: str, mgr: Manager, *, slots: int,
-                 item_shape: Tuple[int, ...] = (), dtype=jnp.float32):
+                 item_shape: Tuple[int, ...] = (), dtype=jnp.float32,
+                 backend=None):
         super().__init__(parent, name, mgr)
         self.slots = int(slots)
         self.item_shape = tuple(item_shape)
         self.dtype = dtype
+        # execution protocol for the one-sided verbs (DESIGN.md §14);
+        # defaults to the manager's backend
+        self.backend = get_backend(backend, default=mgr.backend)
         self.declare_region("buf", (self.slots, *self.item_shape), dtype)
 
     # -- state ---------------------------------------------------------------
@@ -72,7 +76,7 @@ class SharedRegion(Channel):
     # -- one-sided access (collectively served; see colls.py) -------------------
     def read(self, state: SharedRegionState, target, index, pred=True):
         """One-sided read of row ``index`` at participant ``target``."""
-        val = colls.remote_read(state.buf, target, index, self.axis,
+        val = self.backend.read(state.buf, target, index, self.axis,
                                 pred=pred, ledger=self.mgr.traffic,
                                 verb=f"{self.full_name}.read")
         ack = make_ack(val, "read", self.full_name, ALL_PEERS, self.item_nbytes)
@@ -83,7 +87,7 @@ class SharedRegion(Channel):
         """Batched one-sided read; ``coalesce`` (default on) dedupes each
         participant's duplicate (target, index) lanes before the wire
         (DESIGN.md §8.1) — results are bitwise-identical either way."""
-        vals = colls.remote_read_batch(state.buf, targets, indices, self.axis,
+        vals = self.backend.read_batch(state.buf, targets, indices, self.axis,
                                        preds=preds, ledger=self.mgr.traffic,
                                        verb=f"{self.full_name}.read_batch",
                                        coalesce=coalesce)
@@ -94,7 +98,7 @@ class SharedRegion(Channel):
     def write(self, state: SharedRegionState, target, index, value,
               pred=True):
         """One-sided write of ``value`` to row ``index`` at ``target``."""
-        buf = colls.remote_write(state.buf, target, index, value, self.axis,
+        buf = self.backend.write(state.buf, target, index, value, self.axis,
                                  pred=pred, ledger=self.mgr.traffic,
                                  verb=f"{self.full_name}.write")
         new = state._replace(buf=buf)
@@ -103,7 +107,7 @@ class SharedRegion(Channel):
 
     def write_batch(self, state: SharedRegionState, targets, indices, values,
                     preds=None, assume_unique=False):
-        buf = colls.remote_write_batch(state.buf, targets, indices, values,
+        buf = self.backend.write_batch(state.buf, targets, indices, values,
                                        self.axis, preds=preds,
                                        assume_unique=assume_unique,
                                        ledger=self.mgr.traffic,

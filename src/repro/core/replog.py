@@ -185,8 +185,12 @@ class ReplicatedLog(Channel):
 
     def __init__(self, parent, name: str, mgr: Manager, *, store: KVStore,
                  window: int, capacity: int = 4, leader: int = 0,
-                 rejoin_chunk: int = 256):
+                 rejoin_chunk: int = 256, backend=None):
         super().__init__(parent, name, mgr)
+        from .backends import get_backend
+        # execution protocol of the log's data verbs — the ring publishes
+        # and the rejoin snapshot reads (DESIGN.md §14)
+        self.backend = get_backend(backend, default=mgr.backend)
         self.store = store
         self.window = int(window)
         self.leader = int(leader)
@@ -195,7 +199,8 @@ class ReplicatedLog(Channel):
         self.entry_width = self.P * self.window * self.rec_width
         self.ring = Ringbuffer(self, "log", mgr, owner=self.leader,
                                capacity=int(capacity),
-                               width=self.entry_width, dtype=jnp.int32)
+                               width=self.entry_width, dtype=jnp.int32,
+                               backend=self.backend)
         # the §12 fence/promotion table: one [epoch, cursor, heartbeat]
         # register per participant.  Epochs fence zombie leaders; cursors
         # elect the most-caught-up replacement; heartbeats feed the §13.1
@@ -851,7 +856,7 @@ class ReplicatedLog(Channel):
         tgt = jnp.concatenate([
             jnp.broadcast_to(node, (chunk + 1,)),
             jnp.broadcast_to(leader, (2,))]).astype(jnp.int32)
-        got = colls.remote_read_batch(
+        got = self.backend.read_batch(
             src, tgt, idx, self.axis,
             preds=jnp.broadcast_to(me == node, (chunk + 3,)),
             ledger=self.mgr.traffic, verb=f"{self.full_name}.rejoin")

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 
 from . import colls
 from .ack import ALL_PEERS, make_ack
+from .backends import get_backend
 from .channel import Channel
 from .ownedvar import checksum
 from .runtime import Manager
@@ -76,12 +77,14 @@ class Ringbuffer(Channel):
     """One-to-many broadcast ring initially owned by participant ``owner``."""
 
     def __init__(self, parent, name: str, mgr: Manager, *, owner: int,
-                 capacity: int, width: int, dtype=jnp.int32):
+                 capacity: int, width: int, dtype=jnp.int32, backend=None):
         super().__init__(parent, name, mgr)
         self.owner = int(owner)          # initial owner; state is authoritative
         self.capacity = int(capacity)
         self.width = int(width)
         self.dtype = dtype
+        # publish cost model per execution protocol (DESIGN.md §14)
+        self.backend = get_backend(backend, default=mgr.backend)
         self.acks = SST(self, "acks", mgr, shape=(), dtype=jnp.uint32)
         self.declare_region("slots", (capacity, width), dtype)
         self.slot_nbytes = (width * jnp.dtype(dtype).itemsize) + 16
@@ -244,10 +247,11 @@ class Ringbuffer(Channel):
             head=head_b)
         if self.mgr.traffic.enabled:
             # wire bytes ∝ slots actually moved (owner-side accounting;
-            # non-owners moved nothing)
-            self.mgr.traffic.record(
-                f"{self.full_name}.publish",
-                2.0 * self.slot_nbytes * n_moved.astype(jnp.float32))
+            # non-owners moved nothing); the per-slot price is the
+            # backend's publish contract (§14)
+            self.backend.record_publish(
+                self.mgr.traffic, f"{self.full_name}.publish",
+                self.slot_nbytes, n_moved.astype(jnp.float32), self.axis)
         ack = make_ack((msgs_b, head_b), "bcast", self.full_name,
                        ALL_PEERS, self.slot_nbytes * B)
         return new, grant & sent_any, self.mgr.track(ack)

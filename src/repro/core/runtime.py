@@ -21,6 +21,7 @@ adaptation:
 from __future__ import annotations
 
 import contextlib
+import os
 import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -128,6 +129,11 @@ class TrafficLedger:
     def __init__(self):
         self.enabled = False
         self.counts: Dict[str, Dict[str, float]] = {}
+        # modeled collective-round counters (DESIGN.md §14), keyed by verb
+        # — kept separate from ``counts`` so the byte rows stay exactly as
+        # existing assertions expect.  Only participant 0 contributes (see
+        # colls.record_rounds), so totals are cluster-wide rounds.
+        self.round_counts: Dict[str, Dict[str, float]] = {}
         # read-tier hit/lookup counters (DESIGN.md §8.2), keyed by channel
         self.cache_counts: Dict[str, Dict[str, float]] = {}
         # lock-skipped-round counters (DESIGN.md §11), keyed by channel:
@@ -150,6 +156,7 @@ class TrafficLedger:
 
     def reset(self):
         self.counts = {}
+        self.round_counts = {}
         self.cache_counts = {}
         self.fastpath_counts = {}
         self.corrupt_counts = {}
@@ -168,6 +175,18 @@ class TrafficLedger:
             entry["bytes"] += float(b)
 
         jax.debug.callback(_cb, jnp.asarray(wire_bytes, jnp.float32))
+
+    def record_rounds(self, verb: str, rounds):
+        """Record modeled collective ``rounds`` (a traced scalar) against
+        ``verb`` — the §14 protocol round counter.  Callers route through
+        :func:`repro.core.colls.record_rounds`, which both gates on
+        ``enabled`` at trace time and zeroes every participant but 0, so
+        the accumulated total is exact cluster-wide rounds."""
+        def _cb(r, verb=verb):
+            e = self.round_counts.setdefault(verb, {"rounds": 0.0})
+            e["rounds"] += float(r)
+
+        jax.debug.callback(_cb, jnp.asarray(rounds, jnp.float32))
 
     def record_cache(self, name: str, hits, lookups):
         """Record read-cache ``hits`` out of ``lookups`` (traced scalars)
@@ -226,8 +245,15 @@ class TrafficLedger:
     def total_bytes(self) -> float:
         return sum(e["bytes"] for e in self.counts.values())
 
+    def total_rounds(self) -> float:
+        return sum(e["rounds"] for e in self.round_counts.values())
+
     def summary(self) -> Dict[str, Dict[str, float]]:
         return {k: dict(v) for k, v in sorted(self.counts.items())}
+
+    def rounds_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-verb modeled collective-round counts (§14)."""
+        return {k: dict(v) for k, v in sorted(self.round_counts.items())}
 
     def cache_summary(self) -> Dict[str, Dict[str, float]]:
         """Per-channel read-tier counters with derived hit rates."""
@@ -264,10 +290,22 @@ class _TraceCtx(threading.local):
 
 
 class Manager:
-    """LOCO manager: channel registry, memory ledger, fence provider."""
+    """LOCO manager: channel registry, memory ledger, fence provider.
 
-    def __init__(self, runtime: Runtime):
+    ``backend`` selects the default execution protocol for every channel
+    built under this manager (DESIGN.md §14): a name from
+    :data:`repro.core.backends.BACKENDS` ("onesided", "active_message"),
+    a :class:`~repro.core.backends.CollsBackend` instance, or ``None`` for
+    the ``REPRO_DEFAULT_BACKEND`` environment default (falling back to
+    the one-sided reference backend).  Channels may override per-object —
+    the paper's pick-the-right-protocol-per-object stance.
+    """
+
+    def __init__(self, runtime: Runtime, backend=None):
+        from .backends import get_backend  # local import: avoids a cycle
         self.runtime = runtime
+        self.backend = get_backend(
+            backend, default=os.environ.get("REPRO_DEFAULT_BACKEND"))
         self.channels: Dict[str, Any] = {}
         self.regions: Dict[str, RegionInfo] = {}
         self._trace = _TraceCtx()
@@ -378,5 +416,7 @@ class Manager:
 
 
 def make_manager(num_participants: int, axis: str = "nodes",
-                 mesh: Optional[jax.sharding.Mesh] = None) -> Manager:
-    return Manager(Runtime(num_participants, axis=axis, mesh=mesh))
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 backend=None) -> Manager:
+    return Manager(Runtime(num_participants, axis=axis, mesh=mesh),
+                   backend=backend)

@@ -59,9 +59,10 @@ from ..core import DELETE, GET, INSERT, NOP, FailureDetector, KVStore, \
 from ..distributed.fault import FaultPlan
 from ..models import build_model
 
-# wire bytes of one page-table row read (modeled, §2.1: 2·|row| per
-# remote read) — the unit of the locality stats' bytes-saved column
-_ROW_READ_BYTES = 2 * (2 + 3) * 4
+# int32 words of one page-table row: value_width=2 payload + 3 metadata.
+# The modeled wire cost of reading one such row remotely depends on the
+# engine's execution backend (DESIGN.md §14) — see ``self._row_read_bytes``
+_ROW_NBYTES = (2 + 3) * 4
 
 PAGE = 128          # tokens per logical page
 P_NODES = 4         # simulated serving nodes (channel participants)
@@ -72,7 +73,7 @@ class ServingEngine:
     def __init__(self, cfg: ArchConfig, max_batch: int = 4,
                  max_seq: int = 256, replicas: int = 0,
                  fault_plan: FaultPlan | None = None,
-                 detect_threshold: int = 2):
+                 detect_threshold: int = 2, backend=None):
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_seq = max_seq
@@ -85,8 +86,11 @@ class ServingEngine:
         self.detect_threshold = int(detect_threshold)
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(0))
-        # --- channels
-        self.mgr = make_manager(P_NODES)
+        # --- channels (``backend`` picks the execution protocol every
+        # engine channel inherits, DESIGN.md §14)
+        self.mgr = make_manager(P_NODES, backend=backend)
+        self.backend = self.mgr.backend
+        self._row_read_bytes = self.backend.row_read_bytes(_ROW_NBYTES)
         pages_per_node = max(
             8, max_batch * (max_seq // PAGE + 1) * 2 // P_NODES)
         # lock stripe sized to the outstanding window: _kv_ops submits
@@ -437,7 +441,8 @@ class ServingEngine:
                     # writer-local placement would have paid a remote
                     # read — once, on the page's cold miss (the page
                     # cache serves warm repeats either way)
-                    self.loc_counts["modeled_bytes_saved"] += _ROW_READ_BYTES
+                    self.loc_counts["modeled_bytes_saved"] += \
+                        self._row_read_bytes
                     self._saved_keys.add(k)
             w = -(-len(chunk) // P_NODES)
             w = 1 << (w - 1).bit_length()
@@ -623,6 +628,10 @@ class ServingEngine:
                 # engine's jitted steps were built
                 "modeled_wire_bytes": self.mgr.traffic_ledger_bytes(),
                 "traffic_by_verb": self.mgr.traffic.summary(),
+                # execution protocol + modeled collective rounds (§14)
+                "backend": self.backend.name,
+                "modeled_rounds": self.mgr.traffic.total_rounds(),
+                "rounds_by_verb": self.mgr.traffic.rounds_summary(),
                 # read-tier hit/lookup counters (zero unless the ledger
                 # was enabled before the jitted steps were built)
                 "read_cache": self.mgr.traffic.cache_summary()}

@@ -25,3 +25,11 @@ def _seed():
 @pytest.fixture
 def P8():
     return 8
+
+
+@pytest.fixture(params=["onesided", "active_message"])
+def backend(request):
+    """Parameterizes channel suites over the swappable colls backends
+    (DESIGN.md §14) — every test taking this fixture runs once per
+    execution protocol."""
+    return request.param

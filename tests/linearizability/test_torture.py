@@ -6,7 +6,9 @@ against the sequential specifications with the Wing–Gong checker:
 
 * KVStore — locked windows, the lock-free commuting fast path (§11),
   the cached read tier (§8) and the migration path (§10.2), each ≥ 200
-  random windows in the default (CI) run;
+  random windows in the default (CI) run, plus a quick sweep through
+  the active-message execution backend (§14; the full variant matrix
+  runs under the nightly ``torture`` marker);
 * SharedQueue — windowed enqueue/dequeue under tight capacities;
 * Ringbuffer — windowed publish/drain across all consumers.
 
@@ -42,19 +44,20 @@ def _assert_ok(violation, label, seed):
 
 # ---------------------------------------------------------------- harnesses
 class _KVHarness:
-    """One jitted window step per (P, B, variant), shared across cases."""
+    """One jitted window step per (P, B, variant, backend), shared across
+    cases."""
     _cache = {}
 
-    def __new__(cls, nP, B, variant):
-        key = (nP, B, variant)
+    def __new__(cls, nP, B, variant, backend="onesided"):
+        key = (nP, B, variant, backend)
         if key not in cls._cache:
             cls._cache[key] = super().__new__(cls)
-            cls._cache[key]._build(nP, B, variant)
+            cls._cache[key]._build(nP, B, variant, backend)
         return cls._cache[key]
 
-    def _build(self, nP, B, variant):
+    def _build(self, nP, B, variant, backend):
         self.P, self.B, self.variant = nP, B, variant
-        self.mgr = make_manager(nP)
+        self.mgr = make_manager(nP, backend=backend)
         # ample capacity: the torture key space (≤ 12 keys) can never
         # exhaust slots or index, so every failure the spec must explain
         # is semantic (insert-existing / update-missing / ...)
@@ -64,7 +67,8 @@ class _KVHarness:
             kw["cache_slots"] = 16
         if variant == "lockfree":
             kw["lockfree"] = True
-        self.kv = KVStore(None, f"tkv_{nP}_{B}_{variant}", self.mgr, **kw)
+        self.kv = KVStore(None, f"tkv_{nP}_{B}_{variant}_{backend}",
+                          self.mgr, **kw)
         self.step = jax.jit(lambda s, o, k, v: self.mgr.runtime.run(
             self.kv.op_window, s, o, k, v))
         self.move = jax.jit(lambda s, k, d: self.mgr.runtime.run(
@@ -152,16 +156,16 @@ def run_kv_history(h: _KVHarness, rng: np.random.Generator, n_windows: int,
 
 
 def sweep_kv(variant, configs, histories, n_windows, min_windows,
-             seed0=0, key_space=8):
+             seed0=0, key_space=8, backend="onesided"):
     total = 0
     for nP, B in configs:
-        h = _KVHarness(nP, B, variant)
+        h = _KVHarness(nP, B, variant, backend)
         for i in range(histories):
             seed = seed0 + i
             rng = np.random.default_rng(seed)
             rec = run_kv_history(h, rng, n_windows, key_space=key_space)
             _assert_ok(check_history(KVSpec(W), rec.windows),
-                       f"kv/{variant} P={nP} B={B}", seed)
+                       f"kv/{variant}/{backend} P={nP} B={B}", seed)
             total += len(rec.windows)
     assert total >= min_windows, (total, min_windows)
 
@@ -188,6 +192,16 @@ def test_torture_migration():
              min_windows=200, seed0=300)
 
 
+def test_torture_kvstore_active_message():
+    """Quick §14 sweep: histories recorded through the active-message
+    backend pass the same Wing–Gong checker — the RPC execution mode is
+    linearizable, not merely bitwise-equal on scripted windows."""
+    sweep_kv("locked", [(4, 2)], histories=4, n_windows=13,
+             min_windows=50, seed0=800, backend="active_message")
+    sweep_kv("lockfree", [(4, 2)], histories=4, n_windows=13,
+             min_windows=50, seed0=850, backend="active_message")
+
+
 @pytest.mark.torture
 def test_torture_kvstore_long():
     sweep_kv("locked", [(2, 2), (4, 2)], histories=25, n_windows=30,
@@ -198,6 +212,24 @@ def test_torture_kvstore_long():
              min_windows=750, seed0=3000, key_space=12)
     sweep_kv("migrating", [(2, 2)], histories=20, n_windows=25,
              min_windows=500, seed0=4000, key_space=12)
+
+
+@pytest.mark.torture
+def test_torture_active_message_long():
+    """Nightly §14 sweep: the full variant matrix through the
+    active-message backend."""
+    sweep_kv("locked", [(2, 2), (4, 2)], histories=15, n_windows=25,
+             min_windows=700, seed0=8000, key_space=12,
+             backend="active_message")
+    sweep_kv("lockfree", [(4, 2)], histories=15, n_windows=25,
+             min_windows=350, seed0=8500, key_space=12,
+             backend="active_message")
+    sweep_kv("cached", [(2, 2)], histories=15, n_windows=25,
+             min_windows=350, seed0=9000, key_space=12,
+             backend="active_message")
+    sweep_kv("migrating", [(2, 2)], histories=10, n_windows=20,
+             min_windows=250, seed0=9500, key_space=12,
+             backend="active_message")
 
 
 # ------------------------------------------------------------ shared queue

@@ -24,6 +24,10 @@ Invariants checked:
   results AND bit-identical state leaves to the locked spec on every
   random window, and the recorded concurrent history passes the
   tests/linearizability Wing–Gong checker.
+* swappable backends (§14): random (P, B, op-mix, key-skew) window
+  histories executed through the one-sided and active-message backends
+  converge leaf-by-leaf — execution is backend-invariant; only the cost
+  model differs.
 
 Requires ``hypothesis`` (requirements-dev.txt); skips cleanly without it.
 """
@@ -622,6 +626,73 @@ def test_lockfree_windows_bitwise_equal_locked_and_linearizable(batches):
         rec.record_kv_window(op, key, val, rb)
     violation = check_history(KVSpec(2), rec.windows)
     assert violation is None, str(violation)
+
+
+# ---------------------------------------------- swappable backends (§14)
+class _BackendDiffHarness:
+    """Twin hashed-placement stores — one per execution backend — jitted
+    once per (P, B) configuration and shared across examples."""
+
+    _cache = {}
+
+    def __new__(cls, nP, B):
+        key = (nP, B)
+        if key not in cls._cache:
+            cls._cache[key] = super().__new__(cls)
+            cls._cache[key]._build(nP, B)
+        return cls._cache[key]
+
+    def _build(self, nP, B):
+        self.stores = {}
+        for bk in ("onesided", "active_message"):
+            mgr = make_manager(nP, backend=bk)
+            kv = KVStore(None, f"pbk_{bk}_{nP}_{B}", mgr,
+                         slots_per_node=8, value_width=2, num_locks=8,
+                         index_capacity=64, placement="hashed")
+            step = jax.jit(lambda s, o, k, v, kv=kv, mgr=mgr:
+                           mgr.runtime.run(kv.op_window, s, o, k, v))
+            self.stores[bk] = (kv, step)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([2, 4]), st.sampled_from([1, 2]),
+       st.integers(min_value=2, max_value=8), st.data())
+def test_backend_differential_windows_converge_leafwise(nP, B, key_space,
+                                                        data):
+    """The §14 differential property: random (P, B, op-mix, key-skew)
+    window histories executed through the one-sided and active-message
+    backends converge leaf-by-leaf — every per-window result lane AND
+    every state leaf (rows, index, locks, free stacks, counters) is
+    bitwise identical after every window.  ``key_space`` doubles as the
+    skew knob: 2 keys ≈ maximal contention, 8 ≈ spread."""
+    h = _BackendDiffHarness(nP, B)
+    op_t = st.tuples(st.sampled_from([NOP, GET, INSERT, UPDATE, DELETE]),
+                     st.integers(min_value=1, max_value=key_space))
+    batches = data.draw(st.lists(
+        st.lists(st.lists(op_t, min_size=B, max_size=B),
+                 min_size=nP, max_size=nP),
+        min_size=1, max_size=3))
+    states = {bk: kv.init_state() for bk, (kv, _s) in h.stores.items()}
+    for rnd, lanes in enumerate(batches):
+        op = jnp.asarray([[o for o, _k in lane] for lane in lanes],
+                         jnp.int32)
+        key = jnp.asarray([[k for _o, k in lane] for lane in lanes],
+                          jnp.uint32)
+        val = jnp.asarray([[kvmod.v(k, rnd * B + b)
+                            for b, (_o, k) in enumerate(lane)]
+                           for lane in lanes], jnp.int32)
+        res = {}
+        for bk, (_kv, step) in h.stores.items():
+            states[bk], res[bk] = step(states[bk], op, key, val)
+        for la, lb in zip(jax.tree.leaves(res["onesided"]),
+                          jax.tree.leaves(res["active_message"])):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=f"window {rnd}")
+        for la, lb in zip(jax.tree.leaves(states["onesided"]),
+                          jax.tree.leaves(states["active_message"])):
+            np.testing.assert_array_equal(
+                np.asarray(la), np.asarray(lb),
+                err_msg=f"state leaf after window {rnd}")
 
 
 # ------------------------------------------------------------------ FAA tickets

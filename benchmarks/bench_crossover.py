@@ -1,31 +1,40 @@
-"""Backend crossover sweep (DESIGN.md §14): one-sided vs active-message.
+"""Backend crossover sweep (DESIGN.md §14/§15): one-sided vs
+active-message vs Pallas remote-DMA.
 
 "RDMA vs. RPC for Implementing Distributed Data Structures" (PAPERS.md)
 argues neither protocol dominates; this benchmark reproduces that
-crossover on the LOCO channel stack with the §14 swappable backends.
-Every cell runs the SAME hashed-placement kvstore window workload
-through both backends — execution is bitwise-identical (asserted) — and
-prices the two wire contracts from the TrafficLedger:
+crossover on the LOCO channel stack with the swappable backends.  Every
+cell runs the SAME hashed-placement kvstore window workload through all
+three backends — execution is bitwise-identical (asserted) — and prices
+the wire contracts from the TrafficLedger:
 
 * **one-sided** reads coalesce duplicate rows (2·|row|·unique) and
   writes push raw rows (|row|·lane), but the placed-path allocation
   grant costs a 2-round trip per allocating window;
 * **active-message** ships an (hdr+|row|) RPC per lane — no coalescing,
   a header tax on every op — but responses are direct sends and the
-  allocation decision rides the op, so allocating windows save 2 rounds.
+  allocation decision rides the op, so allocating windows save 2 rounds;
+* **pallas** (remote-DMA kernels) coalesces like one-sided but pays one
+  (desc+|row|) descriptor+payload per unique row instead of the 2·|row|
+  read-back, keeping the one-sided round schedule (alloc = 2 rounds).
 
-Sweep axes: value width (|row| vs header), key distribution (zipf skew
-feeds the coalescer), read ratio (write header tax vs read coalescing
-vs allocation rounds).  Expected geometry, asserted at the end of the
-sweep on the modeled counters:
+Sweep axes: value width (|row| vs header/descriptor), key distribution
+(zipf skew feeds the coalescer), read ratio (write descriptor tax vs
+read coalescing vs allocation rounds).  Expected geometry, asserted at
+the end of the sweep on the modeled counters (a cell is WON only by a
+backend strictly cheaper than BOTH others):
 
-* one-sided wins WIRE BYTES on skewed/coalescible reads and on every
-  write-heavy cell (header tax);
+* one-sided wins WIRE BYTES on narrow rows and write-heavy cells (the
+  raw-row push beats every header/descriptor tax when |row| is small);
 * active-message wins WIRE BYTES on wide uniform reads
   (hdr+|row| < 2·|row| once |row| > hdr and duplicates are rare);
-* active-message wins ROUNDS (and modeled cost) on allocating cells
-  (the §10 alloc fold: 0 vs 2 rounds per allocating window);
-* each backend wins ≥ 1 cell on modeled cost — the crossover is real.
+* pallas wins WIRE BYTES on wide *skewed* reads — coalescing shrinks
+  lanes to uniques AND desc+|row| beats the 2·|row| read-back;
+* active-message alone wins ROUNDS on allocating cells (the §10 alloc
+  fold: 0 vs 2 rounds; one-sided and pallas tie, so neither ever wins
+  a strict-rounds cell);
+* each backend wins ≥ 1 cell on modeled cost — the crossover is real
+  and three-way.
 
 Rows land in ``BENCH_crossover.json`` (per cell × backend: wall us,
 modeled bytes/rounds/cost) plus a ``winners`` summary row.
@@ -46,7 +55,7 @@ from .common import (BenchJson, Csv, LINK_BW_GBS, LINK_LAT_US, uniform_keys,
 
 P = 4
 B = 8                       # window lanes per participant
-BACKENDS = ("onesided", "active_message")
+BACKENDS = ("onesided", "active_message", "pallas")
 EPS = 1e-9
 
 
@@ -152,20 +161,21 @@ def run(csv: Csv, rounds: int = 6, jt: BenchJson | None = None,
                     got[bk] = h.measure(st, windows)
                 # conformance: the cell's results are backend-invariant
                 la = jax.tree.leaves(got["onesided"][0])
-                lb = jax.tree.leaves(got["active_message"][0])
-                for x, y in zip(la, lb):
-                    np.testing.assert_array_equal(
-                        x, y, err_msg=f"backends diverged on {cell}")
+                for bk in BACKENDS[1:]:
+                    lb = jax.tree.leaves(got[bk][0])
+                    for x, y in zip(la, lb):
+                        np.testing.assert_array_equal(
+                            x, y,
+                            err_msg=f"{bk} diverged on {cell}")
                 metrics = {bk: {"bytes": got[bk][1], "rounds": got[bk][2],
                                 "cost": _model_us(got[bk][1], got[bk][2])}
                            for bk in BACKENDS}
                 for m in ("bytes", "rounds", "cost"):
-                    a = metrics["onesided"][m]
-                    b = metrics["active_message"][m]
-                    if a < b - EPS:
-                        wins[m]["onesided"] += 1
-                    elif b < a - EPS:
-                        wins[m]["active_message"] += 1
+                    vals = {bk: metrics[bk][m] for bk in BACKENDS}
+                    best = min(vals, key=vals.get)
+                    if all(vals[best] < vals[bk] - EPS
+                           for bk in BACKENDS if bk != best):
+                        wins[m][best] += 1
                 for bk in BACKENDS:
                     mb, mr = metrics[bk]["bytes"], metrics[bk]["rounds"]
                     mc, wall = metrics[bk]["cost"], got[bk][3]
@@ -181,14 +191,16 @@ def run(csv: Csv, rounds: int = 6, jt: BenchJson | None = None,
     jt.add("crossover", "winners", 0.0,
            **{f"{m}_{bk}": wins[m][bk]
               for m in ("bytes", "rounds", "cost") for bk in BACKENDS})
-    # the crossover must be real — each protocol wins somewhere, on the
-    # modeled counters themselves (not wall noise)
-    assert wins["bytes"]["onesided"] >= 1, wins
-    assert wins["bytes"]["active_message"] >= 1, wins
+    # the crossover must be real and three-way — each protocol wins
+    # somewhere, on the modeled counters themselves (not wall noise)
+    for bk in BACKENDS:
+        assert wins["bytes"][bk] >= 1, (bk, wins)
+        assert wins["cost"][bk] >= 1, (bk, wins)
     assert wins["rounds"]["active_message"] >= 1, wins
     assert wins["rounds"]["onesided"] == 0, \
         ("one-sided should never win rounds: it pays the allocation "
          "round-trip the active-message protocol folds into the op", wins)
-    assert wins["cost"]["onesided"] >= 1, wins
-    assert wins["cost"]["active_message"] >= 1, wins
+    assert wins["rounds"]["pallas"] == 0, \
+        ("pallas rides the one-sided round schedule — it ties, never "
+         "strictly wins, a rounds cell", wins)
     return jt

@@ -8,10 +8,12 @@
                            ReplicatedLog append+sync latency/lag/bytes
   §10      bench_locality  skewed-reader placement: wire bytes before/after
                            rebalance(), migration transparency + replication
-  §14      bench_crossover one-sided vs active-message backend crossover:
-                           modeled bytes/rounds/cost × width × skew × mix
+  §14/§15  bench_crossover one-sided vs active-message vs pallas backend
+                           crossover: modeled bytes/rounds/cost × width
+                           × skew × mix (three-way strict wins)
   Fig. 7   bench_power     DC/DC control-loop stability vs period
   §Roofline bench_roofline dry-run-derived roofline table (reads reports/)
+                           + §15.3 DMA measured-vs-modeled agreement gates
 
 Prints ``name,us_per_call,derived`` CSV rows; the kvstore and lock
 benchmarks additionally persist machine-readable rows (variant, us,
@@ -98,7 +100,7 @@ def main() -> None:
         bench_power.run(csv)
     if enabled("roofline"):
         from . import bench_roofline
-        bench_roofline.run(csv)
+        bench_roofline.run(csv, smoke=args.smoke)
     print(f"# {len(csv.rows)} rows", file=sys.stderr)
 
 

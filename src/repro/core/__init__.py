@@ -11,12 +11,14 @@ Public surface:
                    :class:`HotTracker`, :class:`ReplicatedLog`,
                    :class:`FailureDetector`
 * backends:        :class:`CollsBackend`, :class:`OneSidedBackend`,
-                   :class:`ActiveMessageBackend`, :func:`get_backend`
+                   :class:`ActiveMessageBackend`,
+                   :class:`PallasDmaBackend`, :func:`get_backend`
 """
 from .ack import ALL_PEERS, AckKey, FenceScope, OpDesc, join, make_ack
 from .atomic import AtomicVar, AtomicVarState
-from .backends import (AM_HDR_BYTES, BACKENDS, ActiveMessageBackend,
-                       CollsBackend, OneSidedBackend, get_backend)
+from .backends import (AM_HDR_BYTES, BACKENDS, DMA_DESC_BYTES,
+                       ActiveMessageBackend, CollsBackend, OneSidedBackend,
+                       PallasDmaBackend, get_backend)
 from .barrier import Barrier, BarrierState
 from .cache import ReadCache, ReadCacheState
 from .channel import Channel
@@ -37,8 +39,8 @@ from .sst import SST, SSTState
 
 __all__ = [
     "ALL_PEERS", "AckKey", "FenceScope", "OpDesc", "join", "make_ack",
-    "AM_HDR_BYTES", "BACKENDS", "ActiveMessageBackend", "CollsBackend",
-    "OneSidedBackend", "get_backend",
+    "AM_HDR_BYTES", "BACKENDS", "DMA_DESC_BYTES", "ActiveMessageBackend",
+    "CollsBackend", "OneSidedBackend", "PallasDmaBackend", "get_backend",
     "AtomicVar", "AtomicVarState", "Barrier", "BarrierState", "Channel",
     "NOP", "GET", "INSERT", "UPDATE", "DELETE", "MOVE", "PLACEMENTS",
     "HotTracker", "HotTrackerState", "KVResult", "KVStore",

@@ -28,12 +28,26 @@ one-sided binding:
   *with* the op — the home allocates as part of applying, so the
   grant round-trip costs zero extra rounds (``alloc_rounds``).
 
-Both backends record modeled wire bytes AND collective round counts into
+* ``pallas`` — the remote-DMA lowering (DESIGN.md §15): the batched
+  verbs run through the Pallas kernels in
+  :mod:`repro.kernels.remote_dma` — requesters build fixed-width
+  transfer descriptors that ride the request gather, homes serve/commit
+  the described rows inside a kernel — and every kernel *measures* the
+  bytes it moves, filed into the ledger's measured tier next to the
+  modeled rows.  The modeled contract is RDMA-shaped: one
+  :data:`DMA_DESC_BYTES` descriptor plus one |row| response per
+  **unique coalesced** remote read (coalescing survives — the
+  descriptor block is built after leader election), descriptor + |row|
+  per remote write lane, and direct point-to-point payloads (1·|row|,
+  not the one-sided model's 2·|row| read-back), over the same 2/1 round
+  schedule and the same ``alloc_rounds = 2`` grant round-trip (DMA is
+  one-sided — nothing ships to the home to fold the allocation into).
+
+All backends record modeled wire bytes AND collective round counts into
 the :class:`~repro.core.runtime.TrafficLedger`, which is what
-``benchmarks/bench_crossover.py`` sweeps to find the crossover.  This
-interface is also the seam the ROADMAP's Pallas DMA-kernel backend plugs
-into: a third subclass that lowers the same verb contract to explicit
-remote-DMA kernels instead of XLA collectives.
+``benchmarks/bench_crossover.py`` sweeps to find the crossover;
+``benchmarks/bench_roofline.py`` pins the pallas backend's modeled rows
+against its measured tier and against HLO-level collective accounting.
 """
 from __future__ import annotations
 
@@ -45,6 +59,15 @@ from . import colls
 #: index and length/flags words — the fixed RPC header every shipped op
 #: pays regardless of payload width.
 AM_HDR_BYTES = 16
+
+#: Modeled bytes of one remote-DMA transfer descriptor (the NIC
+#: work-queue entry): 8 int32 words of op/target/index/enable/length/seq
+#: plus reserve.  Mirrors ``repro.kernels.remote_dma.DESC_BYTES`` — the
+#: kernels count measured bytes with the same constant, and
+#: tests/test_kernels.py pins the two equal so the cost model cannot
+#: drift from the descriptor layout.  Kept as a literal here so the core
+#: package does not import the kernel tier at module load.
+DMA_DESC_BYTES = 32
 
 
 class CollsBackend:
@@ -225,10 +248,116 @@ class ActiveMessageBackend(CollsBackend):
         return float(AM_HDR_BYTES + row_nbytes)
 
 
+class _DmaEngine:
+    """Measured-byte sink the Pallas backend threads through the colls
+    wire path: the remote-DMA kernels report the bytes they actually
+    moved (descriptors emitted, rows served/committed — computed from
+    the same masks that drive the copies) and the engine files them
+    under the verb in the ledger's measured tier (§15).  Gating follows
+    :func:`repro.core.colls.record_dma`: a disabled or absent ledger
+    costs nothing at trace time."""
+
+    __slots__ = ("ledger", "verb")
+
+    def __init__(self, ledger, verb):
+        self.ledger = ledger
+        self.verb = verb
+
+    def count(self, nbytes):
+        colls.record_dma(self.ledger, self.verb, nbytes)
+
+
+class PallasDmaBackend(CollsBackend):
+    """One-sided verbs lowered onto Pallas remote-DMA kernels (§15).
+
+    Execution: the batched verbs delegate to :mod:`repro.core.colls`
+    with a :class:`_DmaEngine`, which swaps the wire path's jnp
+    serve/commit for the :mod:`repro.kernels.remote_dma` kernels —
+    descriptor build on the requester, row gather/scatter on the home —
+    while the inter-participant hop stays the XLA collective on the
+    emulation substrate (``pltpu.make_async_remote_copy`` send/wait
+    pairs take over on TPU hardware; see ``remote_copy_tpu``).  Values
+    are bitwise those of the one-sided backend — the conformance suite
+    pins it — and the scalar verbs route through the R=1 batch path so
+    every verb rides the kernels.
+
+    Cost model: each remote transfer pays a :data:`DMA_DESC_BYTES`
+    work-queue descriptor plus a direct 1·|row| payload.  Reads coalesce
+    (descriptors are built per elected leader lane), so read bytes are
+    (desc + row)·unique vs the one-sided 2·row·unique and the
+    active-message (hdr + row)·lanes; writes pay (desc + row)·lane over
+    the usual 1 round; publishes push (desc + slot)·moved with delivery
+    confirmed by the DMA completion, not a counter read-back.  Rounds
+    match the one-sided schedule (request/response = 2, write = 1,
+    ``alloc_rounds = 2``): DMA is still one-sided, so nothing ships to
+    the home that could fold the allocation grant into the op.
+
+    Every verb additionally records the kernels' *measured* bytes into
+    the ledger's ``dma_counts`` tier — ``bench_roofline.py`` asserts
+    modeled == measured within a pinned tolerance.
+    """
+
+    name = "pallas"
+    alloc_rounds = 2.0
+
+    @staticmethod
+    def _cost_fn(n_lanes, row_nbytes):
+        return float(DMA_DESC_BYTES + row_nbytes) * n_lanes
+
+    def read(self, local_buf, target, index, axis, pred=True,
+             ledger=None, verb="remote_read"):
+        out = self.read_batch(
+            local_buf,
+            jnp.reshape(jnp.asarray(target, jnp.int32), (1,)),
+            jnp.reshape(jnp.asarray(index, jnp.int32), (1,)),
+            axis, preds=jnp.reshape(jnp.asarray(pred, jnp.bool_), (1,)),
+            ledger=ledger, verb=verb)
+        return out[0]
+
+    def read_batch(self, local_buf, targets, indices, axis, preds=None,
+                   ledger=None, verb="remote_read_batch", coalesce=True):
+        return colls.remote_read_batch(
+            local_buf, targets, indices, axis, preds=preds, ledger=ledger,
+            verb=verb, coalesce=coalesce, engine=_DmaEngine(ledger, verb),
+            cost_fn=self._cost_fn)
+
+    def write(self, local_buf, target, index, value, axis, pred=True,
+              ledger=None, verb="remote_write"):
+        return self.write_batch(
+            local_buf,
+            jnp.reshape(jnp.asarray(target, jnp.int32), (1,)),
+            jnp.reshape(jnp.asarray(index, jnp.int32), (1,)),
+            value[None], axis,
+            preds=jnp.reshape(jnp.asarray(pred, jnp.bool_), (1,)),
+            ledger=ledger, verb=verb)
+
+    def write_batch(self, local_buf, targets, indices, values, axis,
+                    preds=None, assume_unique=False, ledger=None,
+                    verb="remote_write_batch"):
+        # assume_unique is moot on this path: the scatter kernel commits
+        # lanes sequentially, realizing last-writer-wins natively.
+        return colls.remote_write_batch(
+            local_buf, targets, indices, values, axis, preds=preds,
+            assume_unique=assume_unique, ledger=ledger, verb=verb,
+            engine=_DmaEngine(ledger, verb), cost_fn=self._cost_fn)
+
+    def record_publish(self, ledger, verb, slot_nbytes, n_moved, axis):
+        # DMA publish: one descriptor + slot payload per moved slot,
+        # delivery confirmed by the DMA completion (no counter
+        # read-back), one round.
+        colls._record(ledger, verb, float(DMA_DESC_BYTES + slot_nbytes)
+                      * jnp.asarray(n_moved, jnp.float32))
+        colls.record_rounds(ledger, verb, 1.0, axis)
+
+    def row_read_bytes(self, row_nbytes: int) -> float:
+        return float(DMA_DESC_BYTES + row_nbytes)
+
+
 #: Singleton registry — backends are stateless, one instance each.
 BACKENDS = {
     "onesided": OneSidedBackend(),
     "active_message": ActiveMessageBackend(),
+    "pallas": PallasDmaBackend(),
 }
 
 

@@ -62,6 +62,24 @@ def _record(ledger, verb, wire_bytes):
         ledger.record(verb, wire_bytes)
 
 
+def record_dma(ledger, verb, nbytes):
+    """Report *measured* DMA-kernel bytes into the traffic ledger's
+    measured tier (DESIGN.md §15) — counters the remote-DMA kernels
+    compute from the same masks that drive their copies, kept separate
+    from the modeled ``record`` rows so the roofline bench can assert
+    the two agree.  Same trace-time gating as :func:`_record`."""
+    if ledger is not None and ledger.enabled:
+        ledger.record_dma(verb, nbytes)
+
+
+def _dma():
+    """The remote-DMA kernel module, imported lazily so the core verb
+    layer does not drag the whole Pallas kernel package in for the
+    backends that never touch it."""
+    from ..kernels import remote_dma
+    return remote_dma
+
+
 def record_rounds(ledger, verb, rounds, axis: str):
     """Report modeled collective *rounds* into the traffic ledger
     (DESIGN.md §14).  A round is cluster-wide, but the per-participant
@@ -188,34 +206,60 @@ def remote_read(local_buf, target, index, axis: str, pred=True,
     return out
 
 
-def _serve_scatter(local_buf, targets, indices, wire_lane, axis: str):
+def _serve_scatter(local_buf, targets, indices, wire_lane, axis: str,
+                   engine=None):
     """The shared wire path of the batched read verbs: all-gather the (R,)
     read requests (a lane rides iff ``wire_lane``), serve the gathered
     requests addressed to me from ``local_buf``, and psum_scatter the
     (P, R, *item) served tensor back so requester q receives exactly its R
     answers.  Lanes with ``wire_lane == False`` contribute zeros to the
     reduce and come back as zero rows.  Returns (R, *item).
+
+    With an ``engine`` (the Pallas DMA backend, DESIGN.md §15) the same
+    wire path runs through the remote-DMA kernels: the requester builds
+    (R, 8)-word transfer descriptors that ride the request gather in
+    place of the 3-word tuples, the home serves the described rows with
+    the gather kernel, and the engine records the *measured* bytes both
+    kernels count.  The served values are bitwise those of the jnp path
+    — only the lowering and the measured tier differ.
     """
     me = my_id(axis)
     R = targets.shape[0]
-    req = jnp.stack([targets, indices, wire_lane.astype(jnp.int32)],
-                    axis=-1)
-    reqs = jax.lax.all_gather(req, axis, axis=0, tiled=False)       # (P, R, 3)
+    if engine is None:
+        req = jnp.stack([targets, indices, wire_lane.astype(jnp.int32)],
+                        axis=-1)
+        t_col, i_col, e_col = 0, 1, 2
+    else:
+        dma = _dma()
+        req, desc_nb = dma.build_descriptors(
+            targets, indices, wire_lane, op=dma.OP_READ,
+            row_nbytes=_item_nbytes(local_buf))
+        engine.count(desc_nb)
+        t_col, i_col, e_col = 1, 2, 3
+    reqs = jax.lax.all_gather(req, axis, axis=0, tiled=False)  # (P, R, 3|8)
     P = reqs.shape[0]
-    tgt = reqs[..., 0]
-    idx = jnp.clip(reqs[..., 1], 0, local_buf.shape[0] - 1)
-    en = reqs[..., 2] != 0
-    served = local_buf[idx.reshape(-1)]                             # (P*R, *item)
-    served = served.reshape((P, R) + local_buf.shape[1:])
-    mask = ((tgt == me) & en).reshape((P, R) + (1,) * (local_buf.ndim - 1))
-    served = jnp.where(mask, served, jnp.zeros_like(served))
+    tgt = reqs[..., t_col]
+    idx = jnp.clip(reqs[..., i_col], 0, local_buf.shape[0] - 1)
+    en = reqs[..., e_col] != 0
+    if engine is None:
+        served = local_buf[idx.reshape(-1)]                     # (P*R, *item)
+        served = served.reshape((P, R) + local_buf.shape[1:])
+        mask = ((tgt == me) & en).reshape(
+            (P, R) + (1,) * (local_buf.ndim - 1))
+        served = jnp.where(mask, served, jnp.zeros_like(served))
+    else:
+        buf2d = local_buf.reshape(local_buf.shape[0], -1)
+        rows, served_nb = _dma().gather_rows(
+            buf2d, idx.reshape(-1), ((tgt == me) & en).reshape(-1))
+        engine.count(served_nb)
+        served = rows.reshape((P, R) + local_buf.shape[1:])
     # psum_scatter over the requester axis: requester q receives sum_p served[p, q]
     return jax.lax.psum_scatter(served, axis, scatter_dimension=0, tiled=False)
 
 
 def remote_read_batch(local_buf, targets, indices, axis: str, preds=None,
                       ledger=None, verb: str = "remote_read_batch",
-                      coalesce: bool = True):
+                      coalesce: bool = True, engine=None, cost_fn=None):
     """Vector form of :func:`remote_read`: R requests per participant.
 
     targets, indices: (R,) int32; preds: (R,) bool (default all-enabled).
@@ -234,10 +278,17 @@ def remote_read_batch(local_buf, targets, indices, axis: str, preds=None,
     lanes are masked out of the served tensor (they contribute zeros to the
     reduce and are modeled at zero wire bytes); self lanes are served from
     ``local_buf`` after the scatter, disabled lanes return zeros.
+
+    ``engine`` routes the wire path through the remote-DMA kernels and
+    records their measured bytes (DESIGN.md §15); ``cost_fn(n, nb)``
+    overrides the *modeled* per-verb byte contract (n wire lanes of nb
+    row bytes each) — the seam the Pallas backend's descriptor cost model
+    plugs into.  Neither changes the returned values.
     """
     if coalesce:
         return remote_read_coalesced(local_buf, targets, indices, axis,
-                                     preds=preds, ledger=ledger, verb=verb)
+                                     preds=preds, ledger=ledger, verb=verb,
+                                     engine=engine, cost_fn=cost_fn)
     me = my_id(axis)
     R = targets.shape[0]
     targets = targets.astype(jnp.int32)
@@ -247,20 +298,24 @@ def remote_read_batch(local_buf, targets, indices, axis: str, preds=None,
     preds = jnp.asarray(preds)
     self_lane = preds & (targets == me)
     remote_lane = preds & (targets != me)
-    out = _serve_scatter(local_buf, targets, indices, remote_lane, axis)
+    out = _serve_scatter(local_buf, targets, indices, remote_lane, axis,
+                         engine=engine)
     # locality fast path: self lanes served from local memory, zero wire
     local_vals = local_buf[jnp.clip(indices, 0, local_buf.shape[0] - 1)]
     lane = (R,) + (1,) * (local_buf.ndim - 1)
     out = jnp.where(self_lane.reshape(lane), local_vals, out)
     out = jnp.where(preds.reshape(lane), out, jnp.zeros_like(out))
-    _record(ledger, verb, 2.0 * _item_nbytes(local_buf)
-            * jnp.sum(remote_lane.astype(jnp.float32)))
+    nb = _item_nbytes(local_buf)
+    n_wire = jnp.sum(remote_lane.astype(jnp.float32))
+    _record(ledger, verb, cost_fn(n_wire, nb) if cost_fn is not None
+            else 2.0 * nb * n_wire)
     record_rounds(ledger, verb, 2.0, axis)
     return out  # (R, *item)
 
 
 def remote_read_coalesced(local_buf, targets, indices, axis: str, preds=None,
-                          ledger=None, verb: str = "remote_read_coalesced"):
+                          ledger=None, verb: str = "remote_read_coalesced",
+                          engine=None, cost_fn=None):
     """Duplicate-coalescing batched read (DESIGN.md §8.1).
 
     Same contract as :func:`remote_read_batch`, but each participant's R
@@ -301,7 +356,8 @@ def remote_read_coalesced(local_buf, targets, indices, axis: str, preds=None,
         jnp.where(remote_lane, lid, n_rows)].min(order, mode="drop")
     rep = jnp.clip(table[lid], 0, R - 1)
     leader = remote_lane & (rep == order)
-    out = _serve_scatter(local_buf, targets, indices, leader, axis)
+    out = _serve_scatter(local_buf, targets, indices, leader, axis,
+                         engine=engine)
     # duplicate fan-out: every remote lane reads its leader's answer (a
     # leader's rep is itself, so this is the identity for leaders).
     lane = (R,) + (1,) * (local_buf.ndim - 1)
@@ -311,8 +367,10 @@ def remote_read_coalesced(local_buf, targets, indices, axis: str, preds=None,
     local_vals = local_buf[jnp.clip(indices, 0, local_buf.shape[0] - 1)]
     out = jnp.where(self_lane.reshape(lane), local_vals, out)
     out = jnp.where(preds.reshape(lane), out, jnp.zeros_like(out))
-    _record(ledger, verb, 2.0 * _item_nbytes(local_buf)
-            * jnp.sum(leader.astype(jnp.float32)))
+    nb = _item_nbytes(local_buf)
+    n_wire = jnp.sum(leader.astype(jnp.float32))
+    _record(ledger, verb, cost_fn(n_wire, nb) if cost_fn is not None
+            else 2.0 * nb * n_wire)
     record_rounds(ledger, verb, 2.0, axis)
     return out  # (R, *item)
 
@@ -363,7 +421,8 @@ def remote_write(local_buf, target, index, value, axis: str,
 
 def remote_write_batch(local_buf, targets, indices, values, axis: str,
                        preds=None, assume_unique=False, ledger=None,
-                       verb: str = "remote_write_batch"):
+                       verb: str = "remote_write_batch", engine=None,
+                       cost_fn=None):
     """Vector form of :func:`remote_write`: R writes per participant,
     applied in (participant, request) lexicographic order.
 
@@ -381,6 +440,15 @@ def remote_write_batch(local_buf, targets, indices, values, axis: str,
     the gathered payload tensor and applied from the local ``values`` array
     on arrival — a local store, modeled at zero wire bytes.  Disabled lanes
     cost nothing.
+
+    ``engine`` routes the metadata gather and the commit through the
+    remote-DMA kernels (DESIGN.md §15): (R, 8)-word descriptors ride the
+    wire in place of the 3-word tuples, and the home commits the
+    described rows with the scatter kernel, whose sequential lane-order
+    application realizes the same last-writer-wins outcome as the winner
+    mask — bitwise — without precomputing it (``assume_unique`` is
+    irrelevant on that path).  ``cost_fn(n, nb)`` overrides the modeled
+    byte contract exactly as in the read verbs.
     """
     R = targets.shape[0]
     targets = targets.astype(jnp.int32)
@@ -389,22 +457,47 @@ def remote_write_batch(local_buf, targets, indices, values, axis: str,
     preds = jnp.asarray(preds)
     me = my_id(axis)
     self_lane = preds & (targets == me)
+    remote_lane = preds & (targets != me)
     lane = (R,) + (1,) * (values.ndim - 1)
     wire_vals = jnp.where(self_lane.reshape(lane),
                           jnp.zeros_like(values), values)
-    # one metadata all-gather: [target | index | pred] per request
-    meta = jnp.stack([targets, indices.astype(jnp.int32),
-                      preds.astype(jnp.int32)], axis=-1)                # (R,3)
-    metas = jax.lax.all_gather(meta, axis, axis=0)                      # (P,R,3)
+    if engine is None:
+        # one metadata all-gather: [target | index | pred] per request
+        meta = jnp.stack([targets, indices.astype(jnp.int32),
+                          preds.astype(jnp.int32)], axis=-1)            # (R,3)
+        t_col, i_col, e_col = 0, 1, 2
+    else:
+        dma = _dma()
+        meta, desc_nb = dma.build_descriptors(
+            targets, indices, preds, wire=remote_lane, op=dma.OP_WRITE,
+            row_nbytes=_item_nbytes(local_buf))                         # (R,8)
+        engine.count(desc_nb)
+        t_col, i_col, e_col = 1, 2, 3
+    metas = jax.lax.all_gather(meta, axis, axis=0)                    # (P,R,·)
     vals = jax.lax.all_gather(wire_vals, axis, axis=0)                  # (P,R,*)
     # restore my own lanes from local memory (they never rode the wire)
     vals = vals.at[me].set(values)
-    tgts, idxs, ens = metas[..., 0], metas[..., 1], metas[..., 2] != 0
+    tgts, idxs = metas[..., t_col], metas[..., i_col]
+    ens = metas[..., e_col] != 0
     P = tgts.shape[0]
     n = P * R
     flat_i = jnp.clip(idxs.reshape(n), 0, local_buf.shape[0] - 1)
     flat_v = vals.reshape((n,) + local_buf.shape[1:])
     win = (tgts.reshape(n) == me) & ens.reshape(n)
+    nb = _item_nbytes(local_buf)
+    n_wire = jnp.sum(remote_lane.astype(jnp.float32))
+    _record(ledger, verb, cost_fn(n_wire, nb) if cost_fn is not None
+            else float(nb) * n_wire)
+    record_rounds(ledger, verb, 1.0, axis)
+    if engine is not None:
+        # DMA commit: lanes apply in sequence order; only lanes that came
+        # from another participant count as measured wire payload.
+        wire = win & (jnp.arange(n) // R != me)
+        out2d, wire_nb = _dma().scatter_rows(
+            local_buf.reshape(local_buf.shape[0], -1), flat_i,
+            flat_v.reshape(n, -1), win, wire)
+        engine.count(wire_nb)
+        return out2d.reshape(local_buf.shape)
     if not assume_unique:
         order = jnp.arange(n)
         later_same = (flat_i[None, :] == flat_i[:, None]) & win[None, :] \
@@ -412,7 +505,4 @@ def remote_write_batch(local_buf, targets, indices, values, axis: str,
         win = win & ~jnp.any(later_same, axis=1)
     # losers/disabled records get an out-of-range row and are dropped
     row = jnp.where(win, flat_i, local_buf.shape[0])
-    _record(ledger, verb, float(_item_nbytes(local_buf))
-            * jnp.sum((preds & (targets != me)).astype(jnp.float32)))
-    record_rounds(ledger, verb, 1.0, axis)
     return local_buf.at[row].set(flat_v, mode="drop")

@@ -145,6 +145,12 @@ class TrafficLedger:
         # stale-epoch entries rejected by the failover fence
         self.corrupt_counts: Dict[str, float] = {}
         self.fenced_counts: Dict[str, float] = {}
+        # *measured* DMA-kernel bytes (DESIGN.md §15), keyed by verb —
+        # counters the remote-DMA kernels compute from the same masks
+        # that drive their copies.  Kept separate from the modeled
+        # ``counts`` rows precisely so the roofline bench can assert the
+        # two tiers agree instead of one silently defining the other.
+        self.dma_counts: Dict[str, Dict[str, float]] = {}
 
     def enable(self):
         self.enabled = True
@@ -161,6 +167,7 @@ class TrafficLedger:
         self.fastpath_counts = {}
         self.corrupt_counts = {}
         self.fenced_counts = {}
+        self.dma_counts = {}
         return self
 
     def record(self, verb: str, wire_bytes):
@@ -187,6 +194,20 @@ class TrafficLedger:
             e["rounds"] += float(r)
 
         jax.debug.callback(_cb, jnp.asarray(rounds, jnp.float32))
+
+    def record_dma(self, verb: str, nbytes):
+        """Record *measured* remote-DMA kernel bytes (a traced scalar)
+        against ``verb`` — the §15 measured tier.  Callers route through
+        :func:`repro.core.colls.record_dma`, which gates on ``enabled``
+        at trace time; each participant counts the descriptor bytes it
+        emits and the row bytes it serves/commits, so totals are
+        cluster-wide wire bytes counted exactly once."""
+        def _cb(b, verb=verb):
+            e = self.dma_counts.setdefault(verb, {"calls": 0, "bytes": 0.0})
+            e["calls"] += 1
+            e["bytes"] += float(b)
+
+        jax.debug.callback(_cb, jnp.asarray(nbytes, jnp.float32))
 
     def record_cache(self, name: str, hits, lookups):
         """Record read-cache ``hits`` out of ``lookups`` (traced scalars)
@@ -254,6 +275,13 @@ class TrafficLedger:
     def rounds_summary(self) -> Dict[str, Dict[str, float]]:
         """Per-verb modeled collective-round counts (§14)."""
         return {k: dict(v) for k, v in sorted(self.round_counts.items())}
+
+    def dma_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-verb *measured* DMA-kernel byte counts (§15)."""
+        return {k: dict(v) for k, v in sorted(self.dma_counts.items())}
+
+    def total_dma_bytes(self) -> float:
+        return sum(e["bytes"] for e in self.dma_counts.values())
 
     def cache_summary(self) -> Dict[str, Dict[str, float]]:
         """Per-channel read-tier counters with derived hit rates."""

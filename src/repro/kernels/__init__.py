@@ -7,8 +7,10 @@ ref.py for the pure-jnp oracles):
   rglru_scan        RG-LRU linear recurrence (recurrentgemma)
   wkv6              RWKV-6 data-dependent-decay token mixing
   moe_gmm           grouped per-expert matmul via scalar prefetch
+  remote_dma        transfer-descriptor build + row serve/commit kernels
+                    behind the ``pallas`` colls backend (DESIGN.md §15)
 """
-from . import ops, ref
+from . import ops, ref, remote_dma
 from .decode_attention import decode_attention
 from .flash_attention import flash_attention
 from .moe_gmm import gmm

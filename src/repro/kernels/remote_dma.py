@@ -1,0 +1,270 @@
+"""Pallas remote-DMA kernels for the colls verb layer (DESIGN.md §15).
+
+The ``pallas`` backend lowers the batched one-sided verbs onto explicit
+DMA-style kernels instead of plain jnp gathers: a requester builds fixed
+width transfer *descriptors* (the NIC work-queue-entry analogue), the
+home node serves/commits the described rows with a Pallas kernel, and
+every kernel **counts the bytes it actually moves** from the same masks
+that drive the copies.  Those measured counters are what
+``benchmarks/bench_roofline.py`` pins the TrafficLedger's *modeled* cost
+contract against — the ledger stops being a vibe the moment the two can
+drift.
+
+Dispatch follows :mod:`repro.kernels.ops`: Pallas on TPU, interpret mode
+on CPU (the validation substrate — the kernel body runs with identical
+semantics), ``force_ref=True`` routes to the pure-jnp oracle used by the
+A/B tests.  On the emulation substrate the *wire hop* between the
+requester-side and home-side kernels stays an XLA collective
+(all-gather of descriptors, psum_scatter of served rows) exactly as in
+:func:`repro.core.colls._serve_scatter`; on TPU hardware the same
+descriptor stream feeds :func:`remote_copy_tpu`, a
+``pltpu.make_async_remote_copy`` send/wait pair.
+
+All kernels take 2-D ``(rows, width)`` buffers — callers flatten item
+dims — and are dtype-generic.  Descriptor layout (8 × int32 =
+:data:`DESC_BYTES` bytes, the explicit constant the backend's cost model
+cites):
+
+    word 0  op        1 = read, 2 = write
+    word 1  target    home participant id
+    word 2  index     row within the home's buffer
+    word 3  enabled   lane rides the wire iff != 0
+    word 4  length    row payload bytes
+    word 5  seq       lane sequence number (application order)
+    word 6-7          reserved (zero)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: int32 words per transfer descriptor.
+DESC_WORDS = 8
+#: Bytes of one remote-DMA descriptor on the wire — the work-queue-entry
+#: header every described lane pays (the backends.AM_HDR_BYTES idiom).
+DESC_BYTES = DESC_WORDS * 4
+
+OP_READ = 1
+OP_WRITE = 2
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# descriptor build (requester side)
+# ---------------------------------------------------------------------------
+
+def _build_desc_kernel(tgt_ref, idx_ref, en_ref, wire_ref, out_ref, nb_ref,
+                       *, op, row_nbytes):
+    out_ref[...] = jnp.zeros_like(out_ref)
+    nb_ref[0] = 0
+
+    def body(i, _):
+        out_ref[i, 0] = jnp.int32(op)
+        out_ref[i, 1] = tgt_ref[i]
+        out_ref[i, 2] = idx_ref[i]
+        out_ref[i, 3] = (en_ref[i] != 0).astype(jnp.int32)
+        out_ref[i, 4] = jnp.int32(row_nbytes)
+        out_ref[i, 5] = jnp.int32(i)
+        nb_ref[0] += jnp.where(wire_ref[i] != 0, jnp.int32(DESC_BYTES),
+                               jnp.int32(0))
+        return 0
+
+    jax.lax.fori_loop(0, out_ref.shape[0], body, 0)
+
+
+def _build_desc_ref(targets, indices, en, wire, op, row_nbytes):
+    R = targets.shape[0]
+    desc = jnp.zeros((R, DESC_WORDS), jnp.int32)
+    desc = desc.at[:, 0].set(jnp.int32(op))
+    desc = desc.at[:, 1].set(targets)
+    desc = desc.at[:, 2].set(indices)
+    desc = desc.at[:, 3].set((en != 0).astype(jnp.int32))
+    desc = desc.at[:, 4].set(jnp.int32(row_nbytes))
+    desc = desc.at[:, 5].set(jnp.arange(R, dtype=jnp.int32))
+    return desc, jnp.sum((wire != 0).astype(jnp.int32)) \
+        * jnp.int32(DESC_BYTES)
+
+
+def build_descriptors(targets, indices, en, *, wire=None, op=OP_READ,
+                      row_nbytes=0, force_ref=False):
+    """Build the (R, :data:`DESC_WORDS`) int32 descriptor block for R
+    request lanes plus the measured descriptor wire bytes
+    (:data:`DESC_BYTES` per ``wire`` lane; ``wire`` defaults to ``en``).
+    The two masks split for writes, where self-targeted lanes stay
+    *enabled* — the home applies them — but move no descriptor over the
+    wire.  The descriptor tensor is what actually rides the request
+    gather — colls reads target/index/enabled back out of words 1–3."""
+    targets = targets.astype(jnp.int32)
+    indices = indices.astype(jnp.int32)
+    en = jnp.asarray(en).astype(jnp.int32)
+    wire = en if wire is None else jnp.asarray(wire).astype(jnp.int32)
+    if force_ref:
+        return _build_desc_ref(targets, indices, en, wire, op, row_nbytes)
+    R = targets.shape[0]
+    kern = functools.partial(_build_desc_kernel, op=int(op),
+                             row_nbytes=int(row_nbytes))
+    desc, nb = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((R, DESC_WORDS), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)),
+        interpret=_interpret(),
+    )(targets, indices, en, wire)
+    return desc, nb[0]
+
+
+# ---------------------------------------------------------------------------
+# row serve (home side, reads)
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(idx_ref, mask_ref, buf_ref, out_ref, nb_ref, *,
+                   row_nbytes):
+    out_ref[...] = jnp.zeros_like(out_ref)
+    nb_ref[0] = 0
+
+    def body(i, _):
+        row = idx_ref[i]
+
+        @pl.when(mask_ref[i] != 0)
+        def _():
+            out_ref[i, :] = buf_ref[row, :]
+            nb_ref[0] += jnp.int32(row_nbytes)
+        return 0
+
+    jax.lax.fori_loop(0, out_ref.shape[0], body, 0)
+
+
+def _gather_ref(buf2d, indices, mask, row_nbytes):
+    rows = buf2d[indices]
+    m = (mask != 0)
+    rows = jnp.where(m[:, None], rows, jnp.zeros_like(rows))
+    return rows, jnp.sum(m.astype(jnp.int32)) * jnp.int32(row_nbytes)
+
+
+def gather_rows(buf2d, indices, mask, *, force_ref=False):
+    """Serve N described rows from the home buffer: lane i receives
+    ``buf2d[indices[i]]`` iff ``mask[i]`` (zeros otherwise), plus the
+    measured payload bytes — one row width per served lane, counted from
+    the same mask that drives the copy.  ``buf2d``: (slots, width);
+    ``indices`` must be pre-clipped to range."""
+    indices = indices.astype(jnp.int32)
+    mask = jnp.asarray(mask).astype(jnp.int32)
+    row_nbytes = int(buf2d.shape[1]) * buf2d.dtype.itemsize
+    if force_ref:
+        return _gather_ref(buf2d, indices, mask, row_nbytes)
+    N = indices.shape[0]
+    kern = functools.partial(_gather_kernel, row_nbytes=row_nbytes)
+    rows, nb = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((N, buf2d.shape[1]), buf2d.dtype),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)),
+        interpret=_interpret(),
+    )(indices, mask, buf2d)
+    return rows, nb[0]
+
+
+# ---------------------------------------------------------------------------
+# row commit (home side, writes)
+# ---------------------------------------------------------------------------
+
+def _scatter_kernel(idx_ref, apply_ref, wire_ref, val_ref, buf_ref,
+                    out_ref, nb_ref, *, row_nbytes):
+    out_ref[...] = buf_ref[...]
+    nb_ref[0] = 0
+
+    def body(i, _):
+        row = idx_ref[i]
+
+        @pl.when(apply_ref[i] != 0)
+        def _():
+            out_ref[row, :] = val_ref[i, :]
+        nb_ref[0] += jnp.where(wire_ref[i] != 0, jnp.int32(row_nbytes),
+                               jnp.int32(0))
+        return 0
+
+    jax.lax.fori_loop(0, idx_ref.shape[0], body, 0)
+
+
+def _scatter_ref(buf2d, indices, values, apply_mask, wire_mask, row_nbytes):
+    n = indices.shape[0]
+    # sequential in-order application == last-writer-wins, computed as a
+    # winner mask so one scatter commits the surviving rows (the oracle
+    # mirror of the kernel's fori_loop ordering).
+    win = apply_mask != 0
+    order = jnp.arange(n)
+    later_same = (indices[None, :] == indices[:, None]) & win[None, :] \
+        & (order[None, :] > order[:, None])
+    win = win & ~jnp.any(later_same, axis=1)
+    row = jnp.where(win, indices, buf2d.shape[0])
+    out = buf2d.at[row].set(values, mode="drop")
+    return out, jnp.sum((wire_mask != 0).astype(jnp.int32)) \
+        * jnp.int32(row_nbytes)
+
+
+def scatter_rows(buf2d, indices, values, apply_mask, wire_mask, *,
+                 force_ref=False):
+    """Commit N described rows into the home buffer **in lane order** —
+    the kernel's sequential loop realizes last-writer-wins natively, so
+    racy lanes need no winner-mask precomputation.  Lane i stores
+    ``values[i]`` at ``indices[i]`` iff ``apply_mask[i]``; measured
+    payload bytes count ``wire_mask`` lanes (the caller excludes
+    self-origin lanes — a local store moves no wire bytes but still
+    commits).  Returns (new_buf2d, measured_bytes)."""
+    indices = indices.astype(jnp.int32)
+    apply_mask = jnp.asarray(apply_mask).astype(jnp.int32)
+    wire_mask = jnp.asarray(wire_mask).astype(jnp.int32)
+    row_nbytes = int(buf2d.shape[1]) * buf2d.dtype.itemsize
+    if force_ref:
+        return _scatter_ref(buf2d, indices, values, apply_mask, wire_mask,
+                            row_nbytes)
+    kern = functools.partial(_scatter_kernel, row_nbytes=row_nbytes)
+    out, nb = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct(buf2d.shape, buf2d.dtype),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)),
+        interpret=_interpret(),
+    )(indices, apply_mask, wire_mask, values, buf2d)
+    return out, nb[0]
+
+
+# ---------------------------------------------------------------------------
+# hardware wire hop (TPU only)
+# ---------------------------------------------------------------------------
+
+def remote_copy_tpu(src, *, device_id, axis: str):
+    """One async remote copy of ``src`` to the same-named buffer on
+    ``device_id`` — the hardware realization of the descriptor wire hop,
+    a ``pltpu.make_async_remote_copy`` send/wait pair per the Pallas
+    async-copy contract.  Only reachable when the process actually runs
+    on TPU hardware (the interpret substrate has no remote-DMA
+    emulation); the emulation path keeps the XLA collective hop and this
+    kernel is exercised by the hardware suites.
+    """
+    if _interpret():  # pragma: no cover - guard, exercised only off-TPU
+        raise NotImplementedError(
+            "remote_copy_tpu needs TPU hardware; the CPU substrate "
+            "realizes the wire hop with XLA collectives instead")
+    from jax.experimental.pallas import tpu as pltpu  # pragma: no cover
+
+    def kern(src_ref, dst_ref, send_sem, recv_sem):  # pragma: no cover
+        copy = pltpu.make_async_remote_copy(
+            src_ref=src_ref, dst_ref=dst_ref,
+            send_sem=send_sem, recv_sem=recv_sem,
+            device_id=(device_id,),
+            device_id_type=pltpu.DeviceIdType.LOGICAL)
+        copy.start()
+        copy.wait()
+
+    return pl.pallas_call(  # pragma: no cover
+        kern,
+        out_shape=jax.ShapeDtypeStruct(src.shape, src.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
+        compiler_params=pltpu.TPUCompilerParams(has_side_effects=True),
+    )(src)

@@ -34,6 +34,17 @@ _COLL_RE = re.compile(
     r"[^ ]*)\s*"
     r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
     r"collective-permute)(?:-start)?\(")
+# Remote-DMA kernel transfers (DESIGN.md §15): on TPU the Pallas
+# ``make_async_remote_copy`` wire hop compiles to a Mosaic custom-call
+# whose metadata carries the kernel name — the op never appears as a
+# named HLO collective, so the accounting above would silently miss it.
+# Matched lines are costed as one point-to-point hop of the result
+# payload (the collective-permute model: a DMA send traverses one link).
+_DMA_RE = re.compile(
+    r"=\s*(?:\((?P<rtuple>[^)]*)\)|(?P<rdtype>\w+)\[(?P<rshape>[\d,]*)\]"
+    r"[^ ]*)\s*custom-call(?:-start)?\(")
+_DMA_MARK_RE = re.compile(
+    r"remote_copy|remote_dma|async_remote_copy", re.IGNORECASE)
 _OPERAND_RE = re.compile(r"\(\s*(\w+)\[([\d,]*)\]")
 _TUPLE_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
@@ -110,6 +121,20 @@ def collective_bytes(hlo_text: str, n_devices: int) -> Dict:
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
         if not m:
+            dm = _DMA_RE.search(line)
+            if dm and _DMA_MARK_RE.search(line):
+                rb = 0
+                if dm.group("rdtype"):
+                    rb = _shape_bytes(dm.group("rdtype"),
+                                      dm.group("rshape"))
+                elif dm.group("rtuple"):
+                    for dt, dims in _TUPLE_SHAPE_RE.findall(
+                            dm.group("rtuple")):
+                        if dt in _DTYPE_BYTES:
+                            rb += _shape_bytes(dt, dims)
+                per_op["remote-dma"] = per_op.get("remote-dma", 0.0) + rb
+                count["remote-dma"] = count.get("remote-dma", 0) + 1
+                total += rb
             continue
         op = m.group("op")
         # result bytes: scalar result or sum over the tuple's components

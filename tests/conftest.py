@@ -27,9 +27,10 @@ def P8():
     return 8
 
 
-@pytest.fixture(params=["onesided", "active_message"])
+@pytest.fixture(params=["onesided", "active_message", "pallas"])
 def backend(request):
     """Parameterizes channel suites over the swappable colls backends
-    (DESIGN.md §14) — every test taking this fixture runs once per
-    execution protocol."""
+    (DESIGN.md §14/§15) — every test taking this fixture runs once per
+    execution protocol, including the Pallas remote-DMA lowering in
+    interpret mode."""
     return request.param

@@ -202,6 +202,17 @@ def test_torture_kvstore_active_message():
              min_windows=50, seed0=850, backend="active_message")
 
 
+def test_torture_kvstore_pallas():
+    """Quick §15 sweep: histories recorded through the Pallas remote-DMA
+    backend (interpret mode) pass the same Wing–Gong checker — the DMA
+    kernel lowering is linearizable under random interleavings, not
+    merely bitwise-equal on scripted windows."""
+    sweep_kv("locked", [(4, 2)], histories=4, n_windows=13,
+             min_windows=50, seed0=900, backend="pallas")
+    sweep_kv("lockfree", [(4, 2)], histories=4, n_windows=13,
+             min_windows=50, seed0=950, backend="pallas")
+
+
 @pytest.mark.torture
 def test_torture_kvstore_long():
     sweep_kv("locked", [(2, 2), (4, 2)], histories=25, n_windows=30,
@@ -230,6 +241,25 @@ def test_torture_active_message_long():
     sweep_kv("migrating", [(2, 2)], histories=10, n_windows=20,
              min_windows=250, seed0=9500, key_space=12,
              backend="active_message")
+
+
+@pytest.mark.torture
+def test_torture_pallas_long():
+    """Nightly §15 sweep: the variant matrix through the Pallas
+    remote-DMA backend — every window rides the descriptor-build /
+    serve / commit kernels."""
+    sweep_kv("locked", [(2, 2), (4, 2)], histories=15, n_windows=25,
+             min_windows=700, seed0=12000, key_space=12,
+             backend="pallas")
+    sweep_kv("lockfree", [(4, 2)], histories=15, n_windows=25,
+             min_windows=350, seed0=12500, key_space=12,
+             backend="pallas")
+    sweep_kv("cached", [(2, 2)], histories=15, n_windows=25,
+             min_windows=350, seed0=13000, key_space=12,
+             backend="pallas")
+    sweep_kv("migrating", [(2, 2)], histories=10, n_windows=20,
+             min_windows=250, seed0=13500, key_space=12,
+             backend="pallas")
 
 
 # ------------------------------------------------------------ shared queue

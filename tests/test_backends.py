@@ -3,15 +3,18 @@
 The swappable-backend contract has two halves, and this module pins both:
 
 * **execution is bitwise-identical** — every channel driven through the
-  ``active_message`` backend must produce exactly the results and final
-  state leaves of the ``onesided`` reference backend, window by window,
-  on every variant (local / hashed placement / cached / lock-free);
+  ``active_message`` or ``pallas`` (remote-DMA kernel, §15) backend must
+  produce exactly the results and final state leaves of the ``onesided``
+  reference backend, window by window, on every variant (local / hashed
+  placement / cached / lock-free);
 * **only the cost model differs** — the TrafficLedger byte and round
   rows must follow each protocol's wire contract exactly: one-sided
   coalesced reads at 2·|row|·unique vs active-message (hdr+|row|)·lane
-  RPCs, the write header tax, and the placed path's allocation
-  round-trip (2 rounds one-sided, 0 when the decision ships with the
-  op).
+  RPCs vs pallas (desc+|row|)·unique descriptors, the write header tax,
+  and the placed path's allocation round-trip (2 rounds one-sided and
+  DMA, 0 when the decision ships with the op).  The pallas backend
+  additionally files *measured* kernel bytes, pinned equal to its
+  modeled rows here.
 
 The alloc-fold regression (PR-5 carry-over) lives here too: a window
 with no INSERT/MOVE lanes must keep the fast path's round shape — no
@@ -25,15 +28,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (AM_HDR_BYTES, BACKENDS, DELETE, GET, INSERT, NOP,
-                        UPDATE, ActiveMessageBackend, CollsBackend, KVStore,
-                        OneSidedBackend, Ringbuffer, SharedQueue,
+from repro.core import (AM_HDR_BYTES, BACKENDS, DELETE, DMA_DESC_BYTES,
+                        GET, INSERT, NOP, UPDATE, ActiveMessageBackend,
+                        CollsBackend, KVStore, OneSidedBackend,
+                        PallasDmaBackend, Ringbuffer, SharedQueue,
                         SharedRegion, get_backend, make_manager)
 
 import test_kvstore as kvmod
 
 P = 4
-ALL_BACKENDS = ["onesided", "active_message"]
+ALL_BACKENDS = ["onesided", "active_message", "pallas"]
 
 
 def _assert_trees_equal(a, b, msg=""):
@@ -47,11 +51,13 @@ def _assert_trees_equal(a, b, msg=""):
 # ------------------------------------------------------------ registry
 class TestRegistry:
     def test_names_and_singletons(self):
-        assert sorted(BACKENDS) == ["active_message", "onesided"]
+        assert sorted(BACKENDS) == ["active_message", "onesided", "pallas"]
         assert get_backend("onesided") is BACKENDS["onesided"]
         assert get_backend("active_message") is BACKENDS["active_message"]
+        assert get_backend("pallas") is BACKENDS["pallas"]
         assert isinstance(BACKENDS["onesided"], OneSidedBackend)
         assert isinstance(BACKENDS["active_message"], ActiveMessageBackend)
+        assert isinstance(BACKENDS["pallas"], PallasDmaBackend)
 
     def test_resolution_chain(self):
         assert get_backend(None).name == "onesided"
@@ -90,11 +96,22 @@ class TestRegistry:
     def test_alloc_rounds_contract(self):
         assert BACKENDS["onesided"].alloc_rounds == 2.0
         assert BACKENDS["active_message"].alloc_rounds == 0.0
+        # DMA is one-sided: nothing ships to the home, the grant
+        # round-trip stays
+        assert BACKENDS["pallas"].alloc_rounds == 2.0
 
     def test_row_read_bytes_hooks(self):
         assert BACKENDS["onesided"].row_read_bytes(20) == 40.0
         assert BACKENDS["active_message"].row_read_bytes(20) == \
             AM_HDR_BYTES + 20
+        assert BACKENDS["pallas"].row_read_bytes(20) == DMA_DESC_BYTES + 20
+
+    def test_dma_desc_bytes_pins_kernel_layout(self):
+        """The backend's literal descriptor constant cannot drift from
+        the kernel module's actual descriptor layout."""
+        from repro.kernels import remote_dma
+        assert DMA_DESC_BYTES == remote_dma.DESC_BYTES \
+            == remote_dma.DESC_WORDS * 4
 
     def test_abstract_base_raises(self):
         base = CollsBackend()
@@ -143,18 +160,21 @@ def _region_script(seed):
     return tuple(map(jnp.asarray, (wt, wi, wv, rt, ri)))
 
 
-def test_region_verbs_bitwise_across_backends():
+@pytest.mark.parametrize("other", [b for b in ALL_BACKENDS
+                                   if b != "onesided"])
+def test_region_verbs_bitwise_across_backends(other):
     """Scalar and batched read/write on a shared region: same scripted
-    traffic through both backends → identical outputs and final buffer."""
+    traffic through each backend → identical outputs and final buffer
+    vs the one-sided reference."""
     ha = _RegionHarness("onesided")
-    hb = _RegionHarness("active_message")
+    hb = _RegionHarness(other)
     sta, stb = ha.rg.init_state(), hb.rg.init_state()
     for seed in range(4):
         script = _region_script(seed)
         sta, va, oa = ha.step(sta, *script)
         stb, vb, ob = hb.step(stb, *script)
         _assert_trees_equal((va, oa, sta), (vb, ob, stb),
-                            f"region script {seed}")
+                            f"{other} region script {seed}")
 
 
 # --------------------------------------------------- kvstore conformance
@@ -218,19 +238,21 @@ def _drive_kv(h, windows):
     return st, outs
 
 
+@pytest.mark.parametrize("other", [b for b in ALL_BACKENDS
+                                   if b != "onesided"])
 @pytest.mark.parametrize("variant", sorted(KV_VARIANTS))
-def test_kvstore_windows_bitwise_across_backends(variant):
+def test_kvstore_windows_bitwise_across_backends(variant, other):
     """Every kvstore execution variant commits bit-identical per-window
-    results AND bit-identical final state leaves under both backends —
+    results AND bit-identical final state leaves under every backend —
     the conformance half of the §14 contract."""
     ha = _KVBackendHarness("onesided", variant)
-    hb = _KVBackendHarness("active_message", variant)
+    hb = _KVBackendHarness(other, variant)
     windows = _kv_windows(n_rounds=4, seed=3)
     sta, outs_a = _drive_kv(ha, windows)
     stb, outs_b = _drive_kv(hb, windows)
     for rnd, (ra, rb) in enumerate(zip(outs_a, outs_b)):
-        _assert_trees_equal(ra, rb, f"{variant} window {rnd}")
-    _assert_trees_equal(sta, stb, f"{variant} final state")
+        _assert_trees_equal(ra, rb, f"{variant}/{other} window {rnd}")
+    _assert_trees_equal(sta, stb, f"{variant}/{other} final state")
 
 
 def test_kvstore_oracle_per_backend(backend):
@@ -258,7 +280,7 @@ def test_kvstore_scheduled_matches_reference_per_backend(backend):
 
 
 # ------------------------------------------------- queue / ring conformance
-def test_queue_windows_bitwise_across_backends(backend):
+def test_queue_windows_bitwise_across_backends():
     """Windowed enqueue/dequeue through each backend matches the FIFO
     oracle-checked onesided baseline bitwise (grants, values, state)."""
     results = {}
@@ -286,10 +308,11 @@ def test_queue_windows_bitwise_across_backends(backend):
             outs.append(jax.tree.map(np.asarray, (g, v, ok)))
         results[bk] = (st, outs)
     sta, outs_a = results["onesided"]
-    stb, outs_b = results["active_message"]
-    for rnd, (ra, rb) in enumerate(zip(outs_a, outs_b)):
-        _assert_trees_equal(ra, rb, f"queue round {rnd}")
-    _assert_trees_equal(sta, stb, "queue final state")
+    for bk in ALL_BACKENDS[1:]:
+        stb, outs_b = results[bk]
+        for rnd, (ra, rb) in enumerate(zip(outs_a, outs_b)):
+            _assert_trees_equal(ra, rb, f"{bk} queue round {rnd}")
+        _assert_trees_equal(sta, stb, f"{bk} queue final state")
 
 
 def test_ringbuffer_windows_bitwise_across_backends():
@@ -322,10 +345,11 @@ def test_ringbuffer_windows_bitwise_across_backends():
             outs.append(jax.tree.map(np.asarray, (sent, m, l, got)))
         results[bk] = (st, outs)
     sta, outs_a = results["onesided"]
-    stb, outs_b = results["active_message"]
-    for rnd, (ra, rb_) in enumerate(zip(outs_a, outs_b)):
-        _assert_trees_equal(ra, rb_, f"ring round {rnd}")
-    _assert_trees_equal(sta, stb, "ring final state")
+    for bk in ALL_BACKENDS[1:]:
+        stb, outs_b = results[bk]
+        for rnd, (ra, rb_) in enumerate(zip(outs_a, outs_b)):
+            _assert_trees_equal(ra, rb_, f"{bk} ring round {rnd}")
+        _assert_trees_equal(sta, stb, f"{bk} ring final state")
 
 
 # ------------------------------------------------------------- cost model
@@ -386,6 +410,9 @@ class TestCostModel:
         got = h.mgr.traffic.summary()[h.verb("read_batch")]["bytes"]
         if backend == "onesided":
             assert got == 2.0 * ITEM_NBYTES * 1 * P
+        elif backend == "pallas":
+            # DMA coalesces too: one descriptor + one row per unique pair
+            assert got == (DMA_DESC_BYTES + ITEM_NBYTES) * 1 * P
         else:
             assert got == (AM_HDR_BYTES + ITEM_NBYTES) * 3 * P
 
@@ -420,6 +447,8 @@ class TestCostModel:
         got = h.mgr.traffic.summary()[h.verb("write_batch")]["bytes"]
         if backend == "onesided":
             assert got == ITEM_NBYTES * 3 * P
+        elif backend == "pallas":
+            assert got == (DMA_DESC_BYTES + ITEM_NBYTES) * 3 * P
         else:
             assert got == (AM_HDR_BYTES + ITEM_NBYTES) * 3 * P
         assert h.mgr.traffic.rounds_summary()[
@@ -443,9 +472,46 @@ class TestCostModel:
         slot = rb.slot_nbytes
         if backend == "onesided":
             assert got == 2.0 * slot * 3
+        elif backend == "pallas":
+            assert got == (DMA_DESC_BYTES + slot) * 3
         else:
             assert got == (AM_HDR_BYTES + slot) * 3
         assert mgr.traffic.rounds_summary()[verb]["rounds"] == 1.0
+
+    def test_pallas_measured_matches_modeled(self):
+        """The §15 two-tier contract on the verb microbench: the bytes
+        the DMA kernels *measure* (descriptors emitted + rows
+        served/committed, counted from the masks that drive the copies)
+        must equal the modeled (desc+row)·unique contract exactly — with
+        duplicate lanes in the window, so the assertion also proves the
+        descriptor block is built after leader election."""
+        h = _CostHarness("pallas")
+        h.mgr.traffic.reset()
+        tg = jnp.asarray(np.stack([np.full((3,), (p + 1) % P)
+                                   for p in range(P)]), jnp.int32)
+        ix = jnp.zeros((P, 3), jnp.int32)          # 3 duplicate lanes
+        jax.block_until_ready(h.read_step(h.rg.init_state(), tg, ix))
+        vv = jnp.ones((P, 3, ITEM_WORDS), jnp.int32)
+        ixw = jnp.broadcast_to(jnp.arange(3, dtype=jnp.int32), (P, 3))
+        jax.block_until_ready(h.write_step(h.rg.init_state(), tg, ixw, vv))
+        jax.effects_barrier()
+        modeled = h.mgr.traffic.summary()
+        measured = h.mgr.traffic.dma_summary()
+        for suffix in ("read_batch", "write_batch"):
+            verb = h.verb(suffix)
+            assert measured[verb]["bytes"] == modeled[verb]["bytes"], suffix
+        assert h.mgr.traffic.total_dma_bytes() == \
+            (DMA_DESC_BYTES + ITEM_NBYTES) * 1 * P \
+            + (DMA_DESC_BYTES + ITEM_NBYTES) * 3 * P
+
+    def test_pallas_measured_tier_silent_on_other_backends(self, backend):
+        """Only the DMA backend populates the measured tier."""
+        h = self._run_read(backend, np.stack(
+            [np.full((3,), (p + 1) % P) for p in range(P)]))
+        if backend == "pallas":
+            assert h.mgr.traffic.dma_counts
+        else:
+            assert not h.mgr.traffic.dma_counts
 
 
 # ------------------------------------------- alloc fold (PR-5 carry-over)

@@ -644,7 +644,7 @@ class _BackendDiffHarness:
 
     def _build(self, nP, B):
         self.stores = {}
-        for bk in ("onesided", "active_message"):
+        for bk in ("onesided", "active_message", "pallas"):
             mgr = make_manager(nP, backend=bk)
             kv = KVStore(None, f"pbk_{bk}_{nP}_{B}", mgr,
                          slots_per_node=8, value_width=2, num_locks=8,
@@ -659,12 +659,13 @@ class _BackendDiffHarness:
        st.integers(min_value=2, max_value=8), st.data())
 def test_backend_differential_windows_converge_leafwise(nP, B, key_space,
                                                         data):
-    """The §14 differential property: random (P, B, op-mix, key-skew)
-    window histories executed through the one-sided and active-message
-    backends converge leaf-by-leaf — every per-window result lane AND
-    every state leaf (rows, index, locks, free stacks, counters) is
-    bitwise identical after every window.  ``key_space`` doubles as the
-    skew knob: 2 keys ≈ maximal contention, 8 ≈ spread."""
+    """The §14/§15 differential property: random (P, B, op-mix,
+    key-skew) window histories executed through the one-sided,
+    active-message, and pallas remote-DMA backends converge leaf-by-leaf
+    — every per-window result lane AND every state leaf (rows, index,
+    locks, free stacks, counters) is bitwise identical after every
+    window.  ``key_space`` doubles as the skew knob: 2 keys ≈ maximal
+    contention, 8 ≈ spread."""
     h = _BackendDiffHarness(nP, B)
     op_t = st.tuples(st.sampled_from([NOP, GET, INSERT, UPDATE, DELETE]),
                      st.integers(min_value=1, max_value=key_space))
@@ -684,15 +685,17 @@ def test_backend_differential_windows_converge_leafwise(nP, B, key_space,
         res = {}
         for bk, (_kv, step) in h.stores.items():
             states[bk], res[bk] = step(states[bk], op, key, val)
-        for la, lb in zip(jax.tree.leaves(res["onesided"]),
-                          jax.tree.leaves(res["active_message"])):
-            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
-                                          err_msg=f"window {rnd}")
-        for la, lb in zip(jax.tree.leaves(states["onesided"]),
-                          jax.tree.leaves(states["active_message"])):
-            np.testing.assert_array_equal(
-                np.asarray(la), np.asarray(lb),
-                err_msg=f"state leaf after window {rnd}")
+        for bk in ("active_message", "pallas"):
+            for la, lb in zip(jax.tree.leaves(res["onesided"]),
+                              jax.tree.leaves(res[bk])):
+                np.testing.assert_array_equal(
+                    np.asarray(la), np.asarray(lb),
+                    err_msg=f"{bk} window {rnd}")
+            for la, lb in zip(jax.tree.leaves(states["onesided"]),
+                              jax.tree.leaves(states[bk])):
+                np.testing.assert_array_equal(
+                    np.asarray(la), np.asarray(lb),
+                    err_msg=f"{bk} state leaf after window {rnd}")
 
 
 # ------------------------------------------------------------------ FAA tickets

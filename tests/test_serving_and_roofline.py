@@ -74,6 +74,27 @@ ENTRY %main () -> f32[] {
         assert out["f32_reduce_bytes"] > 0
         assert out["total_bytes_tpu_native"] < out["total_bytes"]
 
+    def test_remote_dma_custom_call_accounting(self):
+        """§15: the Pallas ``make_async_remote_copy`` wire hop compiles to
+        a custom-call carrying the kernel name in its metadata, never a
+        named HLO collective — the parser costs the result payload as one
+        point-to-point hop, and ignores both unmarked custom-calls and
+        marker words outside custom-call lines."""
+        hlo = """
+ENTRY %main () -> f32[] {
+  %send = f32[4,128]{1,0} custom-call(f32[4,128]{1,0} %src), custom_call_target="tpu_custom_call", metadata={op_name="pallas_call[name=remote_copy_tpu]"}
+  %tup = (f32[2,2]{1,0}, s32[8]{0}) custom-call-start(%a), backend_config="async_remote_copy"
+  %plain = f32[64]{0} custom-call(f32[64]{0} %b), custom_call_target="Sharding"
+  %fus = f32[64]{0} fusion(f32[64]{0} %c), calls=%remote_dma_helper
+}
+"""
+        out = RA.collective_bytes(hlo, 8)
+        assert out["per_op_bytes"]["remote-dma"] == pytest.approx(
+            4 * 128 * 4 + (2 * 2 * 4 + 8 * 4))
+        assert out["per_op_count"]["remote-dma"] == 2
+        assert out["total_bytes"] == pytest.approx(
+            out["per_op_bytes"]["remote-dma"])
+
     def test_extrapolation_is_affine(self):
         c1 = {"flops": 100.0, "bytes": 10.0,
               "coll": {"total_bytes": 7.0, "per_op_bytes": {"all-reduce": 7.0},
